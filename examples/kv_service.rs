@@ -1,0 +1,128 @@
+//! A tiny membership service over TCP — the "coordinator" shape of the
+//! system: a Rust leader owning a K-CAS Robin Hood set, serving
+//! line-oriented requests from concurrent clients with Python nowhere
+//! in sight.
+//!
+//! Protocol (one request per line):
+//!   `A <key>` add, `R <key>` remove, `C <key>` contains, `Q` quit.
+//! Replies: `1` / `0` / `ERR <msg>`.
+//!
+//! The example starts the server on an ephemeral port, runs 8 client
+//! connections driving mixed traffic, prints latency percentiles, and
+//! exits.
+//!
+//! ```sh
+//! cargo run --release --example kv_service
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crh::maps::kcas_rh::KCasRobinHood;
+use crh::maps::ConcurrentSet;
+use crh::util::rng::Rng;
+
+fn serve(listener: TcpListener, table: Arc<KCasRobinHood>) {
+    for stream in listener.incoming() {
+        let Ok(stream) = stream else { break };
+        stream.set_nodelay(true).ok();
+        let table = table.clone();
+        std::thread::spawn(move || {
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut out = stream;
+            let mut line = String::new();
+            loop {
+                line.clear();
+                if reader.read_line(&mut line).unwrap_or(0) == 0 {
+                    return;
+                }
+                let mut it = line.split_whitespace();
+                let reply = match (it.next(), it.next()) {
+                    (Some("Q"), _) => return,
+                    (Some(cmd), Some(k)) => match (cmd, k.parse::<u64>()) {
+                        ("A", Ok(k)) if k >= 1 => (table.add(k) as u8).to_string(),
+                        ("R", Ok(k)) if k >= 1 => {
+                            (table.remove(k) as u8).to_string()
+                        }
+                        ("C", Ok(k)) if k >= 1 => {
+                            (table.contains(k) as u8).to_string()
+                        }
+                        _ => "ERR bad key".to_string(),
+                    },
+                    _ => "ERR bad request".to_string(),
+                };
+                let _ = writeln!(out, "{reply}");
+            }
+        });
+    }
+}
+
+fn client(addr: std::net::SocketAddr, tid: u64, n: usize) -> Vec<u128> {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut out = stream;
+    let mut r = Rng::for_thread(0xCAFE, tid);
+    let mut lat = Vec::with_capacity(n);
+    let mut resp = String::new();
+    for _ in 0..n {
+        let k = 1 + r.below(10_000);
+        let cmd = match r.below(10) {
+            0 => format!("A {k}"),
+            1 => format!("R {k}"),
+            _ => format!("C {k}"),
+        };
+        let t0 = Instant::now();
+        writeln!(out, "{cmd}").unwrap();
+        resp.clear();
+        reader.read_line(&mut resp).unwrap();
+        lat.push(t0.elapsed().as_nanos());
+        assert!(
+            resp.starts_with('0') || resp.starts_with('1'),
+            "bad reply {resp:?}"
+        );
+    }
+    writeln!(out, "Q").unwrap();
+    lat
+}
+
+fn main() {
+    let table = Arc::new(KCasRobinHood::new(16));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    {
+        let table = table.clone();
+        std::thread::spawn(move || serve(listener, table));
+    }
+
+    let clients = 8;
+    let per = 5_000;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for tid in 0..clients {
+        handles.push(std::thread::spawn(move || client(addr, tid, per)));
+    }
+    let mut lat: Vec<u128> =
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    let dt = t0.elapsed().as_secs_f64();
+    lat.sort_unstable();
+    let pct = |p: f64| lat[(p * (lat.len() - 1) as f64) as usize] as f64 / 1000.0;
+    println!(
+        "kv_service: {} reqs from {clients} clients in {dt:.2}s \
+         ({:.0} req/s)",
+        lat.len(),
+        lat.len() as f64 / dt
+    );
+    println!(
+        "latency us: p50 {:.1}  p90 {:.1}  p99 {:.1}  max {:.1}",
+        pct(0.50),
+        pct(0.90),
+        pct(0.99),
+        pct(1.0)
+    );
+    println!("final table size: {}", table.len_quiesced());
+    table.check_invariant().expect("invariant");
+    println!("kv_service OK");
+}

@@ -1,0 +1,13 @@
+"""Build-time-only package: L1 Pallas kernels, L2 JAX model, AOT lowering.
+
+Nothing in here runs on the request path — `make artifacts` lowers the
+jitted functions to HLO text once, and the Rust coordinator loads the
+artifacts via PJRT.
+
+x64 must be enabled before any jnp op traces: the hash pipeline is
+genuine 64-bit integer arithmetic.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

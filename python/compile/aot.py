@@ -1,0 +1,87 @@
+"""AOT lowering: jitted L2 functions -> HLO *text* artifacts.
+
+HLO text — NOT ``lowered.compile()`` / serialized HloModuleProto — is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+that the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the HLO text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+Emits:
+  hash_pipeline.hlo.txt   int64[HASH_BATCH] keys -> (hashes, buckets)
+  probe_stats.hlo.txt     int32[STATS_BATCH] dfb -> (hist, count, mean, var, max)
+  golden_hash.txt         "key hash" lines for the Rust cross-check test
+  MANIFEST.txt            shapes + parameters the Rust runtime asserts on
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_hash_pipeline(size_log2: int) -> str:
+    spec = jax.ShapeDtypeStruct((model.HASH_BATCH,), jnp.int64)
+    lowered = jax.jit(
+        model.hash_pipeline, static_argnames=("size_log2",)
+    ).lower(spec, size_log2=size_log2)
+    return to_hlo_text(lowered)
+
+
+def lower_probe_stats() -> str:
+    spec = jax.ShapeDtypeStruct((model.STATS_BATCH,), jnp.int32)
+    lowered = jax.jit(model.probe_stats).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def golden_vectors(n: int = 256) -> str:
+    """Deterministic key/hash pairs for the Rust bit-exactness test."""
+    rng = np.random.default_rng(0xC0FFEE)
+    keys = rng.integers(np.iinfo(np.int64).min, np.iinfo(np.int64).max, n, dtype=np.int64)
+    keys[:8] = [0, 1, 2, -1, 7, 1 << 40, (1 << 62) - 1, 42]
+    hashes = ref.splitmix64_np(keys)
+    return "".join(f"{int(k)} {int(h)}\n" for k, h in zip(keys, hashes))
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--size-log2", type=int, default=23,
+                   help="table size exponent baked into the bucket mask")
+    args = p.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    emitted = {}
+    emitted["hash_pipeline.hlo.txt"] = lower_hash_pipeline(args.size_log2)
+    emitted["probe_stats.hlo.txt"] = lower_probe_stats()
+    emitted["golden_hash.txt"] = golden_vectors()
+    emitted["MANIFEST.txt"] = (
+        f"hash_batch {model.HASH_BATCH}\n"
+        f"stats_batch {model.STATS_BATCH}\n"
+        f"max_dfb {model.MAX_DFB}\n"
+        f"size_log2 {args.size_log2}\n"
+    )
+    for name, text in emitted.items():
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars  {path}")
+
+
+if __name__ == "__main__":
+    main()

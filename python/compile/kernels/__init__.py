@@ -1,0 +1,4 @@
+"""L1 Pallas kernels + pure-jnp oracles."""
+
+from . import hashmix, ref  # noqa: F401
+from .hashmix import GAMMA, MIX1, MIX2, splitmix64  # noqa: F401

@@ -1,0 +1,78 @@
+"""L1 — Pallas kernel: batched SplitMix64 hash mixer.
+
+This is the compute hot-spot of the paper's system: every hash-table
+operation begins by mixing the key into a uniformly distributed 64-bit
+hash (the paper's ``hash(key)`` in Figs. 7-9).  The benchmark harness
+pre-hashes entire key streams in batches through this kernel (AOT-lowered
+to HLO and executed from Rust via PJRT); the Rust hot path implements the
+bit-identical mixer in ``rust/src/util/hash.rs``.
+
+The mixer is the SplitMix64 finalizer (Steele et al., "Fast splittable
+pseudorandom number generators"): an add of the golden-gamma constant
+followed by three xor-shift-multiply rounds.  It is bijective on u64,
+passes avalanche tests, and is what Rust's stdlib-era Robin Hood table
+used via FxHash-class mixers.
+
+Hardware adaptation note (DESIGN.md §Hardware-Adaptation): this is a
+pure element-wise integer kernel — VPU work, no MXU.  We tile the key
+batch into VMEM-sized blocks with BlockSpec (BLOCK x u64 = 8 KiB per
+operand at the default BLOCK=1024); each element is read and written
+exactly once, so the kernel sits on the HBM-bandwidth roofline by
+construction.  ``interpret=True`` everywhere: the CPU PJRT plugin cannot
+execute Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+# SplitMix64 constants.
+GAMMA = 0x9E3779B97F4A7C15
+MIX1 = 0xBF58476D1CE4E5B9
+MIX2 = 0x94D049BB133111EB
+
+DEFAULT_BLOCK = 1024
+
+
+def _u64(c: int) -> jnp.ndarray:
+    return jnp.uint64(c)
+
+
+def splitmix64(z: jnp.ndarray) -> jnp.ndarray:
+    """One SplitMix64 step on a uint64 array (gamma add + finalizer)."""
+    z = z + _u64(GAMMA)
+    z = (z ^ (z >> _u64(30))) * _u64(MIX1)
+    z = (z ^ (z >> _u64(27))) * _u64(MIX2)
+    return z ^ (z >> _u64(31))
+
+
+def _hashmix_kernel(keys_ref, out_ref):
+    """Pallas body: mix one VMEM block of keys.
+
+    Keys arrive as int64 (JAX's interchange-friendly signed type, and what
+    the Rust literal API speaks); we bitcast to uint64 for the modular
+    arithmetic and bitcast back.
+    """
+    k = lax.bitcast_convert_type(keys_ref[...], jnp.uint64)
+    h = splitmix64(k)
+    out_ref[...] = lax.bitcast_convert_type(h, jnp.int64)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def hashmix(keys: jnp.ndarray, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Batched SplitMix64 over an int64[N] key array (N % block == 0)."""
+    n = keys.shape[0]
+    if n % block != 0:
+        raise ValueError(f"batch {n} not divisible by block {block}")
+    grid = (n // block,)
+    return pl.pallas_call(
+        _hashmix_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int64),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(keys)

@@ -1,0 +1,51 @@
+"""Pure-jnp / numpy oracles for the L1 kernel and L2 analytics.
+
+Everything here is straight-line jnp or numpy with no Pallas — the
+correctness ground truth that pytest compares the kernel and the AOT
+artifacts against.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .hashmix import GAMMA, MIX1, MIX2
+
+
+def splitmix64_ref(keys: jnp.ndarray) -> jnp.ndarray:
+    """Reference SplitMix64 on int64[N] via plain jnp ops (no pallas)."""
+    z = lax.bitcast_convert_type(keys, jnp.uint64)
+    z = z + jnp.uint64(GAMMA)
+    z = (z ^ (z >> jnp.uint64(30))) * jnp.uint64(MIX1)
+    z = (z ^ (z >> jnp.uint64(27))) * jnp.uint64(MIX2)
+    z = z ^ (z >> jnp.uint64(31))
+    return lax.bitcast_convert_type(z, jnp.int64)
+
+
+def splitmix64_np(keys: np.ndarray) -> np.ndarray:
+    """Numpy-only reference (independent of JAX entirely)."""
+    z = keys.astype(np.int64).view(np.uint64)
+    with np.errstate(over="ignore"):
+        z = z + np.uint64(GAMMA)
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(MIX1)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(MIX2)
+        z = z ^ (z >> np.uint64(31))
+    return z.view(np.int64)
+
+
+def probe_stats_np(dfb: np.ndarray, max_dfb: int = 64):
+    """Numpy reference for the L2 probe-distance analytics.
+
+    dfb: int32[M], distance-from-home-bucket per bucket, -1 for empty.
+    Returns (hist[max_dfb+1], count, mean, var, max) where hist[max_dfb]
+    accumulates clamped outliers.
+    """
+    occ = dfb[dfb >= 0].astype(np.int64)
+    clamped = np.minimum(occ, max_dfb)
+    hist = np.bincount(clamped, minlength=max_dfb + 1).astype(np.int64)
+    count = int(occ.size)
+    if count == 0:
+        return hist, 0, 0.0, 0.0, 0
+    mean = float(occ.mean())
+    var = float(occ.var())
+    return hist, count, mean, var, int(occ.max())

@@ -1,0 +1,64 @@
+"""L2 — JAX compute graph for the hash pipeline and probe analytics.
+
+Two jitted entry points, both AOT-lowered to HLO text by ``aot.py`` and
+executed from the Rust coordinator via PJRT:
+
+* ``hash_pipeline``  — key batch -> (mixed hash, home bucket).  Calls the
+  L1 Pallas kernel (``kernels.hashmix``); the bucket masking fuses into
+  the same HLO module so Rust gets both outputs from one execution.
+* ``probe_stats``    — a table snapshot's DFB (distance-from-home-bucket)
+  array -> histogram / count / mean / variance / max.  Used by the
+  harness to report the Robin Hood probe-length distribution the paper's
+  §2.2 analysis relies on (expected ~2.6 probes successful search).
+
+Shapes are static per artifact (PJRT executables are shape-specialised);
+the Rust runtime chunks larger streams through the fixed batch.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.hashmix import hashmix
+
+# Default artifact shapes (must match aot.py and the Rust runtime).
+HASH_BATCH = 65536
+STATS_BATCH = 65536
+MAX_DFB = 64
+
+
+@functools.partial(jax.jit, static_argnames=("size_log2",))
+def hash_pipeline(keys: jnp.ndarray, size_log2: int = 23):
+    """Mix a batch of int64 keys and derive their home buckets.
+
+    Returns ``(hashes int64[N], buckets int64[N])`` with
+    ``bucket = hash & (2**size_log2 - 1)`` — identical to
+    ``rust/src/util/hash.rs::home_bucket``.
+    """
+    hashes = hashmix(keys)
+    mask = jnp.int64((1 << size_log2) - 1)
+    buckets = hashes & mask
+    return hashes, buckets
+
+
+@jax.jit
+def probe_stats(dfb: jnp.ndarray):
+    """Probe-distance analytics over a table snapshot.
+
+    dfb: int32[M]; -1 marks an empty bucket.  Returns
+    ``(hist int64[MAX_DFB+1], count int64, mean f64, var f64, max int32)``.
+    Out-of-range distances accumulate in the last histogram bin.
+    """
+    occ = dfb >= 0
+    count = jnp.sum(occ.astype(jnp.int64))
+    # Route empties to a scratch bin past the histogram, then drop it.
+    clamped = jnp.minimum(dfb, MAX_DFB)
+    binned = jnp.where(occ, clamped, MAX_DFB + 1)
+    hist = jnp.bincount(binned, length=MAX_DFB + 2)[: MAX_DFB + 1]
+    d = jnp.where(occ, dfb, 0).astype(jnp.float64)
+    denom = jnp.maximum(count, 1).astype(jnp.float64)
+    mean = jnp.sum(d) / denom
+    var = jnp.sum(jnp.where(occ, (d - mean) ** 2, 0.0)) / denom
+    maxd = jnp.max(jnp.where(occ, dfb, -1))
+    return hist.astype(jnp.int64), count, mean, var, maxd

@@ -1,0 +1,47 @@
+"""AOT lowering tests: the artifacts must be valid HLO text with the
+expected entry signatures, and the golden vectors must match the oracle."""
+
+import numpy as np
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+class TestLowering:
+    def test_hash_pipeline_lowers_to_hlo_text(self):
+        text = aot.lower_hash_pipeline(size_log2=23)
+        assert text.startswith("HloModule")
+        assert f"s64[{model.HASH_BATCH}]" in text
+        # Mixer multiply constants must survive lowering (fused, not DCE'd).
+        assert "multiply" in text
+
+    def test_probe_stats_lowers_to_hlo_text(self):
+        text = aot.lower_probe_stats()
+        assert text.startswith("HloModule")
+        assert f"s32[{model.STATS_BATCH}]" in text
+
+    def test_root_is_tuple(self):
+        # return_tuple=True: rust unwraps with to_tupleN.
+        text = aot.lower_hash_pipeline(size_log2=23)
+        root = [l for l in text.splitlines() if "ROOT" in l]
+        assert root and "tuple" in root[-1].split("=")[1]
+
+    def test_size_log2_is_baked_in(self):
+        t10 = aot.lower_hash_pipeline(size_log2=10)
+        t23 = aot.lower_hash_pipeline(size_log2=23)
+        assert t10 != t23
+
+
+class TestGoldenVectors:
+    def test_golden_matches_numpy_ref(self):
+        text = aot.golden_vectors(64)
+        lines = [l.split() for l in text.strip().splitlines()]
+        keys = np.array([int(k) for k, _ in lines], dtype=np.int64)
+        hashes = np.array([int(h) for _, h in lines], dtype=np.int64)
+        np.testing.assert_array_equal(ref.splitmix64_np(keys), hashes)
+
+    def test_golden_contains_edge_keys(self):
+        text = aot.golden_vectors(16)
+        keys = [int(l.split()[0]) for l in text.strip().splitlines()]
+        for edge in (0, 1, -1, (1 << 62) - 1):
+            assert edge in keys

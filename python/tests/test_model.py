@@ -1,0 +1,105 @@
+"""L2 correctness: hash_pipeline and probe_stats vs numpy references."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+class TestHashPipeline:
+    def test_buckets_in_range(self):
+        keys = jnp.arange(model.HASH_BATCH, dtype=jnp.int64)
+        hashes, buckets = model.hash_pipeline(keys, size_log2=10)
+        b = np.asarray(buckets)
+        assert b.min() >= 0 and b.max() < (1 << 10)
+        np.testing.assert_array_equal(
+            np.asarray(hashes), ref.splitmix64_np(np.asarray(keys)))
+
+    def test_bucket_is_hash_mask(self):
+        keys = jnp.asarray(
+            np.random.default_rng(3).integers(0, 1 << 62, 8192, dtype=np.int64))
+        hashes, buckets = model.hash_pipeline(keys, size_log2=23)
+        h = np.asarray(hashes).view(np.uint64)
+        np.testing.assert_array_equal(
+            np.asarray(buckets).view(np.uint64), h & np.uint64((1 << 23) - 1))
+
+    def test_different_size_log2_changes_mask(self):
+        keys = jnp.arange(1024, dtype=jnp.int64)
+        _, b8 = model.hash_pipeline(keys, size_log2=8)
+        _, b16 = model.hash_pipeline(keys, size_log2=16)
+        m = np.asarray(b16) & ((1 << 8) - 1)
+        np.testing.assert_array_equal(np.asarray(b8), m)
+
+
+class TestProbeStats:
+    def _check(self, dfb):
+        dfb = np.asarray(dfb, dtype=np.int32)
+        hist, count, mean, var, maxd = model.probe_stats(jnp.asarray(dfb))
+        ehist, ecount, emean, evar, emax = ref.probe_stats_np(dfb, model.MAX_DFB)
+        np.testing.assert_array_equal(np.asarray(hist), ehist)
+        assert int(count) == ecount
+        if ecount:
+            assert abs(float(mean) - emean) < 1e-9
+            assert abs(float(var) - evar) < 1e-6
+            assert int(maxd) == emax
+
+    def test_empty_table(self):
+        self._check(np.full(256, -1))
+
+    def test_all_home(self):
+        self._check(np.zeros(256))
+
+    def test_mixed(self):
+        rng = np.random.default_rng(11)
+        dfb = rng.integers(-1, 12, 4096).astype(np.int32)
+        self._check(dfb)
+
+    def test_outliers_clamp_to_last_bin(self):
+        dfb = np.array([0, 1, 200, model.MAX_DFB, model.MAX_DFB + 1], np.int32)
+        hist, count, _, _, maxd = model.probe_stats(jnp.asarray(dfb))
+        assert int(np.asarray(hist)[model.MAX_DFB]) == 3  # 200, 64, 65
+        assert int(count) == 5
+        assert int(maxd) == 200
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1),
+           size=st.sampled_from([64, 1000, 4096]),
+           hi=st.integers(0, 100))
+    def test_hypothesis_random_snapshots(self, seed, size, hi):
+        rng = np.random.default_rng(seed)
+        self._check(rng.integers(-1, hi + 1, size).astype(np.int32))
+
+
+class TestRobinHoodTheory:
+    def test_expected_probe_length_low_at_high_lf(self):
+        """Simulate serial Robin Hood in numpy and check Celis' claim:
+        mean successful probe distance stays small even at LF 0.8."""
+        size = 1 << 14
+        n = int(size * 0.8)
+        keys = np.arange(1, n + 1, dtype=np.int64)
+        h = ref.splitmix64_np(keys).view(np.uint64)
+        home = (h & np.uint64(size - 1)).astype(np.int64)
+        table = np.full(size, -1, dtype=np.int64)  # stores home bucket
+        for hb in home:
+            cur, d = int(hb), 0
+            while True:
+                i = (cur + 0) % size
+                if table[i] == -1:
+                    table[i] = int(hb) if d == 0 else (i - d) % size
+                    break
+                occ_d = (i - table[i]) % size
+                if occ_d < d:
+                    old = table[i]
+                    table[i] = (i - d) % size
+                    d = occ_d
+                    hb = old  # continue displacing the evicted entry
+                cur = (cur + 1) % size
+                d += 1
+        occ = table >= 0
+        dfb = np.where(occ, (np.arange(size) - table) % size, -1).astype(np.int32)
+        _, count, mean, _, _ = ref.probe_stats_np(dfb)
+        assert count == n
+        # Celis: ~2.6 expected probes for successful search; DFB mean ~1.6.
+        assert float(mean) < 4.0, f"mean DFB {mean} too high"

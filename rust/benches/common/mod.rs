@@ -1,0 +1,20 @@
+//! Shared plumbing for the custom bench harness (criterion is not
+//! available in this offline environment; these are plain `main()`
+//! benches registered with `harness = false`).
+
+/// Env-var override helper: `CRH_BENCH_<NAME>`.
+pub fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(format!("CRH_BENCH_{name}"))
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+pub fn env_u32(name: &str, default: u32) -> u32 {
+    env_u64(name, default as u64) as u32
+}
+
+/// `--quick` (or CRH_BENCH_QUICK=1) runs a fast smoke-size pass.
+pub fn quick() -> bool {
+    std::env::args().any(|a| a == "--quick") || env_u64("QUICK", 0) == 1
+}

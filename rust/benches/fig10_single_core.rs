@@ -1,0 +1,25 @@
+//! Bench: **Figure 10** — single-core relative performance of every
+//! hash table vs K-CAS Robin Hood across the paper's 8 workload
+//! configurations (LF {20,40,60,80}% x updates {10,20}%).
+//!
+//! ```sh
+//! cargo bench --bench fig10_single_core            # paper-scale-ish
+//! cargo bench --bench fig10_single_core -- --quick # CI smoke
+//! ```
+//! Tunables: CRH_BENCH_SIZE_LOG2, CRH_BENCH_MS, CRH_BENCH_REPS.
+
+mod common;
+
+use crh::coordinator::{fig10, ExpOpts};
+
+fn main() {
+    let quick = common::quick();
+    let opts = ExpOpts {
+        size_log2: common::env_u32("SIZE_LOG2", if quick { 16 } else { 22 }),
+        duration_ms: common::env_u64("MS", if quick { 100 } else { 500 }),
+        threads: vec![1],
+        pin: true,
+        reps: common::env_u32("REPS", if quick { 1 } else { 2 }),
+    };
+    fig10(&opts);
+}

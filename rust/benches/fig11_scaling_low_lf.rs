@@ -1,0 +1,29 @@
+//! Bench: **Figure 11** — throughput (ops/µs) vs thread count at 20%
+//! and 40% load factor, light (10%) and heavy (20%) update rates.
+//!
+//! ```sh
+//! cargo bench --bench fig11_scaling_low_lf [-- --quick]
+//! ```
+//! Tunables: CRH_BENCH_SIZE_LOG2, CRH_BENCH_MS, CRH_BENCH_THREADS
+//! (comma list).
+
+mod common;
+
+use crh::coordinator::{fig11, ExpOpts};
+
+fn main() {
+    let quick = common::quick();
+    let mut opts = ExpOpts {
+        size_log2: common::env_u32("SIZE_LOG2", if quick { 16 } else { 22 }),
+        duration_ms: common::env_u64("MS", if quick { 100 } else { 500 }),
+        pin: true,
+        reps: 1,
+        ..ExpOpts::default()
+    };
+    if let Ok(ts) = std::env::var("CRH_BENCH_THREADS") {
+        opts.threads = ts.split(',').filter_map(|x| x.parse().ok()).collect();
+    } else if quick {
+        opts.threads = vec![1, 2];
+    }
+    fig11(&opts);
+}

@@ -1,0 +1,28 @@
+//! Bench: **Figure 12** — throughput (ops/µs) vs thread count at 60%
+//! and 80% load factor, light (10%) and heavy (20%) update rates —
+//! where Robin Hood's high-load-factor tolerance shows.
+//!
+//! ```sh
+//! cargo bench --bench fig12_scaling_high_lf [-- --quick]
+//! ```
+
+mod common;
+
+use crh::coordinator::{fig12, ExpOpts};
+
+fn main() {
+    let quick = common::quick();
+    let mut opts = ExpOpts {
+        size_log2: common::env_u32("SIZE_LOG2", if quick { 16 } else { 22 }),
+        duration_ms: common::env_u64("MS", if quick { 100 } else { 500 }),
+        pin: true,
+        reps: 1,
+        ..ExpOpts::default()
+    };
+    if let Ok(ts) = std::env::var("CRH_BENCH_THREADS") {
+        opts.threads = ts.split(',').filter_map(|x| x.parse().ok()).collect();
+    } else if quick {
+        opts.threads = vec![1, 2];
+    }
+    fig12(&opts);
+}

@@ -1,0 +1,20 @@
+//! Bench: **Table 1** — cache misses relative to K-CAS Robin Hood
+//! (single core) across the 8 workload configurations, via the
+//! set-associative cache simulator + per-table trace models
+//! (PAPI substitute; see DESIGN.md substitution #2).
+//!
+//! ```sh
+//! cargo bench --bench table1_cache [-- --quick]
+//! ```
+//! Tunables: CRH_BENCH_SIZE_LOG2 (default 22), CRH_BENCH_OPS.
+
+mod common;
+
+use crh::coordinator::table1;
+
+fn main() {
+    let quick = common::quick();
+    let size = common::env_u32("SIZE_LOG2", if quick { 18 } else { 22 });
+    let ops = common::env_u64("OPS", if quick { 100_000 } else { 3_000_000 });
+    table1(size, ops);
+}

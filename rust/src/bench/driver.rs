@@ -1,0 +1,156 @@
+//! Timed multithreaded benchmark driver (§4.1).
+//!
+//! All threads are released through a barrier, run the op mix against
+//! the table for a fixed wall-clock duration (the paper measures time,
+//! not iterations), and report per-thread op counts. Threads are pinned
+//! in paper order (physical cores first, then SMT siblings).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Barrier;
+use std::time::{Duration, Instant};
+
+use crate::maps::ConcurrentSet;
+use crate::util::affinity;
+use crate::util::rng::Rng;
+
+use super::workload::{prefill, Op, WorkloadCfg};
+
+/// Result of one benchmark cell.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub threads: usize,
+    pub total_ops: u64,
+    pub elapsed: Duration,
+    pub per_thread: Vec<u64>,
+}
+
+impl RunResult {
+    /// The paper's headline unit: operations per microsecond.
+    pub fn ops_per_us(&self) -> f64 {
+        self.total_ops as f64 / self.elapsed.as_micros().max(1) as f64
+    }
+}
+
+/// Prefill `table` and run `threads` workers for the configured
+/// duration. `pin` enables core pinning (disable inside tests sharing
+/// the machine).
+pub fn run_prefilled(
+    table: &dyn ConcurrentSet,
+    cfg: &WorkloadCfg,
+    threads: usize,
+    pin: bool,
+) -> RunResult {
+    let stop = AtomicBool::new(false);
+    let barrier = Barrier::new(threads + 1);
+    let mut per_thread = vec![0u64; threads];
+
+    let elapsed = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (idx, slot) in per_thread.iter_mut().enumerate() {
+            let stop = &stop;
+            let barrier = &barrier;
+            handles.push(s.spawn(move || {
+                if pin {
+                    affinity::pin_thread(idx);
+                }
+                let mut rng = Rng::for_thread(cfg.seed, idx as u64);
+                barrier.wait();
+                let mut ops = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    // Check the stop flag every 64 ops to keep the flag
+                    // read off the critical path.
+                    for _ in 0..64 {
+                        match cfg.draw_op(&mut rng) {
+                            Op::Contains(k) => {
+                                std::hint::black_box(table.contains(k));
+                            }
+                            Op::Add(k) => {
+                                std::hint::black_box(table.add(k));
+                            }
+                            Op::Remove(k) => {
+                                std::hint::black_box(table.remove(k));
+                            }
+                        }
+                        ops += 1;
+                    }
+                }
+                *slot = ops;
+            }));
+        }
+        barrier.wait();
+        let t0 = Instant::now();
+        std::thread::sleep(Duration::from_millis(cfg.duration_ms));
+        stop.store(true, Ordering::Relaxed);
+        for h in handles {
+            h.join().unwrap();
+        }
+        t0.elapsed()
+    });
+
+    RunResult {
+        threads,
+        total_ops: per_thread.iter().sum(),
+        elapsed,
+        per_thread,
+    }
+}
+
+/// Build, prefill, and run one cell (convenience for the CLI/benches).
+pub fn run(
+    kind: crate::maps::TableKind,
+    cfg: &WorkloadCfg,
+    threads: usize,
+    pin: bool,
+) -> RunResult {
+    let table = kind.build(cfg.size_log2);
+    prefill(table.as_ref(), cfg);
+    run_prefilled(table.as_ref(), cfg, threads, pin)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workload::{KeyDist, Mix};
+    use crate::maps::TableKind;
+
+    fn tiny_cfg() -> WorkloadCfg {
+        WorkloadCfg {
+            size_log2: 12,
+            load_factor: 0.4,
+            mix: Mix::LIGHT,
+            duration_ms: 50,
+            seed: 3,
+            dist: KeyDist::Uniform,
+        }
+    }
+
+    #[test]
+    fn driver_counts_ops_single_thread() {
+        let r = run(TableKind::KCasRobinHood, &tiny_cfg(), 1, false);
+        assert_eq!(r.threads, 1);
+        assert!(r.total_ops > 1000, "suspiciously slow: {}", r.total_ops);
+        assert!(r.ops_per_us() > 0.0);
+    }
+
+    #[test]
+    fn driver_scales_thread_count() {
+        let r = run(TableKind::LockFreeLp, &tiny_cfg(), 4, false);
+        assert_eq!(r.per_thread.len(), 4);
+        assert!(r.per_thread.iter().all(|&c| c > 0));
+    }
+
+    #[test]
+    fn load_factor_is_roughly_stationary() {
+        // Uniform add/remove drifts any prefill toward the 50% LF
+        // equilibrium (same dynamics as the paper's workload), so test
+        // stationarity AT the equilibrium point.
+        let mut cfg = tiny_cfg();
+        cfg.load_factor = 0.5;
+        let table = TableKind::KCasRobinHood.build(cfg.size_log2);
+        let added = prefill(table.as_ref(), &cfg);
+        run_prefilled(table.as_ref(), &cfg, 4, false);
+        let n = table.len_quiesced();
+        let drift = (n as f64 - added as f64).abs() / added as f64;
+        assert!(drift < 0.15, "LF drifted: {added} -> {n}");
+    }
+}

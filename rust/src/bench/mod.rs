@@ -1,0 +1,12 @@
+//! Benchmark harness — the paper's §4.1 methodology.
+//!
+//! * [`workload`] — key-space/prefill/op-mix generation (load factors
+//!   20/40/60/80%, update rates 10% "light" / 20% "heavy").
+//! * [`driver`] — barrier-synchronised, pinned, timed multithreaded
+//!   runs counting per-thread operations, reported as ops/µs.
+
+pub mod driver;
+pub mod workload;
+
+pub use driver::{run, RunResult};
+pub use workload::{Mix, WorkloadCfg};

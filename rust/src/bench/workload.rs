@@ -1,0 +1,251 @@
+//! Workload generation per the paper's §4.1.
+//!
+//! "Each thread calls a random method with a random argument from some
+//! predefined method and key distribution. ... The key space was equal
+//! to the size of the table, and was filled to the specified load
+//! factors."
+//!
+//! Update rate `u` splits evenly between `add` and `remove` (u/2 each),
+//! the remainder are `contains` — keeping the load factor stationary
+//! around its prefill value.
+
+use crate::maps::ConcurrentSet;
+use crate::util::rng::Rng;
+
+/// One benchmark operation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Contains(u64),
+    Add(u64),
+    Remove(u64),
+}
+
+/// Method mix (probabilities in percent).
+#[derive(Clone, Copy, Debug)]
+pub struct Mix {
+    /// Percentage of mutating operations (split add/remove evenly).
+    pub update_pct: u32,
+}
+
+impl Mix {
+    pub const LIGHT: Mix = Mix { update_pct: 10 };
+    pub const HEAVY: Mix = Mix { update_pct: 20 };
+
+    /// Draw one op. Keys are uniform over `[1, key_space]`.
+    #[inline]
+    pub fn draw(&self, rng: &mut Rng, key_space: u64) -> Op {
+        let key = 1 + rng.below(key_space);
+        let roll = rng.below(100) as u32;
+        if roll < self.update_pct / 2 {
+            Op::Add(key)
+        } else if roll < self.update_pct {
+            Op::Remove(key)
+        } else {
+            Op::Contains(key)
+        }
+    }
+}
+
+/// Key distribution. The paper uses uniform keys; Zipfian skew is an
+/// evaluation extension (hot keys concentrate contention on a few
+/// timestamp shards / lock segments, stressing the retry paths).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KeyDist {
+    Uniform,
+    /// Zipf(~1) approximated by inverse-CDF `rank = N^u`, decorrelated
+    /// from table order by mixing the rank.
+    Zipf,
+}
+
+impl KeyDist {
+    #[inline]
+    pub fn draw(&self, rng: &mut Rng, key_space: u64) -> u64 {
+        match self {
+            KeyDist::Uniform => 1 + rng.below(key_space),
+            KeyDist::Zipf => {
+                let u = rng.f64().max(1e-12);
+                let rank = (key_space as f64).powf(u) as u64;
+                // Spread ranks over the key space so hot keys don't
+                // share table neighborhoods artificially.
+                1 + crate::util::hash::splitmix64(rank) % key_space
+            }
+        }
+    }
+}
+
+/// Full workload configuration for one benchmark cell.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadCfg {
+    /// Table has `1 << size_log2` buckets; key space equals table size.
+    pub size_log2: u32,
+    /// Prefill fraction (0.2 / 0.4 / 0.6 / 0.8 in the paper).
+    pub load_factor: f64,
+    pub mix: Mix,
+    /// Measured run length.
+    pub duration_ms: u64,
+    pub seed: u64,
+    /// Key distribution (paper: uniform).
+    pub dist: KeyDist,
+}
+
+impl WorkloadCfg {
+    pub fn key_space(&self) -> u64 {
+        1u64 << self.size_log2
+    }
+
+    pub fn prefill_count(&self) -> usize {
+        ((1usize << self.size_log2) as f64 * self.load_factor) as usize
+    }
+
+    /// Paper's 8 configurations at a given table size.
+    pub fn paper_grid(size_log2: u32, duration_ms: u64) -> Vec<WorkloadCfg> {
+        let mut v = Vec::new();
+        for &lf in &[0.2, 0.4, 0.6, 0.8] {
+            for &mix in &[Mix::LIGHT, Mix::HEAVY] {
+                v.push(WorkloadCfg {
+                    size_log2,
+                    load_factor: lf,
+                    mix,
+                    duration_ms,
+                    seed: 0xFEED,
+            dist: KeyDist::Uniform,
+                });
+            }
+        }
+        v
+    }
+
+    /// Draw one op with this config's key distribution.
+    #[inline]
+    pub fn draw_op(&self, rng: &mut Rng) -> Op {
+        let key = self.dist.draw(rng, self.key_space());
+        let roll = rng.below(100) as u32;
+        if roll < self.mix.update_pct / 2 {
+            Op::Add(key)
+        } else if roll < self.mix.update_pct {
+            Op::Remove(key)
+        } else {
+            Op::Contains(key)
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{}% w/ {}%",
+            (self.load_factor * 100.0) as u32,
+            self.mix.update_pct
+        )
+    }
+}
+
+/// Prefill `table` to the configured load factor with a deterministic
+/// pseudo-random subset of the key space (uniformly spread, like the
+/// paper's random fill).
+pub fn prefill(table: &dyn ConcurrentSet, cfg: &WorkloadCfg) -> usize {
+    let n = cfg.prefill_count();
+    let space = cfg.key_space();
+    let mut rng = Rng::new(cfg.seed ^ 0xDEAD_BEEF);
+    let mut added = 0;
+    while added < n {
+        let key = 1 + rng.below(space);
+        if table.add(key) {
+            added += 1;
+        }
+    }
+    added
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maps::TableKind;
+
+    #[test]
+    fn mix_ratios_roughly_match() {
+        let mix = Mix::HEAVY;
+        let mut rng = Rng::new(1);
+        let (mut a, mut r, mut c) = (0, 0, 0);
+        for _ in 0..100_000 {
+            match mix.draw(&mut rng, 1000) {
+                Op::Add(_) => a += 1,
+                Op::Remove(_) => r += 1,
+                Op::Contains(_) => c += 1,
+            }
+        }
+        assert!((9_000..11_000).contains(&a), "adds {a}");
+        assert!((9_000..11_000).contains(&r), "removes {r}");
+        assert!((78_000..82_000).contains(&c), "contains {c}");
+    }
+
+    #[test]
+    fn draw_keys_in_range() {
+        let mut rng = Rng::new(2);
+        for _ in 0..1000 {
+            let op = Mix::LIGHT.draw(&mut rng, 64);
+            let k = match op {
+                Op::Add(k) | Op::Remove(k) | Op::Contains(k) => k,
+            };
+            assert!((1..=64).contains(&k));
+        }
+    }
+
+    #[test]
+    fn prefill_reaches_load_factor() {
+        let cfg = WorkloadCfg {
+            size_log2: 10,
+            load_factor: 0.6,
+            mix: Mix::LIGHT,
+            duration_ms: 0,
+            seed: 7,
+            dist: KeyDist::Uniform,
+        };
+        let t = TableKind::KCasRobinHood.build(cfg.size_log2);
+        let added = prefill(t.as_ref(), &cfg);
+        assert_eq!(added, (1024.0 * 0.6) as usize);
+        assert_eq!(t.len_quiesced(), added);
+    }
+
+    #[test]
+    fn paper_grid_has_8_cells() {
+        let g = WorkloadCfg::paper_grid(10, 100);
+        assert_eq!(g.len(), 8);
+        assert_eq!(g[0].label(), "20% w/ 10%");
+        assert_eq!(g[7].label(), "80% w/ 20%");
+    }
+}
+
+#[cfg(test)]
+mod dist_tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn zipf_is_skewed_uniform_is_not() {
+        let mut rng = Rng::new(5);
+        let n = 1u64 << 16;
+        let mut count = |d: KeyDist| {
+            let mut freq = std::collections::HashMap::new();
+            for _ in 0..50_000 {
+                *freq.entry(d.draw(&mut rng, n)).or_insert(0u64) += 1;
+            }
+            let mut c: Vec<u64> = freq.into_values().collect();
+            c.sort_unstable_by(|a, b| b.cmp(a));
+            c[0]
+        };
+        let hot_zipf = count(KeyDist::Zipf);
+        let hot_uni = count(KeyDist::Uniform);
+        assert!(
+            hot_zipf > 20 * hot_uni.max(1),
+            "zipf hottest {hot_zipf} vs uniform {hot_uni}"
+        );
+    }
+
+    #[test]
+    fn zipf_keys_in_range() {
+        let mut rng = Rng::new(6);
+        for _ in 0..10_000 {
+            let k = KeyDist::Zipf.draw(&mut rng, 1024);
+            assert!((1..=1024).contains(&k));
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Set-associative LRU cache simulator (PAPI substitute for Table 1).
+//!
+//! A small two-level hierarchy (L1-D + LLC) driven by byte addresses.
+//! We report LLC misses as "cache misses" — at the paper's table sizes
+//! (2^23 buckets, deliberately larger than cache) that is what PAPI's
+//! total-cache-miss counters are dominated by.
+
+/// One set-associative LRU cache level.
+pub struct Cache {
+    /// sets[s] = lines (tags), most-recently-used last.
+    sets: Vec<Vec<u64>>,
+    assoc: usize,
+    line_log2: u32,
+    set_mask: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Cache {
+    /// `size_bytes` total capacity, `assoc`-way, `line_bytes` lines.
+    pub fn new(size_bytes: usize, assoc: usize, line_bytes: usize) -> Self {
+        assert!(line_bytes.is_power_of_two());
+        let nsets = size_bytes / (assoc * line_bytes);
+        assert!(nsets.is_power_of_two() && nsets > 0);
+        Self {
+            sets: vec![Vec::with_capacity(assoc); nsets],
+            assoc,
+            line_log2: line_bytes.trailing_zeros(),
+            set_mask: (nsets - 1) as u64,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Standard x86-style L1-D: 32 KiB, 8-way, 64-byte lines.
+    pub fn l1d() -> Self {
+        Cache::new(32 << 10, 8, 64)
+    }
+
+    /// Shared LLC model: 8 MiB, 16-way, 64-byte lines.
+    pub fn llc() -> Self {
+        Cache::new(8 << 20, 16, 64)
+    }
+
+    /// Access a byte address; true on hit.
+    pub fn access(&mut self, addr: u64) -> bool {
+        let line = addr >> self.line_log2;
+        let set = (line & self.set_mask) as usize;
+        let ways = &mut self.sets[set];
+        if let Some(pos) = ways.iter().position(|&t| t == line) {
+            let t = ways.remove(pos);
+            ways.push(t); // MRU
+            self.hits += 1;
+            true
+        } else {
+            if ways.len() == self.assoc {
+                ways.remove(0); // evict LRU
+            }
+            ways.push(line);
+            self.misses += 1;
+            false
+        }
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+    }
+}
+
+/// L1-D + LLC hierarchy.
+pub struct Hierarchy {
+    pub l1: Cache,
+    pub llc: Cache,
+}
+
+impl Hierarchy {
+    pub fn new() -> Self {
+        Self { l1: Cache::l1d(), llc: Cache::llc() }
+    }
+
+    /// Access an address through the hierarchy.
+    #[inline]
+    pub fn access(&mut self, addr: u64) {
+        if !self.l1.access(addr) {
+            self.llc.access(addr);
+        }
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.l1.reset_counters();
+        self.llc.reset_counters();
+    }
+
+    /// The Table 1 metric: misses that left the cache hierarchy.
+    pub fn llc_misses(&self) -> u64 {
+        self.llc.misses
+    }
+
+    pub fn l1_misses(&self) -> u64 {
+        self.l1.misses
+    }
+}
+
+impl Default for Hierarchy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeated_access_hits() {
+        let mut c = Cache::new(1024, 2, 64);
+        assert!(!c.access(0));
+        assert!(c.access(0));
+        assert!(c.access(63)); // same line
+        assert!(!c.access(64)); // next line
+        assert_eq!(c.misses, 2);
+        assert_eq!(c.hits, 2);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        // 2-way, line 64, 2 sets => set stride 128.
+        let mut c = Cache::new(256, 2, 64);
+        c.access(0); // set 0
+        c.access(128); // set 0
+        c.access(256); // set 0 -> evicts line(0)
+        assert!(!c.access(0), "LRU line should have been evicted");
+        assert!(c.access(256));
+    }
+
+    #[test]
+    fn streaming_misses_every_line() {
+        let mut c = Cache::l1d();
+        for i in 0..10_000u64 {
+            c.access(i * 64 + 1 << 20);
+        }
+        assert!(c.misses >= 10_000 - (32 << 10) / 64);
+    }
+
+    #[test]
+    fn hierarchy_l1_filters_llc() {
+        let mut h = Hierarchy::new();
+        for _ in 0..100 {
+            h.access(4096);
+        }
+        assert_eq!(h.llc.misses, 1);
+        assert_eq!(h.l1.misses, 1);
+        assert_eq!(h.l1.hits, 99);
+    }
+
+    #[test]
+    fn working_set_larger_than_l1_smaller_than_llc() {
+        let mut h = Hierarchy::new();
+        // 1 MiB working set, scanned twice.
+        for _ in 0..2 {
+            for i in 0..(1 << 20) / 64u64 {
+                h.access(i * 64);
+            }
+        }
+        // Second scan should hit in LLC (fits) but mostly miss L1.
+        assert!(h.llc.misses <= (1 << 20) / 64 + 16);
+        assert!(h.l1.misses > (1 << 20) / 64);
+    }
+}

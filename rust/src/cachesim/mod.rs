@@ -1,0 +1,135 @@
+//! Cache-behaviour study (paper Table 1) — PAPI substitute.
+//!
+//! [`cache`] is a set-associative LRU hierarchy; [`trace`] holds the
+//! per-algorithm memory-trace models. [`table1_row`] replays the §4.1
+//! workload through a model and reports LLC misses; the coordinator
+//! normalises rows against K-CAS Robin Hood exactly as the paper does.
+
+pub mod cache;
+pub mod trace;
+
+pub use cache::{Cache, Hierarchy};
+pub use trace::TraceTable;
+
+use crate::bench::workload::{KeyDist, Mix, WorkloadCfg};
+use crate::maps::TableKind;
+use crate::util::rng::Rng;
+
+/// Replay `ops` workload operations for `kind` at the configured load
+/// factor and return (LLC misses, L1 misses) — prefill excluded from
+/// the counts, like measuring with PAPI around the timed section.
+pub fn table1_cell(kind: TableKind, cfg: &WorkloadCfg, ops: u64) -> (u64, u64) {
+    let mut t = TraceTable::new(kind, cfg.size_log2);
+    let mut h = Hierarchy::new();
+    // Prefill with the same deterministic keys the real harness uses.
+    let mut rng = Rng::new(cfg.seed ^ 0xDEAD_BEEF);
+    let mut added = std::collections::HashSet::new();
+    while added.len() < cfg.prefill_count() {
+        let key = 1 + rng.below(cfg.key_space());
+        if added.insert(key) {
+            t.op(crate::bench::workload::Op::Add(key), &mut h);
+        }
+    }
+    h.reset_counters();
+    let mut rng = Rng::for_thread(cfg.seed, 0);
+    for _ in 0..ops {
+        t.op(cfg.draw_op(&mut rng), &mut h);
+    }
+    (h.llc_misses(), h.l1_misses())
+}
+
+/// One Table 1 row: misses for `kind` relative to K-CAS Robin Hood (in
+/// percent) for each of the paper's 8 configurations.
+pub fn table1_row(
+    kind: TableKind,
+    size_log2: u32,
+    ops: u64,
+    baseline: &[u64],
+) -> Vec<f64> {
+    WorkloadCfg::paper_grid(size_log2, 0)
+        .iter()
+        .zip(baseline)
+        .map(|(cfg, &base)| {
+            let (llc, _) = table1_cell(kind, cfg, ops);
+            100.0 * llc as f64 / base.max(1) as f64
+        })
+        .collect()
+}
+
+/// Baseline (K-CAS RH) absolute LLC misses for the 8 configurations.
+pub fn table1_baseline(size_log2: u32, ops: u64) -> Vec<u64> {
+    WorkloadCfg::paper_grid(size_log2, 0)
+        .iter()
+        .map(|cfg| table1_cell(TableKind::KCasRobinHood, cfg, ops).0)
+        .collect()
+}
+
+/// Convenience: the paper's workload grid labels.
+pub fn grid_labels(size_log2: u32) -> Vec<String> {
+    WorkloadCfg::paper_grid(size_log2, 0)
+        .iter()
+        .map(|c| c.label())
+        .collect()
+}
+
+/// Default mix used in standalone cells.
+pub fn default_mix() -> Mix {
+    Mix::LIGHT
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cells_are_deterministic() {
+        let cfg = WorkloadCfg {
+            size_log2: 12,
+            load_factor: 0.6,
+            mix: Mix::LIGHT,
+            duration_ms: 0,
+            seed: 1,
+            dist: KeyDist::Uniform,
+        };
+        let a = table1_cell(TableKind::KCasRobinHood, &cfg, 20_000);
+        let b = table1_cell(TableKind::KCasRobinHood, &cfg, 20_000);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn lockfree_lp_worst_at_high_lf() {
+        // The paper's headline Table 1 shape: lock-free LP's misses
+        // dwarf everyone's at 80% LF.
+        let cfg = WorkloadCfg {
+            size_log2: 14,
+            load_factor: 0.8,
+            mix: Mix::HEAVY,
+            duration_ms: 0,
+            seed: 1,
+            dist: KeyDist::Uniform,
+        };
+        let (rh, _) = table1_cell(TableKind::KCasRobinHood, &cfg, 50_000);
+        let (lp, _) = table1_cell(TableKind::LockFreeLp, &cfg, 50_000);
+        assert!(
+            lp as f64 > 1.5 * rh as f64,
+            "lock-free LP {lp} not >> K-CAS RH {rh}"
+        );
+    }
+
+    #[test]
+    fn hopscotch_beats_kcas_rh_on_misses() {
+        // Must use a table much larger than the LLC (as the paper does:
+        // 2^23 buckets) or cache-residency effects dominate.
+        let cfg = WorkloadCfg {
+            size_log2: 22,
+            load_factor: 0.6,
+            mix: Mix::LIGHT,
+            duration_ms: 0,
+            seed: 1,
+            dist: KeyDist::Uniform,
+        };
+        let (rh, _) = table1_cell(TableKind::KCasRobinHood, &cfg, 100_000);
+        let (hs, _) = table1_cell(TableKind::Hopscotch, &cfg, 100_000);
+        assert!(hs < rh, "hopscotch {hs} >= kcas-rh {rh}");
+    }
+}

@@ -1,0 +1,662 @@
+//! Per-table memory-trace models for the Table 1 cache study.
+//!
+//! Each model replays the §4.1 workload single-threaded against a
+//! faithful *memory layout* of the corresponding algorithm, emitting
+//! every bucket/timestamp/lock/node access into the cache hierarchy.
+//! Probe lengths, tombstone contamination, displacement chains and
+//! pointer chasing all emerge from real algorithm state — only the
+//! synchronisation (atomics/locks) is elided, since a single-core trace
+//! has no contention (matching the paper's single-core Table 1 setup).
+//!
+//! Layout assumptions (one address region per array):
+//!
+//! | table            | per-bucket layout                                |
+//! |------------------|--------------------------------------------------|
+//! | K-CAS RH         | 8 B key words + 128 B-padded timestamp shards    |
+//! | Transactional RH | 8 B key words (HTM: no timestamp reads at all)   |
+//! | Hopscotch        | 32 B bucket record (hop-info, key, stored hash)  |
+//! | Locked LP        | 8 B key words + 128 B-padded lock shards         |
+//! | Lock-free LP     | 8 B bucket *pointer* + 32 B heap node ([29])     |
+//! | Michael          | 8 B head pointer + 32 B heap nodes (chained)     |
+
+use super::cache::Hierarchy;
+use crate::bench::workload::Op;
+use crate::util::hash::{dfb, home_bucket, splitmix64};
+
+const TABLE_BASE: u64 = 1 << 32;
+const TS_BASE: u64 = 2 << 32;
+const HOP_BASE: u64 = 3 << 32;
+const LOCK_BASE: u64 = 4 << 32;
+const HEAP_BASE: u64 = 5 << 32;
+const PTR_BASE: u64 = 6 << 32;
+const DESC_BASE: u64 = 7 << 32;
+
+/// Mirror of `maps::kcas_rh::default_shard_log2`: bounded, cache-
+/// resident timestamp/lock shard tables (this crate's optimized
+/// default).
+fn shard_log2(size_log2: u32) -> u32 {
+    6u32.max(size_log2.saturating_sub(13))
+}
+
+/// The paper's layout: one timestamp per 64 buckets regardless of table
+/// size (16 MiB of timestamps at 2^23 — NOT cache resident). Table 1's
+/// relative numbers (Tx-RH < 100%, Hopscotch 66-89%) only arise under
+/// this layout; see EXPERIMENTS.md §Table-1 and the ts-sharding
+/// ablation.
+pub const PAPER_TS_SHARD_LOG2: u32 = 6;
+/// Heap span for pseudo-random allocation placement (jemalloc spread).
+const HEAP_SPAN: u64 = 1 << 30;
+
+#[inline]
+fn heap_addr(alloc_id: u64) -> u64 {
+    HEAP_BASE + (splitmix64(alloc_id) & (HEAP_SPAN - 1) & !31)
+}
+
+/// Which layout/algorithm a Robin Hood trace models.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub enum RhFlavor {
+    /// K-CAS: timestamp array on the read path, descriptor on updates.
+    KCas,
+    /// HTM lock-elision: bare table accesses only.
+    Tx,
+}
+
+/// Robin Hood trace (serial RH core + flavor-specific extra traffic).
+pub struct RhTrace {
+    table: Vec<u64>,
+    mask: u64,
+    flavor: RhFlavor,
+    ts_shard_log2: u32,
+}
+
+impl RhTrace {
+    pub fn new(size_log2: u32, flavor: RhFlavor) -> Self {
+        Self::with_ts_sharding(size_log2, flavor, shard_log2(size_log2))
+    }
+
+    pub fn with_ts_sharding(
+        size_log2: u32,
+        flavor: RhFlavor,
+        ts_shard_log2: u32,
+    ) -> Self {
+        Self {
+            table: vec![0; 1 << size_log2],
+            mask: (1u64 << size_log2) - 1,
+            flavor,
+            ts_shard_log2,
+        }
+    }
+
+    #[inline]
+    fn bucket(&self, i: usize, h: &mut Hierarchy) {
+        h.access(TABLE_BASE + i as u64 * 8);
+    }
+
+    #[inline]
+    fn ts(&self, i: usize, h: &mut Hierarchy) {
+        if self.flavor == RhFlavor::KCas {
+            h.access(TS_BASE + ((i >> self.ts_shard_log2) as u64) * 128);
+        }
+    }
+
+    fn dist(&self, key: u64, i: usize) -> u64 {
+        dfb(home_bucket(key, self.mask), i, self.mask)
+    }
+
+    pub fn op(&mut self, op: Op, h: &mut Hierarchy) {
+        match op {
+            Op::Contains(key) => {
+                let mut i = home_bucket(key, self.mask);
+                let mut d = 0u64;
+                loop {
+                    self.ts(i, h);
+                    self.bucket(i, h);
+                    let cur = self.table[i];
+                    if cur == 0 || cur == key || self.dist(cur, i) < d {
+                        break;
+                    }
+                    i = (i + 1) & self.mask as usize;
+                    d += 1;
+                }
+            }
+            Op::Add(key) => {
+                let mut active = key;
+                let mut ad = 0u64;
+                let mut i = home_bucket(active, self.mask);
+                let mut desc_entries = 0u64;
+                loop {
+                    self.ts(i, h);
+                    self.bucket(i, h);
+                    let cur = self.table[i];
+                    if cur == key {
+                        return;
+                    }
+                    if cur == 0 {
+                        self.table[i] = active;
+                        self.bucket(i, h); // the committing write
+                        if self.flavor == RhFlavor::KCas {
+                            // Descriptor writes (thread-local, hot).
+                            for e in 0..=desc_entries {
+                                h.access(DESC_BASE + e * 24);
+                            }
+                        }
+                        return;
+                    }
+                    let cd = self.dist(cur, i);
+                    if cd < ad {
+                        self.table[i] = active;
+                        self.bucket(i, h); // swap write
+                        self.ts(i, h); // timestamp bump
+                        active = cur;
+                        ad = cd;
+                        desc_entries += 1;
+                    }
+                    i = (i + 1) & self.mask as usize;
+                    ad += 1;
+                }
+            }
+            Op::Remove(key) => {
+                let mut i = home_bucket(key, self.mask);
+                let mut d = 0u64;
+                loop {
+                    self.ts(i, h);
+                    self.bucket(i, h);
+                    let cur = self.table[i];
+                    if cur == 0 || self.dist(cur, i) < d {
+                        return; // miss
+                    }
+                    if cur == key {
+                        break;
+                    }
+                    i = (i + 1) & self.mask as usize;
+                    d += 1;
+                }
+                // Backward shift.
+                loop {
+                    let next = (i + 1) & self.mask as usize;
+                    self.bucket(next, h);
+                    let nk = self.table[next];
+                    if nk == 0 || self.dist(nk, next) == 0 {
+                        self.table[i] = 0;
+                        self.bucket(i, h);
+                        return;
+                    }
+                    self.table[i] = nk;
+                    self.bucket(i, h);
+                    self.ts(i, h);
+                    i = next;
+                }
+            }
+        }
+    }
+}
+
+/// Hopscotch trace: 32-byte bucket records (hop-info + key + stored
+/// hash, as in the reference implementation) + segment timestamps.
+pub struct HopTrace {
+    keys: Vec<u64>,
+    hop: Vec<u64>,
+    mask: u64,
+    seg_log2: u32,
+}
+
+const H: usize = 64;
+
+impl HopTrace {
+    pub fn new(size_log2: u32) -> Self {
+        Self {
+            keys: vec![0; 1 << size_log2],
+            hop: vec![0; 1 << size_log2],
+            mask: (1u64 << size_log2) - 1,
+            seg_log2: shard_log2(size_log2),
+        }
+    }
+
+    #[inline]
+    fn bucket(&self, i: usize, h: &mut Hierarchy) {
+        h.access(HOP_BASE + i as u64 * 32);
+    }
+
+    #[inline]
+    fn wrap(&self, i: usize) -> usize {
+        i & self.mask as usize
+    }
+
+    pub fn op(&mut self, op: Op, h: &mut Hierarchy) {
+        let home = home_bucket(
+            match op {
+                Op::Contains(k) | Op::Add(k) | Op::Remove(k) => k,
+            },
+            self.mask,
+        );
+        match op {
+            Op::Contains(key) => {
+                self.bucket(home, h); // hop-info read
+                let mut bits = self.hop[home];
+                while bits != 0 {
+                    let j = bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    let s = self.wrap(home + j);
+                    self.bucket(s, h);
+                    if self.keys[s] == key {
+                        return;
+                    }
+                }
+            }
+            Op::Add(key) => {
+                self.bucket(home, h);
+                let mut bits = self.hop[home];
+                while bits != 0 {
+                    let j = bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    let s = self.wrap(home + j);
+                    self.bucket(s, h);
+                    if self.keys[s] == key {
+                        return; // already present
+                    }
+                }
+                // Probe for an empty bucket.
+                let mut free = None;
+                for d in 0..self.keys.len() {
+                    let i = self.wrap(home + d);
+                    self.bucket(i, h);
+                    if self.keys[i] == 0 {
+                        free = Some((i, d));
+                        break;
+                    }
+                }
+                let (mut free, mut dist) = free.expect("hop trace full");
+                'hopping: while dist >= H {
+                    for back in (1..H).rev() {
+                        let b = self.wrap(free.wrapping_sub(back));
+                        self.bucket(b, h);
+                        let cand = self.hop[b] & ((1u64 << back) - 1);
+                        if cand == 0 {
+                            continue;
+                        }
+                        let j = cand.trailing_zeros() as usize;
+                        let s = self.wrap(b + j);
+                        self.bucket(s, h);
+                        self.bucket(free, h);
+                        self.keys[free] = self.keys[s];
+                        self.keys[s] = 0;
+                        self.hop[b] = (self.hop[b] & !(1u64 << j)) | (1u64 << back);
+                        // Segment timestamp bump.
+                        h.access(TS_BASE + ((b >> self.seg_log2) as u64) * 128);
+                        dist -= (free.wrapping_sub(s)) & self.mask as usize;
+                        free = s;
+                        continue 'hopping;
+                    }
+                    return; // displacement failed (full); drop op
+                }
+                self.keys[free] = key;
+                self.hop[home] |= 1u64 << dist;
+                self.bucket(free, h);
+                self.bucket(home, h);
+            }
+            Op::Remove(key) => {
+                self.bucket(home, h);
+                let mut bits = self.hop[home];
+                while bits != 0 {
+                    let j = bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    let s = self.wrap(home + j);
+                    self.bucket(s, h);
+                    if self.keys[s] == key {
+                        self.keys[s] = 0;
+                        self.hop[home] &= !(1u64 << j);
+                        self.bucket(s, h);
+                        self.bucket(home, h);
+                        return;
+                    }
+                }
+            }
+        }
+        // Lock-word traffic for mutating ops (sharded; cache-padded).
+        if !matches!(op, Op::Contains(_)) {
+            h.access(LOCK_BASE + ((home >> self.seg_log2) as u64) * 128);
+        }
+    }
+}
+
+/// Linear-probing trace. `node_based` models [29]'s
+/// pointer-per-bucket layout (a heap dereference on every occupied
+/// probe); otherwise keys are stored inline (locked LP).
+pub struct LpTrace {
+    table: Vec<u64>,
+    /// Heap allocation id per bucket (node-based flavor).
+    node: Vec<u64>,
+    mask: u64,
+    node_based: bool,
+    locked: bool,
+    /// Recycle tombstones on insert. The paper's locked LP does NOT
+    /// (its Table 1 row is pure contamination: "the table fills up over
+    /// time with tombstones"); its lock-free LP (Nielsen & Karlsson)
+    /// does.
+    reuse_tombstones: bool,
+    next_alloc: u64,
+    seg_log2: u32,
+}
+
+const TOMB: u64 = u64::MAX;
+
+impl LpTrace {
+    pub fn new(size_log2: u32, node_based: bool, locked: bool) -> Self {
+        Self {
+            table: vec![0; 1 << size_log2],
+            node: vec![0; 1 << size_log2],
+            mask: (1u64 << size_log2) - 1,
+            node_based,
+            locked,
+            reuse_tombstones: node_based, // locked LP: paper never reuses
+            next_alloc: 1,
+            seg_log2: shard_log2(size_log2),
+        }
+    }
+
+    #[inline]
+    fn bucket(&self, i: usize, h: &mut Hierarchy) {
+        if self.node_based {
+            h.access(PTR_BASE + i as u64 * 8);
+            let id = self.node[i];
+            if id != 0 {
+                h.access(heap_addr(id));
+            }
+        } else {
+            h.access(TABLE_BASE + i as u64 * 8);
+        }
+    }
+
+    pub fn op(&mut self, op: Op, h: &mut Hierarchy) {
+        if self.locked && !matches!(op, Op::Contains(_)) {
+            let home = home_bucket(
+                match op {
+                    Op::Contains(k) | Op::Add(k) | Op::Remove(k) => k,
+                },
+                self.mask,
+            );
+            h.access(LOCK_BASE + ((home >> self.seg_log2) as u64) * 128);
+        }
+        match op {
+            Op::Contains(key) => {
+                let mut i = home_bucket(key, self.mask);
+                for _ in 0..self.table.len() {
+                    self.bucket(i, h);
+                    let cur = self.table[i];
+                    if cur == 0 || cur == key {
+                        return;
+                    }
+                    i = (i + 1) & self.mask as usize;
+                }
+            }
+            Op::Add(key) => {
+                // Scan to EMPTY (checking for the key), then claim the
+                // first tombstone if any — the recycling both real LP
+                // variants perform.
+                let mut i = home_bucket(key, self.mask);
+                let mut reusable = None;
+                for _ in 0..self.table.len() {
+                    self.bucket(i, h);
+                    let cur = self.table[i];
+                    if cur == key {
+                        return;
+                    }
+                    if cur == TOMB && reusable.is_none() {
+                        reusable = Some(i);
+                    }
+                    if cur == 0 {
+                        break;
+                    }
+                    i = (i + 1) & self.mask as usize;
+                }
+                let slot = if self.reuse_tombstones {
+                    reusable.unwrap_or(i)
+                } else {
+                    i
+                };
+                if self.table[slot] != 0 && self.table[slot] != TOMB {
+                    return; // table saturated; drop op
+                }
+                self.table[slot] = key;
+                if self.node_based {
+                    self.node[slot] = self.next_alloc;
+                    self.next_alloc += 1;
+                    h.access(heap_addr(self.node[slot]));
+                }
+                self.bucket(slot, h);
+            }
+            Op::Remove(key) => {
+                let mut i = home_bucket(key, self.mask);
+                for _ in 0..self.table.len() {
+                    self.bucket(i, h);
+                    let cur = self.table[i];
+                    if cur == 0 {
+                        return;
+                    }
+                    if cur == key {
+                        self.table[i] = TOMB;
+                        self.bucket(i, h);
+                        return;
+                    }
+                    i = (i + 1) & self.mask as usize;
+                }
+            }
+        }
+    }
+}
+
+/// Michael separate-chaining trace: head-pointer array + sorted chains
+/// of 32-byte heap nodes.
+pub struct MichaelTrace {
+    /// Per bucket: sorted vec of (key, alloc_id).
+    chains: Vec<Vec<(u64, u64)>>,
+    mask: u64,
+    next_alloc: u64,
+}
+
+impl MichaelTrace {
+    pub fn new(size_log2: u32) -> Self {
+        Self {
+            chains: vec![Vec::new(); 1 << size_log2],
+            mask: (1u64 << size_log2) - 1,
+            next_alloc: 1,
+        }
+    }
+
+    pub fn op(&mut self, op: Op, h: &mut Hierarchy) {
+        let key = match op {
+            Op::Contains(k) | Op::Add(k) | Op::Remove(k) => k,
+        };
+        let b = home_bucket(key, self.mask);
+        h.access(PTR_BASE + b as u64 * 8); // head pointer
+        let chain = &mut self.chains[b];
+        let mut pos = 0;
+        while pos < chain.len() {
+            h.access(heap_addr(chain[pos].1)); // node dereference
+            if chain[pos].0 >= key {
+                break;
+            }
+            pos += 1;
+        }
+        let found = pos < chain.len() && chain[pos].0 == key;
+        match op {
+            Op::Contains(_) => {}
+            Op::Add(_) => {
+                if !found {
+                    let id = self.next_alloc;
+                    self.next_alloc += 1;
+                    h.access(heap_addr(id)); // initialise the new node
+                    chain.insert(pos, (key, id));
+                }
+            }
+            Op::Remove(_) => {
+                if found {
+                    h.access(heap_addr(chain[pos].1)); // mark
+                    chain.remove(pos);
+                }
+            }
+        }
+    }
+}
+
+/// A boxed trace model for any [`crate::maps::TableKind`].
+pub enum TraceTable {
+    Rh(RhTrace),
+    Hop(HopTrace),
+    Lp(LpTrace),
+    Michael(MichaelTrace),
+}
+
+impl TraceTable {
+    /// `paper_ts` selects the paper's fine-grained timestamp layout for
+    /// the K-CAS Robin Hood trace (Table 1 reproduction) instead of
+    /// this crate's optimized bounded sharding.
+    pub fn new_with(
+        kind: crate::maps::TableKind,
+        size_log2: u32,
+        paper_ts: bool,
+    ) -> Self {
+        use crate::maps::TableKind::*;
+        match kind {
+            KCasRobinHood => {
+                let ts = if paper_ts {
+                    PAPER_TS_SHARD_LOG2
+                } else {
+                    shard_log2(size_log2)
+                };
+                TraceTable::Rh(RhTrace::with_ts_sharding(
+                    size_log2,
+                    RhFlavor::KCas,
+                    ts,
+                ))
+            }
+            TxRobinHood | SerialRobinHood => {
+                TraceTable::Rh(RhTrace::new(size_log2, RhFlavor::Tx))
+            }
+            Hopscotch => TraceTable::Hop(HopTrace::new(size_log2)),
+            LockFreeLp => TraceTable::Lp(LpTrace::new(size_log2, true, false)),
+            LockedLp => TraceTable::Lp(LpTrace::new(size_log2, false, true)),
+            Michael => TraceTable::Michael(MichaelTrace::new(size_log2)),
+        }
+    }
+
+    pub fn new(kind: crate::maps::TableKind, size_log2: u32) -> Self {
+        Self::new_with(kind, size_log2, true)
+    }
+
+    pub fn op(&mut self, op: Op, h: &mut Hierarchy) {
+        match self {
+            TraceTable::Rh(t) => t.op(op, h),
+            TraceTable::Hop(t) => t.op(op, h),
+            TraceTable::Lp(t) => t.op(op, h),
+            TraceTable::Michael(t) => t.op(op, h),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maps::TableKind;
+
+    fn run_trace(kind: TableKind, ops: &[Op]) -> (TraceTable, Hierarchy) {
+        let mut t = TraceTable::new(kind, 12);
+        let mut h = Hierarchy::new();
+        for &op in ops {
+            t.op(op, &mut h);
+        }
+        (t, h)
+    }
+
+    #[test]
+    fn all_kinds_replay_without_panic() {
+        let ops: Vec<Op> = (1..=800u64)
+            .map(Op::Add)
+            .chain((1..=400).map(Op::Remove))
+            .chain((1..=800).map(Op::Contains))
+            .collect();
+        for kind in TableKind::ALL_CONCURRENT {
+            let (_, h) = run_trace(kind, &ops);
+            assert!(h.l1.hits + h.l1.misses > 0, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn node_based_lp_touches_more_memory_than_inline() {
+        let ops: Vec<Op> = (1..=2000u64)
+            .map(Op::Add)
+            .chain((1..=2000).map(Op::Contains))
+            .collect();
+        let (_, node) = run_trace(TableKind::LockFreeLp, &ops);
+        let (_, inline) = run_trace(TableKind::LockedLp, &ops);
+        assert!(
+            node.llc_misses() > inline.llc_misses(),
+            "node {} <= inline {}",
+            node.llc_misses(),
+            inline.llc_misses()
+        );
+    }
+
+    #[test]
+    fn tx_rh_touches_less_than_kcas_rh() {
+        let ops: Vec<Op> = (1..=2000u64)
+            .map(Op::Add)
+            .chain((1..=2000).map(Op::Contains))
+            .collect();
+        let (_, tx) = run_trace(TableKind::TxRobinHood, &ops);
+        let (_, kcas) = run_trace(TableKind::KCasRobinHood, &ops);
+        let (t, k) = (
+            tx.l1.hits + tx.l1.misses,
+            kcas.l1.hits + kcas.l1.misses,
+        );
+        assert!(t < k, "tx accesses {t} >= kcas accesses {k}");
+    }
+
+    #[test]
+    fn rh_trace_semantics_match_serial() {
+        // The trace's internal state must be a real Robin Hood table.
+        let mut t = RhTrace::new(8, RhFlavor::KCas);
+        let mut h = Hierarchy::new();
+        for k in 1..=150u64 {
+            t.op(Op::Add(k), &mut h);
+        }
+        for k in (1..=150u64).step_by(2) {
+            t.op(Op::Remove(k), &mut h);
+        }
+        let live = t.table.iter().filter(|&&k| k != 0).count();
+        assert_eq!(live, 75);
+    }
+
+    #[test]
+    fn contamination_grows_probe_traffic() {
+        // Churned LP probes should touch more lines than fresh LP.
+        let mut fresh = LpTrace::new(10, false, false);
+        let mut churned = LpTrace::new(10, false, false);
+        let mut hf = Hierarchy::new();
+        let mut hc = Hierarchy::new();
+        for k in 1..=600u64 {
+            fresh.op(Op::Add(k), &mut hf);
+            churned.op(Op::Add(k), &mut hc);
+        }
+        // Contaminate: delete and re-add disjoint keys many times.
+        for round in 0..10u64 {
+            for k in 1..=300u64 {
+                churned.op(Op::Remove(601 + (round * 300 + k) % 300), &mut hc);
+            }
+            for k in 1..=300u64 {
+                churned.op(Op::Add(1000 + round * 1000 + k), &mut hc);
+                churned.op(Op::Remove(1000 + round * 1000 + k), &mut hc);
+            }
+        }
+        hf.reset_counters();
+        hc.reset_counters();
+        // Unsuccessful searches: LP can only cull at EMPTY, so
+        // contamination lengthens exactly these probes.
+        for k in 1..=600u64 {
+            fresh.op(Op::Contains(50_000 + k), &mut hf);
+            churned.op(Op::Contains(50_000 + k), &mut hc);
+        }
+        let (f, c) = (hf.l1.hits + hf.l1.misses, hc.l1.hits + hc.l1.misses);
+        assert!(c > f, "contamination had no effect: {c} <= {f}");
+    }
+}

@@ -1,0 +1,367 @@
+//! Experiment coordinator: one entry point per paper figure/table,
+//! plus ad-hoc benchmark cells and the probe-statistics analysis that
+//! runs through the PJRT engine. The CLI in `main.rs` dispatches here.
+
+use std::time::Duration;
+
+use crate::bench::{driver, workload::{KeyDist, WorkloadCfg}, Mix};
+use crate::cachesim;
+use crate::maps::TableKind;
+
+/// Shared experiment options (CLI-settable).
+#[derive(Clone, Debug)]
+pub struct ExpOpts {
+    /// Table size exponent. Paper: 23 (8M buckets, larger than cache).
+    pub size_log2: u32,
+    /// Per-cell measured duration.
+    pub duration_ms: u64,
+    /// Thread counts to sweep in scaling figures.
+    pub threads: Vec<usize>,
+    /// Pin threads to cores.
+    pub pin: bool,
+    /// Repetitions per cell (paper: 5).
+    pub reps: u32,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        let max = crate::util::affinity::available_cpus();
+        // Sweep 1..8 threads even on small machines: beyond the core
+        // count this measures oversubscribed (time-sliced) behaviour,
+        // which is the closest available proxy for the paper's
+        // 144-thread sweeps on a 1-core container (see EXPERIMENTS.md).
+        let mut threads = vec![1, 2, 4, 8];
+        let mut t = 16;
+        while t <= max {
+            threads.push(t);
+            t *= 2;
+        }
+        if threads.last() != Some(&max) && max > 8 {
+            threads.push(max);
+        }
+        threads.dedup();
+        Self {
+            size_log2: 23,
+            duration_ms: 2000,
+            threads,
+            pin: true,
+            reps: 1,
+        }
+    }
+}
+
+fn mean_ops_per_us(
+    kind: TableKind,
+    cfg: &WorkloadCfg,
+    threads: usize,
+    pin: bool,
+    reps: u32,
+) -> f64 {
+    let mut total = 0.0;
+    for rep in 0..reps {
+        let mut c = *cfg;
+        c.seed = cfg.seed.wrapping_add(rep as u64);
+        total += driver::run(kind, &c, threads, pin).ops_per_us();
+    }
+    total / reps as f64
+}
+
+/// **Figure 10**: single-core throughput of every table relative to
+/// K-CAS Robin Hood across the 8 workload configurations.
+pub fn fig10(opts: &ExpOpts) {
+    println!("# Figure 10 — single-core relative performance (K-CAS RH = 100%)");
+    println!(
+        "# table 2^{} buckets, {} ms/cell, {} rep(s)",
+        opts.size_log2, opts.duration_ms, opts.reps
+    );
+    let grid = WorkloadCfg::paper_grid(opts.size_log2, opts.duration_ms);
+    print!("{:<18}", "config");
+    for cfg in &grid {
+        print!(" {:>11}", cfg.label());
+    }
+    println!();
+    let base: Vec<f64> = grid
+        .iter()
+        .map(|cfg| {
+            mean_ops_per_us(TableKind::KCasRobinHood, cfg, 1, opts.pin, opts.reps)
+        })
+        .collect();
+    let mut kinds = vec![TableKind::KCasRobinHood];
+    kinds.extend(
+        TableKind::ALL_CONCURRENT
+            .iter()
+            .filter(|k| **k != TableKind::KCasRobinHood),
+    );
+    kinds.push(TableKind::SerialRobinHood);
+    for kind in kinds {
+        print!("{:<18}", kind.display());
+        for (cfg, b) in grid.iter().zip(&base) {
+            let v = if kind == TableKind::KCasRobinHood {
+                *b
+            } else {
+                mean_ops_per_us(kind, cfg, 1, opts.pin, opts.reps)
+            };
+            print!(" {:>10.0}%", 100.0 * v / b);
+        }
+        println!();
+    }
+}
+
+/// Scaling panels shared by Figures 11 and 12.
+fn scaling_panels(opts: &ExpOpts, lfs: &[f64], figure: &str) {
+    println!(
+        "# {figure} — throughput (ops/us) vs threads; table 2^{}, {} ms/cell",
+        opts.size_log2, opts.duration_ms
+    );
+    for &lf in lfs {
+        for mix in [Mix::LIGHT, Mix::HEAVY] {
+            let cfg = WorkloadCfg {
+                size_log2: opts.size_log2,
+                load_factor: lf,
+                mix,
+                duration_ms: opts.duration_ms,
+                seed: 0xFEED,
+            dist: KeyDist::Uniform,
+            };
+            println!(
+                "\n## panel: load factor {}%, updates {}%",
+                (lf * 100.0) as u32,
+                mix.update_pct
+            );
+            print!("{:<18}", "threads");
+            for &t in &opts.threads {
+                print!(" {:>9}", t);
+            }
+            println!();
+            for kind in TableKind::ALL_CONCURRENT {
+                print!("{:<18}", kind.display());
+                for &t in &opts.threads {
+                    let v = mean_ops_per_us(kind, &cfg, t, opts.pin, opts.reps);
+                    print!(" {:>9.2}", v);
+                }
+                println!();
+            }
+        }
+    }
+}
+
+/// **Figure 11**: scaling at 20% and 40% load factor.
+pub fn fig11(opts: &ExpOpts) {
+    scaling_panels(opts, &[0.2, 0.4], "Figure 11");
+}
+
+/// **Figure 12**: scaling at 60% and 80% load factor.
+pub fn fig12(opts: &ExpOpts) {
+    scaling_panels(opts, &[0.6, 0.8], "Figure 12");
+}
+
+/// **Table 1**: simulated cache misses relative to K-CAS Robin Hood
+/// (single core), via the trace models + cache hierarchy.
+pub fn table1(size_log2: u32, ops: u64) {
+    println!(
+        "# Table 1 — LLC misses relative to K-CAS Robin Hood \
+         (cache simulator; table 2^{size_log2}, {ops} ops/cell)"
+    );
+    let labels = cachesim::grid_labels(size_log2);
+    print!("{:<18}", "config");
+    for l in &labels {
+        print!(" {:>11}", l);
+    }
+    println!();
+    let baseline = cachesim::table1_baseline(size_log2, ops);
+    let rows = [
+        TableKind::Hopscotch,
+        TableKind::LockFreeLp,
+        TableKind::LockedLp,
+        TableKind::Michael,
+        TableKind::TxRobinHood,
+    ];
+    for kind in rows {
+        let row = cachesim::table1_row(kind, size_log2, ops, &baseline);
+        print!("{:<18}", kind.display());
+        for v in row {
+            print!(" {:>10.0}%", v);
+        }
+        println!();
+    }
+}
+
+/// Ablation: timestamp shard granularity for K-CAS Robin Hood.
+///
+/// The paper shards one timestamp per 64 buckets (16 MiB of timestamp
+/// words at 2^23 — misses in cache, which is what makes its Table 1
+/// show Tx-RH ahead of K-CAS RH). This crate's default bounds the shard
+/// table to <= 8192 entries (cache-resident). The ablation quantifies
+/// the tradeoff on real throughput and simulated misses.
+pub fn ablate_ts(size_log2: u32, duration_ms: u64) {
+    use crate::cachesim::{trace::RhFlavor, trace::RhTrace, Hierarchy};
+    use crate::maps::kcas_rh::KCasRobinHood;
+    println!(
+        "# ts-sharding ablation — K-CAS RH, 2^{size_log2} buckets, \
+         LF 60%, 10% updates"
+    );
+    println!(
+        "{:<26} {:>12} {:>12} {:>14}",
+        "buckets/shard (log2)", "ops/us (1T)", "ops/us (4T)", "LLC miss/op"
+    );
+    let default = crate::maps::kcas_rh::default_shard_log2(size_log2);
+    let mut widths = vec![6u32, 8, 10, 12];
+    if !widths.contains(&default) {
+        widths.push(default);
+    }
+    widths.sort_unstable();
+    widths.dedup();
+    for w in widths {
+        let cfg = WorkloadCfg {
+            size_log2,
+            load_factor: 0.6,
+            mix: Mix::LIGHT,
+            duration_ms,
+            seed: 0xAB1A,
+            dist: KeyDist::Uniform,
+        };
+        let mut tp = [0.0f64; 2];
+        for (i, threads) in [1usize, 4].into_iter().enumerate() {
+            let table = KCasRobinHood::with_shards(size_log2, w);
+            crate::bench::workload::prefill(&table, &cfg);
+            tp[i] =
+                driver::run_prefilled(&table, &cfg, threads, true).ops_per_us();
+        }
+        // Simulated misses under the same sharding.
+        let mut t = RhTrace::with_ts_sharding(size_log2, RhFlavor::KCas, w);
+        let mut h = Hierarchy::new();
+        let mut rng = crate::util::rng::Rng::new(cfg.seed ^ 0xDEAD_BEEF);
+        let mut added = std::collections::HashSet::new();
+        while added.len() < cfg.prefill_count() {
+            let key = 1 + rng.below(cfg.key_space());
+            if added.insert(key) {
+                t.op(crate::bench::workload::Op::Add(key), &mut h);
+            }
+        }
+        h.reset_counters();
+        let ops = 500_000u64;
+        let mut rng = crate::util::rng::Rng::for_thread(cfg.seed, 0);
+        for _ in 0..ops {
+            t.op(cfg.draw_op(&mut rng), &mut h);
+        }
+        let tag = if w == default { " (default)" } else if w == 6 { " (paper)" } else { "" };
+        println!(
+            "{:<26} {:>12.2} {:>12.2} {:>14.3}",
+            format!("{w}{tag}"),
+            tp[0],
+            tp[1],
+            h.llc_misses() as f64 / ops as f64
+        );
+    }
+}
+
+/// Ad-hoc single benchmark cell.
+pub fn bench_cell(
+    kind: TableKind,
+    size_log2: u32,
+    lf: f64,
+    update_pct: u32,
+    threads: usize,
+    duration_ms: u64,
+    pin: bool,
+    dist: KeyDist,
+) {
+    let cfg = WorkloadCfg {
+        size_log2,
+        load_factor: lf,
+        mix: Mix { update_pct },
+        duration_ms,
+        seed: 0xFEED,
+        dist,
+    };
+    let r = driver::run(kind, &cfg, threads, pin);
+    println!(
+        "{} size=2^{} lf={:.0}% updates={}% threads={} dist={:?} -> {:.3} ops/us \
+         ({} ops in {:?})",
+        kind.display(),
+        size_log2,
+        lf * 100.0,
+        update_pct,
+        threads,
+        cfg.dist,
+        r.ops_per_us(),
+        r.total_ops,
+        r.elapsed
+    );
+}
+
+/// Probe-length analysis through the PJRT engine (L2 `probe_stats`):
+/// fill a K-CAS Robin Hood table, snapshot DFBs, run the AOT analytics.
+pub fn analyze(size_log2: u32, lf: f64) -> anyhow::Result<()> {
+    let engine = crate::runtime::Engine::load_default()?;
+    println!("# probe-distance analysis (PJRT {} backend)", engine.platform());
+    let cfg = WorkloadCfg {
+        size_log2,
+        load_factor: lf,
+        mix: Mix::LIGHT,
+        duration_ms: 0,
+        seed: 0xFEED,
+            dist: KeyDist::Uniform,
+    };
+    let table = TableKind::KCasRobinHood.build(size_log2);
+    crate::bench::workload::prefill(table.as_ref(), &cfg);
+    let snap = table.dfb_snapshot();
+    let stats = engine.probe_stats(&snap)?;
+    println!(
+        "load factor {:.0}%: {} entries, mean DFB {:.3}, var {:.3}, max {}",
+        lf * 100.0,
+        stats.count,
+        stats.mean,
+        stats.var,
+        stats.max
+    );
+    print!("hist:");
+    for (d, &c) in stats.hist.iter().enumerate().take(12) {
+        print!(" {d}:{c}");
+    }
+    println!(" ...");
+    // Celis' theory: mean successful probe stays O(1); sanity-check.
+    if lf <= 0.8 {
+        assert!(stats.mean < 8.0, "mean DFB {} looks wrong", stats.mean);
+    }
+    Ok(())
+}
+
+/// Verify artifacts + Rust/JAX hash agreement (golden vectors).
+pub fn validate() -> anyhow::Result<()> {
+    let dir = crate::runtime::artifacts_dir();
+    let engine = crate::runtime::Engine::load(&dir)?;
+    let n = engine.verify_golden(&dir)?;
+    println!(
+        "validate: {} golden vectors OK on {} (rust == jax == pallas)",
+        n,
+        engine.platform()
+    );
+    Ok(())
+}
+
+/// Tiny built-in smoke run used by `crh smoke` and CI.
+pub fn smoke() {
+    let opts = ExpOpts {
+        size_log2: 14,
+        duration_ms: 100,
+        threads: vec![1, 2],
+        pin: false,
+        reps: 1,
+    };
+    for kind in TableKind::ALL_CONCURRENT {
+        let cfg = WorkloadCfg {
+            size_log2: opts.size_log2,
+            load_factor: 0.4,
+            mix: Mix::LIGHT,
+            duration_ms: opts.duration_ms,
+            seed: 1,
+            dist: KeyDist::Uniform,
+        };
+        let r = driver::run(kind, &cfg, 2, false);
+        println!("smoke {:<12} {:>8.2} ops/us", kind.name(), r.ops_per_us());
+        assert!(r.total_ops > 0);
+    }
+    let _ = Duration::from_millis(0);
+    println!("smoke OK");
+}

@@ -1,0 +1,244 @@
+//! The K-CAS algorithm: RDCSS install phase + decide + detach phase,
+//! with helping and seq-validated descriptor reuse.
+//!
+//! All descriptor-field traffic uses SeqCst on the validation-critical
+//! words (`status`, `seq`) and Acquire/Release elsewhere; the validation
+//! protocol (fields are read, then the seq/status is re-checked) is what
+//! makes stale helpers harmless — see registry.rs.
+
+use std::sync::atomic::{AtomicU64, Ordering::*};
+
+use super::registry::{registry, thread_id};
+use super::tagged::*;
+
+/// Linearizable read of a K-CAS-managed word (helps descriptors).
+#[inline]
+pub fn read(word: &AtomicU64) -> u64 {
+    loop {
+        let v = word.load(SeqCst);
+        match tag_of(v) {
+            TAG_VALUE => return v >> 2,
+            TAG_RDCSS => rdcss_complete(ref_tid(v), ref_seq(v)),
+            _ => {
+                help_kcas(v);
+            }
+        }
+    }
+}
+
+/// CAS `old -> new` (plain values) through the protocol.
+/// Ok on success; Err(current-decoded-value) when the word holds a
+/// different value; Err(old) — i.e. retryable — after helping.
+#[inline]
+pub fn try_cas_value(word: &AtomicU64, old: u64, new: u64) -> Result<(), u64> {
+    try_cas_value_enc(word, old << 2, new << 2).map_err(|e| e >> 2)
+}
+
+/// Like [`try_cas_value`] but on already-encoded words. The Err payload
+/// is encoded; descriptors are helped and reported as Err(old) so the
+/// caller retries.
+#[inline]
+pub fn try_cas_value_enc(word: &AtomicU64, old: u64, new: u64) -> Result<(), u64> {
+    match word.compare_exchange(old, new, SeqCst, SeqCst) {
+        Ok(_) => Ok(()),
+        Err(cur) => match tag_of(cur) {
+            TAG_VALUE => Err(cur),
+            TAG_RDCSS => {
+                rdcss_complete(ref_tid(cur), ref_seq(cur));
+                Err(old) // retry
+            }
+            _ => {
+                help_kcas(cur);
+                Err(old) // retry
+            }
+        },
+    }
+}
+
+/// Unconditional-write helper used by `Word::write`.
+#[inline]
+pub fn cas_value(word: &AtomicU64, old: u64, new: u64) -> bool {
+    matches!(try_cas_value(word, old, new), Ok(()))
+}
+
+/// Execute a K-CAS over `entries` (sorted by address, encoded old/new)
+/// using this thread's descriptor. Returns true iff it succeeded.
+pub fn kcas(entries: &[(usize, u64, u64)]) -> bool {
+    let tid = thread_id();
+    let slot = &registry()[tid];
+    let desc = &slot.kcas;
+    assert!(
+        entries.len() <= super::registry::MAX_ENTRIES,
+        "K-CAS too wide: {} entries (Robin Hood displacement chain \
+         exceeded MAX_ENTRIES; grow kcas::MAX_ENTRIES)",
+        entries.len()
+    );
+
+    // New incarnation: bump seq FIRST (invalidates stale references),
+    // then publish fields, then run.
+    let seq = status_seq(desc.status.load(Relaxed)).wrapping_add(1) & SEQ_MASK;
+    desc.status.store(pack_status(seq, UNDECIDED), SeqCst);
+    desc.n.store(entries.len(), Release);
+    for (i, &(addr, old, new)) in entries.iter().enumerate() {
+        desc.entries[i].addr.store(addr, Release);
+        desc.entries[i].old.store(old, Release);
+        desc.entries[i].new.store(new, Release);
+    }
+    execute(tid, seq)
+}
+
+/// Help a K-CAS referenced by `kref` (called when a reader/installer
+/// encounters the reference in a word).
+pub fn help_kcas(kref: u64) {
+    debug_assert_eq!(tag_of(kref), TAG_KCAS);
+    execute(ref_tid(kref), ref_seq(kref));
+}
+
+/// Run (or help) K-CAS incarnation `seq` of thread `tid` to completion.
+/// Returns the success flag — accurate for the owner (whose descriptor
+/// cannot be concurrently reused); helpers may get a stale `false` after
+/// the op finished, which they ignore.
+fn execute(tid: usize, seq: u64) -> bool {
+    let desc = &registry()[tid].kcas;
+    let myref = make_ref(tid, seq, TAG_KCAS);
+    let undecided = pack_status(seq, UNDECIDED);
+
+    let st = desc.status.load(SeqCst);
+    if status_seq(st) != seq {
+        return false; // stale helper; op already finished
+    }
+    if status_state(st) == UNDECIDED {
+        let n = desc.n.load(Acquire);
+        if status_seq(desc.status.load(SeqCst)) != seq {
+            return false;
+        }
+        let mut newstate = SUCCEEDED;
+        'install: for i in 0..n {
+            let addr = desc.entries[i].addr.load(Acquire);
+            let old = desc.entries[i].old.load(Acquire);
+            if status_seq(desc.status.load(SeqCst)) != seq {
+                return false;
+            }
+            let word = unsafe { &*(addr as *const AtomicU64) };
+            loop {
+                let r = rdcss(&desc.status, undecided, word, old, myref);
+                if r == old || r == myref {
+                    break; // installed (or someone installed for us)
+                }
+                if tag_of(r) == TAG_KCAS {
+                    help_kcas(r); // resolve the other op, then retry
+                    continue;
+                }
+                // A different plain value: the whole K-CAS fails.
+                newstate = FAILED;
+                break 'install;
+            }
+            // If the status was decided while we installed, stop early.
+            let st = desc.status.load(SeqCst);
+            if st != undecided {
+                if status_seq(st) != seq {
+                    return false;
+                }
+                newstate = status_state(st);
+                break;
+            }
+        }
+        let _ = desc.status.compare_exchange(
+            undecided,
+            pack_status(seq, newstate),
+            SeqCst,
+            SeqCst,
+        );
+    }
+
+    // Phase 2: detach — replace our reference with the decided value.
+    let st = desc.status.load(SeqCst);
+    if status_seq(st) != seq {
+        return false;
+    }
+    let success = status_state(st) == SUCCEEDED;
+    let n = desc.n.load(Acquire);
+    if status_seq(desc.status.load(SeqCst)) != seq {
+        return success;
+    }
+    for i in 0..n {
+        let addr = desc.entries[i].addr.load(Acquire);
+        let old = desc.entries[i].old.load(Acquire);
+        let new = desc.entries[i].new.load(Acquire);
+        if status_seq(desc.status.load(SeqCst)) != seq {
+            return success;
+        }
+        let word = unsafe { &*(addr as *const AtomicU64) };
+        let target = if success { new } else { old };
+        let _ = word.compare_exchange(myref, target, SeqCst, SeqCst);
+    }
+    success
+}
+
+/// RDCSS (restricted double-compare single-swap): atomically
+/// `if *status == expected_status { *word: old2 -> new2 }`, returning
+/// the prior (encoded/tagged) content of `word`. `old2` is an encoded
+/// value, `new2` a K-CAS descriptor reference.
+///
+/// Returns `old2` when the conditional swap was performed (or was
+/// performed-and-reverted because the status had been decided — the
+/// caller re-checks status either way); any other return is the
+/// interfering content (a value or a K-CAS reference; alien RDCSS
+/// descriptors are resolved internally).
+fn rdcss(
+    status: &AtomicU64,
+    expected_status: u64,
+    word: &AtomicU64,
+    old2: u64,
+    new2: u64,
+) -> u64 {
+    let tid = thread_id();
+    let d = &registry()[tid].rdcss;
+
+    // New incarnation of this thread's RDCSS descriptor.
+    let seq = d.seq.load(Relaxed).wrapping_add(1) & SEQ_MASK;
+    d.seq.store(seq, SeqCst);
+    d.status_addr
+        .store(status as *const AtomicU64 as usize, Release);
+    d.expected_status.store(expected_status, Release);
+    d.word_addr.store(word as *const AtomicU64 as usize, Release);
+    d.old2.store(old2, Release);
+    d.new2.store(new2, Release);
+    let rref = make_ref(tid, seq, TAG_RDCSS);
+
+    loop {
+        match word.compare_exchange(old2, rref, SeqCst, SeqCst) {
+            Ok(_) => {
+                rdcss_complete(tid, seq);
+                return old2;
+            }
+            Err(r) => {
+                if tag_of(r) == TAG_RDCSS {
+                    rdcss_complete(ref_tid(r), ref_seq(r));
+                    continue;
+                }
+                return r;
+            }
+        }
+    }
+}
+
+/// Complete (help) RDCSS incarnation `seq` of thread `tid`: decide the
+/// condition and swing the word to `new2` or back to `old2`.
+fn rdcss_complete(tid: usize, seq: u64) {
+    let d = &registry()[tid].rdcss;
+    let status_addr = d.status_addr.load(Acquire);
+    let expected_status = d.expected_status.load(Acquire);
+    let word_addr = d.word_addr.load(Acquire);
+    let old2 = d.old2.load(Acquire);
+    let new2 = d.new2.load(Acquire);
+    if d.seq.load(SeqCst) != seq {
+        return; // stale: the RDCSS already completed
+    }
+    let rref = make_ref(tid, seq, TAG_RDCSS);
+    let status = unsafe { &*(status_addr as *const AtomicU64) };
+    let word = unsafe { &*(word_addr as *const AtomicU64) };
+    let cond = status.load(SeqCst) == expected_status;
+    let target = if cond { new2 } else { old2 };
+    let _ = word.compare_exchange(rref, target, SeqCst, SeqCst);
+}

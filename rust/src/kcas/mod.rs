@@ -1,0 +1,357 @@
+//! K-CAS: multi-word compare-and-swap from single-word CAS.
+//!
+//! Implements the paper's §2.3 substrate: Harris, Fraser & Pratt's
+//! K-CAS (RDCSS-based) with the Arbel-Raviv & Brown *descriptor reuse*
+//! scheme ("Reuse, don't recycle", DISC 2017) — no allocation per
+//! operation and no memory reclaimer, which is precisely what made
+//! K-CAS fast enough for the paper's Robin Hood table.
+//!
+//! ## Word encoding
+//!
+//! Every K-CAS-managed word ([`Word`]) is an `AtomicU64` holding
+//! `value << 2 | tag` (the paper's "0-2 reserved bits"):
+//!
+//! | tag  | meaning                        |
+//! |------|--------------------------------|
+//! | `00` | plain value (62 usable bits)   |
+//! | `01` | RDCSS descriptor reference     |
+//! | `10` | K-CAS descriptor reference     |
+//!
+//! Descriptor *references* carry no pointer: they encode
+//! `(thread_id << 48) | (seq << 2) | tag`, resolved through a global
+//! per-thread registry. Stale references are rendered harmless by
+//! sequence-number validation (see [`registry`]).
+//!
+//! ## API
+//!
+//! ```no_run
+//! # // no_run: rustdoc test binaries don't inherit the xla rpath.
+//! use crh::kcas::{Word, OpBuilder};
+//! let a = Word::new(1);
+//! let b = Word::new(2);
+//! let mut op = OpBuilder::new();
+//! op.push(&a, 1, 10);
+//! op.push(&b, 2, 20);
+//! assert!(op.execute());
+//! assert_eq!((a.read(), b.read()), (10, 20));
+//! ```
+
+mod core;
+mod registry;
+mod tagged;
+
+pub use registry::{thread_id, MAX_ENTRIES, MAX_THREADS};
+pub use tagged::MAX_VALUE;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A single K-CAS-managed 62-bit word.
+///
+/// All access must go through [`Word::read`] / [`Word::write`] /
+/// [`OpBuilder`]: raw loads can observe descriptor references.
+#[repr(transparent)]
+pub struct Word(pub(crate) AtomicU64);
+
+impl Word {
+    /// Create a word holding `v` (`v < 2^62`).
+    pub const fn new(v: u64) -> Self {
+        assert!(v <= tagged::MAX_VALUE);
+        Word(AtomicU64::new(v << 2))
+    }
+
+    /// Linearizable read; helps any in-flight K-CAS/RDCSS it encounters
+    /// (the paper's `K_CAS_load`, required by the §3.4 proof).
+    #[inline]
+    pub fn read(&self) -> u64 {
+        core::read(&self.0)
+    }
+
+    /// Linearizable unconditional write (the paper's `K_CAS_WRITE`).
+    pub fn write(&self, v: u64) {
+        debug_assert!(v <= tagged::MAX_VALUE);
+        loop {
+            let cur = self.read();
+            if core::cas_value(&self.0, cur, v) {
+                return;
+            }
+        }
+    }
+
+    /// Single-word CAS through the K-CAS protocol (helps descriptors).
+    pub fn cas(&self, old: u64, new: u64) -> bool {
+        debug_assert!(old <= tagged::MAX_VALUE && new <= tagged::MAX_VALUE);
+        loop {
+            match core::try_cas_value(&self.0, old, new) {
+                Ok(_) => return true,
+                Err(cur) if cur != old => return false,
+                Err(_) => continue, // descriptor was helped; retry
+            }
+        }
+    }
+
+    pub(crate) fn addr(&self) -> usize {
+        &self.0 as *const AtomicU64 as usize
+    }
+
+    /// Raw tagged load, for tests and diagnostics only.
+    pub fn raw(&self) -> u64 {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+impl std::fmt::Debug for Word {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Word({})", self.read())
+    }
+}
+
+/// Builds and executes one K-CAS operation.
+///
+/// Reusable: `clear` + `push`es + `execute`. The entry buffer is a plain
+/// `Vec` owned by the caller (keep one per thread to avoid allocation on
+/// the hot path — see `maps::kcas_rh`).
+#[derive(Default)]
+pub struct OpBuilder {
+    entries: Vec<(usize, u64, u64)>,
+}
+
+impl OpBuilder {
+    pub fn new() -> Self {
+        Self { entries: Vec::with_capacity(16) }
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Add `*word: old -> new` to the operation.
+    #[inline]
+    pub fn push(&mut self, word: &Word, old: u64, new: u64) {
+        debug_assert!(old <= tagged::MAX_VALUE && new <= tagged::MAX_VALUE);
+        self.entries.push((word.addr(), old << 2, new << 2));
+    }
+
+    /// Attempt the multi-word CAS; true iff *all* entries were swapped
+    /// atomically. The entry list is preserved (so a failed attempt can
+    /// be inspected), but callers normally `clear` and rebuild.
+    pub fn execute(&mut self) -> bool {
+        if self.entries.is_empty() {
+            return true;
+        }
+        if self.entries.len() == 1 {
+            // Degenerate K=1: plain CAS through the protocol.
+            let (addr, old, new) = self.entries[0];
+            let w = unsafe { &*(addr as *const AtomicU64) };
+            loop {
+                match core::try_cas_value_enc(w, old, new) {
+                    Ok(_) => return true,
+                    Err(cur) if cur != old => return false,
+                    Err(_) => continue,
+                }
+            }
+        }
+        // Global address order prevents circular helping livelock.
+        self.entries.sort_unstable_by_key(|e| e.0);
+        for w in self.entries.windows(2) {
+            assert_ne!(w[0].0, w[1].0, "duplicate address in K-CAS op");
+        }
+        core::kcas(&self.entries)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64 as RawA;
+    use std::sync::Arc;
+
+    #[test]
+    fn single_word_read_write() {
+        let w = Word::new(5);
+        assert_eq!(w.read(), 5);
+        w.write(9);
+        assert_eq!(w.read(), 9);
+    }
+
+    #[test]
+    fn word_cas_semantics() {
+        let w = Word::new(1);
+        assert!(w.cas(1, 2));
+        assert!(!w.cas(1, 3));
+        assert_eq!(w.read(), 2);
+    }
+
+    #[test]
+    fn kcas_success_and_failure() {
+        let a = Word::new(1);
+        let b = Word::new(2);
+        let c = Word::new(3);
+        let mut op = OpBuilder::new();
+        op.push(&a, 1, 10);
+        op.push(&b, 2, 20);
+        op.push(&c, 3, 30);
+        assert!(op.execute());
+        assert_eq!((a.read(), b.read(), c.read()), (10, 20, 30));
+
+        op.clear();
+        op.push(&a, 10, 100);
+        op.push(&b, 999, 200); // wrong expected -> whole op fails
+        assert!(!op.execute());
+        assert_eq!((a.read(), b.read()), (10, 20));
+    }
+
+    #[test]
+    fn empty_and_singleton_ops() {
+        let mut op = OpBuilder::new();
+        assert!(op.execute());
+        let a = Word::new(7);
+        op.push(&a, 7, 8);
+        assert!(op.execute());
+        assert_eq!(a.read(), 8);
+        op.clear();
+        op.push(&a, 7, 9);
+        assert!(!op.execute());
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate address")]
+    fn duplicate_address_panics() {
+        let a = Word::new(1);
+        let mut op = OpBuilder::new();
+        op.push(&a, 1, 2);
+        op.push(&a, 1, 3);
+        op.execute();
+    }
+
+    #[test]
+    fn max_value_roundtrip() {
+        let w = Word::new(MAX_VALUE);
+        assert_eq!(w.read(), MAX_VALUE);
+        assert!(w.cas(MAX_VALUE, 0));
+        assert_eq!(w.read(), 0);
+    }
+
+    #[test]
+    fn descriptor_reuse_many_sequential_ops() {
+        // Thousands of ops through the same thread slot: seq numbers
+        // advance, nothing corrupts.
+        let a = Word::new(0);
+        let b = Word::new(0);
+        let mut op = OpBuilder::new();
+        for i in 0..5000u64 {
+            op.clear();
+            op.push(&a, i, i + 1);
+            op.push(&b, i, i + 1);
+            assert!(op.execute(), "iteration {i}");
+        }
+        assert_eq!((a.read(), b.read()), (5000, 5000));
+    }
+
+    #[test]
+    fn concurrent_multiword_counters_stay_in_lockstep() {
+        const THREADS: usize = 8;
+        const OPS: u64 = 2_000;
+        const K: usize = 4;
+        let words: Arc<Vec<Word>> =
+            Arc::new((0..K).map(|_| Word::new(0)).collect());
+        let done = Arc::new(RawA::new(0));
+
+        let mut handles = Vec::new();
+        for _ in 0..THREADS {
+            let words = words.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut op = OpBuilder::new();
+                let mut succ = 0u64;
+                while succ < OPS {
+                    let v = words[0].read();
+                    op.clear();
+                    for w in words.iter() {
+                        op.push(w, v, v + 1);
+                    }
+                    if op.execute() {
+                        succ += 1;
+                    }
+                }
+            }));
+        }
+        // Reader thread: atomicity invariant — reading w[0] then w[i]
+        // must never observe w[i] < w[0] (reads help in-flight ops).
+        {
+            let words = words.clone();
+            let done = done.clone();
+            handles.push(std::thread::spawn(move || {
+                while done.load(Ordering::Relaxed) == 0 {
+                    let x = words[0].read();
+                    for w in words.iter().skip(1) {
+                        let y = w.read();
+                        assert!(y >= x, "torn K-CAS visible: {y} < {x}");
+                    }
+                }
+            }));
+        }
+        for h in handles.drain(..THREADS) {
+            h.join().unwrap();
+        }
+        done.store(1, Ordering::Relaxed);
+        for h in handles {
+            h.join().unwrap();
+        }
+        for w in words.iter() {
+            assert_eq!(w.read(), (THREADS as u64) * OPS);
+        }
+    }
+
+    #[test]
+    fn contended_disjoint_then_overlapping() {
+        // Two threads repeatedly K-CAS overlapping word pairs (a,b) and
+        // (b,c): b's value must stay consistent with exactly one history.
+        let a = Arc::new(Word::new(0));
+        let b = Arc::new(Word::new(0));
+        let c = Arc::new(Word::new(0));
+        let t1 = {
+            let (a, b) = (a.clone(), b.clone());
+            std::thread::spawn(move || {
+                let mut op = OpBuilder::new();
+                let mut n = 0;
+                while n < 3000 {
+                    let (va, vb) = (a.read(), b.read());
+                    op.clear();
+                    op.push(&a, va, va + 1);
+                    op.push(&b, vb, vb + 1);
+                    if op.execute() {
+                        n += 1;
+                    }
+                }
+            })
+        };
+        let t2 = {
+            let (b, c) = (b.clone(), c.clone());
+            std::thread::spawn(move || {
+                let mut op = OpBuilder::new();
+                let mut n = 0;
+                while n < 3000 {
+                    let (vb, vc) = (b.read(), c.read());
+                    op.clear();
+                    op.push(&b, vb, vb + 1);
+                    op.push(&c, vc, vc + 1);
+                    if op.execute() {
+                        n += 1;
+                    }
+                }
+            })
+        };
+        t1.join().unwrap();
+        t2.join().unwrap();
+        assert_eq!(a.read(), 3000);
+        assert_eq!(c.read(), 3000);
+        assert_eq!(b.read(), 6000);
+    }
+}

@@ -1,0 +1,169 @@
+//! Per-thread descriptor registry + thread-id assignment.
+//!
+//! One K-CAS descriptor and one RDCSS descriptor per thread slot,
+//! allocated once, *reused forever* (Arbel-Raviv & Brown). A descriptor
+//! reference embeds `(tid, seq)`; helpers validate `seq` after reading
+//! fields, which makes references to reused descriptors harmless: if the
+//! seq moved on, the referenced operation already completed and every
+//! word it owned has been detached, so the helper's CAS (expecting the
+//! stale reference) fails benignly.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crossbeam_utils::CachePadded;
+
+use super::tagged::{pack_status, UNDECIDED};
+
+/// Maximum number of *concurrently live* registered threads.
+pub const MAX_THREADS: usize = 256;
+
+/// Maximum entries per K-CAS (a Robin Hood displacement/shift chain plus
+/// its timestamp increments; far beyond anything observed at LF <= 0.9).
+pub const MAX_ENTRIES: usize = 4096;
+
+/// One K-CAS entry as seen by helpers. Old/new are stored *encoded*
+/// (`value << 2`).
+pub struct KEntry {
+    pub addr: AtomicUsize,
+    pub old: AtomicU64,
+    pub new: AtomicU64,
+}
+
+/// Reusable K-CAS descriptor. `status` packs `(seq << 2) | state`; the
+/// seq is bumped when the owner starts a new operation, which atomically
+/// invalidates all outstanding references to the previous incarnation.
+pub struct KCasDesc {
+    pub status: AtomicU64,
+    pub n: AtomicUsize,
+    pub entries: Box<[KEntry]>,
+}
+
+/// Reusable RDCSS descriptor (one in-flight RDCSS per thread at a time —
+/// RDCSS invocations never overlap within a thread).
+pub struct RdcssDesc {
+    pub seq: AtomicU64,
+    /// Address of the controlling K-CAS status word (`addr1`).
+    pub status_addr: AtomicUsize,
+    /// Expected status (`old1`): `pack_status(kseq, UNDECIDED)`.
+    pub expected_status: AtomicU64,
+    /// Target data word (`addr2`).
+    pub word_addr: AtomicUsize,
+    /// Expected encoded value (`old2`).
+    pub old2: AtomicU64,
+    /// K-CAS descriptor reference to install (`new2`).
+    pub new2: AtomicU64,
+}
+
+pub struct Slot {
+    pub kcas: KCasDesc,
+    pub rdcss: RdcssDesc,
+}
+
+fn new_slot() -> CachePadded<Slot> {
+    CachePadded::new(Slot {
+        kcas: KCasDesc {
+            status: AtomicU64::new(pack_status(0, UNDECIDED)),
+            n: AtomicUsize::new(0),
+            entries: (0..MAX_ENTRIES)
+                .map(|_| KEntry {
+                    addr: AtomicUsize::new(0),
+                    old: AtomicU64::new(0),
+                    new: AtomicU64::new(0),
+                })
+                .collect(),
+        },
+        rdcss: RdcssDesc {
+            seq: AtomicU64::new(0),
+            status_addr: AtomicUsize::new(0),
+            expected_status: AtomicU64::new(0),
+            word_addr: AtomicUsize::new(0),
+            old2: AtomicU64::new(0),
+            new2: AtomicU64::new(0),
+        },
+    })
+}
+
+static REGISTRY: OnceLock<Vec<CachePadded<Slot>>> = OnceLock::new();
+
+pub fn registry() -> &'static [CachePadded<Slot>] {
+    REGISTRY.get_or_init(|| (0..MAX_THREADS).map(|_| new_slot()).collect())
+}
+
+// ---- thread-id assignment (free-listed so short-lived test threads
+// don't exhaust the slot space) ----
+
+static NEXT_TID: AtomicUsize = AtomicUsize::new(0);
+static FREE_TIDS: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+
+struct TidGuard(usize);
+
+impl Drop for TidGuard {
+    fn drop(&mut self) {
+        FREE_TIDS.lock().unwrap().push(self.0);
+    }
+}
+
+thread_local! {
+    static TID: TidGuard = TidGuard(alloc_tid());
+}
+
+fn alloc_tid() -> usize {
+    if let Some(t) = FREE_TIDS.lock().unwrap().pop() {
+        return t;
+    }
+    let t = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    assert!(
+        t < MAX_THREADS,
+        "more than {MAX_THREADS} concurrently live K-CAS threads"
+    );
+    t
+}
+
+/// This thread's registry slot index (assigned on first use, released on
+/// thread exit).
+#[inline]
+pub fn thread_id() -> usize {
+    TID.with(|g| g.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_ids_stable_within_thread() {
+        assert_eq!(thread_id(), thread_id());
+    }
+
+    #[test]
+    fn thread_ids_unique_across_live_threads() {
+        let mine = thread_id();
+        let theirs = std::thread::spawn(thread_id).join().unwrap();
+        assert_ne!(mine, theirs);
+    }
+
+    #[test]
+    fn tids_are_recycled_after_thread_exit() {
+        let _ = thread_id();
+        let a = std::thread::spawn(thread_id).join().unwrap();
+        // The exited thread's tid goes back on the free list; a new
+        // thread should be able to draw it again (not guaranteed to be
+        // the same one if other tests run in parallel, so just check the
+        // pool doesn't grow monotonically).
+        let before = NEXT_TID.load(Ordering::Relaxed);
+        for _ in 0..64 {
+            let b = std::thread::spawn(thread_id).join().unwrap();
+            assert!(b < MAX_THREADS);
+            let _ = a;
+        }
+        let after = NEXT_TID.load(Ordering::Relaxed);
+        assert!(after - before <= 64, "tids not recycled: {before} -> {after}");
+    }
+
+    #[test]
+    fn registry_has_max_threads_slots() {
+        assert_eq!(registry().len(), MAX_THREADS);
+        assert_eq!(registry()[0].kcas.entries.len(), MAX_ENTRIES);
+    }
+}

@@ -1,0 +1,101 @@
+//! Tagged-word and descriptor-reference encodings.
+//!
+//! Words: `value << 2 | tag`. Descriptor references:
+//! `(tid << 48) | (seq << 2) | tag` — 16 bits of thread id, 46 bits of
+//! sequence number (wrapping; a helper would need to stall across 2^46
+//! operations of one thread to alias, far beyond any run length here).
+
+pub const TAG_MASK: u64 = 0b11;
+pub const TAG_VALUE: u64 = 0b00;
+pub const TAG_RDCSS: u64 = 0b01;
+pub const TAG_KCAS: u64 = 0b10;
+
+/// Largest storable plain value (62 bits).
+pub const MAX_VALUE: u64 = (1 << 62) - 1;
+
+const SEQ_BITS: u32 = 46;
+pub const SEQ_MASK: u64 = (1 << SEQ_BITS) - 1;
+const TID_SHIFT: u32 = 48;
+
+#[inline(always)]
+pub fn tag_of(w: u64) -> u64 {
+    w & TAG_MASK
+}
+
+#[allow(dead_code)] // used by tests and diagnostics
+#[inline(always)]
+pub fn is_value(w: u64) -> bool {
+    tag_of(w) == TAG_VALUE
+}
+
+#[inline(always)]
+pub fn make_ref(tid: usize, seq: u64, tag: u64) -> u64 {
+    debug_assert!(tag == TAG_RDCSS || tag == TAG_KCAS);
+    ((tid as u64) << TID_SHIFT) | ((seq & SEQ_MASK) << 2) | tag
+}
+
+#[inline(always)]
+pub fn ref_tid(w: u64) -> usize {
+    (w >> TID_SHIFT) as usize
+}
+
+#[inline(always)]
+pub fn ref_seq(w: u64) -> u64 {
+    (w >> 2) & SEQ_MASK
+}
+
+/// K-CAS status packing: `(seq << 2) | state`.
+pub const UNDECIDED: u64 = 0;
+pub const SUCCEEDED: u64 = 1;
+pub const FAILED: u64 = 2;
+
+#[inline(always)]
+pub fn pack_status(seq: u64, state: u64) -> u64 {
+    ((seq & SEQ_MASK) << 2) | state
+}
+
+#[inline(always)]
+pub fn status_seq(st: u64) -> u64 {
+    (st >> 2) & SEQ_MASK
+}
+
+#[inline(always)]
+pub fn status_state(st: u64) -> u64 {
+    st & TAG_MASK
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ref_roundtrip() {
+        for &(tid, seq) in &[(0usize, 0u64), (255, 1), (17, SEQ_MASK), (65535, 12345)] {
+            let r = make_ref(tid, seq, TAG_KCAS);
+            assert_eq!(ref_tid(r), tid);
+            assert_eq!(ref_seq(r), seq & SEQ_MASK);
+            assert_eq!(tag_of(r), TAG_KCAS);
+            assert!(!is_value(r));
+        }
+    }
+
+    #[test]
+    fn status_roundtrip() {
+        let st = pack_status(0xABCDEF, SUCCEEDED);
+        assert_eq!(status_seq(st), 0xABCDEF);
+        assert_eq!(status_state(st), SUCCEEDED);
+    }
+
+    #[test]
+    fn values_are_tag_00() {
+        assert!(is_value(42 << 2));
+        assert!(is_value(0));
+        assert!(!is_value(make_ref(1, 1, TAG_RDCSS)));
+    }
+
+    #[test]
+    fn seq_wraps_harmlessly() {
+        let r = make_ref(3, SEQ_MASK + 5, TAG_RDCSS);
+        assert_eq!(ref_seq(r), 4);
+    }
+}

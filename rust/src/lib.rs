@@ -1,0 +1,37 @@
+//! # crh — Concurrent Robin Hood Hashing
+//!
+//! A reproduction of *"Concurrent Robin Hood Hashing"* (Kelly,
+//! Pearlmutter, Maguire — OPODIS/CS.DC 2018): a non-blocking,
+//! obstruction-free Robin Hood hash table built on a portable K-CAS
+//! (multi-word compare-and-swap) constructed from single-word CAS, plus
+//! a transactional (lock-elision) variant and the paper's full set of
+//! competitor tables and benchmarks.
+//!
+//! ## Layout
+//!
+//! * [`kcas`] — Harris-style K-CAS with Arbel-Raviv & Brown descriptor
+//!   reuse (no allocation, no reclamation) — the paper's §2.3 substrate.
+//! * [`maps`] — the hash tables: the paper's K-CAS Robin Hood
+//!   ([`maps::kcas_rh`]), transactional Robin Hood ([`maps::tx_rh`]),
+//!   and baselines (Hopscotch, lock-free/locked linear probing,
+//!   Michael's separate chaining, serial Robin Hood).
+//! * [`bench`] — §4.1 methodology: workload generation, pinned threads,
+//!   barrier-synced timed runs, ops/µs reporting.
+//! * [`cachesim`] — set-associative cache simulator + per-table memory
+//!   trace models (PAPI substitute for Table 1).
+//! * [`runtime`] — PJRT/XLA runtime loading the AOT-compiled hash
+//!   pipeline and probe-statistics artifacts (`artifacts/*.hlo.txt`).
+//! * [`coordinator`] — experiment registry and CLI entry points that
+//!   regenerate each of the paper's figures and tables.
+//! * [`util`] — hashing (bit-identical to the L1 Pallas kernel), RNG,
+//!   thread pinning, and a mini property-testing driver.
+
+pub mod bench;
+pub mod cachesim;
+pub mod coordinator;
+pub mod kcas;
+pub mod maps;
+pub mod runtime;
+pub mod util;
+
+pub use maps::ConcurrentSet;

@@ -1,0 +1,100 @@
+//! `crh` — CLI for the Concurrent Robin Hood Hashing reproduction.
+//!
+//! ```text
+//! crh fig10  [--size-log2 N] [--ms N] [--reps N] [--no-pin]
+//! crh fig11  [--size-log2 N] [--ms N] [--threads 1,2,4,...] [--no-pin]
+//! crh fig12  (same options)
+//! crh table1 [--size-log2 N] [--ops N]
+//! crh bench  --table kcas-rh [--lf 0.6] [--updates 10] [--threads N] [--ms N]
+//! crh analyze [--size-log2 N] [--lf 0.8]       (PJRT probe statistics)
+//! crh validate                                  (artifact golden check)
+//! crh smoke
+//! ```
+
+use crh::coordinator::{self, ExpOpts};
+use crh::maps::TableKind;
+
+fn parse_flag<T: std::str::FromStr>(args: &[String], name: &str) -> Option<T> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+}
+
+fn parse_threads(args: &[String]) -> Option<Vec<usize>> {
+    let s: String = parse_flag(args, "--threads")?;
+    Some(s.split(',').filter_map(|x| x.parse().ok()).collect())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: crh <fig10|fig11|fig12|table1|bench|ablate-ts|analyze|validate|smoke> \
+         [options]\n(see `main.rs` docs or README for options)"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("");
+    let mut opts = ExpOpts::default();
+    if let Some(s) = parse_flag(&args, "--size-log2") {
+        opts.size_log2 = s;
+    }
+    if let Some(ms) = parse_flag(&args, "--ms") {
+        opts.duration_ms = ms;
+    }
+    if let Some(r) = parse_flag(&args, "--reps") {
+        opts.reps = r;
+    }
+    if let Some(t) = parse_threads(&args) {
+        opts.threads = t;
+    }
+    if args.iter().any(|a| a == "--no-pin") {
+        opts.pin = false;
+    }
+
+    match cmd {
+        "fig10" => coordinator::fig10(&opts),
+        "fig11" => coordinator::fig11(&opts),
+        "fig12" => coordinator::fig12(&opts),
+        "table1" => {
+            let ops = parse_flag(&args, "--ops").unwrap_or(6_000_000u64);
+            let size = parse_flag(&args, "--size-log2").unwrap_or(22u32);
+            coordinator::table1(size, ops);
+        }
+        "bench" => {
+            let table: String =
+                parse_flag(&args, "--table").unwrap_or_else(|| "kcas-rh".into());
+            let kind = TableKind::parse(&table)
+                .unwrap_or_else(|| panic!("unknown table {table}"));
+            let dist = if args.iter().any(|a| a == "--zipf") {
+                crh::bench::workload::KeyDist::Zipf
+            } else {
+                crh::bench::workload::KeyDist::Uniform
+            };
+            coordinator::bench_cell(
+                kind,
+                opts.size_log2,
+                parse_flag(&args, "--lf").unwrap_or(0.6),
+                parse_flag(&args, "--updates").unwrap_or(10),
+                parse_flag(&args, "--threads").unwrap_or(1),
+                opts.duration_ms,
+                opts.pin,
+                dist,
+            );
+        }
+        "ablate-ts" => coordinator::ablate_ts(
+            parse_flag(&args, "--size-log2").unwrap_or(22),
+            parse_flag(&args, "--ms").unwrap_or(1000),
+        ),
+        "analyze" => coordinator::analyze(
+            parse_flag(&args, "--size-log2").unwrap_or(20),
+            parse_flag(&args, "--lf").unwrap_or(0.8),
+        )?,
+        "validate" => coordinator::validate()?,
+        "smoke" => coordinator::smoke(),
+        _ => usage(),
+    }
+    Ok(())
+}

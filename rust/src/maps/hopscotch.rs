@@ -1,0 +1,440 @@
+//! Hopscotch Hashing (Herlihy, Shavit & Tzafrir [24]) — the paper's
+//! strongest blocking competitor.
+//!
+//! Each bucket `b` owns a *neighborhood* of `H = 64` consecutive buckets
+//! described by a hop-info bitmap: bit `j` set means the entry stored at
+//! `b + j` hashes home to `b`. Insertions linear-probe for an empty
+//! bucket and then *hop* it backwards (displacing entries within their
+//! own neighborhoods) until it lies within `H` of home.
+//!
+//! * `contains` is lock-free: read the home bitmap, probe only the set
+//!   bits, and validate a per-segment timestamp on a miss (displacements
+//!   bump it) — the same reader/relocation protocol the paper's Robin
+//!   Hood adopts (§3.2 credits Hopscotch for the sharding scheme).
+//! * `add`/`remove` are blocking, sharded over segment locks (64
+//!   buckets/segment). Multi-segment operations acquire the covering
+//!   locks in sorted order (deadlock-free two-phase locking over the
+//!   probe span).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use crossbeam_utils::CachePadded;
+
+use super::{check_key, ConcurrentSet};
+use crate::util::hash::home_bucket;
+
+const EMPTY: u64 = 0;
+/// Virtual hop-range (bits in the hop-info word).
+pub const H: usize = 64;
+/// Buckets per lock segment / timestamp shard.
+pub const MIN_SEG_LOG2: u32 = 6;
+
+pub struct Hopscotch {
+    keys: Box<[AtomicU64]>,
+    hop: Box<[AtomicU64]>,
+    locks: Box<[CachePadded<Mutex<()>>]>,
+    ts: Box<[CachePadded<AtomicU64>]>,
+    mask: u64,
+    seg_log2: u32,
+}
+
+impl Hopscotch {
+    pub fn new(size_log2: u32) -> Self {
+        let size = 1usize << size_log2;
+        assert!(size >= H, "hopscotch table must have at least H buckets");
+        // Bounded, cache-resident lock/timestamp table (the original
+        // implementation sizes its lock table by concurrency level, not
+        // table size) — see kcas_rh::default_shard_log2.
+        let seg_log2 = super::kcas_rh::default_shard_log2(size_log2)
+            .max(MIN_SEG_LOG2);
+        let nseg = (size >> seg_log2).max(1);
+        Self {
+            keys: (0..size).map(|_| AtomicU64::new(EMPTY)).collect(),
+            hop: (0..size).map(|_| AtomicU64::new(0)).collect(),
+            locks: (0..nseg).map(|_| CachePadded::new(Mutex::new(()))).collect(),
+            ts: (0..nseg).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
+            mask: (size - 1) as u64,
+            seg_log2,
+        }
+    }
+
+    #[inline]
+    fn size(&self) -> usize {
+        self.keys.len()
+    }
+
+    #[inline]
+    fn seg(&self, i: usize) -> usize {
+        (i >> self.seg_log2) & (self.locks.len() - 1)
+    }
+
+    #[inline]
+    fn wrap(&self, i: usize) -> usize {
+        i & self.mask as usize
+    }
+
+    /// Lock every segment covering buckets `[start, start+len)`
+    /// (wrapped), in sorted order.
+    fn lock_span(&self, start: usize, len: usize) -> Vec<MutexGuard<'_, ()>> {
+        let mut segs: Vec<usize> = (0..len.div_ceil(1 << self.seg_log2) + 1)
+            .map(|s| self.seg(self.wrap(start + (s << self.seg_log2))))
+            .collect();
+        segs.sort_unstable();
+        segs.dedup();
+        segs.iter().map(|&s| self.locks[s].lock().unwrap()).collect()
+    }
+
+    /// Is `key` in `home`'s neighborhood? (Caller may or may not hold
+    /// locks; used locked during add, unlocked+validated in contains.)
+    fn present(&self, home: usize, key: u64) -> Option<usize> {
+        let mut bits = self.hop[home].load(Ordering::Acquire);
+        while bits != 0 {
+            let j = bits.trailing_zeros() as usize;
+            let slot = self.wrap(home + j);
+            if self.keys[slot].load(Ordering::Acquire) == key {
+                return Some(slot);
+            }
+            bits &= bits - 1;
+        }
+        None
+    }
+}
+
+impl ConcurrentSet for Hopscotch {
+    fn contains(&self, key: u64) -> bool {
+        check_key(key);
+        let home = home_bucket(key, self.mask);
+        loop {
+            let t0 = self.ts[self.seg(home)].load(Ordering::Acquire);
+            if self.present(home, key).is_some() {
+                return true;
+            }
+            // Miss: valid only if no displacement moved entries of this
+            // segment's neighborhoods during the scan.
+            if self.ts[self.seg(home)].load(Ordering::Acquire) == t0 {
+                return false;
+            }
+        }
+    }
+
+    fn add(&self, key: u64) -> bool {
+        check_key(key);
+        let home = home_bucket(key, self.mask);
+        // Estimated span: probe distance to the first empty bucket plus
+        // hop room; grown on retry.
+        let mut span = 4 * H;
+        'attempt: loop {
+            assert!(span <= self.size() * 2, "hopscotch: table too full");
+            // Cover [home - H, home + span): displacement bases can sit
+            // up to H-1 before the free slot (which itself can be before
+            // home + span).
+            let lock_start = self.wrap(home.wrapping_sub(H - 1)
+                & self.mask as usize);
+            let guards = self.lock_span(lock_start, span + H);
+            if self.present(home, key).is_some() {
+                return false;
+            }
+            // Find the first empty bucket within the locked span.
+            let mut free = None;
+            for d in 0..span {
+                let i = self.wrap(home + d);
+                if self.keys[i].load(Ordering::Acquire) == EMPTY {
+                    free = Some((i, d));
+                    break;
+                }
+            }
+            let (mut free, mut dist) = match free {
+                Some(f) => f,
+                None => {
+                    drop(guards);
+                    span *= 2;
+                    continue; // no empty bucket in span: widen
+                }
+            };
+            // Hop the free bucket back until it's within H of home.
+            'hopping: while dist >= H {
+                // Try bases from the farthest candidate (free-H+1) in.
+                for back in (1..H).rev() {
+                    let b = self.wrap(free.wrapping_sub(back));
+                    let bits = self.hop[b].load(Ordering::Acquire)
+                        & ((1u64 << back) - 1);
+                    if bits == 0 {
+                        continue;
+                    }
+                    let j = bits.trailing_zeros() as usize;
+                    let s = self.wrap(b + j);
+                    // Move s -> free (both in locked span):
+                    // 1. copy key into the free bucket,
+                    // 2. flip the bitmap atomically (single store is
+                    //    fine: b's segment lock is held),
+                    // 3. empty the old bucket,
+                    // 4. bump b's segment timestamp so lock-free readers
+                    //    that scanned the old layout revalidate.
+                    let moved = self.keys[s].load(Ordering::Acquire);
+                    debug_assert_ne!(moved, EMPTY);
+                    self.keys[free].store(moved, Ordering::Release);
+                    let hb = self.hop[b].load(Ordering::Acquire);
+                    self.hop[b].store(
+                        (hb & !(1u64 << j)) | (1u64 << back),
+                        Ordering::Release,
+                    );
+                    self.keys[s].store(EMPTY, Ordering::Release);
+                    self.ts[self.seg(b)].fetch_add(1, Ordering::AcqRel);
+                    dist -= free.wrapping_sub(s) & self.mask as usize;
+                    free = s;
+                    continue 'hopping;
+                }
+                // No movable entry: extremely rare below ~90% LF with
+                // H=64; widen the span and retry from scratch.
+                drop(guards);
+                span *= 2;
+                continue 'attempt;
+            }
+            // Place the key.
+            self.keys[free].store(key, Ordering::Release);
+            let hb = self.hop[home].load(Ordering::Acquire);
+            self.hop[home].store(hb | (1u64 << dist), Ordering::Release);
+            return true;
+        }
+    }
+
+    fn remove(&self, key: u64) -> bool {
+        check_key(key);
+        let home = home_bucket(key, self.mask);
+        let _guard = self.lock_span(home, H);
+        match self.present(home, key) {
+            None => false,
+            Some(slot) => {
+                let j = slot.wrapping_sub(home) & self.mask as usize;
+                let hb = self.hop[home].load(Ordering::Acquire);
+                // Clear the bitmap bit first, then the bucket: a reader
+                // with the old bitmap either still sees the key (hit
+                // linearizes before us) or sees EMPTY (no match).
+                self.hop[home].store(hb & !(1u64 << j), Ordering::Release);
+                self.keys[slot].store(EMPTY, Ordering::Release);
+                true
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "hopscotch"
+    }
+
+    fn capacity(&self) -> usize {
+        self.size()
+    }
+
+    fn dfb_snapshot(&self) -> Vec<i32> {
+        (0..self.size())
+            .map(|i| {
+                let k = self.keys[i].load(Ordering::Acquire);
+                if k == EMPTY {
+                    -1
+                } else {
+                    crate::util::hash::dfb(home_bucket(k, self.mask), i, self.mask)
+                        as i32
+                }
+            })
+            .collect()
+    }
+
+    fn len_quiesced(&self) -> usize {
+        self.keys
+            .iter()
+            .filter(|k| k.load(Ordering::Acquire) != EMPTY)
+            .count()
+    }
+}
+
+impl Hopscotch {
+    /// Consistency check (quiesced): every key reachable via its home
+    /// bitmap, every set bit backed by a key with that home, within H.
+    pub fn check_invariant(&self) -> Result<(), String> {
+        for b in 0..self.size() {
+            let mut bits = self.hop[b].load(Ordering::Acquire);
+            while bits != 0 {
+                let j = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                let slot = self.wrap(b + j);
+                let k = self.keys[slot].load(Ordering::Acquire);
+                if k == EMPTY {
+                    return Err(format!("bit {j} of bucket {b} -> empty slot"));
+                }
+                if home_bucket(k, self.mask) != b {
+                    return Err(format!(
+                        "slot {slot}: key {k} in bitmap of {b} but home {}",
+                        home_bucket(k, self.mask)
+                    ));
+                }
+            }
+        }
+        for i in 0..self.size() {
+            let k = self.keys[i].load(Ordering::Acquire);
+            if k == EMPTY {
+                continue;
+            }
+            let b = home_bucket(k, self.mask);
+            let j = i.wrapping_sub(b) & self.mask as usize;
+            if j >= H {
+                return Err(format!("key {k} at {i} is {j} from home {b}"));
+            }
+            if self.hop[b].load(Ordering::Acquire) & (1 << j) == 0 {
+                return Err(format!("key {k} at {i} not in bitmap of {b}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+    use std::collections::HashSet;
+    use std::sync::Arc;
+
+    #[test]
+    fn basic_semantics() {
+        let t = Hopscotch::new(8);
+        assert!(t.add(5));
+        assert!(!t.add(5));
+        assert!(t.contains(5));
+        assert!(t.remove(5));
+        assert!(!t.remove(5));
+        assert!(!t.contains(5));
+        t.check_invariant().unwrap();
+    }
+
+    #[test]
+    fn fill_forces_hopping() {
+        let t = Hopscotch::new(10);
+        let n = (1024.0 * 0.8) as u64;
+        for k in 1..=n {
+            assert!(t.add(k), "add {k}");
+        }
+        t.check_invariant().unwrap();
+        for k in 1..=n {
+            assert!(t.contains(k), "lost {k}");
+        }
+        assert_eq!(t.len_quiesced(), n as usize);
+    }
+
+    #[test]
+    fn oracle_property_random_ops() {
+        prop::check(
+            "hopscotch matches HashSet",
+            25,
+            |r: &mut Rng| {
+                (0..300)
+                    .map(|_| (r.below(3) as u8, 1 + r.below(48)))
+                    .collect::<Vec<(u8, u64)>>()
+            },
+            |ops| {
+                let t = Hopscotch::new(7);
+                let mut oracle = HashSet::new();
+                for &(op, key) in ops {
+                    let (got, want) = match op {
+                        0 => (t.add(key), oracle.insert(key)),
+                        1 => (t.remove(key), oracle.remove(&key)),
+                        _ => (t.contains(key), oracle.contains(&key)),
+                    };
+                    if got != want {
+                        return Err(format!(
+                            "op {op} key {key}: got {got} want {want}"
+                        ));
+                    }
+                }
+                t.check_invariant()?;
+                if t.len_quiesced() != oracle.len() {
+                    return Err("length mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn concurrent_adds_exactly_once() {
+        let t = Arc::new(Hopscotch::new(12));
+        let mut hs = Vec::new();
+        for _ in 0..8 {
+            let t = t.clone();
+            hs.push(std::thread::spawn(move || {
+                (1..=400u64).filter(|&k| t.add(k)).count()
+            }));
+        }
+        let total: usize = hs.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 400);
+        t.check_invariant().unwrap();
+    }
+
+    #[test]
+    fn concurrent_churn_keeps_structure_valid() {
+        let t = Arc::new(Hopscotch::new(9));
+        let mut hs = Vec::new();
+        for tid in 0..8u64 {
+            let t = t.clone();
+            hs.push(std::thread::spawn(move || {
+                let mut r = Rng::for_thread(21, tid);
+                for _ in 0..3000 {
+                    let k = 1 + r.below(300);
+                    match r.below(3) {
+                        0 => {
+                            t.add(k);
+                        }
+                        1 => {
+                            t.remove(k);
+                        }
+                        _ => {
+                            t.contains(k);
+                        }
+                    }
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        t.check_invariant().unwrap();
+    }
+
+    #[test]
+    fn readers_never_miss_stable_keys_during_hops() {
+        // Stable keys stay put; churn forces displacements around them.
+        let t = Arc::new(Hopscotch::new(8));
+        for k in 1000..1030u64 {
+            t.add(k);
+        }
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut hs = Vec::new();
+        for tid in 0..2u64 {
+            let (t, stop) = (t.clone(), stop.clone());
+            hs.push(std::thread::spawn(move || {
+                let mut r = Rng::for_thread(31, tid);
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let k = 1 + r.below(120);
+                    t.add(k);
+                    t.remove(k);
+                }
+            }));
+        }
+        for tid in 0..4u64 {
+            let (t, stop) = (t.clone(), stop.clone());
+            hs.push(std::thread::spawn(move || {
+                let mut r = Rng::for_thread(33, tid);
+                for _ in 0..20_000 {
+                    let k = 1000 + r.below(30);
+                    assert!(t.contains(k), "stable key {k} missed");
+                }
+                stop.store(true, std::sync::atomic::Ordering::Relaxed);
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        t.check_invariant().unwrap();
+    }
+}

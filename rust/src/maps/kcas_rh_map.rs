@@ -1,0 +1,473 @@
+//! **K-CAS Robin Hood map** — key→value extension of the paper's set.
+//!
+//! The paper evaluates a set (`Add/Contains/Remove(key)`); this module
+//! extends the same algorithm to a map, which is what Rust's standard
+//! library actually shipped Robin Hood hashing as (§2.2). Buckets are
+//! *pairs* of K-CAS words (key word + value word); a displacement chain
+//! moves both words of each displaced bucket in the **same K-CAS
+//! descriptor**, so readers never observe a key paired with another
+//! key's value:
+//!
+//! * `get` records shard timestamps like the set's `contains`; a hit
+//!   additionally re-validates the shard timestamp after reading the
+//!   value word, because the key→value pairing (not just membership)
+//!   must be consistent at the linearization point.
+//! * `insert` over an existing key swings only the value word (single
+//!   K-CAS word CAS — no relocation, no timestamp bump needed).
+//! * `remove` backward-shifts both words of each shifted bucket.
+//!
+//! Values are 62-bit (`<= kcas::MAX_VALUE`); store indices/handles for
+//! larger payloads.
+
+use std::cell::RefCell;
+
+use crossbeam_utils::CachePadded;
+
+use super::check_key;
+use crate::kcas::{OpBuilder, Word};
+use crate::util::hash::{dfb, home_bucket};
+
+const NIL: u64 = 0;
+
+struct Scratch {
+    op: OpBuilder,
+    seen: Vec<(usize, u64)>,
+    bump: Vec<(usize, u64)>,
+    /// (key, value) chain observed during remove's shift scan.
+    chain: Vec<(u64, u64)>,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch {
+        op: OpBuilder::new(),
+        seen: Vec::with_capacity(64),
+        bump: Vec::with_capacity(64),
+        chain: Vec::with_capacity(64),
+    });
+}
+
+/// Key→value Robin Hood hash map over K-CAS words.
+pub struct KCasRobinHoodMap {
+    keys: Box<[Word]>,
+    vals: Box<[Word]>,
+    ts: Box<[CachePadded<Word>]>,
+    mask: u64,
+    ts_shard_log2: u32,
+}
+
+impl KCasRobinHoodMap {
+    pub fn new(size_log2: u32) -> Self {
+        let ts_shard_log2 = super::kcas_rh::default_shard_log2(size_log2);
+        let size = 1usize << size_log2;
+        let shards = (size >> ts_shard_log2).max(1);
+        Self {
+            keys: (0..size).map(|_| Word::new(NIL)).collect(),
+            vals: (0..size).map(|_| Word::new(0)).collect(),
+            ts: (0..shards).map(|_| CachePadded::new(Word::new(0))).collect(),
+            mask: (size - 1) as u64,
+            ts_shard_log2,
+        }
+    }
+
+    #[inline]
+    fn size(&self) -> usize {
+        self.keys.len()
+    }
+
+    #[inline]
+    fn shard_of(&self, i: usize) -> usize {
+        (i >> self.ts_shard_log2) & (self.ts.len() - 1)
+    }
+
+    #[inline]
+    fn dist(&self, key: u64, i: usize) -> u64 {
+        dfb(home_bucket(key, self.mask), i, self.mask)
+    }
+
+    /// Look up `key`. Linearizes at a timestamp-validated point, so the
+    /// returned value is the one paired with the key at that instant.
+    pub fn get(&self, key: u64) -> Option<u64> {
+        check_key(key);
+        let home = home_bucket(key, self.mask);
+        SCRATCH.with(|s| {
+            let mut guard = s.borrow_mut();
+            let seen = &mut guard.seen;
+            'retry: loop {
+                seen.clear();
+                let mut i = home;
+                let mut cur_dist = 0u64;
+                let mut hit: Option<u64> = None;
+                loop {
+                    let shard = self.shard_of(i);
+                    if seen.last().map(|&(x, _)| x) != Some(shard) {
+                        seen.push((shard, self.ts[shard].read()));
+                    }
+                    let cur = self.keys[i].read();
+                    if cur == key {
+                        // Read the paired value, then re-validate the
+                        // shard so the pairing is atomic.
+                        let v = self.vals[i].read();
+                        let (sh, tv) = *seen.last().unwrap();
+                        if self.ts[sh].read() != tv {
+                            continue 'retry;
+                        }
+                        hit = Some(v);
+                        break;
+                    }
+                    if cur == NIL || self.dist(cur, i) < cur_dist {
+                        break;
+                    }
+                    i = (i + 1) & self.mask as usize;
+                    cur_dist += 1;
+                    if cur_dist as usize > self.size() {
+                        break;
+                    }
+                }
+                if hit.is_some() {
+                    return hit;
+                }
+                for &(shard, v) in seen.iter() {
+                    if self.ts[shard].read() != v {
+                        continue 'retry;
+                    }
+                }
+                return None;
+            }
+        })
+    }
+
+    /// Insert or update; returns the previous value if the key existed.
+    pub fn insert(&self, key: u64, value: u64) -> Option<u64> {
+        check_key(key);
+        assert!(value <= crate::kcas::MAX_VALUE);
+        let home = home_bucket(key, self.mask);
+        SCRATCH.with(|s| {
+            let scratch = &mut *s.borrow_mut();
+            'retry: loop {
+                scratch.op.clear();
+                scratch.bump.clear();
+                let mut active_key = key;
+                let mut active_val = value;
+                let mut active_dist = 0u64;
+                let mut i = home;
+                let mut probes = 0usize;
+                loop {
+                    assert!(probes <= self.size(), "map is full");
+                    probes += 1;
+                    let shard = self.shard_of(i);
+                    let ts_val = self.ts[shard].read();
+                    let cur = self.keys[i].read();
+                    if cur == NIL {
+                        scratch.op.push(&self.keys[i], NIL, active_key);
+                        scratch.op.push(&self.vals[i], self.vals[i].read(), active_val);
+                        for &(sh, v) in scratch.bump.iter() {
+                            scratch.op.push(&self.ts[sh], v, v + 1);
+                        }
+                        if scratch.op.execute() {
+                            return None;
+                        }
+                        continue 'retry;
+                    }
+                    if cur == key {
+                        // Overwrite: value word only; pairing stays.
+                        let old = self.vals[i].read();
+                        // The key could relocate between the key read
+                        // and the value CAS; include the key word as a
+                        // guard so the pair swap is atomic.
+                        scratch.op.clear();
+                        scratch.op.push(&self.keys[i], key, key);
+                        scratch.op.push(&self.vals[i], old, value);
+                        if scratch.op.execute() {
+                            return Some(old);
+                        }
+                        continue 'retry;
+                    }
+                    let cur_d = self.dist(cur, i);
+                    if cur_d < active_dist {
+                        // Displace the richer pair.
+                        let cur_val = self.vals[i].read();
+                        scratch.op.push(&self.keys[i], cur, active_key);
+                        scratch.op.push(&self.vals[i], cur_val, active_val);
+                        if scratch.bump.last().map(|&(s2, _)| s2) != Some(shard)
+                        {
+                            scratch.bump.push((shard, ts_val));
+                        }
+                        active_key = cur;
+                        active_val = cur_val;
+                        active_dist = cur_d;
+                    }
+                    i = (i + 1) & self.mask as usize;
+                    active_dist += 1;
+                }
+            }
+        })
+    }
+
+    /// Remove; returns the value that was present.
+    pub fn remove(&self, key: u64) -> Option<u64> {
+        check_key(key);
+        let home = home_bucket(key, self.mask);
+        SCRATCH.with(|s| {
+            let scratch = &mut *s.borrow_mut();
+            'retry: loop {
+                scratch.seen.clear();
+                scratch.op.clear();
+                scratch.bump.clear();
+                let mut i = home;
+                let mut cur_dist = 0u64;
+                let mut hit = false;
+                loop {
+                    let shard = self.shard_of(i);
+                    if scratch.seen.last().map(|&(x, _)| x) != Some(shard) {
+                        scratch.seen.push((shard, self.ts[shard].read()));
+                    }
+                    let cur = self.keys[i].read();
+                    if cur == NIL {
+                        break;
+                    }
+                    if cur == key {
+                        hit = true;
+                        break;
+                    }
+                    if self.dist(cur, i) < cur_dist {
+                        break;
+                    }
+                    i = (i + 1) & self.mask as usize;
+                    cur_dist += 1;
+                    if cur_dist as usize > self.size() {
+                        break;
+                    }
+                }
+                if !hit {
+                    for &(shard, v) in scratch.seen.iter() {
+                        if self.ts[shard].read() != v {
+                            continue 'retry;
+                        }
+                    }
+                    return None;
+                }
+                // Backward shift of (key, value) pairs.
+                let removed_val = self.vals[i].read();
+                scratch.chain.clear();
+                scratch.chain.push((key, removed_val));
+                {
+                    let shard = self.shard_of(i);
+                    let v = scratch
+                        .seen
+                        .iter()
+                        .rev()
+                        .find(|&&(s2, _)| s2 == shard)
+                        .map(|&(_, v)| v)
+                        .unwrap_or_else(|| self.ts[shard].read());
+                    scratch.bump.push((shard, v));
+                }
+                let mut j = (i + 1) & self.mask as usize;
+                loop {
+                    let shard = self.shard_of(j);
+                    let ts_val = self.ts[shard].read();
+                    let nk = self.keys[j].read();
+                    if nk == NIL || self.dist(nk, j) == 0 {
+                        break;
+                    }
+                    if scratch.bump.last().map(|&(s2, _)| s2) != Some(shard) {
+                        scratch.bump.push((shard, ts_val));
+                    }
+                    scratch.chain.push((nk, self.vals[j].read()));
+                    j = (j + 1) & self.mask as usize;
+                    if scratch.chain.len() > self.size() {
+                        continue 'retry;
+                    }
+                }
+                let mut pos = i;
+                for w in 0..scratch.chain.len() {
+                    let (ck, cv) = scratch.chain[w];
+                    let (nk, nv) =
+                        scratch.chain.get(w + 1).copied().unwrap_or((NIL, 0));
+                    scratch.op.push(&self.keys[pos], ck, nk);
+                    scratch.op.push(&self.vals[pos], cv, nv);
+                    pos = (pos + 1) & self.mask as usize;
+                }
+                for &(sh, v) in scratch.bump.iter() {
+                    scratch.op.push(&self.ts[sh], v, v + 1);
+                }
+                if scratch.op.execute() {
+                    return Some(removed_val);
+                }
+                continue 'retry;
+            }
+        })
+    }
+
+    /// Quiesced size.
+    pub fn len_quiesced(&self) -> usize {
+        (0..self.size()).filter(|&i| self.keys[i].read() != NIL).count()
+    }
+
+    /// Quiesced consistency check: RH invariant + every pair readable.
+    pub fn check_invariant(&self) -> Result<(), String> {
+        let n = self.size();
+        for i in 0..n {
+            let k = self.keys[i].read();
+            if k == NIL {
+                continue;
+            }
+            let d = self.dist(k, i);
+            if d == 0 {
+                continue;
+            }
+            let pi = (i + n - 1) & self.mask as usize;
+            let prev = self.keys[pi].read();
+            if prev == NIL {
+                return Err(format!("bucket {i}: dfb {d} after empty"));
+            }
+            if d > self.dist(prev, pi) + 1 {
+                return Err(format!("bucket {i}: invariant broken"));
+            }
+        }
+        Ok(())
+    }
+}
+
+// SAFETY: all shared state is atomics under the K-CAS protocol.
+unsafe impl Send for KCasRobinHoodMap {}
+unsafe impl Sync for KCasRobinHoodMap {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+    use std::collections::HashMap;
+    use std::sync::Arc;
+
+    #[test]
+    fn basic_map_semantics() {
+        let m = KCasRobinHoodMap::new(8);
+        assert_eq!(m.get(1), None);
+        assert_eq!(m.insert(1, 100), None);
+        assert_eq!(m.get(1), Some(100));
+        assert_eq!(m.insert(1, 200), Some(100));
+        assert_eq!(m.get(1), Some(200));
+        assert_eq!(m.remove(1), Some(200));
+        assert_eq!(m.remove(1), None);
+        assert_eq!(m.get(1), None);
+    }
+
+    #[test]
+    fn values_follow_displaced_keys() {
+        let m = KCasRobinHoodMap::new(6);
+        for k in 1..=50u64 {
+            m.insert(k, k * 1000);
+        }
+        m.check_invariant().unwrap();
+        for k in 1..=50u64 {
+            assert_eq!(m.get(k), Some(k * 1000), "pair broken for {k}");
+        }
+        for k in (1..=50u64).step_by(2) {
+            assert_eq!(m.remove(k), Some(k * 1000));
+        }
+        for k in 1..=50u64 {
+            let want = if k % 2 == 0 { Some(k * 1000) } else { None };
+            assert_eq!(m.get(k), want, "after shift, key {k}");
+        }
+    }
+
+    #[test]
+    fn oracle_property_vs_hashmap() {
+        prop::check(
+            "kcas-rh-map matches HashMap",
+            20,
+            |r: &mut Rng| {
+                (0..300)
+                    .map(|_| {
+                        (r.below(3) as u8, 1 + r.below(48), r.below(1000))
+                    })
+                    .collect::<Vec<(u8, u64, u64)>>()
+            },
+            |ops| {
+                let m = KCasRobinHoodMap::new(7);
+                let mut oracle: HashMap<u64, u64> = HashMap::new();
+                for &(op, key, val) in ops {
+                    let (got, want) = match op {
+                        0 => (m.insert(key, val), oracle.insert(key, val)),
+                        1 => (m.remove(key), oracle.remove(&key)),
+                        _ => (m.get(key), oracle.get(&key).copied()),
+                    };
+                    if got != want {
+                        return Err(format!(
+                            "op {op} key {key}: got {got:?} want {want:?}"
+                        ));
+                    }
+                }
+                m.check_invariant()?;
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn concurrent_pairs_never_tear() {
+        // Each key's value always encodes its key (value = key * 7).
+        // Under churn, a get must never observe a mismatched pair.
+        let m = Arc::new(KCasRobinHoodMap::new(8));
+        const KEYS: u64 = 100;
+        for k in 1..=KEYS {
+            m.insert(k, k * 7);
+        }
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut hs = Vec::new();
+        for tid in 0..3u64 {
+            let (m, stop) = (m.clone(), stop.clone());
+            hs.push(std::thread::spawn(move || {
+                let mut r = Rng::for_thread(0x99, tid);
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let k = 1 + r.below(KEYS);
+                    m.remove(k);
+                    m.insert(k, k * 7);
+                }
+            }));
+        }
+        for tid in 0..4u64 {
+            let (m, stop) = (m.clone(), stop.clone());
+            hs.push(std::thread::spawn(move || {
+                let mut r = Rng::for_thread(0x9A, tid);
+                for _ in 0..30_000 {
+                    let k = 1 + r.below(KEYS);
+                    if let Some(v) = m.get(k) {
+                        assert_eq!(v, k * 7, "torn pair: key {k} value {v}");
+                    }
+                }
+                stop.store(true, std::sync::atomic::Ordering::Relaxed);
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        m.check_invariant().unwrap();
+    }
+
+    #[test]
+    fn concurrent_disjoint_inserts() {
+        let m = Arc::new(KCasRobinHoodMap::new(12));
+        let mut hs = Vec::new();
+        for tid in 0..8u64 {
+            let m = m.clone();
+            hs.push(std::thread::spawn(move || {
+                let base = 1 + tid * 1000;
+                for k in base..base + 300 {
+                    assert_eq!(m.insert(k, k + 1), None);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(m.len_quiesced(), 8 * 300);
+        for tid in 0..8u64 {
+            let base = 1 + tid * 1000;
+            for k in base..base + 300 {
+                assert_eq!(m.get(k), Some(k + 1));
+            }
+        }
+    }
+}

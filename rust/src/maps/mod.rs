@@ -1,0 +1,164 @@
+//! The hash tables: the paper's contribution and all its competitors.
+//!
+//! Every table implements [`ConcurrentSet`] over 62-bit integer keys
+//! (the paper benchmarks integer *sets*: `Add/Contains/Remove(key)`).
+//! Key 0 is reserved as Nil in the open-addressing tables; the public
+//! API therefore requires `1 <= key <= MAX_KEY`.
+
+pub mod hopscotch;
+pub mod kcas_rh;
+pub mod kcas_rh_map;
+pub mod lockfree_lp;
+pub mod locked_lp;
+pub mod michael;
+pub mod resizable;
+pub mod serial_rh;
+pub mod tx_rh;
+
+/// Largest legal key (62-bit, minus the reserved Nil/Tombstone values).
+pub const MAX_KEY: u64 = (1 << 62) - 3;
+
+/// A concurrent set of integer keys — the paper's benchmark interface.
+pub trait ConcurrentSet: Send + Sync {
+    /// True iff `key` is in the set (paper Fig. 7).
+    fn contains(&self, key: u64) -> bool;
+    /// Insert; false if already present (paper Fig. 8).
+    fn add(&self, key: u64) -> bool;
+    /// Delete; false if not present (paper Fig. 9).
+    fn remove(&self, key: u64) -> bool;
+
+    /// Short stable name used in benchmark tables.
+    fn name(&self) -> &'static str;
+
+    /// Number of buckets (chained tables report the bucket-array length).
+    fn capacity(&self) -> usize;
+
+    /// Distance-from-home-bucket per bucket, -1 for empty. Only valid
+    /// when quiesced (no concurrent writers); used for invariant checks
+    /// and the probe-statistics analytics. Chained tables return empty.
+    fn dfb_snapshot(&self) -> Vec<i32> {
+        Vec::new()
+    }
+
+    /// Exact element count when quiesced.
+    fn len_quiesced(&self) -> usize;
+}
+
+/// Which table to construct — used by the CLI, harness, and benches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TableKind {
+    KCasRobinHood,
+    TxRobinHood,
+    Hopscotch,
+    LockFreeLp,
+    LockedLp,
+    Michael,
+    SerialRobinHood,
+}
+
+impl TableKind {
+    pub const ALL_CONCURRENT: [TableKind; 6] = [
+        TableKind::KCasRobinHood,
+        TableKind::TxRobinHood,
+        TableKind::Hopscotch,
+        TableKind::LockFreeLp,
+        TableKind::LockedLp,
+        TableKind::Michael,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TableKind::KCasRobinHood => "kcas-rh",
+            TableKind::TxRobinHood => "tx-rh",
+            TableKind::Hopscotch => "hopscotch",
+            TableKind::LockFreeLp => "lockfree-lp",
+            TableKind::LockedLp => "locked-lp",
+            TableKind::Michael => "michael",
+            TableKind::SerialRobinHood => "serial-rh",
+        }
+    }
+
+    /// Paper display name (Figs. 10-12 / Table 1 rows).
+    pub fn display(&self) -> &'static str {
+        match self {
+            TableKind::KCasRobinHood => "K-CAS Robin Hood",
+            TableKind::TxRobinHood => "Transactional RH",
+            TableKind::Hopscotch => "Hopscotch Hashing",
+            TableKind::LockFreeLp => "Lock-Free LP",
+            TableKind::LockedLp => "Locked LP",
+            TableKind::Michael => "Maged Michael",
+            TableKind::SerialRobinHood => "Serial Robin Hood",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TableKind> {
+        match s {
+            "kcas-rh" => Some(TableKind::KCasRobinHood),
+            "tx-rh" => Some(TableKind::TxRobinHood),
+            "hopscotch" => Some(TableKind::Hopscotch),
+            "lockfree-lp" => Some(TableKind::LockFreeLp),
+            "locked-lp" => Some(TableKind::LockedLp),
+            "michael" => Some(TableKind::Michael),
+            "serial-rh" => Some(TableKind::SerialRobinHood),
+            _ => None,
+        }
+    }
+
+    /// Construct a table with `1 << size_log2` buckets.
+    pub fn build(&self, size_log2: u32) -> Box<dyn ConcurrentSet> {
+        match self {
+            TableKind::KCasRobinHood => {
+                Box::new(kcas_rh::KCasRobinHood::new(size_log2))
+            }
+            TableKind::TxRobinHood => Box::new(tx_rh::TxRobinHood::new(size_log2)),
+            TableKind::Hopscotch => Box::new(hopscotch::Hopscotch::new(size_log2)),
+            TableKind::LockFreeLp => {
+                Box::new(lockfree_lp::LockFreeLp::new(size_log2))
+            }
+            TableKind::LockedLp => Box::new(locked_lp::LockedLp::new(size_log2)),
+            TableKind::Michael => Box::new(michael::MichaelSet::new(size_log2)),
+            TableKind::SerialRobinHood => {
+                Box::new(serial_rh::SerialRobinHoodLocked::new(size_log2))
+            }
+        }
+    }
+}
+
+/// Validate a key for the open-addressing tables.
+#[inline]
+pub(crate) fn check_key(key: u64) {
+    assert!(
+        key >= 1 && key <= MAX_KEY,
+        "key {key} out of range [1, {MAX_KEY}]"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrip() {
+        for k in TableKind::ALL_CONCURRENT {
+            assert_eq!(TableKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(
+            TableKind::parse("serial-rh"),
+            Some(TableKind::SerialRobinHood)
+        );
+        assert_eq!(TableKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn build_all_kinds_smoke() {
+        for k in TableKind::ALL_CONCURRENT {
+            let t = k.build(8);
+            assert!(t.add(7));
+            assert!(t.contains(7));
+            assert!(!t.add(7));
+            assert!(t.remove(7));
+            assert!(!t.contains(7), "{}", k.name());
+            assert!(!t.remove(7));
+        }
+    }
+}

@@ -1,0 +1,355 @@
+//! Serial Robin Hood hashing (Celis 1986) — the paper's §2.2 baseline.
+//!
+//! [`SerialRobinHood`] is the plain single-threaded structure (also the
+//! semantic oracle for the concurrent variants); `SerialRobinHoodLocked`
+//! wraps it in one mutex so it can stand in wherever a `ConcurrentSet`
+//! is required (single-core overhead comparisons, Fig. 10 context).
+//!
+//! Insertion displaces "richer" entries (lower DFB) per Fig. 1; deletion
+//! backward-shifts per Fig. 4; search cuts off on the Robin Hood
+//! invariant per Fig. 3.
+
+use std::sync::Mutex;
+
+use super::{check_key, ConcurrentSet};
+use crate::util::hash::{dfb, home_bucket};
+
+/// Nil marker (empty bucket).
+const NIL: u64 = 0;
+
+/// Plain single-threaded Robin Hood hash set.
+pub struct SerialRobinHood {
+    table: Vec<u64>,
+    mask: u64,
+    len: usize,
+}
+
+impl SerialRobinHood {
+    pub fn new(size_log2: u32) -> Self {
+        let size = 1usize << size_log2;
+        Self { table: vec![NIL; size], mask: (size - 1) as u64, len: 0 }
+    }
+
+    #[inline]
+    fn size(&self) -> usize {
+        self.table.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Search with the Robin Hood invariant early cut-off (Fig. 3).
+    pub fn contains(&self, key: u64) -> bool {
+        check_key(key);
+        let home = home_bucket(key, self.mask);
+        let mut i = home;
+        for cur_dist in 0..self.size() as u64 {
+            let cur = self.table[i];
+            if cur == NIL {
+                return false;
+            }
+            if cur == key {
+                return true;
+            }
+            // Invariant: an occupant closer to home than our probe
+            // distance proves the key is absent.
+            if dfb(home_bucket(cur, self.mask), i, self.mask) < cur_dist {
+                return false;
+            }
+            i = (i + 1) & self.mask as usize;
+        }
+        false
+    }
+
+    /// Robin Hood insertion (Fig. 1): swap with richer occupants, carry
+    /// the evicted entry forward until a Nil bucket.
+    pub fn add(&mut self, key: u64) -> bool {
+        check_key(key);
+        assert!(self.len < self.size(), "table full");
+        let mut active = key;
+        let mut active_dist = 0u64;
+        let mut i = home_bucket(active, self.mask);
+        loop {
+            let cur = self.table[i];
+            if cur == NIL {
+                self.table[i] = active;
+                self.len += 1;
+                return true;
+            }
+            if cur == key && active == key {
+                return false; // already present (only match the probe key)
+            }
+            let cur_dist = dfb(home_bucket(cur, self.mask), i, self.mask);
+            if cur_dist < active_dist {
+                // Steal from the rich: place `active`, displace `cur`.
+                self.table[i] = active;
+                active = cur;
+                active_dist = cur_dist;
+            }
+            i = (i + 1) & self.mask as usize;
+            active_dist += 1;
+        }
+    }
+
+    /// Deletion with backward shifting (Fig. 4).
+    pub fn remove(&mut self, key: u64) -> bool {
+        check_key(key);
+        let home = home_bucket(key, self.mask);
+        let mut i = home;
+        for cur_dist in 0..self.size() as u64 {
+            let cur = self.table[i];
+            if cur == NIL {
+                return false;
+            }
+            if cur == key {
+                self.backward_shift(i);
+                self.len -= 1;
+                return true;
+            }
+            if dfb(home_bucket(cur, self.mask), i, self.mask) < cur_dist {
+                return false;
+            }
+            i = (i + 1) & self.mask as usize;
+        }
+        false
+    }
+
+    /// Shift successors back over bucket `hole` until a Nil bucket or an
+    /// entry already at its home (DFB 0).
+    fn backward_shift(&mut self, mut hole: usize) {
+        loop {
+            let next = (hole + 1) & self.mask as usize;
+            let cur = self.table[next];
+            if cur == NIL
+                || dfb(home_bucket(cur, self.mask), next, self.mask) == 0
+            {
+                self.table[hole] = NIL;
+                return;
+            }
+            self.table[hole] = cur;
+            hole = next;
+        }
+    }
+
+    /// DFB per bucket, -1 for empty (probe-statistics input).
+    pub fn dfb_snapshot(&self) -> Vec<i32> {
+        self.table
+            .iter()
+            .enumerate()
+            .map(|(i, &k)| {
+                if k == NIL {
+                    -1
+                } else {
+                    dfb(home_bucket(k, self.mask), i, self.mask) as i32
+                }
+            })
+            .collect()
+    }
+
+    /// Check the Robin Hood table invariant: along any probe run the DFB
+    /// can drop only where an entry is at home; formally, for each
+    /// occupied bucket i with occupied predecessor, dfb(i) >= dfb(i-1)-...
+    /// The precise statement: for consecutive occupied buckets (i-1, i),
+    /// dfb(i) + 1 >= ... — we check the standard formulation:
+    /// dfb(i) <= dfb(i-1) + 1, and no entry sits after an empty bucket
+    /// closer than its home allows.
+    pub fn check_invariant(&self) -> Result<(), String> {
+        let n = self.size();
+        for i in 0..n {
+            let k = self.table[i];
+            if k == NIL {
+                continue;
+            }
+            let d = dfb(home_bucket(k, self.mask), i, self.mask);
+            let prev = self.table[(i + n - 1) & self.mask as usize];
+            if prev == NIL {
+                if d != 0 {
+                    return Err(format!(
+                        "bucket {i}: key {k} has dfb {d} but predecessor empty"
+                    ));
+                }
+            } else {
+                let pd = dfb(
+                    home_bucket(prev, self.mask),
+                    (i + n - 1) & self.mask as usize,
+                    self.mask,
+                );
+                if d > pd + 1 {
+                    return Err(format!(
+                        "bucket {i}: dfb {d} > predecessor dfb {pd} + 1"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Mutex-wrapped serial table satisfying [`ConcurrentSet`].
+pub struct SerialRobinHoodLocked {
+    inner: Mutex<SerialRobinHood>,
+}
+
+impl SerialRobinHoodLocked {
+    pub fn new(size_log2: u32) -> Self {
+        Self { inner: Mutex::new(SerialRobinHood::new(size_log2)) }
+    }
+}
+
+impl ConcurrentSet for SerialRobinHoodLocked {
+    fn contains(&self, key: u64) -> bool {
+        self.inner.lock().unwrap().contains(key)
+    }
+    fn add(&self, key: u64) -> bool {
+        self.inner.lock().unwrap().add(key)
+    }
+    fn remove(&self, key: u64) -> bool {
+        self.inner.lock().unwrap().remove(key)
+    }
+    fn name(&self) -> &'static str {
+        "serial-rh"
+    }
+    fn capacity(&self) -> usize {
+        self.inner.lock().unwrap().size()
+    }
+    fn dfb_snapshot(&self) -> Vec<i32> {
+        self.inner.lock().unwrap().dfb_snapshot()
+    }
+    fn len_quiesced(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+    use std::collections::HashSet;
+
+    #[test]
+    fn basic_add_contains_remove() {
+        let mut t = SerialRobinHood::new(8);
+        assert!(t.add(1));
+        assert!(!t.add(1));
+        assert!(t.contains(1));
+        assert!(!t.contains(2));
+        assert!(t.remove(1));
+        assert!(!t.remove(1));
+        assert!(!t.contains(1));
+        assert_eq!(t.len(), 0);
+    }
+
+    #[test]
+    fn fill_to_high_load_factor() {
+        let mut t = SerialRobinHood::new(10);
+        let n = (1024.0 * 0.9) as u64;
+        for k in 1..=n {
+            assert!(t.add(k));
+        }
+        for k in 1..=n {
+            assert!(t.contains(k), "lost key {k}");
+        }
+        assert!(!t.contains(n + 1));
+        t.check_invariant().unwrap();
+        assert_eq!(t.len(), n as usize);
+    }
+
+    #[test]
+    fn removal_backward_shift_preserves_members() {
+        let mut t = SerialRobinHood::new(8);
+        for k in 1..=200u64 {
+            t.add(k);
+        }
+        for k in (1..=200u64).step_by(2) {
+            assert!(t.remove(k));
+        }
+        t.check_invariant().unwrap();
+        for k in 1..=200u64 {
+            assert_eq!(t.contains(k), k % 2 == 0, "key {k}");
+        }
+    }
+
+    #[test]
+    fn mean_dfb_stays_low_at_80_percent() {
+        // Celis: expected successful probe ~2.6 even at high LF.
+        let mut t = SerialRobinHood::new(14);
+        let n = ((1 << 14) as f64 * 0.8) as u64;
+        for k in 1..=n {
+            t.add(k);
+        }
+        let snap = t.dfb_snapshot();
+        let (mut sum, mut cnt) = (0i64, 0i64);
+        for d in snap {
+            if d >= 0 {
+                sum += d as i64;
+                cnt += 1;
+            }
+        }
+        let mean = sum as f64 / cnt as f64;
+        assert!(mean < 4.0, "mean DFB {mean}");
+    }
+
+    #[test]
+    fn oracle_property_random_ops() {
+        prop::check(
+            "serial-rh matches HashSet",
+            40,
+            |r: &mut Rng| {
+                (0..400)
+                    .map(|_| (r.below(3) as u8, 1 + r.below(64)))
+                    .collect::<Vec<(u8, u64)>>()
+            },
+            |ops| {
+                let mut t = SerialRobinHood::new(8);
+                let mut oracle = HashSet::new();
+                for &(op, key) in ops {
+                    let (got, want) = match op {
+                        0 => (t.add(key), oracle.insert(key)),
+                        1 => (t.remove(key), oracle.remove(&key)),
+                        _ => (t.contains(key), oracle.contains(&key)),
+                    };
+                    if got != want {
+                        return Err(format!(
+                            "op {op} key {key}: got {got}, want {want}"
+                        ));
+                    }
+                }
+                t.check_invariant()?;
+                if t.len() != oracle.len() {
+                    return Err("length mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn locked_wrapper_is_a_concurrent_set() {
+        let t = SerialRobinHoodLocked::new(8);
+        let tref: &dyn ConcurrentSet = &t;
+        assert!(tref.add(5));
+        assert!(tref.contains(5));
+        assert_eq!(tref.len_quiesced(), 1);
+    }
+
+    #[test]
+    fn wraparound_at_table_end() {
+        // Keys that hash near the end of a tiny table must wrap.
+        let mut t = SerialRobinHood::new(4);
+        let mut added = Vec::new();
+        for k in 1..=14u64 {
+            t.add(k);
+            added.push(k);
+        }
+        t.check_invariant().unwrap();
+        for k in added {
+            assert!(t.contains(k));
+        }
+    }
+}

@@ -1,0 +1,536 @@
+//! Transactional Robin Hood — the paper's HTM (lock-elision) variant,
+//! emulated in software (DESIGN.md substitution #1).
+//!
+//! The paper runs plain Robin Hood inside Intel RTM transactions with
+//! speculative lock elision [32]. This container (like most current
+//! x86 parts) has no usable TSX, so we emulate the *semantics* the
+//! transactions provided:
+//!
+//! * **Readers** run optimistically against per-shard *sequence
+//!   versions* (even = stable, odd = writer in flight) — precisely the
+//!   read-set validation an HTM transaction performs in hardware;
+//!   a conflicting writer aborts the reader, which retries.
+//! * **Writers** discover their write span, acquire the covering shard
+//!   locks in sorted order (deadlock-free), re-validate, apply the
+//!   whole displacement/shift chain, and publish by bumping versions —
+//!   an explicit software transaction with the same multi-bucket
+//!   atomicity granularity.
+//!
+//! Compared with [`super::kcas_rh`], there is no timestamp array on the
+//! read path and no K-CAS descriptor indirection — which is exactly why
+//! the paper's Fig. 10 shows the transactional variant winning single
+//! core, and the lock serialization is why it stops scaling across
+//! sockets (Figs. 11-12).
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use crossbeam_utils::CachePadded;
+
+use super::{check_key, ConcurrentSet};
+use crate::util::hash::{dfb, home_bucket};
+
+const NIL: u64 = 0;
+
+thread_local! {
+    static SCRATCH: RefCell<(Vec<(usize, u64)>, Vec<(usize, u64)>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+}
+
+pub struct TxRobinHood {
+    table: Box<[AtomicU64]>,
+    vers: Box<[CachePadded<AtomicU64>]>,
+    locks: Box<[CachePadded<Mutex<()>>]>,
+    mask: u64,
+    shard_log2: u32,
+}
+
+impl TxRobinHood {
+    pub fn new(size_log2: u32) -> Self {
+        // Bounded shard table (cache-resident), like the HTM variant's
+        // elided lock table — see kcas_rh::default_shard_log2.
+        let shard_log2 = super::kcas_rh::default_shard_log2(size_log2);
+        let size = 1usize << size_log2;
+        let shards = (size >> shard_log2).max(1);
+        Self {
+            table: (0..size).map(|_| AtomicU64::new(NIL)).collect(),
+            vers: (0..shards)
+                .map(|_| CachePadded::new(AtomicU64::new(0)))
+                .collect(),
+            locks: (0..shards)
+                .map(|_| CachePadded::new(Mutex::new(())))
+                .collect(),
+            mask: (size - 1) as u64,
+            shard_log2,
+        }
+    }
+
+    #[inline]
+    fn size(&self) -> usize {
+        self.table.len()
+    }
+
+    #[inline]
+    fn shard(&self, i: usize) -> usize {
+        (i >> self.shard_log2) & (self.vers.len() - 1)
+    }
+
+    #[inline]
+    fn wrap(&self, i: usize) -> usize {
+        i & self.mask as usize
+    }
+
+    /// Bucket load without bounds check (indices are pre-masked).
+    #[inline(always)]
+    fn bucket(&self, i: usize) -> u64 {
+        debug_assert!(i < self.table.len());
+        unsafe { self.table.get_unchecked(i) }.load(Ordering::Acquire)
+    }
+
+    #[inline]
+    fn dist(&self, key: u64, i: usize) -> u64 {
+        dfb(home_bucket(key, self.mask), i, self.mask)
+    }
+
+    /// Lock shards covering `[start, start+len)` (wrapped), sorted.
+    fn lock_span(&self, start: usize, len: usize) -> Vec<MutexGuard<'_, ()>> {
+        let mut shards: Vec<usize> = (0..=len >> self.shard_log2)
+            .map(|s| self.shard(self.wrap(start + (s << self.shard_log2))))
+            .collect();
+        shards.sort_unstable();
+        shards.dedup();
+        shards
+            .iter()
+            .map(|&s| self.locks[s].lock().unwrap())
+            .collect()
+    }
+
+    /// Begin the "commit" of a software transaction over bucket range
+    /// `[start, start+len)`: bump all covered versions to odd.
+    fn tx_begin(&self, start: usize, len: usize) {
+        let mut s = 0;
+        while s <= len >> self.shard_log2 {
+            let sh = self.shard(self.wrap(start + (s << self.shard_log2)));
+            self.vers[sh].fetch_add(1, Ordering::AcqRel);
+            s += 1;
+        }
+    }
+
+    /// Publish: bump versions back to even.
+    fn tx_end(&self, start: usize, len: usize) {
+        let mut s = 0;
+        while s <= len >> self.shard_log2 {
+            let sh = self.shard(self.wrap(start + (s << self.shard_log2)));
+            self.vers[sh].fetch_add(1, Ordering::AcqRel);
+            s += 1;
+        }
+    }
+}
+
+impl TxRobinHood {
+    /// Slow-path `contains` for probes that cross version shards.
+    #[cold]
+    fn contains_multi_shard(&self, key: u64, home: usize) -> bool {
+        SCRATCH.with(|s| {
+            let mut guard = s.borrow_mut();
+            let seen = &mut guard.0;
+            'retry: loop {
+                seen.clear();
+                let mut i = home;
+                let mut cur_dist = 0u64;
+                loop {
+                    let sh = self.shard(i);
+                    if seen.last().map(|&(x, _)| x) != Some(sh) {
+                        let v = self.vers[sh].load(Ordering::Acquire);
+                        if v & 1 == 1 {
+                            continue 'retry; // writer in flight: abort
+                        }
+                        seen.push((sh, v));
+                    }
+                    let cur = self.bucket(i);
+                    if cur == key {
+                        return true;
+                    }
+                    if cur == NIL || self.dist(cur, i) < cur_dist {
+                        break;
+                    }
+                    i = self.wrap(i + 1);
+                    cur_dist += 1;
+                    if cur_dist as usize > self.size() {
+                        break;
+                    }
+                }
+                // Read-set validation (what RTM does in hardware).
+                for &(sh, v) in seen.iter() {
+                    if self.vers[sh].load(Ordering::Acquire) != v {
+                        continue 'retry;
+                    }
+                }
+                return false;
+            }
+        })
+    }
+}
+
+impl ConcurrentSet for TxRobinHood {
+    /// Optimistic read with a register-resident read-set in the common
+    /// single-shard case (exactly what a short RTM transaction's
+    /// hardware read-set gives you for free).
+    fn contains(&self, key: u64) -> bool {
+        check_key(key);
+        let home = home_bucket(key, self.mask);
+        'retry: loop {
+            let sh0 = self.shard(home);
+            let v0 = self.vers[sh0].load(Ordering::Acquire);
+            if v0 & 1 == 1 {
+                std::hint::spin_loop();
+                continue 'retry; // writer in flight
+            }
+            let mut i = home;
+            let mut cur_dist = 0u64;
+            loop {
+                if self.shard(i) != sh0 {
+                    return self.contains_multi_shard(key, home);
+                }
+                let cur = self.bucket(i);
+                if cur == key {
+                    return true;
+                }
+                if cur == NIL || self.dist(cur, i) < cur_dist {
+                    break;
+                }
+                i = self.wrap(i + 1);
+                cur_dist += 1;
+                if cur_dist as usize > self.size() {
+                    break;
+                }
+            }
+            if self.vers[sh0].load(Ordering::Acquire) == v0 {
+                return false;
+            }
+            continue 'retry;
+        }
+    }
+
+    fn add(&self, key: u64) -> bool {
+        check_key(key);
+        let home = home_bucket(key, self.mask);
+        let mut est = 2 * (1usize << self.shard_log2);
+        'attempt: loop {
+            assert!(est <= 2 * self.size(), "tx-rh table too full");
+            let guards = self.lock_span(home, est);
+            // Serial Robin Hood insertion, planned within the locked span.
+            let mut active = key;
+            let mut active_dist = 0u64;
+            let mut i = home;
+            let mut span = 0usize;
+            let mut plan: Vec<(usize, u64)> = Vec::new();
+            let end = loop {
+                if span >= est {
+                    drop(guards);
+                    est *= 2;
+                    continue 'attempt; // chain leaves the locked span
+                }
+                let cur = self.bucket(i);
+                if cur == NIL {
+                    plan.push((i, active));
+                    break span;
+                }
+                if cur == key {
+                    return false;
+                }
+                let cur_d = self.dist(cur, i);
+                if cur_d < active_dist {
+                    plan.push((i, active));
+                    active = cur;
+                    active_dist = cur_d;
+                }
+                i = self.wrap(i + 1);
+                active_dist += 1;
+                span += 1;
+            };
+            // Commit the transaction.
+            let first = plan.first().map(|&(p, _)| p).unwrap();
+            let wlen = end + 1;
+            let _ = first;
+            self.tx_begin(home, wlen);
+            for &(p, v) in &plan {
+                self.table[p].store(v, Ordering::Release);
+            }
+            self.tx_end(home, wlen);
+            return true;
+        }
+    }
+
+    fn remove(&self, key: u64) -> bool {
+        check_key(key);
+        let home = home_bucket(key, self.mask);
+        SCRATCH.with(|s| {
+            let mut guard = s.borrow_mut();
+            let seen = &mut guard.0;
+            'retry: loop {
+                // Optimistic find (same protocol as contains).
+                seen.clear();
+                let mut i = home;
+                let mut cur_dist = 0u64;
+                let mut hit = false;
+                loop {
+                    let sh = self.shard(i);
+                    if seen.last().map(|&(x, _)| x) != Some(sh) {
+                        let v = self.vers[sh].load(Ordering::Acquire);
+                        if v & 1 == 1 {
+                            continue 'retry;
+                        }
+                        seen.push((sh, v));
+                    }
+                    let cur = self.bucket(i);
+                    if cur == key {
+                        hit = true;
+                        break;
+                    }
+                    if cur == NIL || self.dist(cur, i) < cur_dist {
+                        break;
+                    }
+                    i = self.wrap(i + 1);
+                    cur_dist += 1;
+                    if cur_dist as usize > self.size() {
+                        break;
+                    }
+                }
+                if !hit {
+                    for &(sh, v) in seen.iter() {
+                        if self.vers[sh].load(Ordering::Acquire) != v {
+                            continue 'retry;
+                        }
+                    }
+                    return false;
+                }
+                // Found at i: lock the shift span and re-validate.
+                let mut est = 2 * (1usize << self.shard_log2);
+                loop {
+                    assert!(est <= 2 * self.size(), "tx-rh: shift too long");
+                    let guards = self.lock_span(i, est);
+                    if self.table[i].load(Ordering::Acquire) != key {
+                        drop(guards);
+                        continue 'retry; // moved under us
+                    }
+                    // Determine the backward-shift chain end.
+                    let mut m = i;
+                    let mut len = 0usize;
+                    let mut grown = false;
+                    loop {
+                        let next = self.wrap(m + 1);
+                        if len + 1 >= est {
+                            grown = true;
+                            break;
+                        }
+                        let nk = self.bucket(next);
+                        if nk == NIL || self.dist(nk, next) == 0 {
+                            break;
+                        }
+                        m = next;
+                        len += 1;
+                    }
+                    if grown {
+                        drop(guards);
+                        est *= 2;
+                        continue;
+                    }
+                    // Transaction: shift [i+1..=m] back one, Nil m.
+                    self.tx_begin(i, len + 1);
+                    let mut hole = i;
+                    while hole != m {
+                        let next = self.wrap(hole + 1);
+                        let v = self.bucket(next);
+                        self.table[hole].store(v, Ordering::Release);
+                        hole = next;
+                    }
+                    self.table[m].store(NIL, Ordering::Release);
+                    self.tx_end(i, len + 1);
+                    return true;
+                }
+            }
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "tx-rh"
+    }
+
+    fn capacity(&self) -> usize {
+        self.size()
+    }
+
+    fn dfb_snapshot(&self) -> Vec<i32> {
+        (0..self.size())
+            .map(|i| {
+                let k = self.table[i].load(Ordering::Acquire);
+                if k == NIL {
+                    -1
+                } else {
+                    self.dist(k, i) as i32
+                }
+            })
+            .collect()
+    }
+
+    fn len_quiesced(&self) -> usize {
+        self.table
+            .iter()
+            .filter(|b| b.load(Ordering::Acquire) != NIL)
+            .count()
+    }
+}
+
+impl TxRobinHood {
+    /// Robin Hood invariant check (quiesced).
+    pub fn check_invariant(&self) -> Result<(), String> {
+        let n = self.size();
+        for i in 0..n {
+            let k = self.table[i].load(Ordering::Acquire);
+            if k == NIL {
+                continue;
+            }
+            let d = self.dist(k, i);
+            if d == 0 {
+                continue;
+            }
+            let pi = self.wrap(i + n - 1);
+            let prev = self.table[pi].load(Ordering::Acquire);
+            if prev == NIL {
+                return Err(format!("bucket {i}: dfb {d} after empty"));
+            }
+            let pd = self.dist(prev, pi);
+            if d > pd + 1 {
+                return Err(format!("bucket {i}: dfb {d} > prev {pd}+1"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+    use std::collections::HashSet;
+    use std::sync::Arc;
+
+    #[test]
+    fn basic_semantics() {
+        let t = TxRobinHood::new(8);
+        assert!(t.add(3));
+        assert!(!t.add(3));
+        assert!(t.contains(3));
+        assert!(t.remove(3));
+        assert!(!t.remove(3));
+        assert!(!t.contains(3));
+    }
+
+    #[test]
+    fn high_load_factor_fill() {
+        let t = TxRobinHood::new(10);
+        let n = (1024.0 * 0.85) as u64;
+        for k in 1..=n {
+            assert!(t.add(k));
+        }
+        t.check_invariant().unwrap();
+        for k in 1..=n {
+            assert!(t.contains(k));
+        }
+        assert_eq!(t.len_quiesced(), n as usize);
+    }
+
+    #[test]
+    fn oracle_property_random_ops() {
+        prop::check(
+            "tx-rh matches HashSet",
+            25,
+            |r: &mut Rng| {
+                (0..300)
+                    .map(|_| (r.below(3) as u8, 1 + r.below(48)))
+                    .collect::<Vec<(u8, u64)>>()
+            },
+            |ops| {
+                let t = TxRobinHood::new(7);
+                let mut oracle = HashSet::new();
+                for &(op, key) in ops {
+                    let (got, want) = match op {
+                        0 => (t.add(key), oracle.insert(key)),
+                        1 => (t.remove(key), oracle.remove(&key)),
+                        _ => (t.contains(key), oracle.contains(&key)),
+                    };
+                    if got != want {
+                        return Err(format!(
+                            "op {op} key {key}: got {got} want {want}"
+                        ));
+                    }
+                }
+                t.check_invariant()?;
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn concurrent_disjoint_deterministic() {
+        let t = Arc::new(TxRobinHood::new(12));
+        let mut hs = Vec::new();
+        for tid in 0..8u64 {
+            let t = t.clone();
+            hs.push(std::thread::spawn(move || {
+                let base = 1 + tid * 1000;
+                for k in base..base + 300 {
+                    assert!(t.add(k));
+                }
+                for k in (base..base + 300).step_by(2) {
+                    assert!(t.remove(k));
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        t.check_invariant().unwrap();
+        assert_eq!(t.len_quiesced(), 8 * 150);
+    }
+
+    #[test]
+    fn readers_never_miss_stable_keys() {
+        let t = Arc::new(TxRobinHood::new(7));
+        const CHURN: u64 = 60;
+        for k in 1..=CHURN + 30 {
+            t.add(k);
+        }
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut hs = Vec::new();
+        for tid in 0..2u64 {
+            let (t, stop) = (t.clone(), stop.clone());
+            hs.push(std::thread::spawn(move || {
+                let mut r = Rng::for_thread(41, tid);
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let k = 1 + r.below(CHURN);
+                    t.remove(k);
+                    t.add(k);
+                }
+            }));
+        }
+        for tid in 0..4u64 {
+            let (t, stop) = (t.clone(), stop.clone());
+            hs.push(std::thread::spawn(move || {
+                let mut r = Rng::for_thread(43, tid);
+                for _ in 0..30_000 {
+                    let k = CHURN + 1 + r.below(30);
+                    assert!(t.contains(k), "stable key {k} missed");
+                }
+                stop.store(true, std::sync::atomic::Ordering::Relaxed);
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        t.check_invariant().unwrap();
+    }
+}

@@ -1,0 +1,99 @@
+//! Thread pinning (paper §4.1: each thread pinned to a specific core,
+//! filling physical cores before hyperthreads, then the next socket).
+//!
+//! The container exposes no reliable topology, so the pin order is the
+//! kernel's logical CPU order; on machines with `/sys` topology we sort
+//! logical CPUs so that distinct physical cores come first (paper order).
+
+/// Number of CPUs available to this process.
+pub fn available_cpus() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Read the sibling list for a logical cpu, if exposed.
+fn first_sibling(cpu: usize) -> usize {
+    let path =
+        format!("/sys/devices/system/cpu/cpu{cpu}/topology/thread_siblings_list");
+    match std::fs::read_to_string(path) {
+        Ok(s) => s
+            .trim()
+            .split([',', '-'])
+            .next()
+            .and_then(|x| x.parse().ok())
+            .unwrap_or(cpu),
+        Err(_) => cpu,
+    }
+}
+
+/// Pin order: physical cores first (one logical CPU per core), then the
+/// remaining hyperthread siblings — the paper's §4.1 strategy.
+pub fn pin_order() -> Vec<usize> {
+    let n = available_cpus();
+    let cpus: Vec<usize> = (0..n).collect();
+    let mut primaries = Vec::new();
+    let mut siblings = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    for &c in &cpus {
+        if seen.insert(first_sibling(c)) {
+            primaries.push(c);
+        } else {
+            siblings.push(c);
+        }
+    }
+    primaries.extend(siblings);
+    primaries
+}
+
+/// Pin the calling thread to logical CPU `cpu`. Best-effort: returns
+/// false (and leaves affinity unchanged) if the syscall is unavailable.
+pub fn pin_to(cpu: usize) -> bool {
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_SET(cpu % libc::CPU_SETSIZE as usize, &mut set);
+        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set)
+            == 0
+    }
+}
+
+/// Pin thread `idx` according to [`pin_order`].
+pub fn pin_thread(idx: usize) -> bool {
+    let order = pin_order();
+    if order.is_empty() {
+        return false;
+    }
+    pin_to(order[idx % order.len()])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pin_order_covers_all_cpus_once() {
+        let order = pin_order();
+        assert_eq!(order.len(), available_cpus());
+        let mut sorted = order.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..available_cpus()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pin_to_current_cpu_succeeds() {
+        // CPU 0 always exists in the mask universe.
+        assert!(pin_to(0));
+        // Restore: allow all cpus again.
+        unsafe {
+            let mut set: libc::cpu_set_t = std::mem::zeroed();
+            for c in 0..available_cpus() {
+                libc::CPU_SET(c, &mut set);
+            }
+            libc::sched_setaffinity(
+                0,
+                std::mem::size_of::<libc::cpu_set_t>(),
+                &set,
+            );
+        }
+    }
+}

@@ -1,0 +1,246 @@
+//! A small linearizability checker for set histories (Wing & Gong
+//! style exhaustive search with memoization).
+//!
+//! The §3.4 proof obligations of the paper are linearizability of
+//! `Contains`/`Add`/`Remove`; this module lets tests *check* that
+//! claim mechanically on recorded concurrent histories: an operation's
+//! interval is [invocation, response], and the checker searches for a
+//! total order that (a) respects real-time order between
+//! non-overlapping operations and (b) replays correctly against
+//! sequential set semantics.
+//!
+//! Complexity is exponential in the worst case, so tests use short
+//! windows (a few hundred events over a handful of keys) — more than
+//! enough to catch timestamp-validation bugs like the paper's Fig. 5
+//! race, which manifests within a handful of overlapping ops.
+
+use std::collections::HashSet;
+
+/// Operation kind + argument.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    Contains(u64),
+    Add(u64),
+    Remove(u64),
+}
+
+/// One completed operation in a history.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub kind: OpKind,
+    pub result: bool,
+    /// Invocation timestamp (ns, from a shared monotonic clock).
+    pub invoke: u64,
+    /// Response timestamp.
+    pub response: u64,
+}
+
+/// Replay `kind` against a sequential set; returns the expected result.
+fn apply(state: &mut HashSet<u64>, kind: OpKind) -> bool {
+    match kind {
+        OpKind::Contains(k) => state.contains(&k),
+        OpKind::Add(k) => state.insert(k),
+        OpKind::Remove(k) => state.remove(&k),
+    }
+}
+
+fn undo(state: &mut HashSet<u64>, kind: OpKind, result: bool) {
+    match kind {
+        OpKind::Contains(_) => {}
+        OpKind::Add(k) => {
+            if result {
+                state.remove(&k);
+            }
+        }
+        OpKind::Remove(k) => {
+            if result {
+                state.insert(k);
+            }
+        }
+    }
+}
+
+/// Is `history` linearizable with respect to set semantics, starting
+/// from `initial` membership?
+///
+/// DFS over "next linearized op" choices: at each step any *minimal*
+/// pending op (one whose invocation precedes every pending response)
+/// may linearize next if its recorded result matches the sequential
+/// replay. Memoizes (linearized-set, state-hash) pairs.
+pub fn is_linearizable(initial: &[u64], history: &[Event]) -> bool {
+    let n = history.len();
+    assert!(n <= 64, "checker limited to 64-op windows");
+    let mut state: HashSet<u64> = initial.iter().copied().collect();
+    let mut done: u64 = 0; // bitmask of linearized ops
+    let mut seen: HashSet<u64> = HashSet::new(); // memo on `done`
+    // For real-time order: op i must linearize before op j if
+    // response_i < invoke_j. Precompute "blockers": op j can be chosen
+    // only when every op i with response_i < invoke_j is done.
+    let mut must_precede = vec![0u64; n];
+    for j in 0..n {
+        for i in 0..n {
+            if i != j && history[i].response < history[j].invoke {
+                must_precede[j] |= 1 << i;
+            }
+        }
+    }
+
+    fn dfs(
+        history: &[Event],
+        must_precede: &[u64],
+        state: &mut HashSet<u64>,
+        done: &mut u64,
+        seen: &mut HashSet<u64>,
+    ) -> bool {
+        let n = history.len();
+        if done.count_ones() as usize == n {
+            return true;
+        }
+        if !seen.insert(*done) {
+            return false; // already explored this frontier
+        }
+        for j in 0..n {
+            let bit = 1u64 << j;
+            if *done & bit != 0 || (must_precede[j] & !*done) != 0 {
+                continue;
+            }
+            let ev = &history[j];
+            let got = apply(state, ev.kind);
+            if got == ev.result {
+                *done |= bit;
+                if dfs(history, must_precede, state, done, seen) {
+                    return true;
+                }
+                *done &= !bit;
+            }
+            undo(state, ev.kind, got);
+        }
+        false
+    }
+
+    dfs(history, &must_precede, &mut state, &mut done, &mut seen)
+}
+
+/// Record a concurrent history of random ops over a small key range
+/// against any [`crate::maps::ConcurrentSet`], then check it.
+pub fn record_history(
+    table: &dyn crate::maps::ConcurrentSet,
+    threads: usize,
+    ops_per_thread: usize,
+    keys: u64,
+    seed: u64,
+) -> Vec<Event> {
+    use std::sync::Mutex;
+    use std::time::Instant;
+    let clock = Instant::now();
+    let events: Mutex<Vec<Event>> = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for tid in 0..threads {
+            let events = &events;
+            let clock = &clock;
+            s.spawn(move || {
+                let mut rng =
+                    crate::util::rng::Rng::for_thread(seed, tid as u64);
+                let mut local = Vec::with_capacity(ops_per_thread);
+                for _ in 0..ops_per_thread {
+                    let k = 1 + rng.below(keys);
+                    let kind = match rng.below(3) {
+                        0 => OpKind::Add(k),
+                        1 => OpKind::Remove(k),
+                        _ => OpKind::Contains(k),
+                    };
+                    let invoke = clock.elapsed().as_nanos() as u64;
+                    let result = match kind {
+                        OpKind::Contains(k) => table.contains(k),
+                        OpKind::Add(k) => table.add(k),
+                        OpKind::Remove(k) => table.remove(k),
+                    };
+                    let response = clock.elapsed().as_nanos() as u64;
+                    local.push(Event { kind, result, invoke, response });
+                }
+                events.lock().unwrap().extend(local);
+            });
+        }
+    });
+    let mut h = events.into_inner().unwrap();
+    h.sort_by_key(|e| e.invoke);
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: OpKind, result: bool, invoke: u64, response: u64) -> Event {
+        Event { kind, result, invoke, response }
+    }
+
+    #[test]
+    fn sequential_history_accepts() {
+        let h = vec![
+            ev(OpKind::Add(1), true, 0, 1),
+            ev(OpKind::Contains(1), true, 2, 3),
+            ev(OpKind::Remove(1), true, 4, 5),
+            ev(OpKind::Contains(1), false, 6, 7),
+        ];
+        assert!(is_linearizable(&[], &h));
+    }
+
+    #[test]
+    fn wrong_result_rejected() {
+        let h = vec![
+            ev(OpKind::Add(1), true, 0, 1),
+            ev(OpKind::Contains(1), false, 2, 3), // impossible
+        ];
+        assert!(!is_linearizable(&[], &h));
+    }
+
+    #[test]
+    fn overlap_allows_reordering() {
+        // contains(1)=true overlaps add(1)=true: legal (add first).
+        let h = vec![
+            ev(OpKind::Add(1), true, 0, 10),
+            ev(OpKind::Contains(1), true, 5, 6),
+        ];
+        assert!(is_linearizable(&[], &h));
+        // But if they do NOT overlap and contains came first: illegal.
+        let h2 = vec![
+            ev(OpKind::Contains(1), true, 0, 1),
+            ev(OpKind::Add(1), true, 2, 3),
+        ];
+        assert!(!is_linearizable(&[], &h2));
+    }
+
+    #[test]
+    fn fig5_style_violation_rejected() {
+        // Key 7 is in the set the whole time (nobody removes it), yet a
+        // reader reports it absent: the Fig. 5 bug signature.
+        let h = vec![
+            ev(OpKind::Remove(3), true, 0, 10), // unrelated remove
+            ev(OpKind::Contains(7), false, 2, 4), // 7 never absent!
+        ];
+        assert!(!is_linearizable(&[3, 7], &h));
+    }
+
+    #[test]
+    fn duplicate_add_semantics() {
+        let h = vec![
+            ev(OpKind::Add(5), true, 0, 10),
+            ev(OpKind::Add(5), true, 2, 12), // both true only if a remove splits them — none here
+        ];
+        assert!(!is_linearizable(&[], &h));
+        let h2 = vec![
+            ev(OpKind::Add(5), true, 0, 10),
+            ev(OpKind::Remove(5), true, 2, 12),
+            ev(OpKind::Add(5), true, 4, 14), // now legal
+        ];
+        assert!(is_linearizable(&[], &h2));
+    }
+
+    #[test]
+    fn initial_state_respected() {
+        let h = vec![ev(OpKind::Contains(9), true, 0, 1)];
+        assert!(is_linearizable(&[9], &h));
+        assert!(!is_linearizable(&[], &h));
+    }
+}

@@ -1,0 +1,7 @@
+//! Shared substrate: hashing, RNG, thread pinning, property testing.
+
+pub mod affinity;
+pub mod hash;
+pub mod linearize;
+pub mod prop;
+pub mod rng;

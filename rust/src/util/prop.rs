@@ -1,0 +1,156 @@
+//! Mini property-testing driver.
+//!
+//! `proptest` is not available in this offline environment (DESIGN.md
+//! inventory #16), so this module provides the subset we need: seeded
+//! random case generation, many iterations, and *prefix-bisection
+//! shrinking* for operation-sequence properties (the dominant shape of
+//! our invariants: "for any op sequence, table behaviour == oracle").
+
+use super::rng::Rng;
+
+/// Outcome of a single property check.
+pub type PropResult = Result<(), String>;
+
+/// Run `iters` random cases of a property over generated op sequences.
+///
+/// `gen` produces a case from an RNG; `test` checks it. On failure the
+/// driver shrinks by prefix bisection (for `Vec` cases via the
+/// [`Shrinkable`] impl) and panics with the smallest failing case's
+/// seed, length, and message.
+pub fn check<T, G, F>(name: &str, iters: u64, mut gen: G, mut test: F)
+where
+    T: Shrinkable + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    F: FnMut(&T) -> PropResult,
+{
+    let base_seed = 0xC0FF_EE00u64;
+    for it in 0..iters {
+        let seed = base_seed.wrapping_add(it);
+        let mut rng = Rng::new(seed);
+        let case = gen(&mut rng);
+        if let Err(msg) = test(&case) {
+            // Shrink: repeatedly try smaller versions that still fail.
+            let mut smallest = case;
+            let mut smsg = msg;
+            loop {
+                let mut shrunk = None;
+                for cand in smallest.shrink_candidates() {
+                    if let Err(m) = test(&cand) {
+                        shrunk = Some((cand, m));
+                        break;
+                    }
+                }
+                match shrunk {
+                    Some((c, m)) => {
+                        smallest = c;
+                        smsg = m;
+                    }
+                    None => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={seed:#x}, iter={it}):\n  \
+                 {smsg}\n  minimal case: {smallest:?}"
+            );
+        }
+    }
+}
+
+/// Types that can propose smaller failing candidates.
+pub trait Shrinkable: Sized + Clone {
+    fn shrink_candidates(&self) -> Vec<Self>;
+}
+
+impl<T: Clone + std::fmt::Debug> Shrinkable for Vec<T> {
+    fn shrink_candidates(&self) -> Vec<Self> {
+        let n = self.len();
+        if n == 0 {
+            return vec![];
+        }
+        let mut out = Vec::new();
+        // Halves, then drop-one-chunk, then drop-last.
+        out.push(self[..n / 2].to_vec());
+        out.push(self[n / 2..].to_vec());
+        if n >= 4 {
+            let q = n / 4;
+            for i in 0..4 {
+                let mut v = self.clone();
+                v.drain(i * q..((i + 1) * q).min(n));
+                out.push(v);
+            }
+        }
+        out.push(self[..n - 1].to_vec());
+        out.retain(|v| v.len() < n);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_iters() {
+        let mut count = 0;
+        check(
+            "always true",
+            50,
+            |r| vec![r.next_u64() % 10],
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert!(count >= 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'has no 7'")]
+    fn failing_property_panics_with_name() {
+        check(
+            "has no 7",
+            100,
+            |r| (0..20).map(|_| r.next_u64() % 10).collect::<Vec<_>>(),
+            |v| {
+                if v.contains(&7) {
+                    Err("found a 7".into())
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrinking_finds_small_case() {
+        // Capture the panic message and verify the minimal case is tiny.
+        let res = std::panic::catch_unwind(|| {
+            check(
+                "no value above 100",
+                100,
+                |r| (0..64).map(|_| r.next_u64() % 200).collect::<Vec<_>>(),
+                |v| {
+                    if v.iter().any(|&x| x > 100) {
+                        Err("big".into())
+                    } else {
+                        Ok(())
+                    }
+                },
+            );
+        });
+        let msg = *res.unwrap_err().downcast::<String>().unwrap();
+        // Minimal failing vec should have shrunk well below 64 elements.
+        let after = msg.split("minimal case: ").nth(1).unwrap();
+        let commas = after.matches(',').count();
+        assert!(commas < 16, "did not shrink: {msg}");
+    }
+
+    #[test]
+    fn shrink_candidates_are_strictly_smaller() {
+        let v: Vec<u32> = (0..10).collect();
+        for c in v.shrink_candidates() {
+            assert!(c.len() < v.len());
+        }
+        assert!(Vec::<u32>::new().shrink_candidates().is_empty());
+    }
+}

@@ -1,0 +1,162 @@
+//! Cross-table property tests: every table must behave exactly like
+//! `std::collections::HashSet` under arbitrary op sequences (the
+//! single-threaded linearizable oracle), with longer sequences and more
+//! keys than the per-module unit tests.
+
+use std::collections::HashSet;
+
+use crh::maps::{ConcurrentSet, TableKind};
+use crh::util::prop;
+use crh::util::rng::Rng;
+
+fn oracle_check(kind: TableKind, size_log2: u32, keys: u64, ops: usize) {
+    prop::check(
+        &format!("{} matches HashSet", kind.name()),
+        15,
+        |r: &mut Rng| {
+            (0..ops)
+                .map(|_| (r.below(3) as u8, 1 + r.below(keys)))
+                .collect::<Vec<(u8, u64)>>()
+        },
+        |seq| {
+            let t = kind.build(size_log2);
+            let mut oracle = HashSet::new();
+            for &(op, key) in seq {
+                let (got, want) = match op {
+                    0 => (t.add(key), oracle.insert(key)),
+                    1 => (t.remove(key), oracle.remove(&key)),
+                    _ => (t.contains(key), oracle.contains(&key)),
+                };
+                if got != want {
+                    return Err(format!(
+                        "{} op {op} key {key}: got {got} want {want}",
+                        kind.name()
+                    ));
+                }
+            }
+            if t.len_quiesced() != oracle.len() {
+                return Err(format!(
+                    "{}: len {} vs oracle {}",
+                    kind.name(),
+                    t.len_quiesced(),
+                    oracle.len()
+                ));
+            }
+            // Post-hoc full membership sweep.
+            for k in 1..=keys {
+                if t.contains(k) != oracle.contains(&k) {
+                    return Err(format!("{}: sweep mismatch at {k}", kind.name()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn kcas_rh_oracle_long() {
+    oracle_check(TableKind::KCasRobinHood, 8, 160, 1200);
+}
+
+#[test]
+fn tx_rh_oracle_long() {
+    oracle_check(TableKind::TxRobinHood, 8, 160, 1200);
+}
+
+#[test]
+fn hopscotch_oracle_long() {
+    oracle_check(TableKind::Hopscotch, 8, 160, 1200);
+}
+
+#[test]
+fn lockfree_lp_oracle_long() {
+    oracle_check(TableKind::LockFreeLp, 8, 160, 1200);
+}
+
+#[test]
+fn locked_lp_oracle_long() {
+    oracle_check(TableKind::LockedLp, 8, 160, 1200);
+}
+
+#[test]
+fn michael_oracle_long() {
+    oracle_check(TableKind::Michael, 8, 160, 1200);
+}
+
+#[test]
+fn serial_rh_oracle_long() {
+    oracle_check(TableKind::SerialRobinHood, 8, 160, 1200);
+}
+
+#[test]
+fn near_full_tables_stay_correct() {
+    // Push open-addressing tables to 95% LF.
+    for kind in [
+        TableKind::KCasRobinHood,
+        TableKind::TxRobinHood,
+        TableKind::LockFreeLp,
+        TableKind::LockedLp,
+        TableKind::SerialRobinHood,
+    ] {
+        let t = kind.build(8);
+        let n = (256.0 * 0.95) as u64;
+        for k in 1..=n {
+            assert!(t.add(k), "{} add {k}", kind.name());
+        }
+        for k in 1..=n {
+            assert!(t.contains(k), "{} lost {k}", kind.name());
+        }
+        assert!(!t.contains(n + 1), "{}", kind.name());
+        for k in 1..=n {
+            assert!(t.remove(k), "{} remove {k}", kind.name());
+        }
+        assert_eq!(t.len_quiesced(), 0, "{}", kind.name());
+    }
+}
+
+#[test]
+fn interleaved_add_remove_alternating_parity() {
+    for kind in TableKind::ALL_CONCURRENT {
+        let t = kind.build(10);
+        for k in 1..=500u64 {
+            t.add(k);
+            if k % 2 == 0 {
+                t.remove(k - 1);
+            }
+        }
+        // Every odd key k is removed when k+1 is added (500 is even, so
+        // 499 is removed too); all even keys survive.
+        for k in 1..=500u64 {
+            assert_eq!(t.contains(k), k % 2 == 0, "{} key {k}", kind.name());
+        }
+    }
+}
+
+#[test]
+fn dfb_snapshots_agree_with_membership() {
+    for kind in [
+        TableKind::KCasRobinHood,
+        TableKind::TxRobinHood,
+        TableKind::SerialRobinHood,
+        TableKind::Hopscotch,
+    ] {
+        let t = kind.build(9);
+        for k in 1..=300u64 {
+            t.add(k);
+        }
+        let snap = t.dfb_snapshot();
+        let occupied = snap.iter().filter(|&&d| d >= 0).count();
+        assert_eq!(occupied, t.len_quiesced(), "{}", kind.name());
+        // Robin Hood variants: mean DFB must be small at 59% LF.
+        if matches!(
+            kind,
+            TableKind::KCasRobinHood
+                | TableKind::TxRobinHood
+                | TableKind::SerialRobinHood
+        ) {
+            let sum: i64 = snap.iter().filter(|&&d| d >= 0).map(|&d| d as i64).sum();
+            let mean = sum as f64 / occupied as f64;
+            assert!(mean < 3.0, "{} mean dfb {mean}", kind.name());
+        }
+    }
+}

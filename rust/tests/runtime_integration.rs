@@ -1,0 +1,117 @@
+//! Runtime integration: load the AOT artifacts through PJRT and verify
+//! the three-layer stack end to end (Pallas kernel == JAX ref == Rust).
+//!
+//! Requires `make artifacts` (skipped with a loud message otherwise, so
+//! `cargo test` stays runnable in a fresh checkout).
+
+use crh::runtime::{artifacts_dir, Engine};
+use crh::util::hash::splitmix64;
+
+fn engine_or_skip() -> Option<Engine> {
+    let dir = artifacts_dir();
+    if !dir.join("MANIFEST.txt").exists() {
+        eprintln!(
+            "SKIP: artifacts not built ({}); run `make artifacts`",
+            dir.display()
+        );
+        return None;
+    }
+    Some(Engine::load(&dir).expect("artifacts present but failed to load"))
+}
+
+#[test]
+fn golden_vectors_bit_exact() {
+    let Some(e) = engine_or_skip() else { return };
+    let n = e.verify_golden(&artifacts_dir()).unwrap();
+    assert!(n >= 64, "suspiciously few golden vectors: {n}");
+}
+
+#[test]
+fn hash_batch_matches_rust_mixer() {
+    let Some(e) = engine_or_skip() else { return };
+    let b = e.manifest.hash_batch;
+    let keys: Vec<i64> = (0..b as i64).map(|i| i * 7919 - 12345).collect();
+    let (hashes, buckets) = e.hash_batch(&keys).unwrap();
+    let mask = (1u64 << e.manifest.size_log2) - 1;
+    for (i, &k) in keys.iter().enumerate() {
+        let want = splitmix64(k as u64);
+        assert_eq!(hashes[i] as u64, want, "hash mismatch at {i}");
+        assert_eq!(buckets[i] as u64, want & mask, "bucket mismatch at {i}");
+    }
+}
+
+#[test]
+fn hash_stream_handles_ragged_tails() {
+    let Some(e) = engine_or_skip() else { return };
+    let keys: Vec<i64> = (0..1000).map(|i| i * 31 + 7).collect();
+    let out = e.hash_stream(&keys).unwrap();
+    assert_eq!(out.len(), keys.len());
+    for (i, &k) in keys.iter().enumerate() {
+        assert_eq!(out[i] as u64, splitmix64(k as u64));
+    }
+}
+
+#[test]
+fn probe_stats_matches_rust_computation() {
+    let Some(e) = engine_or_skip() else { return };
+    // Build a real Robin Hood table and compare the AOT analytics with
+    // a plain Rust fold over the same snapshot.
+    use crh::maps::{ConcurrentSet, TableKind};
+    let t = TableKind::KCasRobinHood.build(12);
+    for k in 1..=2800u64 {
+        t.add(k);
+    }
+    let snap = t.dfb_snapshot();
+    let stats = e.probe_stats(&snap).unwrap();
+
+    let occ: Vec<i64> =
+        snap.iter().filter(|&&d| d >= 0).map(|&d| d as i64).collect();
+    let count = occ.len() as i64;
+    let mean = occ.iter().sum::<i64>() as f64 / count as f64;
+    let var = occ
+        .iter()
+        .map(|&d| (d as f64 - mean).powi(2))
+        .sum::<f64>()
+        / count as f64;
+    assert_eq!(stats.count, count);
+    assert!((stats.mean - mean).abs() < 1e-9, "{} vs {mean}", stats.mean);
+    assert!((stats.var - var).abs() < 1e-6, "{} vs {var}", stats.var);
+    assert_eq!(stats.max as i64, *occ.iter().max().unwrap());
+    assert_eq!(stats.hist.iter().sum::<i64>(), count);
+}
+
+#[test]
+fn probe_stats_empty_snapshot() {
+    let Some(e) = engine_or_skip() else { return };
+    let stats = e.probe_stats(&vec![-1; 100]).unwrap();
+    assert_eq!(stats.count, 0);
+    assert_eq!(stats.hist.iter().sum::<i64>(), 0);
+}
+
+#[test]
+fn manifest_shapes_sane() {
+    let Some(e) = engine_or_skip() else { return };
+    assert!(e.manifest.hash_batch.is_power_of_two());
+    assert!(e.manifest.stats_batch.is_power_of_two());
+    assert!(e.manifest.max_dfb >= 16);
+    assert!(e.manifest.size_log2 >= 10);
+}
+
+#[test]
+fn celis_probe_length_theory_via_engine() {
+    // The paper's §2.2 claim, measured through the full stack: mean DFB
+    // stays O(1) even at 80% load factor.
+    let Some(e) = engine_or_skip() else { return };
+    use crh::maps::{ConcurrentSet, TableKind};
+    let t = TableKind::KCasRobinHood.build(14);
+    let n = ((1 << 14) as f64 * 0.8) as u64;
+    for k in 1..=n {
+        t.add(k);
+    }
+    let stats = e.probe_stats(&t.dfb_snapshot()).unwrap();
+    assert_eq!(stats.count as u64, n);
+    assert!(stats.mean < 4.0, "mean DFB {} at LF 0.8", stats.mean);
+    // And the histogram mass is concentrated at small distances.
+    let first4: i64 = stats.hist.iter().take(4).sum();
+    assert!(first4 as f64 / n as f64 > 0.7);
+}
