@@ -17,19 +17,19 @@
 //! make artifacts && cargo run --release --example end_to_end
 //! ```
 
-use crh::bench::{driver, workload, Mix, WorkloadCfg};
-use crh::bench::workload::KeyDist;
+use crh::bench::{driver, workload, WorkloadCfg};
 use crh::maps::{ConcurrentSet, TableKind};
 use crh::runtime::Engine;
+use crh::util::error::{Error, Result};
 use crh::util::hash::splitmix64;
 
-fn main() -> anyhow::Result<()> {
-    // ---- Layer 1+2: artifacts through PJRT ----
+fn main() -> Result<()> {
+    // ---- Layer 1+2: artifacts through the runtime engine ----
     let engine = Engine::load_default().map_err(|e| {
-        anyhow::anyhow!("{e}\nhint: run `make artifacts` first")
+        Error::msg(format!("{e}\nhint: run `make artifacts` first"))
     })?;
     println!(
-        "[1/4] PJRT engine up on `{}` (hash batch {}, table 2^{})",
+        "[1/4] runtime engine up on `{}` (hash batch {}, table 2^{})",
         engine.platform(),
         engine.manifest.hash_batch,
         engine.manifest.size_log2
@@ -51,15 +51,9 @@ fn main() -> anyhow::Result<()> {
          0 mismatches vs the Rust hot path"
     );
 
-    // ---- the paper's headline benchmark ----
-    let cfg = WorkloadCfg {
-        size_log2: 20,
-        load_factor: 0.6,
-        mix: Mix::LIGHT,
-        duration_ms: 500,
-        seed: 0xE2E,
-            dist: KeyDist::Uniform,
-    };
+    // ---- the paper's headline benchmark (light mix) ----
+    let cfg =
+        WorkloadCfg::cell(20, 0.6, crh::bench::Mix::LIGHT.update_pct, 500, 0xE2E);
     let max = crh::util::affinity::available_cpus();
     let mut threads: Vec<usize> = vec![1, 2, 4];
     if max > 4 {

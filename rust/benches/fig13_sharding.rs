@@ -1,0 +1,36 @@
+//! Bench: **Figure 13** (extension) — throughput of the generic
+//! `Sharded<T>` facade across shard count x thread count at 60% and 80%
+//! load factor, against the unsharded K-CAS Robin Hood baseline.
+//!
+//! ```sh
+//! cargo bench --bench fig13_sharding            # paper-scale-ish
+//! cargo bench --bench fig13_sharding -- --quick # CI smoke
+//! ```
+//! Tunables: CRH_BENCH_SIZE_LOG2, CRH_BENCH_MS, CRH_BENCH_THREADS
+//! (comma list), CRH_BENCH_SHARDS (comma list).
+
+mod common;
+
+use crh::coordinator::{fig13_sharding, ExpOpts};
+use crh::maps::TableKind;
+
+fn main() {
+    let quick = common::quick();
+    let mut opts = ExpOpts {
+        size_log2: common::env_u32("SIZE_LOG2", if quick { 16 } else { 22 }),
+        duration_ms: common::env_u64("MS", if quick { 100 } else { 500 }),
+        pin: true,
+        reps: 1,
+        ..ExpOpts::default()
+    };
+    if let Ok(ts) = std::env::var("CRH_BENCH_THREADS") {
+        opts.threads = ts.split(',').filter_map(|x| x.parse().ok()).collect();
+    } else if quick {
+        opts.threads = vec![1, 2];
+    }
+    let shards: Vec<u32> = match std::env::var("CRH_BENCH_SHARDS") {
+        Ok(s) => s.split(',').filter_map(|x| x.parse().ok()).collect(),
+        Err(_) => TableKind::SHARD_SWEEP.to_vec(),
+    };
+    fig13_sharding(&opts, &shards);
+}

@@ -140,6 +140,18 @@ mod tests {
     }
 
     #[test]
+    fn driver_runs_sharded_kinds() {
+        for kind in [
+            TableKind::ShardedKCasRh { shards: 4 },
+            TableKind::ShardedResizableRh { shards: 4 },
+        ] {
+            let r = run(kind, &tiny_cfg(), 2, false);
+            assert!(r.total_ops > 0, "{}", kind.name());
+            assert_eq!(r.per_thread.len(), 2);
+        }
+    }
+
+    #[test]
     fn load_factor_is_roughly_stationary() {
         // Uniform add/remove drifts any prefill toward the 50% LF
         // equilibrium (same dynamics as the paper's workload), so test

@@ -89,6 +89,25 @@ pub struct WorkloadCfg {
 }
 
 impl WorkloadCfg {
+    /// Convenience constructor for a single uniform-key cell (the shape
+    /// every coordinator experiment builds).
+    pub fn cell(
+        size_log2: u32,
+        load_factor: f64,
+        update_pct: u32,
+        duration_ms: u64,
+        seed: u64,
+    ) -> WorkloadCfg {
+        WorkloadCfg {
+            size_log2,
+            load_factor,
+            mix: Mix { update_pct },
+            duration_ms,
+            seed,
+            dist: KeyDist::Uniform,
+        }
+    }
+
     pub fn key_space(&self) -> u64 {
         1u64 << self.size_log2
     }
@@ -102,14 +121,13 @@ impl WorkloadCfg {
         let mut v = Vec::new();
         for &lf in &[0.2, 0.4, 0.6, 0.8] {
             for &mix in &[Mix::LIGHT, Mix::HEAVY] {
-                v.push(WorkloadCfg {
+                v.push(WorkloadCfg::cell(
                     size_log2,
-                    load_factor: lf,
-                    mix,
+                    lf,
+                    mix.update_pct,
                     duration_ms,
-                    seed: 0xFEED,
-            dist: KeyDist::Uniform,
-                });
+                    0xFEED,
+                ));
             }
         }
         v
@@ -211,6 +229,26 @@ mod tests {
         assert_eq!(g.len(), 8);
         assert_eq!(g[0].label(), "20% w/ 10%");
         assert_eq!(g[7].label(), "80% w/ 20%");
+    }
+
+    #[test]
+    fn cell_constructor_matches_fields() {
+        let c = WorkloadCfg::cell(12, 0.6, 10, 250, 7);
+        assert_eq!(c.size_log2, 12);
+        assert_eq!(c.mix.update_pct, 10);
+        assert_eq!(c.duration_ms, 250);
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.dist, KeyDist::Uniform);
+        assert_eq!(c.prefill_count(), (4096.0 * 0.6) as usize);
+    }
+
+    #[test]
+    fn prefill_works_through_the_sharded_facade() {
+        let cfg = WorkloadCfg::cell(10, 0.6, 10, 0, 7);
+        let t = TableKind::ShardedKCasRh { shards: 4 }.build(cfg.size_log2);
+        let added = prefill(t.as_ref(), &cfg);
+        assert_eq!(added, (1024.0 * 0.6) as usize);
+        assert_eq!(t.len_quiesced(), added);
     }
 }
 

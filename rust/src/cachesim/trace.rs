@@ -518,7 +518,15 @@ impl TraceTable {
     ) -> Self {
         use crate::maps::TableKind::*;
         match kind {
-            KCasRobinHood => {
+            // The resizable wrapper and the sharded facade run the same
+            // K-CAS Robin Hood protocol per (sub-)table, so the single-
+            // core memory trace is the K-CAS model (sharding only
+            // partitions the address space; a serial trace touches one
+            // partition per op either way).
+            KCasRobinHood
+            | ResizableRobinHood
+            | ShardedKCasRh { .. }
+            | ShardedResizableRh { .. } => {
                 let ts = if paper_ts {
                     PAPER_TS_SHARD_LOG2
                 } else {

@@ -107,6 +107,30 @@ pub fn fig10(opts: &ExpOpts) {
     }
 }
 
+/// One throughput table: header row of thread counts, one row per
+/// table kind, `mean_ops_per_us` per cell (shared by Figs. 11-13).
+fn throughput_panel(
+    rows: &[TableKind],
+    cfg: &WorkloadCfg,
+    opts: &ExpOpts,
+    label: &str,
+    width: usize,
+) {
+    print!("{label:<width$}");
+    for &t in &opts.threads {
+        print!(" {t:>9}");
+    }
+    println!();
+    for &kind in rows {
+        print!("{:<width$}", kind.display());
+        for &t in &opts.threads {
+            let v = mean_ops_per_us(kind, cfg, t, opts.pin, opts.reps);
+            print!(" {v:>9.2}");
+        }
+        println!();
+    }
+}
+
 /// Scaling panels shared by Figures 11 and 12.
 fn scaling_panels(opts: &ExpOpts, lfs: &[f64], figure: &str) {
     println!(
@@ -115,32 +139,25 @@ fn scaling_panels(opts: &ExpOpts, lfs: &[f64], figure: &str) {
     );
     for &lf in lfs {
         for mix in [Mix::LIGHT, Mix::HEAVY] {
-            let cfg = WorkloadCfg {
-                size_log2: opts.size_log2,
-                load_factor: lf,
-                mix,
-                duration_ms: opts.duration_ms,
-                seed: 0xFEED,
-            dist: KeyDist::Uniform,
-            };
+            let cfg = WorkloadCfg::cell(
+                opts.size_log2,
+                lf,
+                mix.update_pct,
+                opts.duration_ms,
+                0xFEED,
+            );
             println!(
                 "\n## panel: load factor {}%, updates {}%",
                 (lf * 100.0) as u32,
                 mix.update_pct
             );
-            print!("{:<18}", "threads");
-            for &t in &opts.threads {
-                print!(" {:>9}", t);
-            }
-            println!();
-            for kind in TableKind::ALL_CONCURRENT {
-                print!("{:<18}", kind.display());
-                for &t in &opts.threads {
-                    let v = mean_ops_per_us(kind, &cfg, t, opts.pin, opts.reps);
-                    print!(" {:>9.2}", v);
-                }
-                println!();
-            }
+            throughput_panel(
+                &TableKind::ALL_CONCURRENT,
+                &cfg,
+                opts,
+                "threads",
+                18,
+            );
         }
     }
 }
@@ -153,6 +170,66 @@ pub fn fig11(opts: &ExpOpts) {
 /// **Figure 12**: scaling at 60% and 80% load factor.
 pub fn fig12(opts: &ExpOpts) {
     scaling_panels(opts, &[0.6, 0.8], "Figure 12");
+}
+
+/// **Figure 13** (extension): the sharding sweep — throughput of the
+/// [`crate::maps::sharded::Sharded`] facade across shard count x thread
+/// count at the paper's high-load panels (60% and 80% LF, 10% updates),
+/// with the unsharded K-CAS Robin Hood table as the baseline row.
+/// Sharded rows keep the *total* capacity equal to the baseline, so
+/// every row runs at the same load factor.
+pub fn fig13_sharding(opts: &ExpOpts, shard_counts: &[u32]) {
+    println!(
+        "# Figure 13 — sharded K-CAS RH throughput (ops/us) vs threads; \
+         table 2^{} total, {} ms/cell, {} rep(s)",
+        opts.size_log2, opts.duration_ms, opts.reps
+    );
+    println!("# shard counts: {shard_counts:?} (x1 = facade over one shard)");
+    // Keep every shard at least 2^6 buckets so no sweep point can
+    // saturate (or fail to construct) a shard.
+    let shard_counts: Vec<u32> = shard_counts
+        .iter()
+        .copied()
+        .filter(|&s| {
+            let ok = s.is_power_of_two()
+                && s.trailing_zeros() + 6 <= opts.size_log2;
+            if !ok {
+                println!(
+                    "# skipping shard count {s}: not 2^k or too many \
+                     shards for a 2^{} table",
+                    opts.size_log2
+                );
+            }
+            ok
+        })
+        .collect();
+    let mut rows: Vec<TableKind> = vec![TableKind::KCasRobinHood];
+    rows.extend(
+        shard_counts
+            .iter()
+            .map(|&s| TableKind::ShardedKCasRh { shards: s }),
+    );
+    rows.extend(
+        shard_counts
+            .iter()
+            .filter(|&&s| s > 1)
+            .map(|&s| TableKind::ShardedResizableRh { shards: s }),
+    );
+    for &lf in &[0.6, 0.8] {
+        let cfg = WorkloadCfg::cell(
+            opts.size_log2,
+            lf,
+            Mix::LIGHT.update_pct,
+            opts.duration_ms,
+            0xF13,
+        );
+        println!(
+            "\n## panel: load factor {}%, updates {}%",
+            (lf * 100.0) as u32,
+            Mix::LIGHT.update_pct
+        );
+        throughput_panel(&rows, &cfg, opts, "table \\ threads", 26);
+    }
 }
 
 /// **Table 1**: simulated cache misses relative to K-CAS Robin Hood
@@ -212,14 +289,13 @@ pub fn ablate_ts(size_log2: u32, duration_ms: u64) {
     widths.sort_unstable();
     widths.dedup();
     for w in widths {
-        let cfg = WorkloadCfg {
+        let cfg = WorkloadCfg::cell(
             size_log2,
-            load_factor: 0.6,
-            mix: Mix::LIGHT,
+            0.6,
+            Mix::LIGHT.update_pct,
             duration_ms,
-            seed: 0xAB1A,
-            dist: KeyDist::Uniform,
-        };
+            0xAB1A,
+        );
         let mut tp = [0.0f64; 2];
         for (i, threads) in [1usize, 4].into_iter().enumerate() {
             let table = KCasRobinHood::with_shards(size_log2, w);
@@ -267,12 +343,8 @@ pub fn bench_cell(
     dist: KeyDist,
 ) {
     let cfg = WorkloadCfg {
-        size_log2,
-        load_factor: lf,
-        mix: Mix { update_pct },
-        duration_ms,
-        seed: 0xFEED,
         dist,
+        ..WorkloadCfg::cell(size_log2, lf, update_pct, duration_ms, 0xFEED)
     };
     let r = driver::run(kind, &cfg, threads, pin);
     println!(
@@ -290,19 +362,12 @@ pub fn bench_cell(
     );
 }
 
-/// Probe-length analysis through the PJRT engine (L2 `probe_stats`):
-/// fill a K-CAS Robin Hood table, snapshot DFBs, run the AOT analytics.
-pub fn analyze(size_log2: u32, lf: f64) -> anyhow::Result<()> {
+/// Probe-length analysis through the runtime engine (L2 `probe_stats`):
+/// fill a K-CAS Robin Hood table, snapshot DFBs, run the analytics.
+pub fn analyze(size_log2: u32, lf: f64) -> crate::util::error::Result<()> {
     let engine = crate::runtime::Engine::load_default()?;
-    println!("# probe-distance analysis (PJRT {} backend)", engine.platform());
-    let cfg = WorkloadCfg {
-        size_log2,
-        load_factor: lf,
-        mix: Mix::LIGHT,
-        duration_ms: 0,
-        seed: 0xFEED,
-            dist: KeyDist::Uniform,
-    };
+    println!("# probe-distance analysis ({} backend)", engine.platform());
+    let cfg = WorkloadCfg::cell(size_log2, lf, Mix::LIGHT.update_pct, 0, 0xFEED);
     let table = TableKind::KCasRobinHood.build(size_log2);
     crate::bench::workload::prefill(table.as_ref(), &cfg);
     let snap = table.dfb_snapshot();
@@ -328,7 +393,7 @@ pub fn analyze(size_log2: u32, lf: f64) -> anyhow::Result<()> {
 }
 
 /// Verify artifacts + Rust/JAX hash agreement (golden vectors).
-pub fn validate() -> anyhow::Result<()> {
+pub fn validate() -> crate::util::error::Result<()> {
     let dir = crate::runtime::artifacts_dir();
     let engine = crate::runtime::Engine::load(&dir)?;
     let n = engine.verify_golden(&dir)?;
@@ -349,17 +414,19 @@ pub fn smoke() {
         pin: false,
         reps: 1,
     };
-    for kind in TableKind::ALL_CONCURRENT {
-        let cfg = WorkloadCfg {
-            size_log2: opts.size_log2,
-            load_factor: 0.4,
-            mix: Mix::LIGHT,
-            duration_ms: opts.duration_ms,
-            seed: 1,
-            dist: KeyDist::Uniform,
-        };
+    let kinds = TableKind::ALL_CONCURRENT
+        .into_iter()
+        .chain([TableKind::ShardedKCasRh { shards: 4 }]);
+    for kind in kinds {
+        let cfg = WorkloadCfg::cell(
+            opts.size_log2,
+            0.4,
+            Mix::LIGHT.update_pct,
+            opts.duration_ms,
+            1,
+        );
         let r = driver::run(kind, &cfg, 2, false);
-        println!("smoke {:<12} {:>8.2} ops/us", kind.name(), r.ops_per_us());
+        println!("smoke {:<22} {:>8.2} ops/us", kind.name(), r.ops_per_us());
         assert!(r.total_ops > 0);
     }
     let _ = Duration::from_millis(0);

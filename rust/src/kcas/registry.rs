@@ -11,7 +11,7 @@
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
 
-use crossbeam_utils::CachePadded;
+use crate::util::pad::CachePadded;
 
 use super::tagged::{pack_status, UNDECIDED};
 

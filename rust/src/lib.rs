@@ -4,8 +4,10 @@
 //! Pearlmutter, Maguire — OPODIS/CS.DC 2018): a non-blocking,
 //! obstruction-free Robin Hood hash table built on a portable K-CAS
 //! (multi-word compare-and-swap) constructed from single-word CAS, plus
-//! a transactional (lock-elision) variant and the paper's full set of
-//! competitor tables and benchmarks.
+//! a transactional (lock-elision) variant, the paper's full set of
+//! competitor tables and benchmarks — and the first scaling milestone
+//! beyond the paper: a generic **sharded facade** that partitions the
+//! keyspace across independent sub-tables.
 //!
 //! ## Layout
 //!
@@ -13,18 +15,27 @@
 //!   reuse (no allocation, no reclamation) — the paper's §2.3 substrate.
 //! * [`maps`] — the hash tables: the paper's K-CAS Robin Hood
 //!   ([`maps::kcas_rh`]), transactional Robin Hood ([`maps::tx_rh`]),
-//!   and baselines (Hopscotch, lock-free/locked linear probing,
-//!   Michael's separate chaining, serial Robin Hood).
+//!   baselines (Hopscotch, lock-free/locked linear probing, Michael's
+//!   separate chaining, serial Robin Hood), and the scaling
+//!   compositions: [`maps::resizable`] (epoch-style growable wrapper)
+//!   and [`maps::sharded`] (generic `Sharded<T>` facade routing keys by
+//!   high hash bits; per-shard `ResizableRobinHood` composition grows
+//!   one shard at a time instead of quiescing the world).
 //! * [`bench`] — §4.1 methodology: workload generation, pinned threads,
 //!   barrier-synced timed runs, ops/µs reporting.
 //! * [`cachesim`] — set-associative cache simulator + per-table memory
 //!   trace models (PAPI substitute for Table 1).
-//! * [`runtime`] — PJRT/XLA runtime loading the AOT-compiled hash
-//!   pipeline and probe-statistics artifacts (`artifacts/*.hlo.txt`).
+//! * [`runtime`] — the AOT artifact runtime behind one `Engine`
+//!   surface: a pure-Rust interpreter backend by default (offline
+//!   builds, bit-identical hash pipeline), the original PJRT/XLA
+//!   loader behind the `xla` cargo feature.
 //! * [`coordinator`] — experiment registry and CLI entry points that
-//!   regenerate each of the paper's figures and tables.
+//!   regenerate each of the paper's figures and tables, plus the
+//!   `fig13_sharding` shard-count x thread-count sweep.
 //! * [`util`] — hashing (bit-identical to the L1 Pallas kernel), RNG,
-//!   thread pinning, and a mini property-testing driver.
+//!   thread pinning, a mini property-testing driver, and the
+//!   offline-build shims ([`util::pad`] cache padding, [`util::error`]
+//!   error plumbing) that keep the crate free of external dependencies.
 
 pub mod bench;
 pub mod cachesim;

@@ -4,15 +4,18 @@
 //! crh fig10  [--size-log2 N] [--ms N] [--reps N] [--no-pin]
 //! crh fig11  [--size-log2 N] [--ms N] [--threads 1,2,4,...] [--no-pin]
 //! crh fig12  (same options)
+//! crh fig13_sharding [--shards 1,4,16] (same options)
 //! crh table1 [--size-log2 N] [--ops N]
-//! crh bench  --table kcas-rh [--lf 0.6] [--updates 10] [--threads N] [--ms N]
-//! crh analyze [--size-log2 N] [--lf 0.8]       (PJRT probe statistics)
+//! crh bench  --table kcas-rh|sharded-kcas-rh:16|... [--lf 0.6]
+//!            [--updates 10] [--threads N] [--ms N] [--zipf]
+//! crh analyze [--size-log2 N] [--lf 0.8]       (probe statistics)
 //! crh validate                                  (artifact golden check)
 //! crh smoke
 //! ```
 
 use crh::coordinator::{self, ExpOpts};
 use crh::maps::TableKind;
+use crh::util::error::Result;
 
 fn parse_flag<T: std::str::FromStr>(args: &[String], name: &str) -> Option<T> {
     args.iter()
@@ -21,20 +24,30 @@ fn parse_flag<T: std::str::FromStr>(args: &[String], name: &str) -> Option<T> {
         .and_then(|v| v.parse().ok())
 }
 
-fn parse_threads(args: &[String]) -> Option<Vec<usize>> {
-    let s: String = parse_flag(args, "--threads")?;
-    Some(s.split(',').filter_map(|x| x.parse().ok()).collect())
+/// Parse a comma-separated flag value. Any malformed entry rejects the
+/// whole list (with a warning) so a typo falls back to the default
+/// instead of silently shrinking the sweep.
+fn parse_list<T: std::str::FromStr>(args: &[String], name: &str) -> Option<Vec<T>> {
+    let s: String = parse_flag(args, name)?;
+    match s.split(',').map(|x| x.parse().ok()).collect::<Option<Vec<T>>>() {
+        Some(v) if !v.is_empty() => Some(v),
+        _ => {
+            eprintln!("warning: malformed {name} value {s:?}; using default");
+            None
+        }
+    }
 }
 
 fn usage() -> ! {
     eprintln!(
-        "usage: crh <fig10|fig11|fig12|table1|bench|ablate-ts|analyze|validate|smoke> \
-         [options]\n(see `main.rs` docs or README for options)"
+        "usage: crh <fig10|fig11|fig12|fig13_sharding|table1|bench|ablate-ts|\
+         analyze|validate|smoke> [options]\n(see `main.rs` docs or README \
+         for options)"
     );
     std::process::exit(2)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("");
     let mut opts = ExpOpts::default();
@@ -47,7 +60,7 @@ fn main() -> anyhow::Result<()> {
     if let Some(r) = parse_flag(&args, "--reps") {
         opts.reps = r;
     }
-    if let Some(t) = parse_threads(&args) {
+    if let Some(t) = parse_list(&args, "--threads") {
         opts.threads = t;
     }
     if args.iter().any(|a| a == "--no-pin") {
@@ -58,6 +71,11 @@ fn main() -> anyhow::Result<()> {
         "fig10" => coordinator::fig10(&opts),
         "fig11" => coordinator::fig11(&opts),
         "fig12" => coordinator::fig12(&opts),
+        "fig13_sharding" | "fig13" => {
+            let shards = parse_list(&args, "--shards")
+                .unwrap_or_else(|| TableKind::SHARD_SWEEP.to_vec());
+            coordinator::fig13_sharding(&opts, &shards);
+        }
         "table1" => {
             let ops = parse_flag(&args, "--ops").unwrap_or(6_000_000u64);
             let size = parse_flag(&args, "--size-log2").unwrap_or(22u32);

@@ -20,7 +20,7 @@
 
 use std::cell::RefCell;
 
-use crossbeam_utils::CachePadded;
+use crate::util::pad::CachePadded;
 
 use super::{check_key, ConcurrentSet};
 use crate::kcas::{OpBuilder, Word};

@@ -21,7 +21,7 @@
 
 use std::cell::RefCell;
 
-use crossbeam_utils::CachePadded;
+use crate::util::pad::CachePadded;
 
 use super::check_key;
 use crate::kcas::{OpBuilder, Word};

@@ -12,7 +12,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use crossbeam_utils::CachePadded;
+use crate::util::pad::CachePadded;
 
 use super::{check_key, ConcurrentSet};
 use crate::util::hash::home_bucket;

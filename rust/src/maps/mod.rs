@@ -1,4 +1,5 @@
-//! The hash tables: the paper's contribution and all its competitors.
+//! The hash tables: the paper's contribution, all its competitors, and
+//! the scaling compositions (resizable epoch wrapper, sharded facade).
 //!
 //! Every table implements [`ConcurrentSet`] over 62-bit integer keys
 //! (the paper benchmarks integer *sets*: `Add/Contains/Remove(key)`).
@@ -13,6 +14,7 @@ pub mod locked_lp;
 pub mod michael;
 pub mod resizable;
 pub mod serial_rh;
+pub mod sharded;
 pub mod tx_rh;
 
 /// Largest legal key (62-bit, minus the reserved Nil/Tombstone values).
@@ -35,7 +37,8 @@ pub trait ConcurrentSet: Send + Sync {
 
     /// Distance-from-home-bucket per bucket, -1 for empty. Only valid
     /// when quiesced (no concurrent writers); used for invariant checks
-    /// and the probe-statistics analytics. Chained tables return empty.
+    /// and the probe-statistics analytics. Chained tables return empty;
+    /// sharded tables concatenate per-shard snapshots in shard order.
     fn dfb_snapshot(&self) -> Vec<i32> {
         Vec::new()
     }
@@ -44,7 +47,13 @@ pub trait ConcurrentSet: Send + Sync {
     fn len_quiesced(&self) -> usize;
 }
 
-/// Which table to construct — used by the CLI, harness, and benches.
+/// Which table to construct — the spec type consumed by the CLI,
+/// harness, coordinator, and benches.
+///
+/// Flat variants name a single table; the `Sharded*` variants carry the
+/// shard count (a power of two), which is why `name`/`display` return
+/// owned strings and the CLI syntax grew a `:N` suffix
+/// (`sharded-kcas-rh:16`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TableKind {
     KCasRobinHood,
@@ -54,6 +63,12 @@ pub enum TableKind {
     LockedLp,
     Michael,
     SerialRobinHood,
+    /// Epoch-wrapped growable K-CAS Robin Hood ([`resizable`]).
+    ResizableRobinHood,
+    /// [`sharded::Sharded`]`<KCasRobinHood>` with `shards` shards.
+    ShardedKCasRh { shards: u32 },
+    /// [`sharded::Sharded`]`<ResizableRobinHood>` with `shards` shards.
+    ShardedResizableRh { shards: u32 },
 }
 
 impl TableKind {
@@ -66,32 +81,87 @@ impl TableKind {
         TableKind::Michael,
     ];
 
-    pub fn name(&self) -> &'static str {
+    /// Shard counts exercised by tests and the fig13 sweep.
+    pub const SHARD_SWEEP: [u32; 3] = [1, 4, 16];
+
+    /// Every buildable kind, including the sharding sweep — the
+    /// exhaustive list the test tier iterates.
+    pub fn all() -> Vec<TableKind> {
+        let mut v = vec![
+            TableKind::KCasRobinHood,
+            TableKind::TxRobinHood,
+            TableKind::Hopscotch,
+            TableKind::LockFreeLp,
+            TableKind::LockedLp,
+            TableKind::Michael,
+            TableKind::SerialRobinHood,
+            TableKind::ResizableRobinHood,
+        ];
+        for shards in TableKind::SHARD_SWEEP {
+            v.push(TableKind::ShardedKCasRh { shards });
+            v.push(TableKind::ShardedResizableRh { shards });
+        }
+        v
+    }
+
+    pub fn name(&self) -> String {
         match self {
-            TableKind::KCasRobinHood => "kcas-rh",
-            TableKind::TxRobinHood => "tx-rh",
-            TableKind::Hopscotch => "hopscotch",
-            TableKind::LockFreeLp => "lockfree-lp",
-            TableKind::LockedLp => "locked-lp",
-            TableKind::Michael => "michael",
-            TableKind::SerialRobinHood => "serial-rh",
+            TableKind::KCasRobinHood => "kcas-rh".into(),
+            TableKind::TxRobinHood => "tx-rh".into(),
+            TableKind::Hopscotch => "hopscotch".into(),
+            TableKind::LockFreeLp => "lockfree-lp".into(),
+            TableKind::LockedLp => "locked-lp".into(),
+            TableKind::Michael => "michael".into(),
+            TableKind::SerialRobinHood => "serial-rh".into(),
+            TableKind::ResizableRobinHood => "resizable-rh".into(),
+            TableKind::ShardedKCasRh { shards } => {
+                format!("sharded-kcas-rh:{shards}")
+            }
+            TableKind::ShardedResizableRh { shards } => {
+                format!("sharded-resizable-rh:{shards}")
+            }
         }
     }
 
-    /// Paper display name (Figs. 10-12 / Table 1 rows).
-    pub fn display(&self) -> &'static str {
+    /// Paper display name (Figs. 10-13 / Table 1 rows).
+    pub fn display(&self) -> String {
         match self {
-            TableKind::KCasRobinHood => "K-CAS Robin Hood",
-            TableKind::TxRobinHood => "Transactional RH",
-            TableKind::Hopscotch => "Hopscotch Hashing",
-            TableKind::LockFreeLp => "Lock-Free LP",
-            TableKind::LockedLp => "Locked LP",
-            TableKind::Michael => "Maged Michael",
-            TableKind::SerialRobinHood => "Serial Robin Hood",
+            TableKind::KCasRobinHood => "K-CAS Robin Hood".into(),
+            TableKind::TxRobinHood => "Transactional RH".into(),
+            TableKind::Hopscotch => "Hopscotch Hashing".into(),
+            TableKind::LockFreeLp => "Lock-Free LP".into(),
+            TableKind::LockedLp => "Locked LP".into(),
+            TableKind::Michael => "Maged Michael".into(),
+            TableKind::SerialRobinHood => "Serial Robin Hood".into(),
+            TableKind::ResizableRobinHood => "Resizable RH".into(),
+            TableKind::ShardedKCasRh { shards } => {
+                format!("Sharded K-CAS RH x{shards}")
+            }
+            TableKind::ShardedResizableRh { shards } => {
+                format!("Sharded Resizable RH x{shards}")
+            }
         }
     }
 
+    /// Parse a CLI table spec. Sharded kinds take a `:N` shard-count
+    /// suffix (a power of two, at most 2^16 — the facade's limit), e.g.
+    /// `sharded-kcas-rh:16`; the bare name defaults to 4 shards.
     pub fn parse(s: &str) -> Option<TableKind> {
+        if let Some((base, n)) = s.split_once(':') {
+            let shards: u32 = n.parse().ok()?;
+            if !shards.is_power_of_two() || shards > 1 << 16 {
+                return None;
+            }
+            return match base {
+                "sharded-kcas-rh" => {
+                    Some(TableKind::ShardedKCasRh { shards })
+                }
+                "sharded-resizable-rh" => {
+                    Some(TableKind::ShardedResizableRh { shards })
+                }
+                _ => None,
+            };
+        }
         match s {
             "kcas-rh" => Some(TableKind::KCasRobinHood),
             "tx-rh" => Some(TableKind::TxRobinHood),
@@ -100,13 +170,19 @@ impl TableKind {
             "locked-lp" => Some(TableKind::LockedLp),
             "michael" => Some(TableKind::Michael),
             "serial-rh" => Some(TableKind::SerialRobinHood),
+            "resizable-rh" => Some(TableKind::ResizableRobinHood),
+            "sharded-kcas-rh" => Some(TableKind::ShardedKCasRh { shards: 4 }),
+            "sharded-resizable-rh" => {
+                Some(TableKind::ShardedResizableRh { shards: 4 })
+            }
             _ => None,
         }
     }
 
-    /// Construct a table with `1 << size_log2` buckets.
+    /// Construct a table with `1 << size_log2` buckets in total; sharded
+    /// kinds split that capacity evenly across their shards.
     pub fn build(&self, size_log2: u32) -> Box<dyn ConcurrentSet> {
-        match self {
+        match *self {
             TableKind::KCasRobinHood => {
                 Box::new(kcas_rh::KCasRobinHood::new(size_log2))
             }
@@ -119,6 +195,25 @@ impl TableKind {
             TableKind::Michael => Box::new(michael::MichaelSet::new(size_log2)),
             TableKind::SerialRobinHood => {
                 Box::new(serial_rh::SerialRobinHoodLocked::new(size_log2))
+            }
+            TableKind::ResizableRobinHood => {
+                Box::new(resizable::ResizableRobinHood::new(size_log2))
+            }
+            TableKind::ShardedKCasRh { shards } => {
+                assert!(shards.is_power_of_two(), "shards must be 2^k");
+                Box::new(sharded::Sharded::<kcas_rh::KCasRobinHood>::kcas(
+                    size_log2,
+                    shards.trailing_zeros(),
+                ))
+            }
+            TableKind::ShardedResizableRh { shards } => {
+                assert!(shards.is_power_of_two(), "shards must be 2^k");
+                Box::new(
+                    sharded::Sharded::<resizable::ResizableRobinHood>::resizable(
+                        size_log2,
+                        shards.trailing_zeros(),
+                    ),
+                )
             }
         }
     }
@@ -139,26 +234,38 @@ mod tests {
 
     #[test]
     fn kind_roundtrip() {
-        for k in TableKind::ALL_CONCURRENT {
-            assert_eq!(TableKind::parse(k.name()), Some(k));
+        for k in TableKind::all() {
+            assert_eq!(TableKind::parse(&k.name()), Some(k), "{}", k.name());
         }
         assert_eq!(
             TableKind::parse("serial-rh"),
             Some(TableKind::SerialRobinHood)
         );
+        assert_eq!(
+            TableKind::parse("sharded-kcas-rh:8"),
+            Some(TableKind::ShardedKCasRh { shards: 8 })
+        );
+        assert_eq!(
+            TableKind::parse("sharded-kcas-rh"),
+            Some(TableKind::ShardedKCasRh { shards: 4 })
+        );
+        assert_eq!(TableKind::parse("sharded-kcas-rh:3"), None);
+        assert_eq!(TableKind::parse("sharded-kcas-rh:0"), None);
         assert_eq!(TableKind::parse("nope"), None);
+        assert_eq!(TableKind::parse("nope:4"), None);
     }
 
     #[test]
     fn build_all_kinds_smoke() {
-        for k in TableKind::ALL_CONCURRENT {
-            let t = k.build(8);
-            assert!(t.add(7));
+        for k in TableKind::all() {
+            let t = k.build(10);
+            assert!(t.add(7), "{}", k.name());
             assert!(t.contains(7));
             assert!(!t.add(7));
             assert!(t.remove(7));
             assert!(!t.contains(7), "{}", k.name());
             assert!(!t.remove(7));
+            assert_eq!(t.capacity(), 1024, "{}", k.name());
         }
     }
 }

@@ -1,0 +1,203 @@
+//! Pure-Rust interpreter backend for the artifact runtime (default).
+//!
+//! Evaluates the hash pipeline and probe-statistics computations
+//! directly instead of through PJRT. This is semantically exact, not an
+//! approximation: the L1 Pallas kernel *is* SplitMix64 (the golden
+//! vectors in `artifacts/golden_hash.txt` pin all three layers to the
+//! same bits), and the probe-statistics graph is a histogram/moment
+//! fold with a closed-form Rust equivalent. The batch-shape checks and
+//! chunking behaviour of the PJRT backend are preserved so the two
+//! backends are drop-in interchangeable.
+
+use std::path::Path;
+
+use super::{artifacts_dir, Manifest, ProbeStats};
+use crate::bail;
+use crate::util::error::{Context, Result};
+use crate::util::hash::splitmix64;
+
+/// Interpreter engine: same surface as the PJRT backend.
+pub struct Engine {
+    pub manifest: Manifest,
+    platform: &'static str,
+}
+
+impl Engine {
+    /// Load from `dir`. A missing `MANIFEST.txt` falls back to the
+    /// synthetic manifest (the interpreter needs no compiled HLO), so
+    /// `crh analyze` works from a clean checkout.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let mpath = dir.join("MANIFEST.txt");
+        if mpath.exists() {
+            let text = std::fs::read_to_string(&mpath)
+                .with_context(|| format!("reading {}", mpath.display()))?;
+            Ok(Engine { manifest: Manifest::parse(&text)?, platform: "rust-interp" })
+        } else {
+            Ok(Engine {
+                manifest: Manifest::synthetic(),
+                platform: "rust-interp (synthetic manifest)",
+            })
+        }
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn load_default() -> Result<Engine> {
+        Self::load(&artifacts_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.platform.to_string()
+    }
+
+    /// Run one fixed-size batch through the hash pipeline:
+    /// `(hashes, home buckets)`. `keys.len()` must equal the manifest's
+    /// `hash_batch` (same contract as the compiled executable).
+    pub fn hash_batch(&self, keys: &[i64]) -> Result<(Vec<i64>, Vec<i64>)> {
+        if keys.len() != self.manifest.hash_batch {
+            bail!(
+                "hash_batch expects {} keys, got {}",
+                self.manifest.hash_batch,
+                keys.len()
+            );
+        }
+        let mask = (1u64 << self.manifest.size_log2) - 1;
+        let hashes: Vec<i64> =
+            keys.iter().map(|&k| splitmix64(k as u64) as i64).collect();
+        let buckets: Vec<i64> =
+            hashes.iter().map(|&h| (h as u64 & mask) as i64).collect();
+        Ok((hashes, buckets))
+    }
+
+    /// Hash an arbitrary-length key stream by chunking through the
+    /// fixed batch (the tail is padded with zeros and trimmed).
+    pub fn hash_stream(&self, keys: &[i64]) -> Result<Vec<i64>> {
+        let b = self.manifest.hash_batch;
+        let mut out = Vec::with_capacity(keys.len());
+        for chunk in keys.chunks(b) {
+            if chunk.len() == b {
+                out.extend(self.hash_batch(chunk)?.0);
+            } else {
+                let mut padded = chunk.to_vec();
+                padded.resize(b, 0);
+                out.extend(self.hash_batch(&padded)?.0[..chunk.len()].iter());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Probe-distance analytics over a DFB snapshot. -1 marks empty
+    /// buckets; DFBs beyond `max_dfb` accumulate in the last histogram
+    /// bin, exactly like the compiled graph.
+    pub fn probe_stats(&self, dfb: &[i32]) -> Result<ProbeStats> {
+        let bins = self.manifest.max_dfb + 1;
+        let mut hist = vec![0i64; bins];
+        let (mut count, mut sum, mut sq, mut max) = (0i64, 0f64, 0f64, -1i32);
+        for &d in dfb {
+            if d < 0 {
+                continue;
+            }
+            hist[(d as usize).min(bins - 1)] += 1;
+            count += 1;
+            sum += d as f64;
+            sq += d as f64 * d as f64;
+            max = max.max(d);
+        }
+        let mean = if count > 0 { sum / count as f64 } else { 0.0 };
+        let var =
+            if count > 0 { sq / count as f64 - mean * mean } else { 0.0 };
+        Ok(ProbeStats { hist, count, mean, var, max })
+    }
+
+    /// Verify the Rust hot-path hash agrees bit-for-bit with the
+    /// pipeline on the golden vectors emitted by `aot.py`.
+    pub fn verify_golden(&self, dir: &Path) -> Result<usize> {
+        let path = dir.join("golden_hash.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut keys = Vec::new();
+        let mut hashes = Vec::new();
+        for line in text.lines() {
+            let mut it = line.split_whitespace();
+            if let (Some(k), Some(h)) = (it.next(), it.next()) {
+                keys.push(k.parse::<i64>()?);
+                hashes.push(h.parse::<i64>()?);
+            }
+        }
+        let got = self.hash_stream(&keys)?;
+        for (i, (&want, &g)) in hashes.iter().zip(&got).enumerate() {
+            if want != g {
+                bail!(
+                    "golden mismatch at {i}: key {} want {want} got {g}",
+                    keys[i]
+                );
+            }
+            let rust = splitmix64(keys[i] as u64) as i64;
+            if rust != want {
+                bail!("rust splitmix64 mismatch at {i}: {rust} vs {want}");
+            }
+        }
+        Ok(keys.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Engine {
+        Engine {
+            manifest: Manifest {
+                hash_batch: 64,
+                stats_batch: 64,
+                max_dfb: 8,
+                size_log2: 10,
+            },
+            platform: "rust-interp",
+        }
+    }
+
+    #[test]
+    fn hash_batch_shape_checked() {
+        let e = engine();
+        assert!(e.hash_batch(&[1, 2, 3]).is_err());
+        let keys: Vec<i64> = (0..64).collect();
+        let (h, b) = e.hash_batch(&keys).unwrap();
+        for i in 0..64 {
+            assert_eq!(h[i] as u64, splitmix64(keys[i] as u64));
+            assert_eq!(b[i] as u64, h[i] as u64 & 1023);
+        }
+    }
+
+    #[test]
+    fn hash_stream_ragged_tail() {
+        let e = engine();
+        let keys: Vec<i64> = (0..100).map(|i| i * 31 + 7).collect();
+        let out = e.hash_stream(&keys).unwrap();
+        assert_eq!(out.len(), 100);
+        for (i, &k) in keys.iter().enumerate() {
+            assert_eq!(out[i] as u64, splitmix64(k as u64));
+        }
+    }
+
+    #[test]
+    fn probe_stats_moments_and_overflow() {
+        let e = engine();
+        // DFBs: two 0s, one 3, one 100 (overflow bin), plus empties.
+        let stats = e.probe_stats(&[-1, 0, 0, 3, -1, 100]).unwrap();
+        assert_eq!(stats.count, 4);
+        assert_eq!(stats.hist[0], 2);
+        assert_eq!(stats.hist[3], 1);
+        assert_eq!(*stats.hist.last().unwrap(), 1); // overflow
+        assert_eq!(stats.hist.iter().sum::<i64>(), stats.count);
+        assert_eq!(stats.max, 100);
+        let mean = (0.0 + 0.0 + 3.0 + 100.0) / 4.0;
+        assert!((stats.mean - mean).abs() < 1e-12);
+    }
+
+    #[test]
+    fn load_without_artifacts_synthesizes_manifest() {
+        let e = Engine::load(Path::new("/definitely/not/a/dir")).unwrap();
+        assert_eq!(e.manifest, Manifest::synthetic());
+        assert!(e.platform().contains("rust-interp"));
+    }
+}

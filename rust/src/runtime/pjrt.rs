@@ -1,0 +1,165 @@
+//! PJRT/XLA backend for the artifact runtime (`--features xla`).
+//!
+//! Loads the HLO-text artifacts through the `xla` crate
+//! (`PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile`
+//! → `execute`). This is the original backend; it is feature-gated
+//! because the `xla` crate must be vendored (it is not available in the
+//! offline build). See `runtime` module docs and
+//! /opt/xla-example/README.md.
+
+use std::path::Path;
+
+use super::{artifacts_dir, Manifest, ProbeStats};
+use crate::bail;
+use crate::util::error::{Context, Result};
+
+/// The PJRT engine: compiled executables for the hash pipeline and the
+/// probe-statistics analytics.
+pub struct Engine {
+    client: xla::PjRtClient,
+    hash_exe: xla::PjRtLoadedExecutable,
+    stats_exe: xla::PjRtLoadedExecutable,
+    pub manifest: Manifest,
+}
+
+impl Engine {
+    /// Load and compile all artifacts from `dir`.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::parse(
+            &std::fs::read_to_string(dir.join("MANIFEST.txt"))
+                .with_context(|| {
+                    format!(
+                        "reading {}/MANIFEST.txt — run `make artifacts` first",
+                        dir.display()
+                    )
+                })?,
+        )?;
+        let client = xla::PjRtClient::cpu()?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(name);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        Ok(Engine {
+            hash_exe: compile("hash_pipeline.hlo.txt")?,
+            stats_exe: compile("probe_stats.hlo.txt")?,
+            manifest,
+            client,
+        })
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn load_default() -> Result<Engine> {
+        Self::load(&artifacts_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Run one fixed-size batch through the hash pipeline:
+    /// `(hashes, home buckets)`. `keys.len()` must equal the manifest's
+    /// `hash_batch`.
+    pub fn hash_batch(&self, keys: &[i64]) -> Result<(Vec<i64>, Vec<i64>)> {
+        if keys.len() != self.manifest.hash_batch {
+            bail!(
+                "hash_batch expects {} keys, got {}",
+                self.manifest.hash_batch,
+                keys.len()
+            );
+        }
+        let lit = xla::Literal::vec1(keys);
+        let out = self.hash_exe.execute::<xla::Literal>(&[lit])?[0][0]
+            .to_literal_sync()?;
+        let parts = out.to_tuple()?;
+        if parts.len() != 2 {
+            bail!("hash pipeline returned {} outputs, want 2", parts.len());
+        }
+        Ok((parts[0].to_vec::<i64>()?, parts[1].to_vec::<i64>()?))
+    }
+
+    /// Hash an arbitrary-length key stream by chunking through the
+    /// fixed batch (the tail is padded with zeros and trimmed).
+    pub fn hash_stream(&self, keys: &[i64]) -> Result<Vec<i64>> {
+        let b = self.manifest.hash_batch;
+        let mut out = Vec::with_capacity(keys.len());
+        for chunk in keys.chunks(b) {
+            if chunk.len() == b {
+                out.extend(self.hash_batch(chunk)?.0);
+            } else {
+                let mut padded = chunk.to_vec();
+                padded.resize(b, 0);
+                out.extend(self.hash_batch(&padded)?.0[..chunk.len()].iter());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Probe-distance analytics over a DFB snapshot (padded with -1 to
+    /// the artifact's batch size; -1 marks empty buckets, so padding is
+    /// neutral).
+    pub fn probe_stats(&self, dfb: &[i32]) -> Result<ProbeStats> {
+        let b = self.manifest.stats_batch;
+        let mut hist = vec![0i64; self.manifest.max_dfb + 1];
+        let (mut count, mut sum, mut sq, mut max) = (0i64, 0f64, 0f64, -1i32);
+        for chunk in dfb.chunks(b) {
+            let mut padded = chunk.to_vec();
+            padded.resize(b, -1);
+            let lit = xla::Literal::vec1(&padded);
+            let out = self.stats_exe.execute::<xla::Literal>(&[lit])?[0][0]
+                .to_literal_sync()?;
+            let parts = out.to_tuple()?;
+            if parts.len() != 5 {
+                bail!("probe_stats returned {} outputs, want 5", parts.len());
+            }
+            let h = parts[0].to_vec::<i64>()?;
+            let c = parts[1].to_vec::<i64>()?[0];
+            let mean = parts[2].to_vec::<f64>()?[0];
+            let var = parts[3].to_vec::<f64>()?[0];
+            let mx = parts[4].to_vec::<i32>()?[0];
+            for (a, b) in hist.iter_mut().zip(h) {
+                *a += b;
+            }
+            // Merge chunk moments.
+            let cf = c as f64;
+            sum += mean * cf;
+            sq += (var + mean * mean) * cf;
+            count += c;
+            max = max.max(mx);
+        }
+        let mean = if count > 0 { sum / count as f64 } else { 0.0 };
+        let var =
+            if count > 0 { sq / count as f64 - mean * mean } else { 0.0 };
+        Ok(ProbeStats { hist, count, mean, var, max })
+    }
+
+    /// Verify the Rust hot-path hash agrees bit-for-bit with the AOT
+    /// pipeline on the golden vectors emitted by `aot.py`.
+    pub fn verify_golden(&self, dir: &Path) -> Result<usize> {
+        let text = std::fs::read_to_string(dir.join("golden_hash.txt"))?;
+        let mut keys = Vec::new();
+        let mut hashes = Vec::new();
+        for line in text.lines() {
+            let mut it = line.split_whitespace();
+            if let (Some(k), Some(h)) = (it.next(), it.next()) {
+                keys.push(k.parse::<i64>()?);
+                hashes.push(h.parse::<i64>()?);
+            }
+        }
+        let got = self.hash_stream(&keys)?;
+        for (i, (&want, &g)) in hashes.iter().zip(&got).enumerate() {
+            if want != g {
+                bail!("golden mismatch at {i}: key {} want {want} got {g}", keys[i]);
+            }
+            // And against the Rust implementation.
+            let rust = crate::util::hash::splitmix64(keys[i] as u64) as i64;
+            if rust != want {
+                bail!("rust splitmix64 mismatch at {i}: {rust} vs {want}");
+            }
+        }
+        Ok(keys.len())
+    }
+}

@@ -4,6 +4,11 @@
 //! The container exposes no reliable topology, so the pin order is the
 //! kernel's logical CPU order; on machines with `/sys` topology we sort
 //! logical CPUs so that distinct physical cores come first (paper order).
+//!
+//! The `sched_setaffinity` binding is declared in-tree (`sys` below):
+//! the `libc` crate is not available in this offline build, and Rust's
+//! std already links the C library on Linux, so the raw declaration is
+//! all that is needed.
 
 /// Number of CPUs available to this process.
 pub fn available_cpus() -> usize {
@@ -46,15 +51,56 @@ pub fn pin_order() -> Vec<usize> {
     primaries
 }
 
+/// Minimal Linux affinity syscall surface (libc-crate-free).
+#[cfg(target_os = "linux")]
+mod sys {
+    /// Bits in a kernel cpu mask (glibc's `CPU_SETSIZE`).
+    pub const CPU_SETSIZE: usize = 1024;
+
+    /// Mirror of glibc's `cpu_set_t`: a 1024-bit mask.
+    #[repr(C)]
+    pub struct CpuSet {
+        pub bits: [u64; CPU_SETSIZE / 64],
+    }
+
+    impl CpuSet {
+        pub fn zeroed() -> Self {
+            CpuSet { bits: [0; CPU_SETSIZE / 64] }
+        }
+
+        /// Equivalent of `CPU_SET(cpu % CPU_SETSIZE, &mut set)`.
+        pub fn set(&mut self, cpu: usize) {
+            let cpu = cpu % CPU_SETSIZE;
+            self.bits[cpu / 64] |= 1u64 << (cpu % 64);
+        }
+    }
+
+    extern "C" {
+        /// `int sched_setaffinity(pid_t, size_t, const cpu_set_t *)`.
+        pub fn sched_setaffinity(
+            pid: i32,
+            cpusetsize: usize,
+            mask: *const CpuSet,
+        ) -> i32;
+    }
+}
+
 /// Pin the calling thread to logical CPU `cpu`. Best-effort: returns
 /// false (and leaves affinity unchanged) if the syscall is unavailable.
+#[cfg(target_os = "linux")]
 pub fn pin_to(cpu: usize) -> bool {
+    let mut set = sys::CpuSet::zeroed();
+    set.set(cpu);
     unsafe {
-        let mut set: libc::cpu_set_t = std::mem::zeroed();
-        libc::CPU_SET(cpu % libc::CPU_SETSIZE as usize, &mut set);
-        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set)
+        sys::sched_setaffinity(0, std::mem::size_of::<sys::CpuSet>(), &set)
             == 0
     }
+}
+
+/// Non-Linux fallback: pinning is a no-op.
+#[cfg(not(target_os = "linux"))]
+pub fn pin_to(_cpu: usize) -> bool {
+    false
 }
 
 /// Pin thread `idx` according to [`pin_order`].
@@ -79,19 +125,20 @@ mod tests {
         assert_eq!(sorted, (0..available_cpus()).collect::<Vec<_>>());
     }
 
+    #[cfg(target_os = "linux")]
     #[test]
     fn pin_to_current_cpu_succeeds() {
         // CPU 0 always exists in the mask universe.
         assert!(pin_to(0));
         // Restore: allow all cpus again.
+        let mut set = super::sys::CpuSet::zeroed();
+        for c in 0..available_cpus() {
+            set.set(c);
+        }
         unsafe {
-            let mut set: libc::cpu_set_t = std::mem::zeroed();
-            for c in 0..available_cpus() {
-                libc::CPU_SET(c, &mut set);
-            }
-            libc::sched_setaffinity(
+            super::sys::sched_setaffinity(
                 0,
-                std::mem::size_of::<libc::cpu_set_t>(),
+                std::mem::size_of::<super::sys::CpuSet>(),
                 &set,
             );
         }

@@ -1,0 +1,127 @@
+//! Minimal error plumbing (in-tree replacement for `anyhow` — external
+//! crates are not available in this offline build).
+//!
+//! Provides the small subset the crate needs: a string-backed [`Error`]
+//! that any `std::error::Error` converts into (so `?` works on io /
+//! parse errors), the [`Context`]/`with_context` extension for both
+//! `Result` and `Option`, and the [`crate::bail!`] macro.
+
+use std::fmt;
+
+/// A string-backed error. Like `anyhow::Error`, this deliberately does
+/// NOT implement `std::error::Error`, which is what makes the blanket
+/// `From<E: std::error::Error>` impl coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// Crate-wide result alias (drop-in for `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failures, like `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Early-return with a formatted [`Error`] (drop-in for `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parses(s: &str) -> Result<u64> {
+        let n: u64 = s.parse()?; // From<ParseIntError> via the blanket impl
+        Ok(n)
+    }
+
+    fn bails(x: u64) -> Result<u64> {
+        if x == 0 {
+            bail!("zero is not allowed (got {x})");
+        }
+        Ok(x)
+    }
+
+    #[test]
+    fn question_mark_on_std_errors() {
+        assert_eq!(parses("42").unwrap(), 42);
+        assert!(parses("nope").is_err());
+    }
+
+    #[test]
+    fn bail_formats() {
+        assert!(bails(1).is_ok());
+        let e = bails(0).unwrap_err();
+        assert!(e.to_string().contains("zero is not allowed (got 0)"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::fmt::Error> =
+            Err(std::fmt::Error);
+        let e = r.context("while formatting").unwrap_err();
+        assert!(e.to_string().starts_with("while formatting: "));
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+        assert_eq!(Some(7u32).context("fine").unwrap(), 7);
+    }
+}

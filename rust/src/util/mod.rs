@@ -1,7 +1,11 @@
-//! Shared substrate: hashing, RNG, thread pinning, property testing.
+//! Shared substrate: hashing, RNG, thread pinning, property testing,
+//! plus the offline-build shims (cache-line padding, error plumbing)
+//! that keep the crate free of external dependencies.
 
 pub mod affinity;
+pub mod error;
 pub mod hash;
 pub mod linearize;
+pub mod pad;
 pub mod prop;
 pub mod rng;

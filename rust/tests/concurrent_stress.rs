@@ -8,6 +8,20 @@ use std::sync::Arc;
 use crh::maps::{ConcurrentSet, TableKind};
 use crh::util::rng::Rng;
 
+/// The sharded facade kinds exercised per shard count ∈ {1, 4, 16}
+/// (`TableKind::SHARD_SWEEP`).
+fn sharded_kinds() -> Vec<TableKind> {
+    TableKind::SHARD_SWEEP
+        .iter()
+        .flat_map(|&shards| {
+            [
+                TableKind::ShardedKCasRh { shards },
+                TableKind::ShardedResizableRh { shards },
+            ]
+        })
+        .collect()
+}
+
 /// Disjoint key ranges per thread: the final state is exactly
 /// predictable for any linearizable set.
 fn disjoint_determinism(kind: TableKind) {
@@ -71,6 +85,18 @@ fn disjoint_determinism_michael() {
     disjoint_determinism(TableKind::Michael);
 }
 
+#[test]
+fn disjoint_determinism_resizable() {
+    disjoint_determinism(TableKind::ResizableRobinHood);
+}
+
+#[test]
+fn disjoint_determinism_sharded() {
+    for kind in sharded_kinds() {
+        disjoint_determinism(kind);
+    }
+}
+
 /// Contended churn over a small key range; afterwards every key the
 /// table claims to hold must be found, and counts must be consistent.
 fn contended_churn(kind: TableKind, size_log2: u32, keys: u64) {
@@ -116,6 +142,15 @@ fn contended_churn_all_tables() {
 }
 
 #[test]
+fn contended_churn_sharded() {
+    // Bigger table than the flat-table run so the 16-shard split still
+    // leaves headroom per shard under the churn's worst case.
+    for kind in sharded_kinds() {
+        contended_churn(kind, 10, 200);
+    }
+}
+
+#[test]
 fn contended_churn_tight_tables() {
     // High load factor + tiny table = maximal displacement contention.
     for kind in [
@@ -130,7 +165,11 @@ fn contended_churn_tight_tables() {
 /// The paper's Fig. 5 race for every table with relocation: stable keys
 /// must never be reported absent while unrelated keys churn nearby.
 fn stable_keys_under_churn(kind: TableKind) {
-    let t: Arc<dyn ConcurrentSet> = Arc::from(kind.build(8));
+    stable_keys_under_churn_sized(kind, 8);
+}
+
+fn stable_keys_under_churn_sized(kind: TableKind, size_log2: u32) {
+    let t: Arc<dyn ConcurrentSet> = Arc::from(kind.build(size_log2));
     const CHURN: u64 = 80;
     const STABLE: u64 = 40;
     for k in 1..=CHURN + STABLE {
@@ -189,12 +228,25 @@ fn fig5_race_lockfree_lp() {
     stable_keys_under_churn(TableKind::LockFreeLp);
 }
 
+#[test]
+fn fig5_race_sharded() {
+    // Size 10 keeps every shard of the 16-way split large enough that
+    // the churn range cannot saturate a single shard.
+    for kind in sharded_kinds() {
+        stable_keys_under_churn_sized(kind, 10);
+    }
+}
+
 /// Mixed reader/writer workload where every thread validates its OWN
 /// key's linearizability: after my add(k) returns true and before my
 /// remove(k), contains(k) must be true (nobody else touches my keys).
 #[test]
 fn per_thread_read_your_writes() {
-    for kind in TableKind::ALL_CONCURRENT {
+    let kinds: Vec<TableKind> = TableKind::ALL_CONCURRENT
+        .into_iter()
+        .chain(sharded_kinds())
+        .collect();
+    for kind in kinds {
         let t: Arc<dyn ConcurrentSet> = Arc::from(kind.build(12));
         let mut hs = Vec::new();
         for tid in 0..8u64 {

@@ -63,6 +63,21 @@ fn linearizable_michael() {
 }
 
 #[test]
+fn linearizable_resizable_rh() {
+    check_table(TableKind::ResizableRobinHood, 60);
+}
+
+#[test]
+fn linearizable_sharded_kcas_rh() {
+    check_table(TableKind::ShardedKCasRh { shards: 4 }, 60);
+}
+
+#[test]
+fn linearizable_sharded_resizable_rh() {
+    check_table(TableKind::ShardedResizableRh { shards: 4 }, 60);
+}
+
+#[test]
 fn checker_catches_a_broken_table() {
     // Sanity: a deliberately broken "set" (contains always false) must
     // be rejected by the checker, proving the harness has teeth.

@@ -89,6 +89,86 @@ fn serial_rh_oracle_long() {
 }
 
 #[test]
+fn resizable_rh_oracle_long() {
+    oracle_check(TableKind::ResizableRobinHood, 8, 160, 1200);
+}
+
+#[test]
+fn sharded_kcas_rh_oracle_long() {
+    for shards in TableKind::SHARD_SWEEP {
+        oracle_check(TableKind::ShardedKCasRh { shards }, 8, 160, 1200);
+    }
+}
+
+#[test]
+fn sharded_resizable_rh_oracle_long() {
+    for shards in TableKind::SHARD_SWEEP {
+        oracle_check(TableKind::ShardedResizableRh { shards }, 8, 160, 1200);
+    }
+}
+
+/// Drive `Sharded<ResizableRobinHood>` across per-shard grow boundaries
+/// against the `HashSet` oracle: 4 shards x 64 buckets with a 70% grow
+/// threshold, an add-biased mix over 700 keys, so several shards must
+/// migrate mid-sequence. After the (single-threaded, hence quiesced)
+/// sequence, `len_quiesced` and full membership must agree with the
+/// oracle, and at least one shard must actually have grown.
+#[test]
+fn sharded_resizable_grow_boundary_matches_oracle() {
+    use crh::maps::resizable::ResizableRobinHood;
+    use crh::maps::sharded::Sharded;
+
+    prop::check(
+        "sharded-resizable across grow boundary matches HashSet",
+        8,
+        |r: &mut Rng| {
+            (0..4000)
+                .map(|_| (r.below(10) as u8, 1 + r.below(700)))
+                .collect::<Vec<(u8, u64)>>()
+        },
+        |seq| {
+            let t = Sharded::<ResizableRobinHood>::resizable_with_threshold(
+                8, 2, 0.7,
+            );
+            let initial_capacity = t.capacity();
+            let mut oracle = HashSet::new();
+            for &(op, key) in seq {
+                // 60% add / 20% remove / 20% contains: net growth.
+                let (got, want) = match op {
+                    0..=5 => (t.add(key), oracle.insert(key)),
+                    6..=7 => (t.remove(key), oracle.remove(&key)),
+                    _ => (t.contains(key), oracle.contains(&key)),
+                };
+                if got != want {
+                    return Err(format!(
+                        "op {op} key {key}: got {got} want {want}"
+                    ));
+                }
+            }
+            if t.len_quiesced() != oracle.len() {
+                return Err(format!(
+                    "len {} vs oracle {}",
+                    t.len_quiesced(),
+                    oracle.len()
+                ));
+            }
+            for k in 1..=700u64 {
+                if t.contains(k) != oracle.contains(&k) {
+                    return Err(format!("membership mismatch at {k}"));
+                }
+            }
+            // A full-length sequence holds far more than the initial
+            // 256 buckets can at the 70% threshold; the facade must
+            // have grown at least one shard (shrunk cases may not).
+            if oracle.len() > 230 && t.capacity() == initial_capacity {
+                return Err("no shard grew across the boundary".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn near_full_tables_stay_correct() {
     // Push open-addressing tables to 95% LF.
     for kind in [
@@ -139,6 +219,9 @@ fn dfb_snapshots_agree_with_membership() {
         TableKind::TxRobinHood,
         TableKind::SerialRobinHood,
         TableKind::Hopscotch,
+        TableKind::ResizableRobinHood,
+        TableKind::ShardedKCasRh { shards: 4 },
+        TableKind::ShardedResizableRh { shards: 4 },
     ] {
         let t = kind.build(9);
         for k in 1..=300u64 {
@@ -153,6 +236,9 @@ fn dfb_snapshots_agree_with_membership() {
             TableKind::KCasRobinHood
                 | TableKind::TxRobinHood
                 | TableKind::SerialRobinHood
+                | TableKind::ResizableRobinHood
+                | TableKind::ShardedKCasRh { .. }
+                | TableKind::ShardedResizableRh { .. }
         ) {
             let sum: i64 = snap.iter().filter(|&&d| d >= 0).map(|&d| d as i64).sum();
             let mean = sum as f64 / occupied as f64;
