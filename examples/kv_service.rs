@@ -1,128 +1,121 @@
-//! A tiny membership service over TCP — the "coordinator" shape of the
-//! system: a Rust leader owning a K-CAS Robin Hood set, serving
-//! line-oriented requests from concurrent clients with Python nowhere
-//! in sight.
+//! A key→value service over TCP — the service layer end-to-end: a
+//! sharded K-CAS Robin Hood *map* behind the pipelined batch-frame
+//! protocol (`crh::service::server`), driven by concurrent clients at
+//! batch sizes {1, 8, 64}.
 //!
-//! Protocol (one request per line):
-//!   `A <key>` add, `R <key>` remove, `C <key>` contains, `Q` quit.
-//! Replies: `1` / `0` / `ERR <msg>`.
+//! Protocol (see `service::server` docs): `G k` / `P k v` / `D k`
+//! single ops, `B n` multi-op batch frames, `Q` quit; replies are the
+//! value or `-`, and malformed/out-of-range requests get `ERR <msg>`
+//! without killing the connection (the old one-op-per-line server
+//! panicked its connection thread on `k > MAX_KEY`).
 //!
-//! The example starts the server on an ephemeral port, runs 8 client
-//! connections driving mixed traffic, prints latency percentiles, and
-//! exits.
+//! The example starts the server on an ephemeral port, checks the
+//! protocol guard rails, then runs the same total op count per batch
+//! size and prints throughput plus frame-latency percentiles. Batch
+//! frames amortise both round trips and K-CAS descriptor setup, so
+//! batch=64 must beat batch=1.
 //!
 //! ```sh
 //! cargo run --release --example kv_service
 //! ```
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crh::maps::kcas_rh::KCasRobinHood;
-use crh::maps::ConcurrentSet;
+use crh::maps::{ConcurrentMap, MapKind, MapOp, MAX_KEY};
+use crh::service::server::{self, Client};
 use crh::util::rng::Rng;
 
-fn serve(listener: TcpListener, table: Arc<KCasRobinHood>) {
-    for stream in listener.incoming() {
-        let Ok(stream) = stream else { break };
-        stream.set_nodelay(true).ok();
-        let table = table.clone();
-        std::thread::spawn(move || {
-            let mut reader = BufReader::new(stream.try_clone().unwrap());
-            let mut out = stream;
-            let mut line = String::new();
-            loop {
-                line.clear();
-                if reader.read_line(&mut line).unwrap_or(0) == 0 {
-                    return;
-                }
-                let mut it = line.split_whitespace();
-                let reply = match (it.next(), it.next()) {
-                    (Some("Q"), _) => return,
-                    (Some(cmd), Some(k)) => match (cmd, k.parse::<u64>()) {
-                        ("A", Ok(k)) if k >= 1 => (table.add(k) as u8).to_string(),
-                        ("R", Ok(k)) if k >= 1 => {
-                            (table.remove(k) as u8).to_string()
-                        }
-                        ("C", Ok(k)) if k >= 1 => {
-                            (table.contains(k) as u8).to_string()
-                        }
-                        _ => "ERR bad key".to_string(),
-                    },
-                    _ => "ERR bad request".to_string(),
-                };
-                let _ = writeln!(out, "{reply}");
-            }
-        });
+const KEY_SPACE: u64 = 10_000;
+const CLIENTS: u64 = 4;
+/// Total ops per client per batch size (divisible by every batch size).
+const OPS_PER_CLIENT: usize = 12_800;
+
+fn draw_op(r: &mut Rng) -> MapOp {
+    let k = 1 + r.below(KEY_SPACE);
+    match r.below(10) {
+        0 => MapOp::Insert(k, k * 2 + 1),
+        1 => MapOp::Remove(k),
+        _ => MapOp::Get(k),
     }
 }
 
-fn client(addr: std::net::SocketAddr, tid: u64, n: usize) -> Vec<u128> {
-    let stream = TcpStream::connect(addr).unwrap();
-    stream.set_nodelay(true).unwrap();
-    let mut reader = BufReader::new(stream.try_clone().unwrap());
-    let mut out = stream;
-    let mut r = Rng::for_thread(0xCAFE, tid);
-    let mut lat = Vec::with_capacity(n);
-    let mut resp = String::new();
-    for _ in 0..n {
-        let k = 1 + r.below(10_000);
-        let cmd = match r.below(10) {
-            0 => format!("A {k}"),
-            1 => format!("R {k}"),
-            _ => format!("C {k}"),
-        };
+/// One client connection: `OPS_PER_CLIENT / batch` frames of `batch`
+/// ops each; returns per-frame latencies (ns).
+fn client(addr: std::net::SocketAddr, tid: u64, batch: usize) -> Vec<u128> {
+    let mut c = Client::connect(addr).expect("connect");
+    let mut r = Rng::for_thread(0xCAFE ^ batch as u64, tid);
+    let frames = OPS_PER_CLIENT / batch;
+    let mut lat = Vec::with_capacity(frames);
+    let mut ops = Vec::with_capacity(batch);
+    for _ in 0..frames {
+        ops.clear();
+        ops.extend((0..batch).map(|_| draw_op(&mut r)));
         let t0 = Instant::now();
-        writeln!(out, "{cmd}").unwrap();
-        resp.clear();
-        reader.read_line(&mut resp).unwrap();
+        let replies = c.batch(&ops).expect("batch round trip");
         lat.push(t0.elapsed().as_nanos());
-        assert!(
-            resp.starts_with('0') || resp.starts_with('1'),
-            "bad reply {resp:?}"
-        );
+        assert_eq!(replies.len(), batch);
     }
-    writeln!(out, "Q").unwrap();
     lat
 }
 
 fn main() {
-    let table = Arc::new(KCasRobinHood::new(16));
-    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-    let addr = listener.local_addr().unwrap();
-    {
-        let table = table.clone();
-        std::thread::spawn(move || serve(listener, table));
+    let kind = MapKind::parse("sharded-kcas-rh-map:4").unwrap();
+    let map: Arc<dyn ConcurrentMap> = Arc::from(kind.build(16));
+    let addr = server::spawn_ephemeral(map.clone());
+    println!("kv_service: {} on {addr}", kind.display());
+
+    // Protocol guard rails: an out-of-range key must be rejected at the
+    // protocol boundary — and the connection must survive it.
+    let mut probe = Client::connect(addr).expect("connect");
+    let reply = probe.request_line(&format!("P {} 1", MAX_KEY + 1)).unwrap();
+    assert_eq!(reply, "ERR key out of range", "guard rail: {reply}");
+    assert_eq!(probe.request_line("G 0").unwrap(), "ERR key out of range");
+    assert_eq!(probe.request_line("nonsense").unwrap(), "ERR bad request");
+    assert_eq!(probe.request_line("P 7 700").unwrap(), "-");
+    assert_eq!(probe.request_line("G 7").unwrap(), "700");
+    assert_eq!(probe.request_line("D 7").unwrap(), "700");
+    println!("guard rails OK (bad requests get ERR, connection survives)");
+
+    let mut results: Vec<(usize, f64)> = Vec::new();
+    for batch in [1usize, 8, 64] {
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|tid| std::thread::spawn(move || client(addr, tid, batch)))
+            .collect();
+        let mut lat: Vec<u128> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        let dt = t0.elapsed().as_secs_f64();
+        lat.sort_unstable();
+        let total_ops = CLIENTS as usize * OPS_PER_CLIENT;
+        let tput = total_ops as f64 / dt;
+        let pct = |p: f64| {
+            lat[(p * (lat.len() - 1) as f64) as usize] as f64 / 1000.0
+        };
+        println!(
+            "batch={batch:<3} {total_ops} ops from {CLIENTS} clients in \
+             {dt:.2}s ({tput:.0} ops/s); frame latency us: p50 {:.1}  \
+             p90 {:.1}  p99 {:.1}",
+            pct(0.50),
+            pct(0.90),
+            pct(0.99)
+        );
+        results.push((batch, tput));
     }
 
-    let clients = 8;
-    let per = 5_000;
-    let t0 = Instant::now();
-    let mut handles = Vec::new();
-    for tid in 0..clients {
-        handles.push(std::thread::spawn(move || client(addr, tid, per)));
-    }
-    let mut lat: Vec<u128> =
-        handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
-    let dt = t0.elapsed().as_secs_f64();
-    lat.sort_unstable();
-    let pct = |p: f64| lat[(p * (lat.len() - 1) as f64) as usize] as f64 / 1000.0;
-    println!(
-        "kv_service: {} reqs from {clients} clients in {dt:.2}s \
-         ({:.0} req/s)",
-        lat.len(),
-        lat.len() as f64 / dt
+    let (b1, tp1) = results[0];
+    let (bn, tpn) = *results.last().unwrap();
+    assert!(
+        tpn > tp1,
+        "batch={bn} ({tpn:.0} ops/s) should beat batch={b1} ({tp1:.0} ops/s)"
     );
     println!(
-        "latency us: p50 {:.1}  p90 {:.1}  p99 {:.1}  max {:.1}",
-        pct(0.50),
-        pct(0.90),
-        pct(0.99),
-        pct(1.0)
+        "batching speedup: batch={bn} is {:.1}x batch={b1}",
+        tpn / tp1
     );
-    println!("final table size: {}", table.len_quiesced());
-    table.check_invariant().expect("invariant");
+    println!("final map size: {}", map.len_quiesced());
+    map.check_invariant_quiesced().expect("invariant");
     println!("kv_service OK");
 }

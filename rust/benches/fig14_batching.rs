@@ -1,0 +1,42 @@
+//! Bench: **Figure 14** (extension) — throughput of the batched KV
+//! pipeline (`service::batch`) across batch size x thread count,
+//! against the unbatched op-by-op baseline.
+//!
+//! ```sh
+//! cargo bench --bench fig14_batching            # paper-scale-ish
+//! cargo bench --bench fig14_batching -- --quick # CI smoke
+//! ```
+//! Tunables: CRH_BENCH_SIZE_LOG2, CRH_BENCH_MS, CRH_BENCH_THREADS
+//! (comma list), CRH_BENCH_BATCHES (comma list), CRH_BENCH_MAP
+//! (a MapKind spec, e.g. `sharded-kcas-rh-map:16`).
+
+mod common;
+
+use crh::coordinator::{fig14_batching, ExpOpts};
+use crh::maps::MapKind;
+
+fn main() {
+    let quick = common::quick();
+    let mut opts = ExpOpts {
+        size_log2: common::env_u32("SIZE_LOG2", if quick { 16 } else { 22 }),
+        duration_ms: common::env_u64("MS", if quick { 100 } else { 500 }),
+        pin: true,
+        reps: 1,
+        ..ExpOpts::default()
+    };
+    if let Ok(ts) = std::env::var("CRH_BENCH_THREADS") {
+        opts.threads = ts.split(',').filter_map(|x| x.parse().ok()).collect();
+    } else if quick {
+        opts.threads = vec![1, 2];
+    }
+    let batches: Vec<usize> = match std::env::var("CRH_BENCH_BATCHES") {
+        Ok(s) => s.split(',').filter_map(|x| x.parse().ok()).collect(),
+        Err(_) => vec![1, 8, 64],
+    };
+    let map = match std::env::var("CRH_BENCH_MAP") {
+        Ok(s) => MapKind::parse(&s)
+            .unwrap_or_else(|| panic!("unknown CRH_BENCH_MAP {s}")),
+        Err(_) => MapKind::ShardedKCasRhMap { shards: 4 },
+    };
+    fig14_batching(&opts, map, &batches);
+}

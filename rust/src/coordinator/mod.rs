@@ -6,7 +6,7 @@ use std::time::Duration;
 
 use crate::bench::{driver, workload::{KeyDist, WorkloadCfg}, Mix};
 use crate::cachesim;
-use crate::maps::TableKind;
+use crate::maps::{MapKind, TableKind};
 
 /// Shared experiment options (CLI-settable).
 #[derive(Clone, Debug)]
@@ -229,6 +229,78 @@ pub fn fig13_sharding(opts: &ExpOpts, shard_counts: &[u32]) {
             Mix::LIGHT.update_pct
         );
         throughput_panel(&rows, &cfg, opts, "table \\ threads", 26);
+    }
+}
+
+/// **Figure 14** (extension): the batching sweep — throughput of the
+/// key→value service layer's batched pipeline
+/// ([`crate::service::batch`]) across batch size x thread count, with
+/// the unbatched op-by-op map calls as the baseline row. One panel per
+/// update mix at the paper's 60% load factor; every cell rebuilds and
+/// prefills the same [`MapKind`] so rows differ only in batching.
+pub fn fig14_batching(opts: &ExpOpts, map: MapKind, batch_sizes: &[usize]) {
+    use crate::service::batch::{prefill_map, run_batched};
+    println!(
+        "# Figure 14 — batched map pipeline throughput (ops/us) vs threads; \
+         {} 2^{} total, {} ms/cell, {} rep(s)",
+        map.display(),
+        opts.size_log2,
+        opts.duration_ms,
+        opts.reps
+    );
+    let batch_sizes: Vec<usize> = batch_sizes
+        .iter()
+        .copied()
+        .filter(|&b| {
+            let ok = b >= 1;
+            if !ok {
+                println!("# skipping batch size 0 (that's the baseline row)");
+            }
+            ok
+        })
+        .collect();
+    println!("# batch sizes: {batch_sizes:?}; baseline row = unbatched calls");
+    for mix in [Mix::LIGHT, Mix::HEAVY] {
+        let cfg = WorkloadCfg::cell(
+            opts.size_log2,
+            0.6,
+            mix.update_pct,
+            opts.duration_ms,
+            0xF14,
+        );
+        println!(
+            "\n## panel: load factor 60%, updates {}%",
+            mix.update_pct
+        );
+        print!("{:<18}", "batch \\ threads");
+        for &t in &opts.threads {
+            print!(" {t:>9}");
+        }
+        println!();
+        // batch == 0 is run_batched's unbatched-baseline sentinel.
+        let rows: Vec<usize> =
+            std::iter::once(0).chain(batch_sizes.iter().copied()).collect();
+        for batch in rows {
+            let label = if batch == 0 {
+                "unbatched".to_string()
+            } else {
+                format!("batch={batch}")
+            };
+            print!("{label:<18}");
+            for &t in &opts.threads {
+                let mut total = 0.0;
+                for rep in 0..opts.reps {
+                    let mut c = cfg;
+                    c.seed = cfg.seed.wrapping_add(rep as u64);
+                    let m = map.build(c.size_log2);
+                    prefill_map(m.as_ref(), &c);
+                    total += run_batched(m.as_ref(), &c, t, batch, opts.pin)
+                        .ops_per_us();
+                }
+                print!(" {:>9.2}", total / opts.reps as f64);
+            }
+            println!();
+        }
     }
 }
 

@@ -5,9 +5,11 @@
 //! obstruction-free Robin Hood hash table built on a portable K-CAS
 //! (multi-word compare-and-swap) constructed from single-word CAS, plus
 //! a transactional (lock-elision) variant, the paper's full set of
-//! competitor tables and benchmarks — and the first scaling milestone
-//! beyond the paper: a generic **sharded facade** that partitions the
-//! keyspace across independent sub-tables.
+//! competitor tables and benchmarks — and the scaling milestones beyond
+//! the paper: a generic **sharded facade** that partitions the keyspace
+//! across independent sub-tables, and a **key→value service layer**
+//! ([`maps::ConcurrentMap`] + [`service`]) with a batched K-CAS request
+//! pipeline.
 //!
 //! ## Layout
 //!
@@ -20,7 +22,16 @@
 //!   compositions: [`maps::resizable`] (epoch-style growable wrapper)
 //!   and [`maps::sharded`] (generic `Sharded<T>` facade routing keys by
 //!   high hash bits; per-shard `ResizableRobinHood` composition grows
-//!   one shard at a time instead of quiescing the world).
+//!   one shard at a time instead of quiescing the world). The key→value
+//!   side ([`maps::ConcurrentMap`], spec'd by [`maps::MapKind`] with the
+//!   same `:N` shard CLI syntax, e.g. `sharded-kcas-rh-map:16`) lifts
+//!   [`maps::kcas_rh_map::KCasRobinHoodMap`] and a locked-LP baseline
+//!   through the same facade.
+//! * [`service`] — the KV service layer: [`service::batch`] (batched
+//!   `apply_batch` API amortising K-CAS descriptor setup, plus the
+//!   `fig14_batching` driver) and [`service::server`] (pipelined TCP
+//!   front-end with multi-op batch frames, used by the `kv_service`
+//!   example).
 //! * [`bench`] — §4.1 methodology: workload generation, pinned threads,
 //!   barrier-synced timed runs, ops/µs reporting.
 //! * [`cachesim`] — set-associative cache simulator + per-table memory
@@ -43,6 +54,7 @@ pub mod coordinator;
 pub mod kcas;
 pub mod maps;
 pub mod runtime;
+pub mod service;
 pub mod util;
 
-pub use maps::ConcurrentSet;
+pub use maps::{ConcurrentMap, ConcurrentSet};

@@ -5,6 +5,8 @@
 //! crh fig11  [--size-log2 N] [--ms N] [--threads 1,2,4,...] [--no-pin]
 //! crh fig12  (same options)
 //! crh fig13_sharding [--shards 1,4,16] (same options)
+//! crh fig14_batching [--map sharded-kcas-rh-map:4] [--batches 1,8,64]
+//!            (same options; batched KV pipeline vs unbatched baseline)
 //! crh table1 [--size-log2 N] [--ops N]
 //! crh bench  --table kcas-rh|sharded-kcas-rh:16|... [--lf 0.6]
 //!            [--updates 10] [--threads N] [--ms N] [--zipf]
@@ -14,7 +16,7 @@
 //! ```
 
 use crh::coordinator::{self, ExpOpts};
-use crh::maps::TableKind;
+use crh::maps::{MapKind, TableKind};
 use crh::util::error::Result;
 
 fn parse_flag<T: std::str::FromStr>(args: &[String], name: &str) -> Option<T> {
@@ -40,9 +42,9 @@ fn parse_list<T: std::str::FromStr>(args: &[String], name: &str) -> Option<Vec<T
 
 fn usage() -> ! {
     eprintln!(
-        "usage: crh <fig10|fig11|fig12|fig13_sharding|table1|bench|ablate-ts|\
-         analyze|validate|smoke> [options]\n(see `main.rs` docs or README \
-         for options)"
+        "usage: crh <fig10|fig11|fig12|fig13_sharding|fig14_batching|table1|\
+         bench|ablate-ts|analyze|validate|smoke> [options]\n(see `main.rs` \
+         docs or README for options)"
     );
     std::process::exit(2)
 }
@@ -75,6 +77,15 @@ fn main() -> Result<()> {
             let shards = parse_list(&args, "--shards")
                 .unwrap_or_else(|| TableKind::SHARD_SWEEP.to_vec());
             coordinator::fig13_sharding(&opts, &shards);
+        }
+        "fig14_batching" | "fig14" => {
+            let map: String = parse_flag(&args, "--map")
+                .unwrap_or_else(|| "sharded-kcas-rh-map:4".into());
+            let kind = MapKind::parse(&map)
+                .unwrap_or_else(|| panic!("unknown map {map}"));
+            let batches =
+                parse_list(&args, "--batches").unwrap_or_else(|| vec![1, 8, 64]);
+            coordinator::fig14_batching(&opts, kind, &batches);
         }
         "table1" => {
             let ops = parse_flag(&args, "--ops").unwrap_or(6_000_000u64);

@@ -24,7 +24,7 @@ use crate::util::pad::CachePadded;
 
 use super::{check_key, ConcurrentSet};
 use crate::kcas::{OpBuilder, Word};
-use crate::util::hash::{dfb, home_bucket};
+use crate::util::hash::{dfb, home_bucket, splitmix64};
 
 const NIL: u64 = 0;
 
@@ -186,8 +186,15 @@ impl ConcurrentSet for KCasRobinHood {
     /// 64+ buckets/shard): the single (shard, timestamp) pair lives in
     /// registers — no thread-local scratch, no heap traffic.
     fn contains(&self, key: u64) -> bool {
+        self.contains_hashed(splitmix64(key), key)
+    }
+
+    /// Hashed entry point (ROADMAP item): the sharded facade already
+    /// computed `splitmix64(key)` for routing; the home bucket is just
+    /// `h & mask`, so no second hash here.
+    fn contains_hashed(&self, h: u64, key: u64) -> bool {
         check_key(key);
-        let home = home_bucket(key, self.mask);
+        let home = (h & self.mask) as usize;
         'retry: loop {
             let shard0 = self.shard_of(home);
             let ts0 = self.ts_word(shard0).read();
@@ -226,8 +233,12 @@ impl ConcurrentSet for KCasRobinHood {
 
     /// Paper Fig. 8.
     fn add(&self, key: u64) -> bool {
+        self.add_hashed(splitmix64(key), key)
+    }
+
+    fn add_hashed(&self, h: u64, key: u64) -> bool {
         check_key(key);
-        let home = home_bucket(key, self.mask);
+        let home = (h & self.mask) as usize;
         SCRATCH.with(|s| {
             let scratch = &mut *s.borrow_mut();
             'retry: loop {
@@ -283,8 +294,12 @@ impl ConcurrentSet for KCasRobinHood {
 
     /// Paper Fig. 9.
     fn remove(&self, key: u64) -> bool {
+        self.remove_hashed(splitmix64(key), key)
+    }
+
+    fn remove_hashed(&self, h: u64, key: u64) -> bool {
         check_key(key);
-        let home = home_bucket(key, self.mask);
+        let home = (h & self.mask) as usize;
         SCRATCH.with(|s| {
             let scratch = &mut *s.borrow_mut();
             'retry: loop {
@@ -674,6 +689,26 @@ mod tests {
             h.join().unwrap();
         }
         t.check_invariant().unwrap();
+    }
+
+    #[test]
+    fn hashed_entry_points_agree_with_plain() {
+        let t = KCasRobinHood::new(8);
+        for k in 1..=120u64 {
+            let h = crate::util::hash::splitmix64(k);
+            assert!(t.add_hashed(h, k));
+            assert!(!t.add(k));
+            assert!(t.contains_hashed(h, k));
+            assert!(t.contains(k));
+        }
+        for k in (1..=120u64).step_by(2) {
+            let h = crate::util::hash::splitmix64(k);
+            assert!(t.remove_hashed(h, k));
+            assert!(!t.remove(k));
+            assert!(!t.contains_hashed(h, k));
+        }
+        t.check_invariant().unwrap();
+        assert_eq!(t.len_quiesced(), 60);
     }
 
     #[test]

@@ -23,7 +23,7 @@ use std::cell::RefCell;
 
 use crate::util::pad::CachePadded;
 
-use super::check_key;
+use super::{check_key, ConcurrentMap, MapOp, MapReply};
 use crate::kcas::{OpBuilder, Word};
 use crate::util::hash::{dfb, home_bucket};
 
@@ -89,9 +89,14 @@ impl KCasRobinHoodMap {
     pub fn get(&self, key: u64) -> Option<u64> {
         check_key(key);
         let home = home_bucket(key, self.mask);
-        SCRATCH.with(|s| {
-            let mut guard = s.borrow_mut();
-            let seen = &mut guard.seen;
+        SCRATCH.with(|s| self.get_in(&mut s.borrow_mut(), home, key))
+    }
+
+    /// `get` body against an already-borrowed scratch (the batch path
+    /// borrows the thread-local once for a whole batch).
+    fn get_in(&self, scratch: &mut Scratch, home: usize, key: u64) -> Option<u64> {
+        {
+            let seen = &mut scratch.seen;
             'retry: loop {
                 seen.clear();
                 let mut i = home;
@@ -133,16 +138,25 @@ impl KCasRobinHoodMap {
                 }
                 return None;
             }
-        })
+        }
     }
 
     /// Insert or update; returns the previous value if the key existed.
     pub fn insert(&self, key: u64, value: u64) -> Option<u64> {
         check_key(key);
-        assert!(value <= crate::kcas::MAX_VALUE);
         let home = home_bucket(key, self.mask);
-        SCRATCH.with(|s| {
-            let scratch = &mut *s.borrow_mut();
+        SCRATCH.with(|s| self.insert_in(&mut s.borrow_mut(), home, key, value))
+    }
+
+    fn insert_in(
+        &self,
+        scratch: &mut Scratch,
+        home: usize,
+        key: u64,
+        value: u64,
+    ) -> Option<u64> {
+        assert!(value <= crate::kcas::MAX_VALUE);
+        {
             'retry: loop {
                 scratch.op.clear();
                 scratch.bump.clear();
@@ -200,15 +214,23 @@ impl KCasRobinHoodMap {
                     active_dist += 1;
                 }
             }
-        })
+        }
     }
 
     /// Remove; returns the value that was present.
     pub fn remove(&self, key: u64) -> Option<u64> {
         check_key(key);
         let home = home_bucket(key, self.mask);
-        SCRATCH.with(|s| {
-            let scratch = &mut *s.borrow_mut();
+        SCRATCH.with(|s| self.remove_in(&mut s.borrow_mut(), home, key))
+    }
+
+    fn remove_in(
+        &self,
+        scratch: &mut Scratch,
+        home: usize,
+        key: u64,
+    ) -> Option<u64> {
+        {
             'retry: loop {
                 scratch.seen.clear();
                 scratch.op.clear();
@@ -295,6 +317,33 @@ impl KCasRobinHoodMap {
                 }
                 continue 'retry;
             }
+        }
+    }
+
+    /// Apply `ops` in order with the thread-local K-CAS scratch
+    /// (descriptor builder + probe lists) borrowed **once** for the
+    /// whole batch — the amortisation hook behind `service::batch`.
+    /// Replies land in `out` (cleared first), one per op, in op order.
+    pub fn apply_batch_local(&self, ops: &[MapOp], out: &mut Vec<MapReply>) {
+        SCRATCH.with(|s| {
+            let scratch = &mut *s.borrow_mut();
+            out.clear();
+            for &op in ops {
+                let key = op.key();
+                check_key(key);
+                let home = home_bucket(key, self.mask);
+                out.push(match op {
+                    MapOp::Get(_) => {
+                        MapReply::Value(self.get_in(scratch, home, key))
+                    }
+                    MapOp::Insert(_, v) => {
+                        MapReply::Prev(self.insert_in(scratch, home, key, v))
+                    }
+                    MapOp::Remove(_) => {
+                        MapReply::Removed(self.remove_in(scratch, home, key))
+                    }
+                });
+            }
         })
     }
 
@@ -328,6 +377,60 @@ impl KCasRobinHoodMap {
     }
 }
 
+impl ConcurrentMap for KCasRobinHoodMap {
+    fn get(&self, key: u64) -> Option<u64> {
+        KCasRobinHoodMap::get(self, key)
+    }
+
+    fn insert(&self, key: u64, value: u64) -> Option<u64> {
+        KCasRobinHoodMap::insert(self, key, value)
+    }
+
+    fn remove(&self, key: u64) -> Option<u64> {
+        KCasRobinHoodMap::remove(self, key)
+    }
+
+    /// Hashed entry points (ROADMAP item): reuse the routing hash the
+    /// sharded facade already computed (`home == h & mask`).
+    fn get_hashed(&self, h: u64, key: u64) -> Option<u64> {
+        check_key(key);
+        let home = (h & self.mask) as usize;
+        SCRATCH.with(|s| self.get_in(&mut s.borrow_mut(), home, key))
+    }
+
+    fn insert_hashed(&self, h: u64, key: u64, value: u64) -> Option<u64> {
+        check_key(key);
+        let home = (h & self.mask) as usize;
+        SCRATCH.with(|s| self.insert_in(&mut s.borrow_mut(), home, key, value))
+    }
+
+    fn remove_hashed(&self, h: u64, key: u64) -> Option<u64> {
+        check_key(key);
+        let home = (h & self.mask) as usize;
+        SCRATCH.with(|s| self.remove_in(&mut s.borrow_mut(), home, key))
+    }
+
+    fn apply_batch(&self, ops: &[MapOp], out: &mut Vec<MapReply>) {
+        self.apply_batch_local(ops, out)
+    }
+
+    fn name(&self) -> &'static str {
+        "kcas-rh-map"
+    }
+
+    fn capacity(&self) -> usize {
+        self.size()
+    }
+
+    fn len_quiesced(&self) -> usize {
+        KCasRobinHoodMap::len_quiesced(self)
+    }
+
+    fn check_invariant_quiesced(&self) -> Result<(), String> {
+        self.check_invariant()
+    }
+}
+
 // SAFETY: all shared state is atomics under the K-CAS protocol.
 unsafe impl Send for KCasRobinHoodMap {}
 unsafe impl Sync for KCasRobinHoodMap {}
@@ -335,6 +438,7 @@ unsafe impl Sync for KCasRobinHoodMap {}
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::hash::splitmix64;
     use crate::util::prop;
     use crate::util::rng::Rng;
     use std::collections::HashMap;
@@ -444,6 +548,63 @@ mod tests {
             h.join().unwrap();
         }
         m.check_invariant().unwrap();
+    }
+
+    #[test]
+    fn batch_matches_op_by_op_and_reuses_scratch() {
+        let m = KCasRobinHoodMap::new(8);
+        let oracle = KCasRobinHoodMap::new(8);
+        let ops = vec![
+            MapOp::Insert(5, 50),
+            MapOp::Get(5),
+            MapOp::Insert(5, 51),
+            MapOp::Get(5),
+            MapOp::Insert(9, 90),
+            MapOp::Remove(5),
+            MapOp::Get(5),
+            MapOp::Remove(5),
+            MapOp::Get(9),
+        ];
+        let mut replies = Vec::new();
+        m.apply_batch_local(&ops, &mut replies);
+        let expect: Vec<MapReply> =
+            ops.iter().map(|&op| oracle.apply_one(op)).collect();
+        assert_eq!(replies, expect);
+        assert_eq!(
+            replies,
+            vec![
+                MapReply::Prev(None),
+                MapReply::Value(Some(50)),
+                MapReply::Prev(Some(50)),
+                MapReply::Value(Some(51)),
+                MapReply::Prev(None),
+                MapReply::Removed(Some(51)),
+                MapReply::Value(None),
+                MapReply::Removed(None),
+                MapReply::Value(Some(90)),
+            ]
+        );
+        // Reply buffer is cleared between batches, not appended to.
+        m.apply_batch_local(&[MapOp::Get(9)], &mut replies);
+        assert_eq!(replies, vec![MapReply::Value(Some(90))]);
+    }
+
+    #[test]
+    fn hashed_entry_points_agree_with_plain() {
+        let m = KCasRobinHoodMap::new(7);
+        for k in 1..=60u64 {
+            let h = splitmix64(k);
+            assert_eq!(ConcurrentMap::insert_hashed(&m, h, k, k + 1), None);
+            assert_eq!(ConcurrentMap::get_hashed(&m, h, k), Some(k + 1));
+            assert_eq!(m.get(k), Some(k + 1));
+        }
+        for k in (1..=60u64).step_by(2) {
+            let h = splitmix64(k);
+            assert_eq!(ConcurrentMap::remove_hashed(&m, h, k), Some(k + 1));
+            assert_eq!(ConcurrentMap::get_hashed(&m, h, k), None);
+        }
+        m.check_invariant().unwrap();
+        assert_eq!(m.len_quiesced(), 30);
     }
 
     #[test]

@@ -14,7 +14,7 @@ use std::sync::Mutex;
 
 use crate::util::pad::CachePadded;
 
-use super::{check_key, ConcurrentSet};
+use super::{check_key, ConcurrentMap, ConcurrentSet};
 use crate::util::hash::home_bucket;
 
 const EMPTY: u64 = 0;
@@ -203,6 +203,170 @@ impl ConcurrentSet for LockedLp {
     }
 }
 
+/// **Locked LP map** — the blocking key→value baseline for the service
+/// layer, mirroring [`LockedLp`]'s segment-locking strategy.
+///
+/// Unlike the set, *all* operations (including `get`) take the home
+/// bucket's segment lock: a map read must return the value *paired*
+/// with the key, and the lock is what serialises same-key value
+/// overwrites against readers (every operation on key `k` locks
+/// `home(k)`'s segment, so the pair read cannot tear). Slots in
+/// neighbouring segments are still claimed by CAS on the key word,
+/// because a probe may cross segment boundaries; value words are only
+/// ever written by operations on the key currently claiming the slot,
+/// which the home lock serialises.
+pub struct LockedLpMap {
+    keys: Box<[AtomicU64]>,
+    vals: Box<[AtomicU64]>,
+    locks: Box<[CachePadded<Mutex<()>>]>,
+    mask: u64,
+    seg_log2: u32,
+}
+
+impl LockedLpMap {
+    pub fn new(size_log2: u32) -> Self {
+        let seg_log2 =
+            super::kcas_rh::default_shard_log2(size_log2).max(MIN_SEG_LOG2);
+        let size = 1usize << size_log2;
+        let nlocks = (size >> seg_log2).max(1);
+        Self {
+            keys: (0..size).map(|_| AtomicU64::new(EMPTY)).collect(),
+            vals: (0..size).map(|_| AtomicU64::new(0)).collect(),
+            locks: (0..nlocks)
+                .map(|_| CachePadded::new(Mutex::new(())))
+                .collect(),
+            mask: (size - 1) as u64,
+            seg_log2,
+        }
+    }
+
+    #[inline]
+    fn size(&self) -> usize {
+        self.keys.len()
+    }
+
+    #[inline]
+    fn lock_of(&self, i: usize) -> &Mutex<()> {
+        &self.locks[(i >> self.seg_log2) & (self.locks.len() - 1)]
+    }
+
+    /// Probe for `key` (biased); `Some(slot)` if present. Caller holds
+    /// the home-segment lock.
+    fn find(&self, k: u64, home: usize) -> Option<usize> {
+        let mut i = home;
+        for _ in 0..self.size() {
+            let cur = self.keys[i].load(Ordering::Acquire);
+            if cur == EMPTY {
+                return None;
+            }
+            if cur == k {
+                return Some(i);
+            }
+            i = (i + 1) & self.mask as usize;
+        }
+        None
+    }
+}
+
+impl ConcurrentMap for LockedLpMap {
+    fn get(&self, key: u64) -> Option<u64> {
+        check_key(key);
+        let home = home_bucket(key, self.mask);
+        let _guard = self.lock_of(home).lock().unwrap();
+        self.find(key + BIAS, home)
+            .map(|i| self.vals[i].load(Ordering::Acquire))
+    }
+
+    fn insert(&self, key: u64, value: u64) -> Option<u64> {
+        check_key(key);
+        assert!(value <= crate::kcas::MAX_VALUE);
+        let k = key + BIAS;
+        let home = home_bucket(key, self.mask);
+        let _guard = self.lock_of(home).lock().unwrap();
+        'rescan: loop {
+            let mut reusable: Option<usize> = None;
+            let mut i = home;
+            for _ in 0..=self.size() {
+                let cur = self.keys[i].load(Ordering::Acquire);
+                if cur == k {
+                    // Overwrite in place: same-key ops hold this lock.
+                    return Some(self.vals[i].swap(value, Ordering::AcqRel));
+                }
+                if cur == TOMBSTONE && reusable.is_none() {
+                    reusable = Some(i);
+                }
+                if cur == EMPTY {
+                    let slot = reusable.unwrap_or(i);
+                    let expected =
+                        if reusable.is_some() { TOMBSTONE } else { EMPTY };
+                    if self
+                        .keys[slot]
+                        .compare_exchange(
+                            expected,
+                            k,
+                            Ordering::AcqRel,
+                            Ordering::Acquire,
+                        )
+                        .is_ok()
+                    {
+                        self.vals[slot].store(value, Ordering::Release);
+                        return None;
+                    }
+                    continue 'rescan; // bucket stolen by another key
+                }
+                i = (i + 1) & self.mask as usize;
+            }
+            if let Some(slot) = reusable {
+                if self
+                    .keys[slot]
+                    .compare_exchange(
+                        TOMBSTONE,
+                        k,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    )
+                    .is_ok()
+                {
+                    self.vals[slot].store(value, Ordering::Release);
+                    return None;
+                }
+                continue 'rescan;
+            }
+            panic!("locked LP map is full");
+        }
+    }
+
+    fn remove(&self, key: u64) -> Option<u64> {
+        check_key(key);
+        let home = home_bucket(key, self.mask);
+        let _guard = self.lock_of(home).lock().unwrap();
+        let i = self.find(key + BIAS, home)?;
+        let v = self.vals[i].load(Ordering::Acquire);
+        // Only same-key ops (serialised by the home lock) write a
+        // claimed slot's key; a plain store back to TOMBSTONE is safe.
+        self.keys[i].store(TOMBSTONE, Ordering::Release);
+        Some(v)
+    }
+
+    fn name(&self) -> &'static str {
+        "locked-lp-map"
+    }
+
+    fn capacity(&self) -> usize {
+        self.size()
+    }
+
+    fn len_quiesced(&self) -> usize {
+        self.keys
+            .iter()
+            .filter(|b| {
+                let v = b.load(Ordering::Acquire);
+                v != EMPTY && v != TOMBSTONE
+            })
+            .count()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -275,5 +439,114 @@ mod tests {
             assert!(t.add(k));
         }
         assert_eq!(t.len_quiesced(), 10);
+    }
+
+    #[test]
+    fn map_basic_semantics() {
+        let m = LockedLpMap::new(8);
+        assert_eq!(m.get(1), None);
+        assert_eq!(m.insert(1, 100), None);
+        assert_eq!(m.get(1), Some(100));
+        assert_eq!(m.insert(1, 200), Some(100));
+        assert_eq!(m.get(1), Some(200));
+        assert_eq!(m.remove(1), Some(200));
+        assert_eq!(m.remove(1), None);
+        assert_eq!(m.get(1), None);
+        assert_eq!(m.len_quiesced(), 0);
+    }
+
+    #[test]
+    fn map_oracle_property_vs_hashmap() {
+        use std::collections::HashMap;
+        prop::check(
+            "locked-lp-map matches HashMap",
+            20,
+            |r: &mut Rng| {
+                (0..300)
+                    .map(|_| {
+                        (r.below(3) as u8, 1 + r.below(48), r.below(1000))
+                    })
+                    .collect::<Vec<(u8, u64, u64)>>()
+            },
+            |ops| {
+                let m = LockedLpMap::new(7);
+                let mut oracle: HashMap<u64, u64> = HashMap::new();
+                for &(op, key, val) in ops {
+                    let (got, want) = match op {
+                        0 => (m.insert(key, val), oracle.insert(key, val)),
+                        1 => (m.remove(key), oracle.remove(&key)),
+                        _ => (m.get(key), oracle.get(&key).copied()),
+                    };
+                    if got != want {
+                        return Err(format!(
+                            "op {op} key {key}: got {got:?} want {want:?}"
+                        ));
+                    }
+                }
+                if m.len_quiesced() != oracle.len() {
+                    return Err("length mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn map_tombstone_reuse_keeps_pairs() {
+        let m = LockedLpMap::new(6);
+        for k in 1..=40u64 {
+            m.insert(k, k * 10);
+        }
+        for k in (1..=40u64).step_by(2) {
+            assert_eq!(m.remove(k), Some(k * 10));
+        }
+        // Re-insert through the tombstones with new values.
+        for k in (1..=40u64).step_by(2) {
+            assert_eq!(m.insert(k, k * 11), None);
+        }
+        for k in 1..=40u64 {
+            let want = if k % 2 == 1 { k * 11 } else { k * 10 };
+            assert_eq!(m.get(k), Some(want), "key {k}");
+        }
+    }
+
+    #[test]
+    fn map_concurrent_pairs_never_tear() {
+        // Value always encodes its key; concurrent churn must never
+        // surface a mismatched pair through the locked read path.
+        let m = Arc::new(LockedLpMap::new(8));
+        const KEYS: u64 = 80;
+        for k in 1..=KEYS {
+            m.insert(k, k * 3);
+        }
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut hs = Vec::new();
+        for tid in 0..2u64 {
+            let (m, stop) = (m.clone(), stop.clone());
+            hs.push(std::thread::spawn(move || {
+                let mut r = Rng::for_thread(0x11, tid);
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let k = 1 + r.below(KEYS);
+                    m.remove(k);
+                    m.insert(k, k * 3);
+                }
+            }));
+        }
+        for tid in 0..2u64 {
+            let (m, stop) = (m.clone(), stop.clone());
+            hs.push(std::thread::spawn(move || {
+                let mut r = Rng::for_thread(0x12, tid);
+                for _ in 0..20_000 {
+                    let k = 1 + r.below(KEYS);
+                    if let Some(v) = m.get(k) {
+                        assert_eq!(v, k * 3, "torn pair: key {k} value {v}");
+                    }
+                }
+                stop.store(true, std::sync::atomic::Ordering::Relaxed);
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
     }
 }

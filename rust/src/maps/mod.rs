@@ -5,6 +5,17 @@
 //! (the paper benchmarks integer *sets*: `Add/Contains/Remove(key)`).
 //! Key 0 is reserved as Nil in the open-addressing tables; the public
 //! API therefore requires `1 <= key <= MAX_KEY`.
+//!
+//! The key→value side (§2.2: Robin Hood hashing is what Rust's stdlib
+//! shipped as a *map*) lives behind [`ConcurrentMap`], implemented by
+//! [`kcas_rh_map::KCasRobinHoodMap`], the [`locked_lp::LockedLpMap`]
+//! blocking baseline, and [`sharded::Sharded`] compositions of either.
+//! Map specs are named by [`MapKind`] exactly like set specs by
+//! [`TableKind`]: flat names (`kcas-rh-map`, `locked-lp-map`) plus
+//! sharded names with a `:N` power-of-two shard-count suffix
+//! (`sharded-kcas-rh-map:16`). Values are 62-bit
+//! (`<= kcas::MAX_VALUE`); batch traffic uses [`MapOp`]/[`MapReply`]
+//! (see `service::batch` for the batched pipeline built on top).
 
 pub mod hopscotch;
 pub mod kcas_rh;
@@ -29,6 +40,28 @@ pub trait ConcurrentSet: Send + Sync {
     /// Delete; false if not present (paper Fig. 9).
     fn remove(&self, key: u64) -> bool;
 
+    /// Hash-aware twin of [`ConcurrentSet::contains`]: `h` must equal
+    /// `splitmix64(key)`. The sharded facade routes on the *high* bits
+    /// of `h` and hands the same hash down so the inner table's home
+    /// bucket (`h & mask`) costs no second SplitMix64. Tables that
+    /// don't exploit the hint fall back to the plain entry point.
+    fn contains_hashed(&self, h: u64, key: u64) -> bool {
+        let _ = h;
+        self.contains(key)
+    }
+
+    /// Hash-aware twin of [`ConcurrentSet::add`] (`h == splitmix64(key)`).
+    fn add_hashed(&self, h: u64, key: u64) -> bool {
+        let _ = h;
+        self.add(key)
+    }
+
+    /// Hash-aware twin of [`ConcurrentSet::remove`] (`h == splitmix64(key)`).
+    fn remove_hashed(&self, h: u64, key: u64) -> bool {
+        let _ = h;
+        self.remove(key)
+    }
+
     /// Short stable name used in benchmark tables.
     fn name(&self) -> &'static str;
 
@@ -45,6 +78,249 @@ pub trait ConcurrentSet: Send + Sync {
 
     /// Exact element count when quiesced.
     fn len_quiesced(&self) -> usize;
+}
+
+/// One key→value operation, the unit of the batched service pipeline
+/// (`service::batch`). Keys obey the table key range `[1, MAX_KEY]`;
+/// values are 62-bit (`<= kcas::MAX_VALUE`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MapOp {
+    /// Look up a key.
+    Get(u64),
+    /// Insert or overwrite `(key, value)`.
+    Insert(u64, u64),
+    /// Remove a key.
+    Remove(u64),
+}
+
+impl MapOp {
+    /// The key this operation targets (what batch routing shards on).
+    #[inline]
+    pub fn key(&self) -> u64 {
+        match *self {
+            MapOp::Get(k) | MapOp::Insert(k, _) | MapOp::Remove(k) => k,
+        }
+    }
+}
+
+/// Reply to one [`MapOp`], mirroring its variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MapReply {
+    /// `Get`: the value, if the key was present.
+    Value(Option<u64>),
+    /// `Insert`: the previous value, if the key existed (overwrite).
+    Prev(Option<u64>),
+    /// `Remove`: the value that was removed, if the key existed.
+    Removed(Option<u64>),
+}
+
+impl MapReply {
+    /// The optional value inside, regardless of variant (what the wire
+    /// protocol prints: the value or `-`).
+    #[inline]
+    pub fn value(&self) -> Option<u64> {
+        match *self {
+            MapReply::Value(v) | MapReply::Prev(v) | MapReply::Removed(v) => v,
+        }
+    }
+}
+
+/// A concurrent key→value map — the service-layer interface, mirroring
+/// [`ConcurrentSet`] (ROADMAP "Sharded map (key→value)" milestone).
+///
+/// Keys obey the same `[1, MAX_KEY]` range as the set tables; values
+/// are 62-bit (`<= kcas::MAX_VALUE`) — store indices/handles for larger
+/// payloads.
+pub trait ConcurrentMap: Send + Sync {
+    /// Look up `key`; the value paired with it at the linearization
+    /// point, if present.
+    fn get(&self, key: u64) -> Option<u64>;
+    /// Insert or overwrite; returns the previous value if `key` existed.
+    fn insert(&self, key: u64, value: u64) -> Option<u64>;
+    /// Remove; returns the value that was present.
+    fn remove(&self, key: u64) -> Option<u64>;
+
+    /// Hash-aware twin of [`ConcurrentMap::get`] (`h == splitmix64(key)`;
+    /// see [`ConcurrentSet::contains_hashed`]).
+    fn get_hashed(&self, h: u64, key: u64) -> Option<u64> {
+        let _ = h;
+        self.get(key)
+    }
+
+    /// Hash-aware twin of [`ConcurrentMap::insert`].
+    fn insert_hashed(&self, h: u64, key: u64, value: u64) -> Option<u64> {
+        let _ = h;
+        self.insert(key, value)
+    }
+
+    /// Hash-aware twin of [`ConcurrentMap::remove`].
+    fn remove_hashed(&self, h: u64, key: u64) -> Option<u64> {
+        let _ = h;
+        self.remove(key)
+    }
+
+    /// Apply one op (convenience used by the default batch path).
+    fn apply_one(&self, op: MapOp) -> MapReply {
+        match op {
+            MapOp::Get(k) => MapReply::Value(self.get(k)),
+            MapOp::Insert(k, v) => MapReply::Prev(self.insert(k, v)),
+            MapOp::Remove(k) => MapReply::Removed(self.remove(k)),
+        }
+    }
+
+    /// Apply a batch of operations; `out` is cleared and receives one
+    /// reply per op, **in op order**, and the observable effect must
+    /// equal applying the ops one at a time in slice order.
+    ///
+    /// The default loops op-by-op. `KCasRobinHoodMap` overrides it to
+    /// borrow its thread-local `OpBuilder`/scratch once for the whole
+    /// batch; `Sharded<T>` overrides it to group ops by shard (legal
+    /// because ops on different shards touch disjoint keys, hence
+    /// commute) and forward each group as one sub-batch.
+    fn apply_batch(&self, ops: &[MapOp], out: &mut Vec<MapReply>) {
+        out.clear();
+        out.extend(ops.iter().map(|&op| self.apply_one(op)));
+    }
+
+    /// Short stable name used in benchmark tables.
+    fn name(&self) -> &'static str;
+
+    /// Number of buckets.
+    fn capacity(&self) -> usize;
+
+    /// Exact element count when quiesced.
+    fn len_quiesced(&self) -> usize;
+
+    /// Structural consistency check, valid only when quiesced (no
+    /// concurrent writers); tables without internal invariants (the
+    /// chained/LP baselines) report `Ok` by default. The Robin Hood
+    /// maps verify DFB ordering here, and sharded facades check every
+    /// shard — the end-of-run hook the examples and stress tests call.
+    fn check_invariant_quiesced(&self) -> Result<(), String> {
+        Ok(())
+    }
+}
+
+/// Which map to construct — the spec type consumed by the CLI, the
+/// `fig14_batching` experiment, and the kv service example; the
+/// key→value parallel of [`TableKind`].
+///
+/// CLI syntax matches `TableKind`: flat names (`kcas-rh-map`,
+/// `locked-lp-map`) and sharded names with a `:N` power-of-two
+/// shard-count suffix (`sharded-kcas-rh-map:16`); a bare sharded name
+/// defaults to 4 shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MapKind {
+    /// [`kcas_rh_map::KCasRobinHoodMap`] — the paper's algorithm, lifted
+    /// to key→value pairs.
+    KCasRhMap,
+    /// [`locked_lp::LockedLpMap`] — blocking linear-probing baseline.
+    LockedLpMap,
+    /// [`sharded::Sharded`]`<KCasRobinHoodMap>` with `shards` shards.
+    ShardedKCasRhMap { shards: u32 },
+    /// [`sharded::Sharded`]`<LockedLpMap>` with `shards` shards.
+    ShardedLockedLpMap { shards: u32 },
+}
+
+impl MapKind {
+    /// Every buildable kind, including the sharding sweep — the
+    /// exhaustive list the test tier iterates.
+    pub fn all() -> Vec<MapKind> {
+        let mut v = vec![MapKind::KCasRhMap, MapKind::LockedLpMap];
+        for shards in TableKind::SHARD_SWEEP {
+            v.push(MapKind::ShardedKCasRhMap { shards });
+            v.push(MapKind::ShardedLockedLpMap { shards });
+        }
+        v
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            MapKind::KCasRhMap => "kcas-rh-map".into(),
+            MapKind::LockedLpMap => "locked-lp-map".into(),
+            MapKind::ShardedKCasRhMap { shards } => {
+                format!("sharded-kcas-rh-map:{shards}")
+            }
+            MapKind::ShardedLockedLpMap { shards } => {
+                format!("sharded-locked-lp-map:{shards}")
+            }
+        }
+    }
+
+    /// Display name (fig14 rows, service banners).
+    pub fn display(&self) -> String {
+        match self {
+            MapKind::KCasRhMap => "K-CAS RH Map".into(),
+            MapKind::LockedLpMap => "Locked LP Map".into(),
+            MapKind::ShardedKCasRhMap { shards } => {
+                format!("Sharded K-CAS RH Map x{shards}")
+            }
+            MapKind::ShardedLockedLpMap { shards } => {
+                format!("Sharded Locked LP Map x{shards}")
+            }
+        }
+    }
+
+    /// Parse a CLI map spec (see type docs for the syntax).
+    pub fn parse(s: &str) -> Option<MapKind> {
+        if let Some((base, n)) = s.split_once(':') {
+            let shards: u32 = n.parse().ok()?;
+            if !shards.is_power_of_two() || shards > 1 << 16 {
+                return None;
+            }
+            return match base {
+                "sharded-kcas-rh-map" => {
+                    Some(MapKind::ShardedKCasRhMap { shards })
+                }
+                "sharded-locked-lp-map" => {
+                    Some(MapKind::ShardedLockedLpMap { shards })
+                }
+                _ => None,
+            };
+        }
+        match s {
+            "kcas-rh-map" => Some(MapKind::KCasRhMap),
+            "locked-lp-map" => Some(MapKind::LockedLpMap),
+            "sharded-kcas-rh-map" => {
+                Some(MapKind::ShardedKCasRhMap { shards: 4 })
+            }
+            "sharded-locked-lp-map" => {
+                Some(MapKind::ShardedLockedLpMap { shards: 4 })
+            }
+            _ => None,
+        }
+    }
+
+    /// Construct a map with `1 << size_log2` buckets in total; sharded
+    /// kinds split that capacity evenly across their shards.
+    pub fn build(&self, size_log2: u32) -> Box<dyn ConcurrentMap> {
+        match *self {
+            MapKind::KCasRhMap => {
+                Box::new(kcas_rh_map::KCasRobinHoodMap::new(size_log2))
+            }
+            MapKind::LockedLpMap => {
+                Box::new(locked_lp::LockedLpMap::new(size_log2))
+            }
+            MapKind::ShardedKCasRhMap { shards } => {
+                assert!(shards.is_power_of_two(), "shards must be 2^k");
+                Box::new(
+                    sharded::Sharded::<kcas_rh_map::KCasRobinHoodMap>::kcas_map(
+                        size_log2,
+                        shards.trailing_zeros(),
+                    ),
+                )
+            }
+            MapKind::ShardedLockedLpMap { shards } => {
+                assert!(shards.is_power_of_two(), "shards must be 2^k");
+                Box::new(
+                    sharded::Sharded::<locked_lp::LockedLpMap>::locked_lp_map(
+                        size_log2,
+                        shards.trailing_zeros(),
+                    ),
+                )
+            }
+        }
+    }
 }
 
 /// Which table to construct — the spec type consumed by the CLI,
@@ -253,6 +529,41 @@ mod tests {
         assert_eq!(TableKind::parse("sharded-kcas-rh:0"), None);
         assert_eq!(TableKind::parse("nope"), None);
         assert_eq!(TableKind::parse("nope:4"), None);
+    }
+
+    #[test]
+    fn map_kind_roundtrip() {
+        for k in MapKind::all() {
+            assert_eq!(MapKind::parse(&k.name()), Some(k), "{}", k.name());
+        }
+        assert_eq!(MapKind::parse("kcas-rh-map"), Some(MapKind::KCasRhMap));
+        assert_eq!(
+            MapKind::parse("sharded-kcas-rh-map:8"),
+            Some(MapKind::ShardedKCasRhMap { shards: 8 })
+        );
+        assert_eq!(
+            MapKind::parse("sharded-kcas-rh-map"),
+            Some(MapKind::ShardedKCasRhMap { shards: 4 })
+        );
+        assert_eq!(MapKind::parse("sharded-kcas-rh-map:3"), None);
+        assert_eq!(MapKind::parse("kcas-rh"), None);
+        assert_eq!(MapKind::parse("nope:4"), None);
+    }
+
+    #[test]
+    fn build_all_map_kinds_smoke() {
+        for k in MapKind::all() {
+            let m = k.build(10);
+            assert_eq!(m.get(7), None, "{}", k.name());
+            assert_eq!(m.insert(7, 70), None);
+            assert_eq!(m.get(7), Some(70));
+            assert_eq!(m.insert(7, 71), Some(70), "{}", k.name());
+            assert_eq!(m.remove(7), Some(71));
+            assert_eq!(m.get(7), None, "{}", k.name());
+            assert_eq!(m.remove(7), None);
+            assert_eq!(m.capacity(), 1024, "{}", k.name());
+            assert_eq!(m.len_quiesced(), 0);
+        }
     }
 
     #[test]

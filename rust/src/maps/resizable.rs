@@ -20,6 +20,7 @@ use std::sync::RwLock;
 
 use super::kcas_rh::KCasRobinHood;
 use super::ConcurrentSet;
+use crate::util::hash::splitmix64;
 
 pub struct ResizableRobinHood {
     inner: RwLock<KCasRobinHood>,
@@ -76,12 +77,29 @@ impl ResizableRobinHood {
 }
 
 impl ConcurrentSet for ResizableRobinHood {
+    // The plain entry points route through the hashed twins (like the
+    // inner table itself) so the grow-trigger accounting exists once.
+
     fn contains(&self, key: u64) -> bool {
-        self.inner.read().unwrap().contains(key)
+        self.contains_hashed(splitmix64(key), key)
     }
 
     fn add(&self, key: u64) -> bool {
-        let added = self.inner.read().unwrap().add(key);
+        self.add_hashed(splitmix64(key), key)
+    }
+
+    fn remove(&self, key: u64) -> bool {
+        self.remove_hashed(splitmix64(key), key)
+    }
+
+    /// Hash forwarding is grow-safe: `h` is the full 64-bit hash and
+    /// each generation of the inner table masks it down itself.
+    fn contains_hashed(&self, h: u64, key: u64) -> bool {
+        self.inner.read().unwrap().contains_hashed(h, key)
+    }
+
+    fn add_hashed(&self, h: u64, key: u64) -> bool {
+        let added = self.inner.read().unwrap().add_hashed(h, key);
         if added
             && self.approx_len.fetch_add(1, Ordering::Relaxed) + 1
                 >= (self.grow_at * self.inner.read().unwrap().capacity() as f64)
@@ -92,8 +110,8 @@ impl ConcurrentSet for ResizableRobinHood {
         added
     }
 
-    fn remove(&self, key: u64) -> bool {
-        let removed = self.inner.read().unwrap().remove(key);
+    fn remove_hashed(&self, h: u64, key: u64) -> bool {
+        let removed = self.inner.read().unwrap().remove_hashed(h, key);
         if removed {
             self.approx_len.fetch_sub(1, Ordering::Relaxed);
         }

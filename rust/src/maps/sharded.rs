@@ -27,9 +27,40 @@
 //! (aggregation preserves each shard's Robin Hood run structure) and
 //! `len_quiesced`/`capacity` sum across shards, so all quiesced
 //! analytics and invariant checks keep working through the facade.
+//!
+//! The facade is generic over *both* table interfaces: `Sharded<T>` is
+//! a [`ConcurrentSet`] when `T` is one, and a [`ConcurrentMap`] when
+//! `T` is one — so `Sharded<KCasRobinHoodMap>` gets the identical
+//! high-bit routing as the set compositions. The map side additionally
+//! overrides [`ConcurrentMap::apply_batch`]: a batch is grouped by
+//! shard (stable within each shard, so same-key order is preserved;
+//! ops on different shards touch disjoint keys and commute) and each
+//! group is forwarded as one contiguous sub-batch, letting the inner
+//! map amortise its per-thread K-CAS scratch across the group.
 
-use super::ConcurrentSet;
+use std::cell::RefCell;
+
+use super::{ConcurrentMap, ConcurrentSet, MapOp, MapReply};
 use crate::util::hash::splitmix64;
+
+/// Per-thread scratch for [`ConcurrentMap::apply_batch`] grouping, so
+/// batch routing never allocates on the steady-state hot path.
+struct BatchScratch {
+    /// (shard, original index), sorted to form per-shard runs.
+    order: Vec<(u32, u32)>,
+    /// Contiguous op buffer handed to one shard.
+    run_ops: Vec<MapOp>,
+    /// Reply buffer for that shard's sub-batch.
+    run_replies: Vec<MapReply>,
+}
+
+thread_local! {
+    static BATCH_SCRATCH: RefCell<BatchScratch> = RefCell::new(BatchScratch {
+        order: Vec::with_capacity(128),
+        run_ops: Vec::with_capacity(128),
+        run_replies: Vec::with_capacity(128),
+    });
+}
 
 /// A power-of-two array of independent `T` shards behind one
 /// [`ConcurrentSet`] surface.
@@ -40,7 +71,7 @@ pub struct Sharded<T> {
     name: &'static str,
 }
 
-impl<T: ConcurrentSet> Sharded<T> {
+impl<T> Sharded<T> {
     /// Build `2^shards_log2` shards with `build(shard_index)`.
     pub fn from_builder(
         shards_log2: u32,
@@ -56,23 +87,31 @@ impl<T: ConcurrentSet> Sharded<T> {
         }
     }
 
-    /// Which shard owns `key`: the top `shard_bits` of its hash. The
-    /// inner tables consume the low bits (`hash & mask`), so routing
-    /// and in-shard placement are independent.
-    ///
-    /// The hash is deliberately recomputed here and again inside the
-    /// inner table: SplitMix64 is ~5 ALU ops, noise next to the
-    /// cache-missing probe that follows, and threading a precomputed
-    /// hash through the inner tables would fork their hot-path APIs.
-    /// Revisit if profiling ever shows it (ROADMAP: hashed entry
-    /// points).
+    /// Shard index for a precomputed hash `h == splitmix64(key)`: the
+    /// top `shard_bits`. The inner tables consume the *low* bits
+    /// (`h & mask`), so routing and in-shard placement are independent.
     #[inline(always)]
-    pub fn shard_of(&self, key: u64) -> usize {
+    fn route(&self, h: u64) -> usize {
         if self.shard_bits == 0 {
             0
         } else {
-            (splitmix64(key) >> (64 - self.shard_bits)) as usize
+            (h >> (64 - self.shard_bits)) as usize
         }
+    }
+
+    /// Which shard owns `key`.
+    ///
+    /// Single-op calls through the facade hash each key exactly once:
+    /// the hash computed for routing is handed down through the tables'
+    /// `*_hashed` entry points (ROADMAP "hashed entry points" item), so
+    /// the inner table's home-bucket lookup reuses it instead of
+    /// recomputing SplitMix64. (The batch path still recomputes inside
+    /// the inner map — forwarding per-op hashes through `apply_batch`
+    /// would fork that API for ~5 ALU ops per op, noise next to the
+    /// cache-missing probe; revisit if profiling ever shows it.)
+    #[inline(always)]
+    pub fn shard_of(&self, key: u64) -> usize {
+        self.route(splitmix64(key))
     }
 
     /// Number of shards (a power of two).
@@ -84,11 +123,6 @@ impl<T: ConcurrentSet> Sharded<T> {
     /// and tests — all mutation goes through the facade).
     pub fn shards(&self) -> &[T] {
         &self.shards
-    }
-
-    #[inline(always)]
-    fn shard(&self, key: u64) -> &T {
-        &self.shards[self.shard_of(key)]
     }
 }
 
@@ -129,20 +163,132 @@ impl Sharded<super::resizable::ResizableRobinHood> {
     }
 }
 
+impl Sharded<super::kcas_rh_map::KCasRobinHoodMap> {
+    /// Sharded key→value composition of the paper's algorithm: total
+    /// capacity `2^size_log2` pair-buckets split evenly across
+    /// `2^shards_log2` [`super::kcas_rh_map::KCasRobinHoodMap`] shards.
+    pub fn kcas_map(size_log2: u32, shards_log2: u32) -> Self {
+        let per = size_log2
+            .checked_sub(shards_log2)
+            .expect("more shards than buckets");
+        Sharded::from_builder(shards_log2, "sharded-kcas-rh-map", |_| {
+            super::kcas_rh_map::KCasRobinHoodMap::new(per)
+        })
+    }
+}
+
+impl Sharded<super::locked_lp::LockedLpMap> {
+    /// Sharded blocking baseline map.
+    pub fn locked_lp_map(size_log2: u32, shards_log2: u32) -> Self {
+        let per = size_log2
+            .checked_sub(shards_log2)
+            .expect("more shards than buckets");
+        Sharded::from_builder(shards_log2, "sharded-locked-lp-map", |_| {
+            super::locked_lp::LockedLpMap::new(per)
+        })
+    }
+}
+
+impl<T: ConcurrentMap> ConcurrentMap for Sharded<T> {
+    #[inline]
+    fn get(&self, key: u64) -> Option<u64> {
+        let h = splitmix64(key);
+        self.shards[self.route(h)].get_hashed(h, key)
+    }
+
+    #[inline]
+    fn insert(&self, key: u64, value: u64) -> Option<u64> {
+        let h = splitmix64(key);
+        self.shards[self.route(h)].insert_hashed(h, key, value)
+    }
+
+    #[inline]
+    fn remove(&self, key: u64) -> Option<u64> {
+        let h = splitmix64(key);
+        self.shards[self.route(h)].remove_hashed(h, key)
+    }
+
+    /// Shard-grouped batching: stable-sort op indices by shard, forward
+    /// each shard's ops as one contiguous sub-batch, scatter the replies
+    /// back to op order. Equivalent to op-by-op application because the
+    /// regrouping only reorders ops on *different* shards (disjoint
+    /// keys, which commute) and keeps each shard's ops — in particular
+    /// repeated ops on the same key — in their original relative order.
+    fn apply_batch(&self, ops: &[MapOp], out: &mut Vec<MapReply>) {
+        if self.shard_bits == 0 {
+            return self.shards[0].apply_batch(ops, out);
+        }
+        BATCH_SCRATCH.with(|s| {
+            let bs = &mut *s.borrow_mut();
+            bs.order.clear();
+            for (i, op) in ops.iter().enumerate() {
+                let shard = self.route(splitmix64(op.key())) as u32;
+                bs.order.push((shard, i as u32));
+            }
+            // Unstable sort on (shard, index) pairs is stable per shard:
+            // the index tiebreaker makes every pair distinct.
+            bs.order.sort_unstable();
+            out.clear();
+            out.resize(ops.len(), MapReply::Value(None));
+            let mut start = 0;
+            while start < bs.order.len() {
+                let shard = bs.order[start].0;
+                let mut end = start;
+                while end < bs.order.len() && bs.order[end].0 == shard {
+                    end += 1;
+                }
+                let run = &bs.order[start..end];
+                bs.run_ops.clear();
+                bs.run_ops.extend(run.iter().map(|&(_, i)| ops[i as usize]));
+                self.shards[shard as usize]
+                    .apply_batch(&bs.run_ops, &mut bs.run_replies);
+                debug_assert_eq!(bs.run_replies.len(), run.len());
+                for (&(_, i), &reply) in run.iter().zip(bs.run_replies.iter()) {
+                    out[i as usize] = reply;
+                }
+                start = end;
+            }
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn capacity(&self) -> usize {
+        self.shards.iter().map(|s| s.capacity()).sum()
+    }
+
+    fn len_quiesced(&self) -> usize {
+        self.shards.iter().map(|s| s.len_quiesced()).sum()
+    }
+
+    fn check_invariant_quiesced(&self) -> Result<(), String> {
+        for (i, s) in self.shards.iter().enumerate() {
+            s.check_invariant_quiesced()
+                .map_err(|e| format!("shard {i}: {e}"))?;
+        }
+        Ok(())
+    }
+}
+
 impl<T: ConcurrentSet> ConcurrentSet for Sharded<T> {
     #[inline]
     fn contains(&self, key: u64) -> bool {
-        self.shard(key).contains(key)
+        let h = splitmix64(key);
+        self.shards[self.route(h)].contains_hashed(h, key)
     }
 
     #[inline]
     fn add(&self, key: u64) -> bool {
-        self.shard(key).add(key)
+        let h = splitmix64(key);
+        self.shards[self.route(h)].add_hashed(h, key)
     }
 
     #[inline]
     fn remove(&self, key: u64) -> bool {
-        self.shard(key).remove(key)
+        let h = splitmix64(key);
+        self.shards[self.route(h)].remove_hashed(h, key)
     }
 
     fn name(&self) -> &'static str {
@@ -291,5 +437,87 @@ mod tests {
     #[should_panic(expected = "more shards than buckets")]
     fn too_many_shards_panics() {
         let _ = Sharded::<KCasRobinHood>::kcas(2, 3);
+    }
+
+    #[test]
+    fn map_facade_routes_like_set_facade() {
+        use crate::maps::kcas_rh_map::KCasRobinHoodMap;
+        let m = Sharded::<KCasRobinHoodMap>::kcas_map(10, 2);
+        assert_eq!(m.shard_count(), 4);
+        for k in 1..=400u64 {
+            assert_eq!(m.insert(k, k + 7), None);
+        }
+        for k in 1..=400u64 {
+            assert_eq!(m.get(k), Some(k + 7));
+            // The routed shard holds the pair; the others don't.
+            for (i, s) in m.shards().iter().enumerate() {
+                let want = if i == m.shard_of(k) { Some(k + 7) } else { None };
+                assert_eq!(s.get(k), want, "key {k} shard {i}");
+            }
+        }
+        assert_eq!(m.len_quiesced(), 400);
+        assert_eq!(m.capacity(), 1024);
+        assert_eq!(ConcurrentMap::name(&m), "sharded-kcas-rh-map");
+    }
+
+    #[test]
+    fn map_batch_grouping_matches_op_by_op() {
+        use crate::maps::kcas_rh_map::KCasRobinHoodMap;
+        use crate::util::rng::Rng;
+        let batched = Sharded::<KCasRobinHoodMap>::kcas_map(10, 2);
+        let serial = Sharded::<KCasRobinHoodMap>::kcas_map(10, 2);
+        let mut rng = Rng::new(0xBA7C);
+        let mut replies = Vec::new();
+        for round in 0..40 {
+            let n = 1 + rng.below(64) as usize;
+            let ops: Vec<MapOp> = (0..n)
+                .map(|_| {
+                    let k = 1 + rng.below(200);
+                    match rng.below(3) {
+                        0 => MapOp::Insert(k, rng.below(1000)),
+                        1 => MapOp::Remove(k),
+                        _ => MapOp::Get(k),
+                    }
+                })
+                .collect();
+            batched.apply_batch(&ops, &mut replies);
+            let expect: Vec<MapReply> =
+                ops.iter().map(|&op| serial.apply_one(op)).collect();
+            assert_eq!(replies, expect, "round {round} ops {ops:?}");
+        }
+        assert_eq!(batched.len_quiesced(), serial.len_quiesced());
+    }
+
+    #[test]
+    fn map_batch_preserves_same_key_order_across_shards() {
+        use crate::maps::kcas_rh_map::KCasRobinHoodMap;
+        let m = Sharded::<KCasRobinHoodMap>::kcas_map(10, 4);
+        // Interleave two keys that live on different shards with
+        // same-key dependencies; replies must reflect slice order.
+        let (a, b) = (3u64, 4u64);
+        let ops = vec![
+            MapOp::Insert(a, 1),
+            MapOp::Insert(b, 2),
+            MapOp::Insert(a, 3),
+            MapOp::Get(a),
+            MapOp::Remove(b),
+            MapOp::Get(b),
+            MapOp::Remove(a),
+        ];
+        let mut replies = Vec::new();
+        m.apply_batch(&ops, &mut replies);
+        assert_eq!(
+            replies,
+            vec![
+                MapReply::Prev(None),
+                MapReply::Prev(None),
+                MapReply::Prev(Some(1)),
+                MapReply::Value(Some(3)),
+                MapReply::Removed(Some(2)),
+                MapReply::Value(None),
+                MapReply::Removed(Some(3)),
+            ]
+        );
+        assert_eq!(m.len_quiesced(), 0);
     }
 }

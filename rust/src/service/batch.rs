@@ -1,0 +1,215 @@
+//! Batched operation API (ROADMAP "Batched / async API" milestone).
+//!
+//! [`apply_batch`] is the service-layer entry point: one call applies a
+//! slice of [`MapOp`]s and yields one [`MapReply`] per op, in op order,
+//! observably equivalent to applying them one at a time. What batching
+//! buys is *amortisation*, at two levels:
+//!
+//! * the inner `KCasRobinHoodMap` borrows its thread-local
+//!   `OpBuilder`/scratch once per **batch** instead of once per op
+//!   (see `KCasRobinHoodMap::apply_batch_local`);
+//! * the `Sharded` facade groups a batch by shard and forwards each
+//!   group as one contiguous sub-batch, so the amortisation survives
+//!   sharding (and a networked front-end — `service::server` — gets
+//!   frame-level syscall amortisation on top).
+//!
+//! This module also hosts the map-workload plumbing shared by the
+//! `fig14_batching` experiment: [`prefill_map`], [`map_op`], and the
+//! timed driver [`run_batched`] (the key→value sibling of
+//! `bench::driver::run_prefilled`).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Barrier;
+use std::time::{Duration, Instant};
+
+use crate::bench::driver::RunResult;
+use crate::bench::workload::{Op, WorkloadCfg};
+use crate::maps::{ConcurrentMap, MapOp, MapReply};
+use crate::util::affinity;
+use crate::util::rng::Rng;
+
+/// Apply a batch of operations, returning one reply per op in op order.
+///
+/// Convenience wrapper over [`ConcurrentMap::apply_batch`] for callers
+/// that don't manage a reusable reply buffer; hot paths (the server
+/// pipeline, the bench driver) call the trait method directly with a
+/// long-lived `Vec`.
+pub fn apply_batch(map: &dyn ConcurrentMap, ops: &[MapOp]) -> Vec<MapReply> {
+    let mut out = Vec::with_capacity(ops.len());
+    map.apply_batch(ops, &mut out);
+    out
+}
+
+/// Lift a set-benchmark op onto the map workload. Inserted values
+/// encode the key (`value == key`), which keeps the paper's workload
+/// generator reusable and lets stress tests detect torn pairs.
+#[inline]
+pub fn map_op(op: Op) -> MapOp {
+    match op {
+        Op::Contains(k) => MapOp::Get(k),
+        Op::Add(k) => MapOp::Insert(k, k),
+        Op::Remove(k) => MapOp::Remove(k),
+    }
+}
+
+/// Prefill `map` to the configured load factor (the key→value sibling
+/// of `bench::workload::prefill`; same deterministic key stream).
+pub fn prefill_map(map: &dyn ConcurrentMap, cfg: &WorkloadCfg) -> usize {
+    let n = cfg.prefill_count();
+    let space = cfg.key_space();
+    let mut rng = Rng::new(cfg.seed ^ 0xDEAD_BEEF);
+    let mut added = 0;
+    while added < n {
+        let key = 1 + rng.below(space);
+        if map.insert(key, key).is_none() {
+            added += 1;
+        }
+    }
+    added
+}
+
+/// Timed batched benchmark cell: every thread assembles `batch` ops
+/// from the workload mix and applies them with a single
+/// [`ConcurrentMap::apply_batch`] call. `batch == 0` is the unbatched
+/// baseline (direct `get`/`insert`/`remove` calls, one scratch borrow
+/// per op) that `fig14_batching` compares against.
+pub fn run_batched(
+    map: &dyn ConcurrentMap,
+    cfg: &WorkloadCfg,
+    threads: usize,
+    batch: usize,
+    pin: bool,
+) -> RunResult {
+    let stop = AtomicBool::new(false);
+    let barrier = Barrier::new(threads + 1);
+    let mut per_thread = vec![0u64; threads];
+
+    let elapsed = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (idx, slot) in per_thread.iter_mut().enumerate() {
+            let stop = &stop;
+            let barrier = &barrier;
+            handles.push(s.spawn(move || {
+                if pin {
+                    affinity::pin_thread(idx);
+                }
+                let mut rng = Rng::for_thread(cfg.seed, idx as u64);
+                let mut ops_buf: Vec<MapOp> = Vec::with_capacity(batch.max(1));
+                let mut replies: Vec<MapReply> =
+                    Vec::with_capacity(batch.max(1));
+                barrier.wait();
+                let mut ops = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    if batch == 0 {
+                        // Unbatched baseline; stop-flag cadence matches
+                        // the set driver (every 64 ops).
+                        for _ in 0..64 {
+                            match cfg.draw_op(&mut rng) {
+                                Op::Contains(k) => {
+                                    std::hint::black_box(map.get(k));
+                                }
+                                Op::Add(k) => {
+                                    std::hint::black_box(map.insert(k, k));
+                                }
+                                Op::Remove(k) => {
+                                    std::hint::black_box(map.remove(k));
+                                }
+                            }
+                            ops += 1;
+                        }
+                    } else {
+                        ops_buf.clear();
+                        for _ in 0..batch {
+                            ops_buf.push(map_op(cfg.draw_op(&mut rng)));
+                        }
+                        map.apply_batch(&ops_buf, &mut replies);
+                        std::hint::black_box(replies.last());
+                        ops += batch as u64;
+                    }
+                }
+                *slot = ops;
+            }));
+        }
+        barrier.wait();
+        let t0 = Instant::now();
+        std::thread::sleep(Duration::from_millis(cfg.duration_ms));
+        stop.store(true, Ordering::Relaxed);
+        for h in handles {
+            h.join().unwrap();
+        }
+        t0.elapsed()
+    });
+
+    RunResult {
+        threads,
+        total_ops: per_thread.iter().sum(),
+        elapsed,
+        per_thread,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maps::MapKind;
+
+    fn tiny_cfg() -> WorkloadCfg {
+        WorkloadCfg::cell(12, 0.4, 10, 50, 3)
+    }
+
+    #[test]
+    fn apply_batch_returns_in_op_order() {
+        let m = MapKind::KCasRhMap.build(8);
+        let replies = apply_batch(
+            m.as_ref(),
+            &[
+                MapOp::Insert(1, 10),
+                MapOp::Insert(2, 20),
+                MapOp::Get(1),
+                MapOp::Remove(2),
+            ],
+        );
+        assert_eq!(
+            replies,
+            vec![
+                MapReply::Prev(None),
+                MapReply::Prev(None),
+                MapReply::Value(Some(10)),
+                MapReply::Removed(Some(20)),
+            ]
+        );
+    }
+
+    #[test]
+    fn prefill_map_reaches_load_factor() {
+        let cfg = tiny_cfg();
+        for kind in [
+            MapKind::KCasRhMap,
+            MapKind::ShardedKCasRhMap { shards: 4 },
+        ] {
+            let m = kind.build(cfg.size_log2);
+            let added = prefill_map(m.as_ref(), &cfg);
+            assert_eq!(added, cfg.prefill_count(), "{}", kind.name());
+            assert_eq!(m.len_quiesced(), added);
+        }
+    }
+
+    #[test]
+    fn batched_driver_counts_ops() {
+        let cfg = tiny_cfg();
+        let m = MapKind::ShardedKCasRhMap { shards: 4 }.build(cfg.size_log2);
+        prefill_map(m.as_ref(), &cfg);
+        for batch in [0usize, 1, 8] {
+            let r = run_batched(m.as_ref(), &cfg, 2, batch, false);
+            assert_eq!(r.per_thread.len(), 2);
+            assert!(r.total_ops > 0, "batch {batch}");
+        }
+    }
+
+    #[test]
+    fn map_op_preserves_keys() {
+        assert_eq!(map_op(Op::Contains(5)), MapOp::Get(5));
+        assert_eq!(map_op(Op::Add(5)), MapOp::Insert(5, 5));
+        assert_eq!(map_op(Op::Remove(5)), MapOp::Remove(5));
+    }
+}

@@ -1,0 +1,28 @@
+//! **Key→value service layer** — the repro as a servable KV store.
+//!
+//! The paper's cost model charges every operation one K-CAS descriptor
+//! acquire/release plus a thread-local scratch borrow; Maier, Sanders &
+//! Dementiev ("Concurrent Hash Tables: Fast and General(?)!") observe
+//! that the map interface *plus bulk operations* is where concurrent
+//! tables earn their keep in real systems. This module supplies both
+//! halves on top of [`crate::maps::ConcurrentMap`]:
+//!
+//! * [`batch`] — the batched operation API
+//!   (`apply_batch(&[MapOp]) -> Vec<MapReply>`): a batch is grouped by
+//!   shard inside the `Sharded` facade and each shard's run executes
+//!   against **one** thread-local `OpBuilder`/scratch borrow, amortising
+//!   the per-op descriptor setup. Also hosts the timed batched driver
+//!   behind the `fig14_batching` experiment.
+//! * [`server`] — a dependency-free (std threads + channels) TCP
+//!   request pipeline speaking a line-oriented protocol with multi-op
+//!   batch frames (`B <n>`), replacing the one-op-per-line loop the
+//!   `kv_service` example shipped with. Each connection decouples
+//!   parsing from table work so clients can stream frames without
+//!   waiting for replies.
+//!
+//! Maps are named by [`crate::maps::MapKind`] specs
+//! (`sharded-kcas-rh-map:16` etc.); the CLI entry point is
+//! `crh fig14_batching`.
+
+pub mod batch;
+pub mod server;

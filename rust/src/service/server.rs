@@ -1,0 +1,382 @@
+//! Pipelined TCP front-end for a [`ConcurrentMap`] — dependency-free
+//! (std threads + mpsc channels), replacing the one-op-per-line loop
+//! the `kv_service` example originally shipped with.
+//!
+//! ## Protocol (line-oriented text)
+//!
+//! ```text
+//! G <k>        get            → reply line: "<v>" or "-"
+//! P <k> <v>    put (insert)   → previous "<v>" or "-"
+//! D <k>        delete         → removed "<v>" or "-"
+//! B <n>        batch frame: the next n lines are ops (G/P/D);
+//!              one reply line with n space-separated tokens
+//! Q            quit (close the connection)
+//! ```
+//!
+//! Malformed or out-of-range requests get an `ERR <msg>` line and the
+//! connection **stays up** — in particular keys outside
+//! `[1, MAX_KEY]` are rejected at the protocol boundary with
+//! `ERR key out of range` instead of tripping the table's `check_key`
+//! assert and killing the connection thread (the old server's DoS bug),
+//! and values above `kcas::MAX_VALUE` get `ERR value out of range`.
+//! A batch frame is validated as a unit: if any member op is invalid
+//! the whole frame is rejected with a single `ERR` line and nothing is
+//! applied.
+//!
+//! ## Pipeline shape
+//!
+//! Each connection runs two stages connected by a bounded channel:
+//! a *reader* thread parses lines into frames while the connection
+//! thread applies each frame with one [`ConcurrentMap::apply_batch`]
+//! call and writes the reply. Clients may therefore stream many frames
+//! without waiting for replies (replies always come back in frame
+//! order), overlapping network I/O with table work — batch frames
+//! amortise syscalls and round trips on top of the descriptor-setup
+//! amortisation `apply_batch` already provides.
+
+use std::io::{self, BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::kcas::MAX_VALUE;
+use crate::maps::{ConcurrentMap, MapOp, MapReply, MAX_KEY};
+
+/// Largest accepted batch frame (bounds per-connection memory).
+pub const MAX_BATCH: usize = 4096;
+/// Frames buffered between the reader and the apply/write stage.
+const PIPELINE_DEPTH: usize = 64;
+
+pub const ERR_KEY_RANGE: &str = "ERR key out of range";
+pub const ERR_VALUE_RANGE: &str = "ERR value out of range";
+pub const ERR_BAD_REQUEST: &str = "ERR bad request";
+pub const ERR_BAD_BATCH: &str = "ERR bad batch size";
+pub const ERR_SERVER: &str = "ERR server error";
+
+fn parse_key(s: &str) -> Result<u64, &'static str> {
+    let k: u64 = s.parse().map_err(|_| ERR_BAD_REQUEST)?;
+    if !(1..=MAX_KEY).contains(&k) {
+        return Err(ERR_KEY_RANGE);
+    }
+    Ok(k)
+}
+
+/// Parse one op line (`G <k>` / `P <k> <v>` / `D <k>`), enforcing the
+/// key and value ranges at the protocol boundary.
+pub fn parse_op(line: &str) -> Result<MapOp, &'static str> {
+    let mut it = line.split_whitespace();
+    match (it.next(), it.next(), it.next(), it.next()) {
+        (Some("G"), Some(k), None, _) => Ok(MapOp::Get(parse_key(k)?)),
+        (Some("D"), Some(k), None, _) => Ok(MapOp::Remove(parse_key(k)?)),
+        (Some("P"), Some(k), Some(v), None) => {
+            let k = parse_key(k)?;
+            let v: u64 = v.parse().map_err(|_| ERR_BAD_REQUEST)?;
+            if v > MAX_VALUE {
+                return Err(ERR_VALUE_RANGE);
+            }
+            Ok(MapOp::Insert(k, v))
+        }
+        _ => Err(ERR_BAD_REQUEST),
+    }
+}
+
+/// Append one reply token (the value, or `-` for "not present").
+pub fn push_reply(reply: MapReply, out: &mut String) {
+    use std::fmt::Write as _;
+    match reply.value() {
+        Some(v) => write!(out, "{v}").expect("write to String"),
+        None => out.push('-'),
+    }
+}
+
+/// One parsed request frame.
+enum Frame {
+    /// Ops to apply with a single `apply_batch` call.
+    Batch(Vec<MapOp>),
+    /// Protocol error to report; nothing is applied.
+    Err(&'static str),
+    /// Client said `Q`.
+    Quit,
+}
+
+/// Reader stage: parse lines into frames until EOF/`Q`, handing them to
+/// the apply/write stage through the bounded channel.
+fn read_frames(stream: TcpStream, tx: mpsc::SyncSender<Frame>) {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line).unwrap_or(0) == 0 {
+            return; // EOF or broken pipe: dropping tx drains the stage
+        }
+        let head = line.trim();
+        if head.is_empty() {
+            continue;
+        }
+        if head == "Q" {
+            let _ = tx.send(Frame::Quit);
+            return;
+        }
+        let frame = if let Some(rest) = head.strip_prefix("B ") {
+            match rest.trim().parse::<usize>() {
+                Ok(n) if (1..=MAX_BATCH).contains(&n) => {
+                    let mut ops = Vec::with_capacity(n);
+                    let mut err: Option<&'static str> = None;
+                    for _ in 0..n {
+                        line.clear();
+                        if reader.read_line(&mut line).unwrap_or(0) == 0 {
+                            return; // truncated frame: connection gone
+                        }
+                        // Keep consuming the frame even after an error
+                        // so the stream stays in sync.
+                        match parse_op(line.trim()) {
+                            Ok(op) => ops.push(op),
+                            Err(e) => err = err.or(Some(e)),
+                        }
+                    }
+                    match err {
+                        None => Frame::Batch(ops),
+                        Some(e) => Frame::Err(e),
+                    }
+                }
+                _ => Frame::Err(ERR_BAD_BATCH),
+            }
+        } else {
+            match parse_op(head) {
+                Ok(op) => Frame::Batch(vec![op]),
+                Err(e) => Frame::Err(e),
+            }
+        };
+        if tx.send(frame).is_err() {
+            return; // writer stage gone
+        }
+    }
+}
+
+/// Apply/write stage: one `apply_batch` call and one buffered write per
+/// frame, replies in frame order.
+fn serve_conn(stream: TcpStream, map: Arc<dyn ConcurrentMap>) {
+    stream.set_nodelay(true).ok();
+    let Ok(read_half) = stream.try_clone() else { return };
+    let (tx, rx) = mpsc::sync_channel::<Frame>(PIPELINE_DEPTH);
+    let reader = std::thread::spawn(move || read_frames(read_half, tx));
+    let mut out = BufWriter::new(stream);
+    let mut replies: Vec<MapReply> = Vec::new();
+    let mut line = String::new();
+    for frame in rx {
+        line.clear();
+        let mut fatal = false;
+        match frame {
+            Frame::Quit => break,
+            Frame::Err(e) => line.push_str(e),
+            Frame::Batch(ops) => {
+                // Range checks happened at parse time, but the table
+                // can still panic on in-range input (e.g. the "map is
+                // full" capacity assert). Contain it: report a server
+                // error and drop the connection instead of dying with
+                // no reply — the same connection-killing failure mode
+                // the key-range validation exists to prevent. The ops
+                // clear their per-thread scratch on entry, so the
+                // thread-local state stays reusable after an unwind.
+                let applied = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| {
+                        map.apply_batch(&ops, &mut replies)
+                    }),
+                );
+                if applied.is_ok() {
+                    for (i, &r) in replies.iter().enumerate() {
+                        if i > 0 {
+                            line.push(' ');
+                        }
+                        push_reply(r, &mut line);
+                    }
+                } else {
+                    line.push_str(ERR_SERVER);
+                    fatal = true;
+                }
+            }
+        }
+        line.push('\n');
+        if out.write_all(line.as_bytes()).is_err() || out.flush().is_err() {
+            break;
+        }
+        if fatal {
+            break;
+        }
+    }
+    drop(out); // close the write half before reaping the reader
+    let _ = reader.join();
+}
+
+/// Accept loop: one pipelined connection handler per client.
+pub fn serve(listener: TcpListener, map: Arc<dyn ConcurrentMap>) {
+    for stream in listener.incoming() {
+        let Ok(stream) = stream else { break };
+        let map = map.clone();
+        std::thread::spawn(move || serve_conn(stream, map));
+    }
+}
+
+/// Bind an ephemeral localhost port, serve `map` on a background
+/// thread, and return the address (examples and tests).
+pub fn spawn_ephemeral(map: Arc<dyn ConcurrentMap>) -> SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind 127.0.0.1:0");
+    let addr = listener.local_addr().expect("local_addr");
+    std::thread::spawn(move || serve(listener, map));
+    addr
+}
+
+/// Append one op in wire format (plus newline).
+fn push_op(op: MapOp, out: &mut String) {
+    use std::fmt::Write as _;
+    match op {
+        MapOp::Get(k) => writeln!(out, "G {k}"),
+        MapOp::Insert(k, v) => writeln!(out, "P {k} {v}"),
+        MapOp::Remove(k) => writeln!(out, "D {k}"),
+    }
+    .expect("write to String");
+}
+
+/// Minimal blocking client for the wire protocol (examples, tests,
+/// and the example's load generator).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    out: TcpStream,
+    frame: String,
+    reply: String,
+}
+
+impl Client {
+    pub fn connect(addr: SocketAddr) -> io::Result<Client> {
+        let out = TcpStream::connect(addr)?;
+        out.set_nodelay(true)?;
+        let reader = BufReader::new(out.try_clone()?);
+        Ok(Client {
+            reader,
+            out,
+            frame: String::new(),
+            reply: String::new(),
+        })
+    }
+
+    /// Send one raw request line, read one reply line (trimmed).
+    pub fn request_line(&mut self, line: &str) -> io::Result<String> {
+        self.out.write_all(line.as_bytes())?;
+        self.out.write_all(b"\n")?;
+        self.read_reply_line()
+    }
+
+    /// Send a batch of ops as one frame (a bare op line for a single
+    /// op, a `B <n>` frame otherwise) in a single write, then read the
+    /// reply line and parse its tokens. Protocol `ERR` replies surface
+    /// as `io::ErrorKind::InvalidData`.
+    pub fn batch(&mut self, ops: &[MapOp]) -> io::Result<Vec<Option<u64>>> {
+        self.send_frame(ops)?;
+        self.read_batch_reply(ops.len())
+    }
+
+    /// Write one frame without waiting for the reply (pipelining).
+    pub fn send_frame(&mut self, ops: &[MapOp]) -> io::Result<()> {
+        use std::fmt::Write as _;
+        assert!(!ops.is_empty() && ops.len() <= MAX_BATCH);
+        self.frame.clear();
+        if ops.len() > 1 {
+            writeln!(self.frame, "B {}", ops.len()).expect("write to String");
+        }
+        for &op in ops {
+            push_op(op, &mut self.frame);
+        }
+        self.out.write_all(self.frame.as_bytes())
+    }
+
+    /// Read and parse one batch reply of `n` ops (pairs with
+    /// [`Client::send_frame`]; replies arrive in frame order).
+    pub fn read_batch_reply(
+        &mut self,
+        n: usize,
+    ) -> io::Result<Vec<Option<u64>>> {
+        let line = self.read_reply_line()?;
+        if line.starts_with("ERR") {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, line));
+        }
+        let mut vals = Vec::with_capacity(n);
+        for tok in line.split_whitespace() {
+            vals.push(match tok {
+                "-" => None,
+                v => Some(v.parse::<u64>().map_err(|_| {
+                    io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!("bad reply token {v:?}"),
+                    )
+                })?),
+            });
+        }
+        if vals.len() != n {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("expected {n} reply tokens, got {}", vals.len()),
+            ));
+        }
+        Ok(vals)
+    }
+
+    fn read_reply_line(&mut self) -> io::Result<String> {
+        self.reply.clear();
+        if self.reader.read_line(&mut self.reply)? == 0 {
+            return Err(io::ErrorKind::UnexpectedEof.into());
+        }
+        Ok(self.reply.trim_end().to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_op_accepts_valid_lines() {
+        assert_eq!(parse_op("G 5"), Ok(MapOp::Get(5)));
+        assert_eq!(parse_op("P 5 10"), Ok(MapOp::Insert(5, 10)));
+        assert_eq!(parse_op("D 5"), Ok(MapOp::Remove(5)));
+        assert_eq!(parse_op("  G   5  "), Ok(MapOp::Get(5)));
+        assert_eq!(parse_op(&format!("G {MAX_KEY}")), Ok(MapOp::Get(MAX_KEY)));
+        assert_eq!(
+            parse_op(&format!("P 1 {MAX_VALUE}")),
+            Ok(MapOp::Insert(1, MAX_VALUE))
+        );
+    }
+
+    #[test]
+    fn parse_op_rejects_out_of_range_keys() {
+        // The old server's DoS: any k >= 1 was forwarded to the table,
+        // and k > MAX_KEY tripped check_key's assert mid-connection.
+        assert_eq!(parse_op(&format!("G {}", MAX_KEY + 1)), Err(ERR_KEY_RANGE));
+        assert_eq!(parse_op("G 0"), Err(ERR_KEY_RANGE));
+        assert_eq!(parse_op(&format!("P {} 1", u64::MAX)), Err(ERR_KEY_RANGE));
+        assert_eq!(parse_op("D 0"), Err(ERR_KEY_RANGE));
+        assert_eq!(
+            parse_op(&format!("P 1 {}", MAX_VALUE + 1)),
+            Err(ERR_VALUE_RANGE)
+        );
+    }
+
+    #[test]
+    fn parse_op_rejects_malformed_lines() {
+        for bad in [
+            "", "G", "P 1", "G x", "P 1 y", "X 1", "G 1 2", "P 1 2 3", "Q 1",
+        ] {
+            assert_eq!(parse_op(bad), Err(ERR_BAD_REQUEST), "line {bad:?}");
+        }
+    }
+
+    #[test]
+    fn reply_tokens_round_trip() {
+        let mut s = String::new();
+        push_reply(MapReply::Value(Some(42)), &mut s);
+        s.push(' ');
+        push_reply(MapReply::Prev(None), &mut s);
+        s.push(' ');
+        push_reply(MapReply::Removed(Some(7)), &mut s);
+        assert_eq!(s, "42 - 7");
+    }
+}

@@ -1,0 +1,334 @@
+//! Service-layer tier tests: the `ConcurrentMap` implementations
+//! against a `std::collections::HashMap` oracle (including the sharded
+//! compositions across the {1, 4, 16} shard sweep), the batched API's
+//! op-by-op equivalence, the map-flavoured Fig. 5 race, and the TCP
+//! request pipeline end-to-end (including the key-range guard that the
+//! original one-op-per-line server lacked).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crh::maps::{ConcurrentMap, MapKind, MapOp, MapReply, MAX_KEY};
+use crh::service::batch::apply_batch;
+use crh::service::server::{self, Client};
+use crh::util::prop;
+use crh::util::rng::Rng;
+
+/// Random op sequences on `kind` must match `HashMap` exactly —
+/// including value overwrite on duplicate insert (`insert` returns the
+/// previous value) and get-after-remove.
+fn map_oracle_check(kind: MapKind, size_log2: u32, keys: u64, ops: usize) {
+    prop::check(
+        &format!("{} matches HashMap", kind.name()),
+        12,
+        |r: &mut Rng| {
+            (0..ops)
+                .map(|_| (r.below(3) as u8, 1 + r.below(keys), r.below(1000)))
+                .collect::<Vec<(u8, u64, u64)>>()
+        },
+        |seq| {
+            let m = kind.build(size_log2);
+            let mut oracle: HashMap<u64, u64> = HashMap::new();
+            for &(op, key, val) in seq {
+                let (got, want) = match op {
+                    0 => (m.insert(key, val), oracle.insert(key, val)),
+                    1 => (m.remove(key), oracle.remove(&key)),
+                    _ => (m.get(key), oracle.get(&key).copied()),
+                };
+                if got != want {
+                    return Err(format!(
+                        "{} op {op} key {key} val {val}: got {got:?} want {want:?}",
+                        kind.name()
+                    ));
+                }
+            }
+            if m.len_quiesced() != oracle.len() {
+                return Err(format!(
+                    "{}: len {} vs oracle {}",
+                    kind.name(),
+                    m.len_quiesced(),
+                    oracle.len()
+                ));
+            }
+            // Post-hoc full pairing sweep.
+            for k in 1..=keys {
+                if m.get(k) != oracle.get(&k).copied() {
+                    return Err(format!("{}: sweep mismatch at {k}", kind.name()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn kcas_rh_map_oracle_long() {
+    map_oracle_check(MapKind::KCasRhMap, 8, 160, 1200);
+}
+
+#[test]
+fn locked_lp_map_oracle_long() {
+    map_oracle_check(MapKind::LockedLpMap, 8, 160, 1200);
+}
+
+#[test]
+fn sharded_kcas_rh_map_oracle_across_shards() {
+    for shards in [1u32, 4, 16] {
+        map_oracle_check(MapKind::ShardedKCasRhMap { shards }, 8, 160, 1200);
+    }
+}
+
+#[test]
+fn sharded_locked_lp_map_oracle_across_shards() {
+    for shards in [1u32, 4, 16] {
+        map_oracle_check(MapKind::ShardedLockedLpMap { shards }, 8, 160, 1200);
+    }
+}
+
+#[test]
+fn duplicate_insert_overwrites_value_everywhere() {
+    for kind in MapKind::all() {
+        let m = kind.build(8);
+        assert_eq!(m.insert(42, 1), None, "{}", kind.name());
+        assert_eq!(m.insert(42, 2), Some(1), "{}", kind.name());
+        assert_eq!(m.insert(42, 3), Some(2), "{}", kind.name());
+        assert_eq!(m.get(42), Some(3), "{}", kind.name());
+        assert_eq!(m.len_quiesced(), 1, "{}", kind.name());
+        assert_eq!(m.remove(42), Some(3), "{}", kind.name());
+        assert_eq!(m.get(42), None, "{}", kind.name());
+    }
+}
+
+/// The paper's Fig. 5 reader/remover race, map-flavoured and pushed
+/// through the sharded facade: stable keys (whose value encodes the
+/// key) must never be observed absent or paired with another key's
+/// value while churn keys force backward shifts around them.
+#[test]
+fn fig5_get_after_remove_race_sharded_map() {
+    let m: Arc<dyn ConcurrentMap> =
+        Arc::from(MapKind::ShardedKCasRhMap { shards: 4 }.build(9));
+    const CHURN: u64 = 60;
+    for k in 1..=CHURN + 30 {
+        m.insert(k, k * 7);
+    }
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut hs = Vec::new();
+    for tid in 0..2u64 {
+        let (m, stop) = (m.clone(), stop.clone());
+        hs.push(std::thread::spawn(move || {
+            let mut r = Rng::for_thread(0x55, tid);
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                let k = 1 + r.below(CHURN);
+                m.remove(k);
+                m.insert(k, k * 7);
+            }
+        }));
+    }
+    for tid in 0..4u64 {
+        let (m, stop) = (m.clone(), stop.clone());
+        hs.push(std::thread::spawn(move || {
+            let mut r = Rng::for_thread(0x56, tid);
+            for _ in 0..25_000 {
+                let k = CHURN + 1 + r.below(30);
+                match m.get(k) {
+                    Some(v) => assert_eq!(v, k * 7, "torn pair for {k}"),
+                    None => panic!("Fig. 5 race: stable key {k} absent"),
+                }
+            }
+            stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        }));
+    }
+    for h in hs {
+        h.join().unwrap();
+    }
+    m.check_invariant_quiesced().unwrap();
+}
+
+/// `apply_batch` replies must match op-by-op application, in op order,
+/// for every map kind — random batches with repeated keys (so the
+/// sharded grouping's same-key ordering is exercised).
+#[test]
+fn apply_batch_matches_op_by_op_everywhere() {
+    for kind in MapKind::all() {
+        let batched = kind.build(9);
+        let serial = kind.build(9);
+        let mut oracle: HashMap<u64, u64> = HashMap::new();
+        let mut rng = Rng::new(0xBB);
+        for round in 0..30 {
+            let n = 1 + rng.below(48) as usize;
+            let ops: Vec<MapOp> = (0..n)
+                .map(|_| {
+                    let k = 1 + rng.below(64);
+                    match rng.below(3) {
+                        0 => MapOp::Insert(k, rng.below(500)),
+                        1 => MapOp::Remove(k),
+                        _ => MapOp::Get(k),
+                    }
+                })
+                .collect();
+            let got = apply_batch(batched.as_ref(), &ops);
+            let want: Vec<MapReply> = ops
+                .iter()
+                .map(|&op| match op {
+                    MapOp::Get(k) => {
+                        assert_eq!(serial.get(k), oracle.get(&k).copied());
+                        MapReply::Value(serial.get(k))
+                    }
+                    MapOp::Insert(k, v) => {
+                        assert_eq!(
+                            oracle.insert(k, v),
+                            serial.get(k),
+                            "oracle drift"
+                        );
+                        MapReply::Prev(serial.insert(k, v))
+                    }
+                    MapOp::Remove(k) => {
+                        assert_eq!(oracle.remove(&k), serial.get(k));
+                        MapReply::Removed(serial.remove(k))
+                    }
+                })
+                .collect();
+            assert_eq!(got, want, "{} round {round}", kind.name());
+        }
+        assert_eq!(
+            batched.len_quiesced(),
+            serial.len_quiesced(),
+            "{}",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn server_round_trip_and_key_validation() {
+    let map: Arc<dyn ConcurrentMap> =
+        Arc::from(MapKind::ShardedKCasRhMap { shards: 4 }.build(12));
+    let addr = server::spawn_ephemeral(map.clone());
+    let mut c = Client::connect(addr).unwrap();
+
+    // Single ops.
+    assert_eq!(c.request_line("P 10 100").unwrap(), "-");
+    assert_eq!(c.request_line("P 10 101").unwrap(), "100");
+    assert_eq!(c.request_line("G 10").unwrap(), "101");
+    assert_eq!(c.request_line("D 10").unwrap(), "101");
+    assert_eq!(c.request_line("G 10").unwrap(), "-");
+
+    // Satellite regression: out-of-range keys must get ERR, not a
+    // connection-killing check_key panic — and the connection must
+    // keep serving afterwards.
+    let big = MAX_KEY + 1;
+    assert_eq!(
+        c.request_line(&format!("P {big} 1")).unwrap(),
+        "ERR key out of range"
+    );
+    assert_eq!(
+        c.request_line(&format!("G {big}")).unwrap(),
+        "ERR key out of range"
+    );
+    assert_eq!(c.request_line("G 0").unwrap(), "ERR key out of range");
+    assert_eq!(c.request_line("A 5").unwrap(), "ERR bad request");
+    assert_eq!(c.request_line("B 0").unwrap(), "ERR bad batch size");
+    assert_eq!(c.request_line("P 5 5").unwrap(), "-");
+
+    // Batch frame, including a same-key dependency chain.
+    let replies = c
+        .batch(&[
+            MapOp::Insert(7, 70),
+            MapOp::Get(7),
+            MapOp::Insert(7, 71),
+            MapOp::Remove(7),
+            MapOp::Get(7),
+            MapOp::Get(5),
+        ])
+        .unwrap();
+    assert_eq!(
+        replies,
+        vec![None, Some(70), Some(70), Some(71), None, Some(5)]
+    );
+
+    // A batch containing one bad op is rejected as a unit: nothing
+    // applied, one ERR line, stream still in sync.
+    let err = c
+        .batch(&[MapOp::Insert(3, 30), MapOp::Get(big), MapOp::Get(3)])
+        .unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    assert_eq!(c.request_line("G 3").unwrap(), "-", "bad batch was applied");
+
+    assert_eq!(map.len_quiesced(), 1); // only key 5 survives
+}
+
+#[test]
+fn server_pipelined_frames_reply_in_order() {
+    let map: Arc<dyn ConcurrentMap> =
+        Arc::from(MapKind::KCasRhMap.build(12));
+    let addr = server::spawn_ephemeral(map);
+    let mut c = Client::connect(addr).unwrap();
+    const FRAMES: u64 = 64;
+    // Stream all frames without reading a single reply...
+    for i in 1..=FRAMES {
+        c.send_frame(&[MapOp::Insert(i, i * 10), MapOp::Get(i)]).unwrap();
+    }
+    // ...then collect the replies; they must arrive in frame order.
+    for i in 1..=FRAMES {
+        let replies = c.read_batch_reply(2).unwrap();
+        assert_eq!(replies, vec![None, Some(i * 10)], "frame {i}");
+    }
+}
+
+/// Overfilling the table is a *capacity* failure, not a protocol one:
+/// the apply stage must contain the table's "map is full" panic,
+/// reply `ERR server error`, and close the connection — never die
+/// reply-less mid-protocol (the panic-DoS shape the key-range guard
+/// already covers for out-of-range keys).
+#[test]
+fn server_survives_full_table_with_error_reply() {
+    let map: Arc<dyn ConcurrentMap> =
+        Arc::from(MapKind::KCasRhMap.build(4)); // 16 buckets
+    let addr = server::spawn_ephemeral(map);
+    let mut c = Client::connect(addr).unwrap();
+    let mut saw_server_err = false;
+    for k in 1..=40u64 {
+        match c.request_line(&format!("P {k} 1")) {
+            Ok(reply) if reply == "ERR server error" => {
+                saw_server_err = true;
+                break;
+            }
+            Ok(reply) => assert_eq!(reply, "-", "key {k}"),
+            Err(e) => panic!("connection died reply-less at key {k}: {e}"),
+        }
+    }
+    assert!(saw_server_err, "overfull table never reported ERR");
+    // The failed connection was dropped; the server still accepts new
+    // clients (reads against the full table work fine).
+    let mut c2 = Client::connect(addr).unwrap();
+    assert_eq!(c2.request_line("G 1").unwrap(), "1");
+}
+
+#[test]
+fn server_concurrent_clients_mixed_batches() {
+    let map: Arc<dyn ConcurrentMap> =
+        Arc::from(MapKind::ShardedKCasRhMap { shards: 4 }.build(12));
+    let addr = server::spawn_ephemeral(map.clone());
+    let mut hs = Vec::new();
+    for tid in 0..4u64 {
+        hs.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            let base = 1 + tid * 10_000;
+            // Disjoint key ranges so final state is deterministic.
+            for chunk in 0..25u64 {
+                let ops: Vec<MapOp> = (0..8)
+                    .map(|j| {
+                        let k = base + chunk * 8 + j;
+                        MapOp::Insert(k, k)
+                    })
+                    .collect();
+                let replies = c.batch(&ops).unwrap();
+                assert!(replies.iter().all(|v| v.is_none()));
+            }
+        }));
+    }
+    for h in hs {
+        h.join().unwrap();
+    }
+    assert_eq!(map.len_quiesced(), 4 * 200);
+}
