@@ -1,0 +1,42 @@
+//! Bench: **Figure 15** (extension) — per-op latency during an
+//! in-flight grow migration: the incremental two-generation engine
+//! (`inc-resize-rh`) vs the quiescing epoch-RwLock rebuild
+//! (`resizable-rh`), across thread count x grow threshold.
+//!
+//! ```sh
+//! cargo bench --bench fig15_resize            # paper-scale-ish
+//! cargo bench --bench fig15_resize -- --quick # CI smoke
+//! ```
+//! Tunables: CRH_BENCH_SIZE_LOG2, CRH_BENCH_MS, CRH_BENCH_THREADS
+//! (comma list), CRH_BENCH_GROW_ATS (comma list of thresholds).
+
+mod common;
+
+use crh::coordinator::{fig15_resize, ExpOpts};
+
+fn main() {
+    let quick = common::quick();
+    let mut opts = ExpOpts {
+        size_log2: common::env_u32("SIZE_LOG2", if quick { 14 } else { 20 }),
+        duration_ms: common::env_u64("MS", if quick { 100 } else { 500 }),
+        pin: true,
+        reps: 1,
+        ..ExpOpts::default()
+    };
+    if let Ok(ts) = std::env::var("CRH_BENCH_THREADS") {
+        opts.threads = ts.split(',').filter_map(|x| x.parse().ok()).collect();
+    } else if quick {
+        opts.threads = vec![1, 2];
+    }
+    let grow_ats: Vec<f64> = match std::env::var("CRH_BENCH_GROW_ATS") {
+        Ok(s) => s.split(',').filter_map(|x| x.parse().ok()).collect(),
+        Err(_) => {
+            if quick {
+                vec![0.7]
+            } else {
+                vec![0.7, 0.85]
+            }
+        }
+    };
+    fig15_resize(&opts, &grow_ats);
+}

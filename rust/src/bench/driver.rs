@@ -95,6 +95,156 @@ pub fn run_prefilled(
     }
 }
 
+/// Log2-bucketed per-operation latency histogram, cheap enough to
+/// update on every op (one increment) — the measurement behind the
+/// `fig15_resize` experiment's "tail latency during migration" claim.
+#[derive(Clone)]
+pub struct LatencyHist {
+    /// `buckets[b]` counts ops with latency in `[2^b, 2^(b+1))` ns.
+    buckets: [u64; 48],
+    count: u64,
+    max_ns: u64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        LatencyHist { buckets: [0; 48], count: 0, max_ns: 0 }
+    }
+
+    #[inline]
+    pub fn record(&mut self, ns: u64) {
+        let b = if ns == 0 { 0 } else { 63 - ns.leading_zeros() as usize };
+        self.buckets[b.min(47)] += 1;
+        self.count += 1;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    /// Upper bound of the bucket containing quantile `q` (0 < q <= 1);
+    /// the true max for the top bucket. 0 when empty.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (b, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return (1u64 << (b + 1)).min(self.max_ns.max(1));
+            }
+        }
+        self.max_ns
+    }
+}
+
+/// Configuration for a latency-recording growth cell
+/// ([`run_latency`]): unlike [`WorkloadCfg`], the key space is decoupled
+/// from the table size and the mix is add-biased, so the run drives the
+/// table across its grow threshold mid-measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyCfg {
+    pub duration_ms: u64,
+    /// Keys are uniform over `[1, key_space]` (pick > capacity so adds
+    /// keep landing fresh keys and the load factor climbs).
+    pub key_space: u64,
+    /// Percent of ops that are `add` / `remove` (rest are `contains`).
+    pub add_pct: u32,
+    pub remove_pct: u32,
+    pub seed: u64,
+    pub pin: bool,
+}
+
+/// Timed run that records **every operation's latency** into a per
+/// thread [`LatencyHist`] (merged on return). Same barrier/stop-flag
+/// shape as [`run_prefilled`]; the per-op `Instant` pair costs ~50 ns,
+/// identical across engines, so relative tails stay comparable.
+pub fn run_latency(
+    table: &dyn ConcurrentSet,
+    cfg: &LatencyCfg,
+    threads: usize,
+) -> (RunResult, LatencyHist) {
+    let stop = AtomicBool::new(false);
+    let barrier = Barrier::new(threads + 1);
+    let mut per_thread = vec![0u64; threads];
+    let mut hists: Vec<LatencyHist> =
+        (0..threads).map(|_| LatencyHist::new()).collect();
+
+    let elapsed = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (idx, (slot, hist)) in
+            per_thread.iter_mut().zip(hists.iter_mut()).enumerate()
+        {
+            let stop = &stop;
+            let barrier = &barrier;
+            handles.push(s.spawn(move || {
+                if cfg.pin {
+                    affinity::pin_thread(idx);
+                }
+                let mut rng = Rng::for_thread(cfg.seed, idx as u64);
+                barrier.wait();
+                let mut ops = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let key = 1 + rng.below(cfg.key_space);
+                    let roll = rng.below(100) as u32;
+                    let t0 = Instant::now();
+                    if roll < cfg.add_pct {
+                        std::hint::black_box(table.add(key));
+                    } else if roll < cfg.add_pct + cfg.remove_pct {
+                        std::hint::black_box(table.remove(key));
+                    } else {
+                        std::hint::black_box(table.contains(key));
+                    }
+                    hist.record(t0.elapsed().as_nanos() as u64);
+                    ops += 1;
+                }
+                *slot = ops;
+            }));
+        }
+        barrier.wait();
+        let t0 = Instant::now();
+        std::thread::sleep(Duration::from_millis(cfg.duration_ms));
+        stop.store(true, Ordering::Relaxed);
+        for h in handles {
+            h.join().unwrap();
+        }
+        t0.elapsed()
+    });
+
+    let mut merged = LatencyHist::new();
+    for h in &hists {
+        merged.merge(h);
+    }
+    let result = RunResult {
+        threads,
+        total_ops: per_thread.iter().sum(),
+        elapsed,
+        per_thread,
+    };
+    (result, merged)
+}
+
 /// Build, prefill, and run one cell (convenience for the CLI/benches).
 pub fn run(
     kind: crate::maps::TableKind,
@@ -149,6 +299,44 @@ mod tests {
             assert!(r.total_ops > 0, "{}", kind.name());
             assert_eq!(r.per_thread.len(), 2);
         }
+    }
+
+    #[test]
+    fn latency_hist_quantiles_are_monotonic() {
+        let mut h = LatencyHist::new();
+        for ns in [10u64, 100, 1000, 10_000, 100_000, 1_000_000] {
+            for _ in 0..100 {
+                h.record(ns);
+            }
+        }
+        assert_eq!(h.count(), 600);
+        let p50 = h.quantile_ns(0.5);
+        let p99 = h.quantile_ns(0.99);
+        assert!(p50 <= p99, "p50 {p50} > p99 {p99}");
+        assert!(p99 <= h.max_ns());
+        assert!(h.max_ns() == 1_000_000);
+        let mut merged = LatencyHist::new();
+        merged.merge(&h);
+        merged.merge(&h);
+        assert_eq!(merged.count(), 1200);
+        assert_eq!(merged.quantile_ns(0.5), p50);
+    }
+
+    #[test]
+    fn latency_driver_records_every_op() {
+        let table = TableKind::IncResizableRh.build(10);
+        let cfg = LatencyCfg {
+            duration_ms: 50,
+            key_space: 4096,
+            add_pct: 45,
+            remove_pct: 10,
+            seed: 9,
+            pin: false,
+        };
+        let (r, hist) = run_latency(table.as_ref(), &cfg, 2);
+        assert_eq!(r.per_thread.len(), 2);
+        assert_eq!(r.total_ops, hist.count());
+        assert!(hist.quantile_ns(0.99) >= hist.quantile_ns(0.5));
     }
 
     #[test]

@@ -525,8 +525,10 @@ impl TraceTable {
             // partition per op either way).
             KCasRobinHood
             | ResizableRobinHood
+            | IncResizableRh
             | ShardedKCasRh { .. }
-            | ShardedResizableRh { .. } => {
+            | ShardedResizableRh { .. }
+            | ShardedIncResizableRh { .. } => {
                 let ts = if paper_ts {
                     PAPER_TS_SHARD_LOG2
                 } else {

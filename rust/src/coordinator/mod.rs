@@ -304,6 +304,96 @@ pub fn fig14_batching(opts: &ExpOpts, map: MapKind, batch_sizes: &[usize]) {
     }
 }
 
+/// **Figure 15** (extension): the resize-engine comparison — per-op
+/// latency **during an in-flight migration**, incremental
+/// (two-generation cooperative migration,
+/// [`crate::maps::resizable::IncResizableRobinHood`]) vs quiescing
+/// (epoch-RwLock rebuild, [`crate::maps::resizable::QuiescingResize`]).
+/// Each cell prefills to just below the grow threshold and runs an
+/// add-biased mix over a key space 4x the initial capacity, so one or
+/// more grows fire mid-measurement; every op's latency is recorded.
+/// The quiescing engine's tail shows the stop-the-table rebuild; the
+/// incremental engine's tail shows only the per-op helping stripe.
+pub fn fig15_resize(opts: &ExpOpts, grow_ats: &[f64]) {
+    use crate::bench::driver::{run_latency, LatencyCfg, LatencyHist};
+    use crate::maps::resizable::{IncResizableRobinHood, QuiescingResize};
+    use crate::maps::ConcurrentSet;
+
+    println!(
+        "# Figure 15 — resize engines: op latency during migration; \
+         table 2^{} initial, {} ms/cell, {} rep(s), 45% add / 10% rem",
+        opts.size_log2, opts.duration_ms, opts.reps
+    );
+    let us = |ns: u64| format!("{:.1}", ns as f64 / 1000.0);
+    for &grow_at in grow_ats {
+        if !(0.2..0.95).contains(&grow_at) {
+            println!("# skipping grow threshold {grow_at}: outside [0.2, 0.95)");
+            continue;
+        }
+        println!("\n## panel: grow threshold {:.0}%", grow_at * 100.0);
+        println!(
+            "{:<14} {:>4} {:>10} {:>9} {:>9} {:>9} {:>11} {:>8}",
+            "engine", "thr", "ops/us", "p50(us)", "p99(us)", "p999(us)",
+            "max(us)", "grows"
+        );
+        for &threads in &opts.threads {
+            for inc in [false, true] {
+                let label = if inc { "incremental" } else { "quiescing" };
+                let mut hist = LatencyHist::new();
+                let mut ops_us = 0.0;
+                let mut grows = 0u32;
+                for rep in 0..opts.reps {
+                    let table: Box<dyn ConcurrentSet> = if inc {
+                        Box::new(IncResizableRobinHood::with_threshold(
+                            opts.size_log2,
+                            grow_at,
+                        ))
+                    } else {
+                        Box::new(QuiescingResize::with_threshold(
+                            opts.size_log2,
+                            grow_at,
+                        ))
+                    };
+                    let cap0 = table.capacity();
+                    let prefill = (grow_at * cap0 as f64 * 0.9) as u64;
+                    for k in 1..=prefill {
+                        table.add(k);
+                    }
+                    let cfg = LatencyCfg {
+                        duration_ms: opts.duration_ms,
+                        key_space: 4 * cap0 as u64,
+                        add_pct: 45,
+                        remove_pct: 10,
+                        seed: 0xF15 + rep as u64,
+                        pin: opts.pin,
+                    };
+                    let (r, h) = run_latency(table.as_ref(), &cfg, threads);
+                    hist.merge(&h);
+                    ops_us += r.ops_per_us();
+                    grows += (table.capacity() / cap0).trailing_zeros();
+                }
+                let note = if grows == 0 {
+                    "  (!) no migration ran — raise --ms or lower threshold"
+                } else {
+                    ""
+                };
+                println!(
+                    "{:<14} {:>4} {:>10.2} {:>9} {:>9} {:>9} {:>11} {:>8}{}",
+                    label,
+                    threads,
+                    ops_us / opts.reps as f64,
+                    us(hist.quantile_ns(0.5)),
+                    us(hist.quantile_ns(0.99)),
+                    us(hist.quantile_ns(0.999)),
+                    us(hist.max_ns()),
+                    grows,
+                    note
+                );
+            }
+        }
+    }
+}
+
 /// **Table 1**: simulated cache misses relative to K-CAS Robin Hood
 /// (single core), via the trace models + cache hierarchy.
 pub fn table1(size_log2: u32, ops: u64) {
@@ -486,9 +576,10 @@ pub fn smoke() {
         pin: false,
         reps: 1,
     };
-    let kinds = TableKind::ALL_CONCURRENT
-        .into_iter()
-        .chain([TableKind::ShardedKCasRh { shards: 4 }]);
+    let kinds = TableKind::ALL_CONCURRENT.into_iter().chain([
+        TableKind::ShardedKCasRh { shards: 4 },
+        TableKind::IncResizableRh,
+    ]);
     for kind in kinds {
         let cfg = WorkloadCfg::cell(
             opts.size_log2,

@@ -19,10 +19,13 @@
 //!   ([`maps::kcas_rh`]), transactional Robin Hood ([`maps::tx_rh`]),
 //!   baselines (Hopscotch, lock-free/locked linear probing, Michael's
 //!   separate chaining, serial Robin Hood), and the scaling
-//!   compositions: [`maps::resizable`] (epoch-style growable wrapper)
-//!   and [`maps::sharded`] (generic `Sharded<T>` facade routing keys by
-//!   high hash bits; per-shard `ResizableRobinHood` composition grows
-//!   one shard at a time instead of quiescing the world). The key→value
+//!   compositions: [`maps::resizable`] (growth two ways: non-blocking
+//!   two-generation cooperative migration — `inc-resize-rh[:N]`,
+//!   `inc-resize-rh-map[:N]` — plus the quiescing epoch-RwLock
+//!   baseline `resizable-rh`) and [`maps::sharded`] (generic
+//!   `Sharded<T>` facade routing keys by high hash bits; growable
+//!   compositions resize one shard at a time, and the incremental
+//!   engine doesn't pause even that one). The key→value
 //!   side ([`maps::ConcurrentMap`], spec'd by [`maps::MapKind`] with the
 //!   same `:N` shard CLI syntax, e.g. `sharded-kcas-rh-map:16`) lifts
 //!   [`maps::kcas_rh_map::KCasRobinHoodMap`] and a locked-LP baseline
@@ -42,7 +45,10 @@
 //!   loader behind the `xla` cargo feature.
 //! * [`coordinator`] — experiment registry and CLI entry points that
 //!   regenerate each of the paper's figures and tables, plus the
-//!   `fig13_sharding` shard-count x thread-count sweep.
+//!   extension sweeps: `fig13_sharding` (shard count x threads),
+//!   `fig14_batching` (batch size x threads), and `fig15_resize`
+//!   (op tail latency during an in-flight grow migration, incremental
+//!   vs quiescing engine).
 //! * [`util`] — hashing (bit-identical to the L1 Pallas kernel), RNG,
 //!   thread pinning, a mini property-testing driver, and the
 //!   offline-build shims ([`util::pad`] cache padding, [`util::error`]

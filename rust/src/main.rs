@@ -7,9 +7,12 @@
 //! crh fig13_sharding [--shards 1,4,16] (same options)
 //! crh fig14_batching [--map sharded-kcas-rh-map:4] [--batches 1,8,64]
 //!            (same options; batched KV pipeline vs unbatched baseline)
+//! crh fig15_resize [--grow-ats 0.7,0.85] [--size-log2 N] [--ms N]
+//!            [--threads 1,2,4] (op latency during an in-flight grow:
+//!            incremental two-generation migration vs quiescing rebuild)
 //! crh table1 [--size-log2 N] [--ops N]
-//! crh bench  --table kcas-rh|sharded-kcas-rh:16|... [--lf 0.6]
-//!            [--updates 10] [--threads N] [--ms N] [--zipf]
+//! crh bench  --table kcas-rh|inc-resize-rh|sharded-kcas-rh:16|...
+//!            [--lf 0.6] [--updates 10] [--threads N] [--ms N] [--zipf]
 //! crh analyze [--size-log2 N] [--lf 0.8]       (probe statistics)
 //! crh validate                                  (artifact golden check)
 //! crh smoke
@@ -42,9 +45,9 @@ fn parse_list<T: std::str::FromStr>(args: &[String], name: &str) -> Option<Vec<T
 
 fn usage() -> ! {
     eprintln!(
-        "usage: crh <fig10|fig11|fig12|fig13_sharding|fig14_batching|table1|\
-         bench|ablate-ts|analyze|validate|smoke> [options]\n(see `main.rs` \
-         docs or README for options)"
+        "usage: crh <fig10|fig11|fig12|fig13_sharding|fig14_batching|\
+         fig15_resize|table1|bench|ablate-ts|analyze|validate|smoke> \
+         [options]\n(see `main.rs` docs or README for options)"
     );
     std::process::exit(2)
 }
@@ -86,6 +89,16 @@ fn main() -> Result<()> {
             let batches =
                 parse_list(&args, "--batches").unwrap_or_else(|| vec![1, 8, 64]);
             coordinator::fig14_batching(&opts, kind, &batches);
+        }
+        "fig15_resize" | "fig15" => {
+            // The latency cells rebuild + prefill per rep, so default to
+            // a migration-friendly size instead of the paper's 2^23.
+            if parse_flag::<u32>(&args, "--size-log2").is_none() {
+                opts.size_log2 = 20;
+            }
+            let grow_ats = parse_list(&args, "--grow-ats")
+                .unwrap_or_else(|| vec![0.7, 0.85]);
+            coordinator::fig15_resize(&opts, &grow_ats);
         }
         "table1" => {
             let ops = parse_flag(&args, "--ops").unwrap_or(6_000_000u64);

@@ -17,6 +17,42 @@
 //! Progress (paper §3.5): `Contains` and the miss path of `Remove` are
 //! obstruction-free; `Add` and the hit path of `Remove` inherit the
 //! K-CAS's progress (lock-free phase-1 installs with helping).
+//!
+//! ## Write-path guards (beyond the paper's Fig. 8/9)
+//!
+//! Two descriptor entries were added to make concurrent reorganisation
+//! *mutually visible* between writers (the paper's timestamps only
+//! protect readers):
+//!
+//! * `Add` includes one timestamp **guard** (`v -> v`, a no-op CAS) per
+//!   shard it probed *over* without displacing. Without it, an add that
+//!   probed bucket `j-1` while occupied could commit its key at `j`
+//!   after a concurrent remove's backward shift turned `j-1` into Nil —
+//!   stranding the new key behind an empty bucket, unreachable to every
+//!   probe (an append-past-fresh-Nil variant of the Fig. 5 race).
+//! * `Remove` includes a value guard on its chain **terminator** (the
+//!   Nil or at-home bucket that ended the shift scan). Without it, an
+//!   add landing in that Nil (or a displacement enriching the at-home
+//!   key) between the scan and the commit would leave a key stranded
+//!   past the freshly shifted-in Nil.
+//!
+//! Both guards are also what make the two-generation migration in
+//! [`super::resizable`] sound: they uphold the invariant that no live
+//! key is ever stored beyond an empty (or migration-frozen-empty)
+//! bucket of its probe run.
+//!
+//! ## Migration marks (two-generation incremental resize)
+//!
+//! [`super::resizable::IncResizableRobinHood`] freezes this table one
+//! bucket at a time while draining it into a double-size successor. A
+//! frozen bucket holds one of two reserved words above [`super::MAX_KEY`]:
+//! [`FROZEN_EMPTY`] (was Nil — still a probe terminator, nothing can be
+//! inserted here again) or [`FROZEN_TOMB`] (its key was transferred to
+//! the next generation in the same K-CAS — probes must skip it without
+//! applying the Robin Hood distance cut-off, because the original key's
+//! DFB is no longer recoverable). The `*_mig` entry points surface
+//! frozen sightings to the wrapper instead of retrying; the plain trait
+//! entry points never observe a frozen word (only the wrapper freezes).
 
 use std::cell::RefCell;
 
@@ -27,6 +63,49 @@ use crate::kcas::{OpBuilder, Word};
 use crate::util::hash::{dfb, home_bucket, splitmix64};
 
 const NIL: u64 = 0;
+
+/// Migration mark for a bucket whose key was transferred to the next
+/// generation (the transfer K-CAS swings `key -> FROZEN_TOMB`). Probes
+/// skip it without the distance cut-off. Above `MAX_KEY`, so it can
+/// never collide with a live key.
+pub(crate) const FROZEN_TOMB: u64 = (1 << 62) - 1;
+
+/// Migration mark for a bucket frozen while empty (`Nil ->
+/// FROZEN_EMPTY`). Still a probe terminator: nothing was ever stored
+/// past it in any run, and nothing can be inserted into it again.
+pub(crate) const FROZEN_EMPTY: u64 = (1 << 62) - 2;
+
+/// Is `v` one of the two migration marks?
+#[inline(always)]
+pub(crate) fn is_frozen(v: u64) -> bool {
+    v >= FROZEN_EMPTY
+}
+
+/// A migration-frozen bucket was encountered: this generation cannot
+/// answer the operation; the resizable wrapper must re-route it.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Frozen;
+
+/// Outcome of a frozen-aware membership probe ([`KCasRobinHood::probe_mig`]).
+pub(crate) enum Probe {
+    /// The key is live in this generation.
+    Found,
+    /// Definitive miss: no frozen bucket seen along the (timestamp-
+    /// validated) probe, so the key is in no generation as of the probe.
+    Absent,
+    /// Timestamp-validated miss in *this* generation, but the probe
+    /// crossed frozen buckets — the key may live in the next one.
+    FrozenMiss,
+}
+
+/// One attempt of a write path: probe + (at most) one K-CAS.
+enum Attempt {
+    /// The operation committed (or concluded without needing a CAS);
+    /// the payload is the operation's return value.
+    Done(bool),
+    /// The K-CAS (or a miss validation) lost a race; re-probe.
+    Raced,
+}
 
 /// Timestamp sharding: at least 64 buckets per shard, and at most
 /// `2^MAX_TS_SHARDS_LOG2` shards in total. The paper shards timestamps
@@ -55,6 +134,10 @@ struct Scratch {
     bump: Vec<(usize, u64)>,
     /// Backward-shift chain values observed during `remove`.
     chain: Vec<u64>,
+    /// `(shard, first-seen timestamp, displaced-here)` recorded along an
+    /// add probe: displaced shards get a bump (`v -> v+1`), probed-over
+    /// shards a guard (`v -> v`) — see the module docs.
+    guard: Vec<(usize, u64, bool)>,
 }
 
 thread_local! {
@@ -63,6 +146,7 @@ thread_local! {
         seen: Vec::with_capacity(64),
         bump: Vec::with_capacity(64),
         chain: Vec::with_capacity(64),
+        guard: Vec::with_capacity(64),
     });
 }
 
@@ -112,7 +196,7 @@ impl KCasRobinHood {
     #[inline(always)]
     fn ts_word(&self, shard: usize) -> &Word {
         debug_assert!(shard < self.ts.len());
-        unsafe { &self.ts.get_unchecked(shard) }
+        unsafe { self.ts.get_unchecked(shard) }
     }
 
     #[inline]
@@ -237,59 +321,12 @@ impl ConcurrentSet for KCasRobinHood {
     }
 
     fn add_hashed(&self, h: u64, key: u64) -> bool {
-        check_key(key);
-        let home = (h & self.mask) as usize;
-        SCRATCH.with(|s| {
-            let scratch = &mut *s.borrow_mut();
-            'retry: loop {
-                scratch.op.clear();
-                scratch.bump.clear();
-                let mut active = key;
-                let mut active_dist = 0u64;
-                let mut i = home;
-                let mut probes = 0usize;
-                loop {
-                    assert!(
-                        probes <= self.size(),
-                        "K-CAS Robin Hood table is full"
-                    );
-                    probes += 1;
-                    let shard = self.shard_of(i);
-                    // Timestamp read precedes the key read (line 10-11).
-                    let ts_val = self.ts_word(shard).read();
-                    let cur = self.bucket(i).read();
-                    if cur == NIL {
-                        // Lines 12-16: commit the whole reorganisation.
-                        scratch.op.push(self.bucket(i), NIL, active);
-                        for &(sh, v) in scratch.bump.iter() {
-                            scratch.op.push(self.ts_word(sh), v, v + 1);
-                        }
-                        if scratch.op.execute() {
-                            return true;
-                        }
-                        continue 'retry;
-                    }
-                    if cur == key {
-                        return false; // line 18: already a member
-                    }
-                    let cur_d = self.dist(cur, i);
-                    if cur_d < active_dist {
-                        // Lines 19-26: steal from the rich.
-                        scratch.op.push(self.bucket(i), cur, active);
-                        // add_timestamp_increment (line 23): dedup by
-                        // most-recent shard — probes advance linearly.
-                        if scratch.bump.last().map(|&(s2, _)| s2) != Some(shard)
-                        {
-                            scratch.bump.push((shard, ts_val));
-                        }
-                        active = cur;
-                        active_dist = cur_d;
-                    }
-                    i = (i + 1) & self.mask as usize;
-                    active_dist += 1;
-                }
-            }
-        })
+        match self.add_mig(h, key) {
+            Ok(added) => added,
+            // Only the resizable wrapper ever freezes buckets, and it
+            // routes all traffic through `add_mig` itself.
+            Err(Frozen) => unreachable!("frozen bucket in standalone table"),
+        }
     }
 
     /// Paper Fig. 9.
@@ -298,99 +335,10 @@ impl ConcurrentSet for KCasRobinHood {
     }
 
     fn remove_hashed(&self, h: u64, key: u64) -> bool {
-        check_key(key);
-        let home = (h & self.mask) as usize;
-        SCRATCH.with(|s| {
-            let scratch = &mut *s.borrow_mut();
-            'retry: loop {
-                scratch.seen.clear();
-                scratch.op.clear();
-                scratch.bump.clear();
-                let mut i = home;
-                let mut cur_dist = 0u64;
-                let mut hit = false;
-                loop {
-                    self.record_ts(&mut scratch.seen, i);
-                    let cur = self.bucket(i).read();
-                    if cur == NIL {
-                        break;
-                    }
-                    if cur == key {
-                        hit = true;
-                        break;
-                    }
-                    if self.dist(cur, i) < cur_dist {
-                        break;
-                    }
-                    i = (i + 1) & self.mask as usize;
-                    cur_dist += 1;
-                    if cur_dist as usize > self.size() {
-                        break;
-                    }
-                }
-                if !hit {
-                    // Miss path: timestamp validation (lines 23-28).
-                    for &(shard, v) in scratch.seen.iter() {
-                        if self.ts_word(shard).read() != v {
-                            continue 'retry;
-                        }
-                    }
-                    return false;
-                }
-                // Hit at bucket i: backward-shift chain (shuffle_items).
-                // Collect successor keys until Nil or an at-home entry.
-                scratch.chain.clear();
-                scratch.chain.push(key);
-                // Timestamp of the removal bucket itself.
-                {
-                    let shard = self.shard_of(i);
-                    let v = scratch
-                        .seen
-                        .iter()
-                        .rev()
-                        .find(|&&(s2, _)| s2 == shard)
-                        .map(|&(_, v)| v)
-                        .unwrap_or_else(|| self.ts_word(shard).read());
-                    scratch.bump.push((shard, v));
-                }
-                let mut j = (i + 1) & self.mask as usize;
-                loop {
-                    let shard = self.shard_of(j);
-                    let ts_val = self.ts_word(shard).read();
-                    let nk = self.bucket(j).read();
-                    if nk == NIL || self.dist(nk, j) == 0 {
-                        break;
-                    }
-                    if scratch.bump.last().map(|&(s2, _)| s2) != Some(shard) {
-                        scratch.bump.push((shard, ts_val));
-                    }
-                    scratch.chain.push(nk);
-                    j = (j + 1) & self.mask as usize;
-                    if scratch.chain.len() > self.size() {
-                        continue 'retry; // table churned under us
-                    }
-                }
-                // Descriptor: shift each chain entry back one bucket and
-                // Nil the last, plus the timestamp bumps.
-                let mut pos = i;
-                for w in 0..scratch.chain.len() {
-                    let next_val = scratch
-                        .chain
-                        .get(w + 1)
-                        .copied()
-                        .unwrap_or(NIL);
-                    scratch.op.push(self.bucket(pos), scratch.chain[w], next_val);
-                    pos = (pos + 1) & self.mask as usize;
-                }
-                for &(sh, v) in scratch.bump.iter() {
-                    scratch.op.push(self.ts_word(sh), v, v + 1);
-                }
-                if scratch.op.execute() {
-                    return true;
-                }
-                continue 'retry;
-            }
-        })
+        match self.remove_mig(h, key) {
+            Ok(removed) => removed,
+            Err(Frozen) => unreachable!("frozen bucket in standalone table"),
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -418,6 +366,374 @@ impl ConcurrentSet for KCasRobinHood {
         (0..self.size())
             .filter(|&i| self.table[i].read() != NIL)
             .count()
+    }
+}
+
+/// Write paths (single-attempt bodies shared by the plain entry points,
+/// the migration-aware `*_mig` twins, and the generation-transfer
+/// machinery) and the migration primitives themselves.
+impl KCasRobinHood {
+    /// One full `add` attempt (paper Fig. 8): probe, build the
+    /// displacement descriptor, execute one K-CAS. `seed` is an extra
+    /// entry `(word, expected, new)` committed atomically with the
+    /// insert — the generation transfer passes the source bucket here
+    /// (`key -> FROZEN_TOMB`) so a key is never in two generations.
+    ///
+    /// `Done(false)` (already a member) never commits the seed.
+    fn try_add_one(
+        &self,
+        scratch: &mut Scratch,
+        home: usize,
+        key: u64,
+        seed: Option<(&Word, u64, u64)>,
+    ) -> Result<Attempt, Frozen> {
+        scratch.op.clear();
+        scratch.guard.clear();
+        let mut active = key;
+        let mut active_dist = 0u64;
+        let mut i = home;
+        let mut probes = 0usize;
+        loop {
+            assert!(probes <= self.size(), "K-CAS Robin Hood table is full");
+            probes += 1;
+            let shard = self.shard_of(i);
+            // Timestamp read precedes the key read (line 10-11).
+            let ts_val = self.ts_word(shard).read();
+            let cur = self.bucket(i).read();
+            if is_frozen(cur) {
+                return Err(Frozen);
+            }
+            if cur == NIL {
+                // Lines 12-16: commit the whole reorganisation, plus
+                // one timestamp bump per displaced shard and one guard
+                // per probed-over shard (module docs).
+                scratch.op.push(self.bucket(i), NIL, active);
+                for &(sh, v, displaced) in scratch.guard.iter() {
+                    scratch.op.push(self.ts_word(sh), v, v + u64::from(displaced));
+                }
+                if let Some((word, old, new)) = seed {
+                    scratch.op.push(word, old, new);
+                }
+                return Ok(if scratch.op.execute() {
+                    Attempt::Done(true)
+                } else {
+                    Attempt::Raced
+                });
+            }
+            if cur == key {
+                return Ok(Attempt::Done(false)); // line 18: member
+            }
+            // Probed over an occupied bucket: its shard's timestamp now
+            // guards this attempt (dedup by most-recent shard — probes
+            // advance linearly, so shards repeat contiguously).
+            if scratch.guard.last().map(|&(s2, _, _)| s2) != Some(shard) {
+                scratch.guard.push((shard, ts_val, false));
+            }
+            let cur_d = self.dist(cur, i);
+            if cur_d < active_dist {
+                // Lines 19-26: steal from the rich; upgrade the shard's
+                // guard to a bump (add_timestamp_increment, line 23).
+                scratch.op.push(self.bucket(i), cur, active);
+                if let Some(last) = scratch.guard.last_mut() {
+                    last.2 = true;
+                }
+                active = cur;
+                active_dist = cur_d;
+            }
+            i = (i + 1) & self.mask as usize;
+            active_dist += 1;
+        }
+    }
+
+    /// One full `remove` attempt (paper Fig. 9): probe, collect the
+    /// backward-shift chain, execute one K-CAS.
+    fn try_remove_one(
+        &self,
+        scratch: &mut Scratch,
+        home: usize,
+        key: u64,
+    ) -> Result<Attempt, Frozen> {
+        scratch.seen.clear();
+        scratch.op.clear();
+        scratch.bump.clear();
+        let mut i = home;
+        let mut cur_dist = 0u64;
+        let mut hit = false;
+        loop {
+            self.record_ts(&mut scratch.seen, i);
+            let cur = self.bucket(i).read();
+            if is_frozen(cur) {
+                return Err(Frozen);
+            }
+            if cur == NIL {
+                break;
+            }
+            if cur == key {
+                hit = true;
+                break;
+            }
+            if self.dist(cur, i) < cur_dist {
+                break;
+            }
+            i = (i + 1) & self.mask as usize;
+            cur_dist += 1;
+            if cur_dist as usize > self.size() {
+                break;
+            }
+        }
+        if !hit {
+            // Miss path: timestamp validation (lines 23-28).
+            for &(shard, v) in scratch.seen.iter() {
+                if self.ts_word(shard).read() != v {
+                    return Ok(Attempt::Raced);
+                }
+            }
+            return Ok(Attempt::Done(false));
+        }
+        // Hit at bucket i: backward-shift chain (shuffle_items).
+        // Collect successor keys until Nil or an at-home entry.
+        scratch.chain.clear();
+        scratch.chain.push(key);
+        // Timestamp of the removal bucket itself.
+        {
+            let shard = self.shard_of(i);
+            let v = scratch
+                .seen
+                .iter()
+                .rev()
+                .find(|&&(s2, _)| s2 == shard)
+                .map(|&(_, v)| v)
+                .unwrap_or_else(|| self.ts_word(shard).read());
+            scratch.bump.push((shard, v));
+        }
+        let mut j = (i + 1) & self.mask as usize;
+        let terminator;
+        loop {
+            let shard = self.shard_of(j);
+            let ts_val = self.ts_word(shard).read();
+            let nk = self.bucket(j).read();
+            if is_frozen(nk) {
+                // The shift chain crosses a migrating region: the
+                // wrapper must re-route this remove to the new
+                // generation (after freezing the key's home run).
+                return Err(Frozen);
+            }
+            if nk == NIL || self.dist(nk, j) == 0 {
+                // Chain terminator. Guard its value in the descriptor:
+                // an add landing in this Nil (or a displacement
+                // enriching this at-home key) between scan and commit
+                // would extend the chain under us (module docs).
+                terminator = (j, nk);
+                break;
+            }
+            if scratch.bump.last().map(|&(s2, _)| s2) != Some(shard) {
+                scratch.bump.push((shard, ts_val));
+            }
+            scratch.chain.push(nk);
+            j = (j + 1) & self.mask as usize;
+            if scratch.chain.len() > self.size() {
+                return Ok(Attempt::Raced); // table churned under us
+            }
+        }
+        // Descriptor: shift each chain entry back one bucket and Nil
+        // the last, plus the terminator guard and the timestamp bumps.
+        let Scratch { op, chain, bump, .. } = scratch;
+        let mut pos = i;
+        for (w, &cur) in chain.iter().enumerate() {
+            let next_val = chain.get(w + 1).copied().unwrap_or(NIL);
+            op.push(self.bucket(pos), cur, next_val);
+            pos = (pos + 1) & self.mask as usize;
+        }
+        op.push(self.bucket(terminator.0), terminator.1, terminator.1);
+        for &(sh, v) in bump.iter() {
+            op.push(self.ts_word(sh), v, v + 1);
+        }
+        Ok(if op.execute() { Attempt::Done(true) } else { Attempt::Raced })
+    }
+
+    /// Migration-aware `add`: like [`ConcurrentSet::add_hashed`] but
+    /// surfaces frozen sightings instead of looping on them.
+    pub(crate) fn add_mig(&self, h: u64, key: u64) -> Result<bool, Frozen> {
+        check_key(key);
+        let home = (h & self.mask) as usize;
+        SCRATCH.with(|s| {
+            let scratch = &mut *s.borrow_mut();
+            loop {
+                match self.try_add_one(scratch, home, key, None)? {
+                    Attempt::Done(r) => return Ok(r),
+                    Attempt::Raced => continue,
+                }
+            }
+        })
+    }
+
+    /// Migration-aware `remove`.
+    pub(crate) fn remove_mig(&self, h: u64, key: u64) -> Result<bool, Frozen> {
+        check_key(key);
+        let home = (h & self.mask) as usize;
+        SCRATCH.with(|s| {
+            let scratch = &mut *s.borrow_mut();
+            loop {
+                match self.try_remove_one(scratch, home, key)? {
+                    Attempt::Done(r) => return Ok(r),
+                    Attempt::Raced => continue,
+                }
+            }
+        })
+    }
+
+    /// Frozen-aware membership probe (wrapper fast path *and* the
+    /// source-generation read during migration). `FROZEN_TOMB` is
+    /// skipped without the distance cut-off; `FROZEN_EMPTY` terminates
+    /// like Nil. Misses are timestamp-validated exactly like Fig. 7
+    /// before either `Absent` or `FrozenMiss` is trusted.
+    pub(crate) fn probe_mig(&self, h: u64, key: u64) -> Probe {
+        check_key(key);
+        let home = (h & self.mask) as usize;
+        SCRATCH.with(|s| {
+            let mut guard = s.borrow_mut();
+            let seen = &mut guard.seen;
+            'retry: loop {
+                seen.clear();
+                let mut saw_frozen = false;
+                let mut i = home;
+                let mut cur_dist = 0u64;
+                loop {
+                    self.record_ts(seen, i);
+                    let cur = self.bucket(i).read();
+                    if cur == key {
+                        return Probe::Found;
+                    }
+                    if cur == NIL {
+                        break;
+                    }
+                    if cur == FROZEN_EMPTY {
+                        saw_frozen = true;
+                        break;
+                    }
+                    if cur == FROZEN_TOMB {
+                        saw_frozen = true; // skip; DFB unknowable
+                    } else if self.dist(cur, i) < cur_dist {
+                        break;
+                    }
+                    i = (i + 1) & self.mask as usize;
+                    cur_dist += 1;
+                    if cur_dist as usize > self.size() {
+                        break;
+                    }
+                }
+                for &(shard, v) in seen.iter() {
+                    if self.ts_word(shard).read() != v {
+                        continue 'retry;
+                    }
+                }
+                return if saw_frozen { Probe::FrozenMiss } else { Probe::Absent };
+            }
+        })
+    }
+
+    /// Freeze every bucket in `[start, start+len)` of this (source)
+    /// generation, transferring live keys into `target`. Idempotent and
+    /// safe to race with other helpers. Returns the keys moved by this
+    /// caller.
+    pub(crate) fn migrate_range(
+        &self,
+        target: &KCasRobinHood,
+        start: usize,
+        len: usize,
+    ) -> usize {
+        let mut moved = 0;
+        for i in start..(start + len).min(self.size()) {
+            moved += self.freeze_bucket(target, i);
+        }
+        moved
+    }
+
+    /// Freeze bucket `i` (empty -> [`FROZEN_EMPTY`], live key ->
+    /// transferred + [`FROZEN_TOMB`]); returns how many keys this call
+    /// moved (0 or 1).
+    pub(crate) fn freeze_bucket(&self, target: &KCasRobinHood, i: usize) -> usize {
+        loop {
+            let cur = self.bucket(i).read();
+            if is_frozen(cur) {
+                return 0;
+            }
+            if cur == NIL {
+                if self.bucket(i).cas(NIL, FROZEN_EMPTY) {
+                    return 0;
+                }
+            } else if self.transfer(target, i, cur) {
+                return 1;
+            }
+            // Lost a race (bucket churned under us): re-read.
+        }
+    }
+
+    /// Freeze `key`'s whole home run in this source generation: from the
+    /// home bucket forward, transfer every live key and freeze every
+    /// Nil, stopping once a frozen-empty terminator exists. Afterwards
+    /// the key definitively does not live in this generation and can
+    /// never re-enter it (adds abort on the frozen marks), so the caller
+    /// may operate on `target` alone.
+    pub(crate) fn migrate_home_run(&self, target: &KCasRobinHood, h: u64) -> usize {
+        let mut moved = 0;
+        let mut i = (h & self.mask) as usize;
+        let mut steps = 0usize;
+        loop {
+            let cur = self.bucket(i).read();
+            if cur == FROZEN_EMPTY {
+                return moved;
+            }
+            if cur == NIL {
+                if self.bucket(i).cas(NIL, FROZEN_EMPTY) {
+                    return moved;
+                }
+                continue; // bucket changed; re-read
+            }
+            if cur == FROZEN_TOMB {
+                i = (i + 1) & self.mask as usize;
+                steps += 1;
+                if steps > self.size() {
+                    return moved; // whole table already frozen
+                }
+                continue;
+            }
+            if self.transfer(target, i, cur) {
+                moved += 1;
+            }
+            // Re-read bucket i: on success it is now FROZEN_TOMB.
+        }
+    }
+
+    /// Move live `key` (read from source bucket `i`) into `target` and
+    /// tombstone the source bucket in **one K-CAS** — readers never see
+    /// the key in zero or two generations. Returns false if the source
+    /// bucket changed underneath (caller re-reads).
+    fn transfer(&self, target: &KCasRobinHood, i: usize, key: u64) -> bool {
+        let h = splitmix64(key);
+        let home = (h & target.mask) as usize;
+        let seed = Some((self.bucket(i), key, FROZEN_TOMB));
+        SCRATCH.with(|s| {
+            let scratch = &mut *s.borrow_mut();
+            match target.try_add_one(scratch, home, key, seed) {
+                Ok(Attempt::Done(true)) => true,
+                Ok(Attempt::Done(false)) => {
+                    // Already in `target`: cannot happen under the
+                    // freeze protocol (writers freeze a key's whole home
+                    // run before inserting it into the next generation).
+                    // Defensively freeze without duplicating.
+                    self.bucket(i).cas(key, FROZEN_TOMB)
+                }
+                Ok(Attempt::Raced) => false,
+                // Frozen target: this thread stalled across a whole
+                // migration — helpers drained the source, a chained
+                // migration began freezing `target`, and our probe of
+                // it hit a mark. Our seed (source bucket still holding
+                // `key`) can no longer match either; report no-move and
+                // let the caller re-read the (now tombstoned) bucket.
+                Err(Frozen) => false,
+            }
+        })
     }
 }
 
@@ -719,5 +1035,83 @@ mod tests {
         }
         assert_eq!(t.len_quiesced(), 100);
         t.check_invariant().unwrap();
+    }
+
+    #[test]
+    fn migrate_range_drains_every_key() {
+        let src = KCasRobinHood::new(7);
+        let dst = KCasRobinHood::new(8);
+        for k in 1..=80u64 {
+            src.add(k);
+        }
+        let moved = src.migrate_range(&dst, 0, src.capacity());
+        assert_eq!(moved, 80);
+        assert_eq!(dst.len_quiesced(), 80);
+        dst.check_invariant().unwrap();
+        for k in 1..=80u64 {
+            assert!(dst.contains(k), "lost {k} in transfer");
+        }
+        // Source is fully frozen: every bucket holds a mark, and probes
+        // report FrozenMiss rather than a clean Absent.
+        for i in 0..src.capacity() {
+            assert!(is_frozen(src.table[i].read()), "bucket {i} not frozen");
+        }
+        assert!(matches!(
+            src.probe_mig(splitmix64(81), 81),
+            Probe::FrozenMiss
+        ));
+    }
+
+    #[test]
+    fn migrate_home_run_evicts_the_key() {
+        let src = KCasRobinHood::new(7);
+        let dst = KCasRobinHood::new(8);
+        for k in 1..=60u64 {
+            src.add(k);
+        }
+        for k in [1u64, 17, 42] {
+            let h = splitmix64(k);
+            src.migrate_home_run(&dst, h);
+            // The key left the source atomically and landed in target.
+            assert!(!matches!(src.probe_mig(h, k), Probe::Found));
+            assert!(dst.contains(k), "{k} not transferred");
+            // Idempotent: a second run freeze is a no-op.
+            assert_eq!(src.migrate_home_run(&dst, h), 0);
+        }
+        // Untouched runs still answer from the source.
+        let mut found_in_src = 0;
+        for k in 1..=60u64 {
+            if matches!(src.probe_mig(splitmix64(k), k), Probe::Found) {
+                found_in_src += 1;
+            }
+        }
+        assert!(found_in_src > 0, "home-run freeze drained the whole table");
+    }
+
+    #[test]
+    fn frozen_buckets_abort_writers() {
+        let t = KCasRobinHood::new(7);
+        let key = 5u64;
+        let h = splitmix64(key);
+        let home = (h & t.mask) as usize;
+        assert!(t.bucket(home).cas(NIL, FROZEN_EMPTY));
+        assert!(t.add_mig(h, key).is_err(), "add must abort on frozen home");
+        assert!(matches!(t.probe_mig(h, key), Probe::FrozenMiss));
+    }
+
+    #[test]
+    fn probe_mig_matches_contains_on_clean_tables() {
+        let t = KCasRobinHood::new(8);
+        for k in 1..=120u64 {
+            t.add(k);
+        }
+        for k in 1..=240u64 {
+            let h = splitmix64(k);
+            match t.probe_mig(h, k) {
+                Probe::Found => assert!(t.contains(k)),
+                Probe::Absent => assert!(!t.contains(k)),
+                Probe::FrozenMiss => panic!("frozen in standalone table"),
+            }
+        }
     }
 }

@@ -18,16 +18,50 @@
 //!
 //! Values are 62-bit (`<= kcas::MAX_VALUE`); store indices/handles for
 //! larger payloads.
+//!
+//! The write paths carry the same descriptor guards as the set (probed
+//! shard timestamp guards on `insert`, a chain-terminator guard on
+//! `remove` — see `kcas_rh`'s module docs), and the same migration
+//! marks: only the *key* word of a bucket is frozen
+//! (`FROZEN_TOMB`/`FROZEN_EMPTY` from `kcas_rh`); the value word of a
+//! frozen bucket is dead. A generation transfer moves the `(key,
+//! value)` pair into the next table and tombstones the source key word
+//! in one K-CAS, guarding the source value word so the pair cannot tear
+//! mid-transfer. [`super::resizable::ResizableRobinHoodMap`] drives
+//! these entry points.
 
 use std::cell::RefCell;
 
 use crate::util::pad::CachePadded;
 
+use super::kcas_rh::{is_frozen, Frozen, FROZEN_EMPTY, FROZEN_TOMB};
 use super::{check_key, ConcurrentMap, MapOp, MapReply};
 use crate::kcas::{OpBuilder, Word};
-use crate::util::hash::{dfb, home_bucket};
+use crate::util::hash::{dfb, home_bucket, splitmix64};
 
 const NIL: u64 = 0;
+
+/// Outcome of a frozen-aware lookup ([`KCasRobinHoodMap::get_mig`]).
+pub(crate) enum ProbeVal {
+    /// Live in this generation, paired with this value.
+    Found(u64),
+    /// Definitive miss (no frozen bucket crossed; timestamp-validated).
+    Absent,
+    /// Timestamp-validated miss here, but the probe crossed frozen
+    /// buckets — the key may live in the next generation.
+    FrozenMiss,
+}
+
+/// One attempt of a write path: probe + (at most) one K-CAS.
+enum Attempt {
+    /// Committed; payload = previous value (insert) / removed value.
+    Done(Option<u64>),
+    /// Seeded (transfer) insert found the key already present in the
+    /// target; nothing was committed.
+    Present,
+    /// Lost a race; re-probe.
+    Raced,
+}
 
 struct Scratch {
     op: OpBuilder,
@@ -35,6 +69,9 @@ struct Scratch {
     bump: Vec<(usize, u64)>,
     /// (key, value) chain observed during remove's shift scan.
     chain: Vec<(u64, u64)>,
+    /// `(shard, first-seen timestamp, displaced-here)` along an insert
+    /// probe (bump displaced shards, guard probed-over shards).
+    guard: Vec<(usize, u64, bool)>,
 }
 
 thread_local! {
@@ -43,6 +80,7 @@ thread_local! {
         seen: Vec::with_capacity(64),
         bump: Vec::with_capacity(64),
         chain: Vec::with_capacity(64),
+        guard: Vec::with_capacity(64),
     });
 }
 
@@ -155,65 +193,106 @@ impl KCasRobinHoodMap {
         key: u64,
         value: u64,
     ) -> Option<u64> {
-        assert!(value <= crate::kcas::MAX_VALUE);
-        {
-            'retry: loop {
-                scratch.op.clear();
-                scratch.bump.clear();
-                let mut active_key = key;
-                let mut active_val = value;
-                let mut active_dist = 0u64;
-                let mut i = home;
-                let mut probes = 0usize;
-                loop {
-                    assert!(probes <= self.size(), "map is full");
-                    probes += 1;
-                    let shard = self.shard_of(i);
-                    let ts_val = self.ts[shard].read();
-                    let cur = self.keys[i].read();
-                    if cur == NIL {
-                        scratch.op.push(&self.keys[i], NIL, active_key);
-                        scratch.op.push(&self.vals[i], self.vals[i].read(), active_val);
-                        for &(sh, v) in scratch.bump.iter() {
-                            scratch.op.push(&self.ts[sh], v, v + 1);
-                        }
-                        if scratch.op.execute() {
-                            return None;
-                        }
-                        continue 'retry;
-                    }
-                    if cur == key {
-                        // Overwrite: value word only; pairing stays.
-                        let old = self.vals[i].read();
-                        // The key could relocate between the key read
-                        // and the value CAS; include the key word as a
-                        // guard so the pair swap is atomic.
-                        scratch.op.clear();
-                        scratch.op.push(&self.keys[i], key, key);
-                        scratch.op.push(&self.vals[i], old, value);
-                        if scratch.op.execute() {
-                            return Some(old);
-                        }
-                        continue 'retry;
-                    }
-                    let cur_d = self.dist(cur, i);
-                    if cur_d < active_dist {
-                        // Displace the richer pair.
-                        let cur_val = self.vals[i].read();
-                        scratch.op.push(&self.keys[i], cur, active_key);
-                        scratch.op.push(&self.vals[i], cur_val, active_val);
-                        if scratch.bump.last().map(|&(s2, _)| s2) != Some(shard)
-                        {
-                            scratch.bump.push((shard, ts_val));
-                        }
-                        active_key = cur;
-                        active_val = cur_val;
-                        active_dist = cur_d;
-                    }
-                    i = (i + 1) & self.mask as usize;
-                    active_dist += 1;
+        loop {
+            match self.try_insert_one(scratch, home, key, value, None) {
+                Ok(Attempt::Done(prev)) => return prev,
+                Ok(Attempt::Raced) => continue,
+                Ok(Attempt::Present) => {
+                    unreachable!("Present is only reported to seeded inserts")
+                }
+                Err(Frozen) => {
+                    unreachable!("frozen bucket in standalone table")
                 }
             }
+        }
+    }
+
+    /// One full `insert` attempt: probe, build the pair-displacement
+    /// descriptor, execute one K-CAS. `seed` is the generation-transfer
+    /// hook: `(src key word, src key, src val word, src val)` — the
+    /// source key is tombstoned and the source value guarded in the same
+    /// descriptor, so a pair moves between generations atomically.
+    fn try_insert_one(
+        &self,
+        scratch: &mut Scratch,
+        home: usize,
+        key: u64,
+        value: u64,
+        seed: Option<(&Word, u64, &Word, u64)>,
+    ) -> Result<Attempt, Frozen> {
+        assert!(value <= crate::kcas::MAX_VALUE);
+        scratch.op.clear();
+        scratch.guard.clear();
+        let mut active_key = key;
+        let mut active_val = value;
+        let mut active_dist = 0u64;
+        let mut i = home;
+        let mut probes = 0usize;
+        loop {
+            assert!(probes <= self.size(), "map is full");
+            probes += 1;
+            let shard = self.shard_of(i);
+            let ts_val = self.ts[shard].read();
+            let cur = self.keys[i].read();
+            if is_frozen(cur) {
+                return Err(Frozen);
+            }
+            if cur == NIL {
+                scratch.op.push(&self.keys[i], NIL, active_key);
+                scratch.op.push(&self.vals[i], self.vals[i].read(), active_val);
+                for &(sh, v, displaced) in scratch.guard.iter() {
+                    scratch.op.push(&self.ts[sh], v, v + u64::from(displaced));
+                }
+                if let Some((kw, kv, vw, vv)) = seed {
+                    scratch.op.push(kw, kv, FROZEN_TOMB);
+                    scratch.op.push(vw, vv, vv);
+                }
+                return Ok(if scratch.op.execute() {
+                    Attempt::Done(None)
+                } else {
+                    Attempt::Raced
+                });
+            }
+            if cur == key {
+                if seed.is_some() {
+                    // Transfer found the key already in the target:
+                    // report without committing (caller handles).
+                    return Ok(Attempt::Present);
+                }
+                // Overwrite: value word only; pairing stays. The key
+                // could relocate between the key read and the value
+                // CAS; include the key word as a guard so the pair
+                // swap is atomic.
+                let old = self.vals[i].read();
+                scratch.op.clear();
+                scratch.op.push(&self.keys[i], key, key);
+                scratch.op.push(&self.vals[i], old, value);
+                return Ok(if scratch.op.execute() {
+                    Attempt::Done(Some(old))
+                } else {
+                    Attempt::Raced
+                });
+            }
+            // Probed over an occupied bucket: guard its shard (see
+            // kcas_rh module docs — append-past-fresh-Nil race).
+            if scratch.guard.last().map(|&(s2, _, _)| s2) != Some(shard) {
+                scratch.guard.push((shard, ts_val, false));
+            }
+            let cur_d = self.dist(cur, i);
+            if cur_d < active_dist {
+                // Displace the richer pair; upgrade guard to a bump.
+                let cur_val = self.vals[i].read();
+                scratch.op.push(&self.keys[i], cur, active_key);
+                scratch.op.push(&self.vals[i], cur_val, active_val);
+                if let Some(last) = scratch.guard.last_mut() {
+                    last.2 = true;
+                }
+                active_key = cur;
+                active_val = cur_val;
+                active_dist = cur_d;
+            }
+            i = (i + 1) & self.mask as usize;
+            active_dist += 1;
         }
     }
 
@@ -230,28 +309,208 @@ impl KCasRobinHoodMap {
         home: usize,
         key: u64,
     ) -> Option<u64> {
+        loop {
+            match self.try_remove_one(scratch, home, key) {
+                Ok(Attempt::Done(prev)) => return prev,
+                Ok(Attempt::Raced) => continue,
+                Ok(Attempt::Present) => unreachable!("remove never seeds"),
+                Err(Frozen) => {
+                    unreachable!("frozen bucket in standalone table")
+                }
+            }
+        }
+    }
+
+    /// One full `remove` attempt: probe, collect the pair shift chain,
+    /// execute one K-CAS (chain + terminator guard + timestamp bumps).
+    fn try_remove_one(
+        &self,
+        scratch: &mut Scratch,
+        home: usize,
+        key: u64,
+    ) -> Result<Attempt, Frozen> {
+        scratch.seen.clear();
+        scratch.op.clear();
+        scratch.bump.clear();
+        let mut i = home;
+        let mut cur_dist = 0u64;
+        let mut hit = false;
+        loop {
+            let shard = self.shard_of(i);
+            if scratch.seen.last().map(|&(x, _)| x) != Some(shard) {
+                scratch.seen.push((shard, self.ts[shard].read()));
+            }
+            let cur = self.keys[i].read();
+            if is_frozen(cur) {
+                return Err(Frozen);
+            }
+            if cur == NIL {
+                break;
+            }
+            if cur == key {
+                hit = true;
+                break;
+            }
+            if self.dist(cur, i) < cur_dist {
+                break;
+            }
+            i = (i + 1) & self.mask as usize;
+            cur_dist += 1;
+            if cur_dist as usize > self.size() {
+                break;
+            }
+        }
+        if !hit {
+            for &(shard, v) in scratch.seen.iter() {
+                if self.ts[shard].read() != v {
+                    return Ok(Attempt::Raced);
+                }
+            }
+            return Ok(Attempt::Done(None));
+        }
+        // Backward shift of (key, value) pairs.
+        let removed_val = self.vals[i].read();
+        scratch.chain.clear();
+        scratch.chain.push((key, removed_val));
         {
+            let shard = self.shard_of(i);
+            let v = scratch
+                .seen
+                .iter()
+                .rev()
+                .find(|&&(s2, _)| s2 == shard)
+                .map(|&(_, v)| v)
+                .unwrap_or_else(|| self.ts[shard].read());
+            scratch.bump.push((shard, v));
+        }
+        let mut j = (i + 1) & self.mask as usize;
+        let terminator;
+        loop {
+            let shard = self.shard_of(j);
+            let ts_val = self.ts[shard].read();
+            let nk = self.keys[j].read();
+            if is_frozen(nk) {
+                return Err(Frozen);
+            }
+            if nk == NIL || self.dist(nk, j) == 0 {
+                // Guard the terminator's key word: an insert landing in
+                // this Nil (or a displacement enriching this at-home
+                // pair) would extend the chain under us.
+                terminator = (j, nk);
+                break;
+            }
+            if scratch.bump.last().map(|&(s2, _)| s2) != Some(shard) {
+                scratch.bump.push((shard, ts_val));
+            }
+            scratch.chain.push((nk, self.vals[j].read()));
+            j = (j + 1) & self.mask as usize;
+            if scratch.chain.len() > self.size() {
+                return Ok(Attempt::Raced);
+            }
+        }
+        let Scratch { op, chain, bump, .. } = scratch;
+        let mut pos = i;
+        for (w, &(ck, cv)) in chain.iter().enumerate() {
+            let (nk, nv) = chain.get(w + 1).copied().unwrap_or((NIL, 0));
+            op.push(&self.keys[pos], ck, nk);
+            op.push(&self.vals[pos], cv, nv);
+            pos = (pos + 1) & self.mask as usize;
+        }
+        op.push(&self.keys[terminator.0], terminator.1, terminator.1);
+        for &(sh, v) in bump.iter() {
+            op.push(&self.ts[sh], v, v + 1);
+        }
+        Ok(if op.execute() {
+            Attempt::Done(Some(removed_val))
+        } else {
+            Attempt::Raced
+        })
+    }
+
+    /// Migration-aware `insert` (surfaces frozen sightings to the
+    /// resizable wrapper instead of looping on them).
+    pub(crate) fn insert_mig(
+        &self,
+        h: u64,
+        key: u64,
+        value: u64,
+    ) -> Result<Option<u64>, Frozen> {
+        check_key(key);
+        let home = (h & self.mask) as usize;
+        SCRATCH.with(|s| {
+            let scratch = &mut *s.borrow_mut();
+            loop {
+                match self.try_insert_one(scratch, home, key, value, None)? {
+                    Attempt::Done(prev) => return Ok(prev),
+                    Attempt::Raced => continue,
+                    Attempt::Present => {
+                        unreachable!("Present is only reported to seeds")
+                    }
+                }
+            }
+        })
+    }
+
+    /// Migration-aware `remove`.
+    pub(crate) fn remove_mig(
+        &self,
+        h: u64,
+        key: u64,
+    ) -> Result<Option<u64>, Frozen> {
+        check_key(key);
+        let home = (h & self.mask) as usize;
+        SCRATCH.with(|s| {
+            let scratch = &mut *s.borrow_mut();
+            loop {
+                match self.try_remove_one(scratch, home, key)? {
+                    Attempt::Done(prev) => return Ok(prev),
+                    Attempt::Raced => continue,
+                    Attempt::Present => unreachable!("remove never seeds"),
+                }
+            }
+        })
+    }
+
+    /// Frozen-aware lookup (wrapper fast path and the source-generation
+    /// read during migration): `FROZEN_TOMB` is skipped without the
+    /// distance cut-off, `FROZEN_EMPTY` terminates like Nil, and a hit
+    /// re-validates its shard timestamp after the value read so the
+    /// pairing is atomic — exactly like the plain `get`.
+    pub(crate) fn get_mig(&self, h: u64, key: u64) -> ProbeVal {
+        check_key(key);
+        let home = (h & self.mask) as usize;
+        SCRATCH.with(|s| {
+            let mut guard = s.borrow_mut();
+            let seen = &mut guard.seen;
             'retry: loop {
-                scratch.seen.clear();
-                scratch.op.clear();
-                scratch.bump.clear();
+                seen.clear();
+                let mut saw_frozen = false;
                 let mut i = home;
                 let mut cur_dist = 0u64;
-                let mut hit = false;
                 loop {
                     let shard = self.shard_of(i);
-                    if scratch.seen.last().map(|&(x, _)| x) != Some(shard) {
-                        scratch.seen.push((shard, self.ts[shard].read()));
+                    if seen.last().map(|&(x, _)| x) != Some(shard) {
+                        seen.push((shard, self.ts[shard].read()));
                     }
                     let cur = self.keys[i].read();
+                    if cur == key {
+                        let v = self.vals[i].read();
+                        let (sh, tv) = *seen.last().unwrap();
+                        if self.ts[sh].read() != tv {
+                            continue 'retry;
+                        }
+                        return ProbeVal::Found(v);
+                    }
                     if cur == NIL {
                         break;
                     }
-                    if cur == key {
-                        hit = true;
+                    if cur == FROZEN_EMPTY {
+                        saw_frozen = true;
                         break;
                     }
-                    if self.dist(cur, i) < cur_dist {
+                    if cur == FROZEN_TOMB {
+                        saw_frozen = true; // skip; DFB unknowable
+                    } else if self.dist(cur, i) < cur_dist {
                         break;
                     }
                     i = (i + 1) & self.mask as usize;
@@ -260,64 +519,123 @@ impl KCasRobinHoodMap {
                         break;
                     }
                 }
-                if !hit {
-                    for &(shard, v) in scratch.seen.iter() {
-                        if self.ts[shard].read() != v {
-                            continue 'retry;
-                        }
-                    }
-                    return None;
-                }
-                // Backward shift of (key, value) pairs.
-                let removed_val = self.vals[i].read();
-                scratch.chain.clear();
-                scratch.chain.push((key, removed_val));
-                {
-                    let shard = self.shard_of(i);
-                    let v = scratch
-                        .seen
-                        .iter()
-                        .rev()
-                        .find(|&&(s2, _)| s2 == shard)
-                        .map(|&(_, v)| v)
-                        .unwrap_or_else(|| self.ts[shard].read());
-                    scratch.bump.push((shard, v));
-                }
-                let mut j = (i + 1) & self.mask as usize;
-                loop {
-                    let shard = self.shard_of(j);
-                    let ts_val = self.ts[shard].read();
-                    let nk = self.keys[j].read();
-                    if nk == NIL || self.dist(nk, j) == 0 {
-                        break;
-                    }
-                    if scratch.bump.last().map(|&(s2, _)| s2) != Some(shard) {
-                        scratch.bump.push((shard, ts_val));
-                    }
-                    scratch.chain.push((nk, self.vals[j].read()));
-                    j = (j + 1) & self.mask as usize;
-                    if scratch.chain.len() > self.size() {
+                for &(shard, v) in seen.iter() {
+                    if self.ts[shard].read() != v {
                         continue 'retry;
                     }
                 }
-                let mut pos = i;
-                for w in 0..scratch.chain.len() {
-                    let (ck, cv) = scratch.chain[w];
-                    let (nk, nv) =
-                        scratch.chain.get(w + 1).copied().unwrap_or((NIL, 0));
-                    scratch.op.push(&self.keys[pos], ck, nk);
-                    scratch.op.push(&self.vals[pos], cv, nv);
-                    pos = (pos + 1) & self.mask as usize;
+                return if saw_frozen {
+                    ProbeVal::FrozenMiss
+                } else {
+                    ProbeVal::Absent
+                };
+            }
+        })
+    }
+
+    /// Freeze every bucket in `[start, start+len)`, transferring live
+    /// pairs into `target`. Idempotent; safe to race with other helpers.
+    pub(crate) fn migrate_range(
+        &self,
+        target: &KCasRobinHoodMap,
+        start: usize,
+        len: usize,
+    ) -> usize {
+        let mut moved = 0;
+        for i in start..(start + len).min(self.size()) {
+            moved += self.freeze_bucket(target, i);
+        }
+        moved
+    }
+
+    /// Freeze bucket `i` (key word only; the value word of a frozen
+    /// bucket is dead). Returns how many pairs this call moved.
+    pub(crate) fn freeze_bucket(
+        &self,
+        target: &KCasRobinHoodMap,
+        i: usize,
+    ) -> usize {
+        loop {
+            let cur = self.keys[i].read();
+            if is_frozen(cur) {
+                return 0;
+            }
+            if cur == NIL {
+                if self.keys[i].cas(NIL, FROZEN_EMPTY) {
+                    return 0;
                 }
-                for &(sh, v) in scratch.bump.iter() {
-                    scratch.op.push(&self.ts[sh], v, v + 1);
-                }
-                if scratch.op.execute() {
-                    return Some(removed_val);
-                }
-                continue 'retry;
+            } else if self.transfer(target, i, cur) {
+                return 1;
             }
         }
+    }
+
+    /// Freeze `key`'s whole home run (see the set twin for the
+    /// protocol argument); afterwards the key definitively does not
+    /// live in this generation.
+    pub(crate) fn migrate_home_run(
+        &self,
+        target: &KCasRobinHoodMap,
+        h: u64,
+    ) -> usize {
+        let mut moved = 0;
+        let mut i = (h & self.mask) as usize;
+        let mut steps = 0usize;
+        loop {
+            let cur = self.keys[i].read();
+            if cur == FROZEN_EMPTY {
+                return moved;
+            }
+            if cur == NIL {
+                if self.keys[i].cas(NIL, FROZEN_EMPTY) {
+                    return moved;
+                }
+                continue;
+            }
+            if cur == FROZEN_TOMB {
+                i = (i + 1) & self.mask as usize;
+                steps += 1;
+                if steps > self.size() {
+                    return moved;
+                }
+                continue;
+            }
+            if self.transfer(target, i, cur) {
+                moved += 1;
+            }
+        }
+    }
+
+    /// Move the live pair at source bucket `i` into `target` and
+    /// tombstone the source key word in one K-CAS, guarding the source
+    /// value word so the pair cannot tear mid-transfer.
+    fn transfer(&self, target: &KCasRobinHoodMap, i: usize, key: u64) -> bool {
+        let val = self.vals[i].read();
+        let h = splitmix64(key);
+        let home = (h & target.mask) as usize;
+        let seed = Some((&self.keys[i], key, &self.vals[i], val));
+        SCRATCH.with(|s| {
+            let scratch = &mut *s.borrow_mut();
+            match target.try_insert_one(scratch, home, key, val, seed) {
+                Ok(Attempt::Done(None)) => true,
+                Ok(Attempt::Done(Some(_))) => {
+                    unreachable!("seeded insert never overwrites")
+                }
+                Ok(Attempt::Present) => {
+                    // Cannot happen under the freeze protocol (writers
+                    // freeze a key's whole home run before inserting it
+                    // into the next generation); defensively freeze
+                    // without duplicating.
+                    self.keys[i].cas(key, FROZEN_TOMB)
+                }
+                Ok(Attempt::Raced) => false,
+                // Frozen target: this thread stalled across a whole
+                // migration and a chained one began freezing `target`
+                // (see the set twin). Report no-move; the caller
+                // re-reads the source bucket, which helpers tombstoned.
+                Err(Frozen) => false,
+            }
+        })
     }
 
     /// Apply `ops` in order with the thread-local K-CAS scratch
@@ -605,6 +923,39 @@ mod tests {
         }
         m.check_invariant().unwrap();
         assert_eq!(m.len_quiesced(), 30);
+    }
+
+    #[test]
+    fn migrate_range_moves_every_pair_intact() {
+        let src = KCasRobinHoodMap::new(6);
+        let dst = KCasRobinHoodMap::new(7);
+        for k in 1..=40u64 {
+            src.insert(k, k * 11);
+        }
+        let moved = src.migrate_range(&dst, 0, src.size());
+        assert_eq!(moved, 40);
+        dst.check_invariant().unwrap();
+        for k in 1..=40u64 {
+            assert_eq!(dst.get(k), Some(k * 11), "pair broken for {k}");
+        }
+        assert!(matches!(
+            src.get_mig(splitmix64(41), 41),
+            ProbeVal::FrozenMiss
+        ));
+    }
+
+    #[test]
+    fn migrate_home_run_evicts_the_pair() {
+        let src = KCasRobinHoodMap::new(6);
+        let dst = KCasRobinHoodMap::new(7);
+        for k in 1..=30u64 {
+            src.insert(k, k + 500);
+        }
+        let h = splitmix64(7);
+        src.migrate_home_run(&dst, h);
+        assert!(!matches!(src.get_mig(h, 7), ProbeVal::Found(_)));
+        assert_eq!(dst.get(7), Some(507));
+        assert!(src.insert_mig(h, 7, 1).is_err(), "frozen run must abort");
     }
 
     #[test]

@@ -1,5 +1,9 @@
 //! The hash tables: the paper's contribution, all its competitors, and
-//! the scaling compositions (resizable epoch wrapper, sharded facade).
+//! the scaling compositions (growable engines, sharded facade). Growth
+//! comes in two flavours (see [`resizable`]): the non-blocking
+//! two-generation engines (`inc-resize-rh[:N]`, `inc-resize-rh-map[:N]`)
+//! and the quiescing epoch-RwLock baseline (`resizable-rh`,
+//! `sharded-resizable-rh:N`).
 //!
 //! Every table implements [`ConcurrentSet`] over 62-bit integer keys
 //! (the paper benchmarks integer *sets*: `Add/Contains/Remove(key)`).
@@ -216,20 +220,31 @@ pub enum MapKind {
     KCasRhMap,
     /// [`locked_lp::LockedLpMap`] — blocking linear-probing baseline.
     LockedLpMap,
+    /// [`resizable::ResizableRobinHoodMap`] — growable key→value table
+    /// (non-blocking two-generation migration, spec `inc-resize-rh-map`).
+    IncResizableRhMap,
     /// [`sharded::Sharded`]`<KCasRobinHoodMap>` with `shards` shards.
     ShardedKCasRhMap { shards: u32 },
     /// [`sharded::Sharded`]`<LockedLpMap>` with `shards` shards.
     ShardedLockedLpMap { shards: u32 },
+    /// [`sharded::Sharded`]`<ResizableRobinHoodMap>` with `shards`
+    /// shards (spec `inc-resize-rh-map:N`).
+    ShardedIncResizableRhMap { shards: u32 },
 }
 
 impl MapKind {
     /// Every buildable kind, including the sharding sweep — the
     /// exhaustive list the test tier iterates.
     pub fn all() -> Vec<MapKind> {
-        let mut v = vec![MapKind::KCasRhMap, MapKind::LockedLpMap];
+        let mut v = vec![
+            MapKind::KCasRhMap,
+            MapKind::LockedLpMap,
+            MapKind::IncResizableRhMap,
+        ];
         for shards in TableKind::SHARD_SWEEP {
             v.push(MapKind::ShardedKCasRhMap { shards });
             v.push(MapKind::ShardedLockedLpMap { shards });
+            v.push(MapKind::ShardedIncResizableRhMap { shards });
         }
         v
     }
@@ -238,11 +253,15 @@ impl MapKind {
         match self {
             MapKind::KCasRhMap => "kcas-rh-map".into(),
             MapKind::LockedLpMap => "locked-lp-map".into(),
+            MapKind::IncResizableRhMap => "inc-resize-rh-map".into(),
             MapKind::ShardedKCasRhMap { shards } => {
                 format!("sharded-kcas-rh-map:{shards}")
             }
             MapKind::ShardedLockedLpMap { shards } => {
                 format!("sharded-locked-lp-map:{shards}")
+            }
+            MapKind::ShardedIncResizableRhMap { shards } => {
+                format!("inc-resize-rh-map:{shards}")
             }
         }
     }
@@ -252,11 +271,15 @@ impl MapKind {
         match self {
             MapKind::KCasRhMap => "K-CAS RH Map".into(),
             MapKind::LockedLpMap => "Locked LP Map".into(),
+            MapKind::IncResizableRhMap => "Inc-Resize RH Map".into(),
             MapKind::ShardedKCasRhMap { shards } => {
                 format!("Sharded K-CAS RH Map x{shards}")
             }
             MapKind::ShardedLockedLpMap { shards } => {
                 format!("Sharded Locked LP Map x{shards}")
+            }
+            MapKind::ShardedIncResizableRhMap { shards } => {
+                format!("Sharded Inc-Resize RH Map x{shards}")
             }
         }
     }
@@ -275,17 +298,24 @@ impl MapKind {
                 "sharded-locked-lp-map" => {
                     Some(MapKind::ShardedLockedLpMap { shards })
                 }
+                "inc-resize-rh-map" | "sharded-inc-resize-rh-map" => {
+                    Some(MapKind::ShardedIncResizableRhMap { shards })
+                }
                 _ => None,
             };
         }
         match s {
             "kcas-rh-map" => Some(MapKind::KCasRhMap),
             "locked-lp-map" => Some(MapKind::LockedLpMap),
+            "inc-resize-rh-map" => Some(MapKind::IncResizableRhMap),
             "sharded-kcas-rh-map" => {
                 Some(MapKind::ShardedKCasRhMap { shards: 4 })
             }
             "sharded-locked-lp-map" => {
                 Some(MapKind::ShardedLockedLpMap { shards: 4 })
+            }
+            "sharded-inc-resize-rh-map" => {
+                Some(MapKind::ShardedIncResizableRhMap { shards: 4 })
             }
             _ => None,
         }
@@ -300,6 +330,9 @@ impl MapKind {
             }
             MapKind::LockedLpMap => {
                 Box::new(locked_lp::LockedLpMap::new(size_log2))
+            }
+            MapKind::IncResizableRhMap => {
+                Box::new(resizable::ResizableRobinHoodMap::new(size_log2))
             }
             MapKind::ShardedKCasRhMap { shards } => {
                 assert!(shards.is_power_of_two(), "shards must be 2^k");
@@ -318,6 +351,14 @@ impl MapKind {
                         shards.trailing_zeros(),
                     ),
                 )
+            }
+            MapKind::ShardedIncResizableRhMap { shards } => {
+                assert!(shards.is_power_of_two(), "shards must be 2^k");
+                Box::new(sharded::Sharded::<
+                    resizable::ResizableRobinHoodMap,
+                >::inc_resizable_map(
+                    size_log2, shards.trailing_zeros()
+                ))
             }
         }
     }
@@ -339,12 +380,19 @@ pub enum TableKind {
     LockedLp,
     Michael,
     SerialRobinHood,
-    /// Epoch-wrapped growable K-CAS Robin Hood ([`resizable`]).
+    /// Epoch-wrapped growable K-CAS Robin Hood — the blocking
+    /// (quiescing) baseline ([`resizable::QuiescingResize`]).
     ResizableRobinHood,
+    /// Non-blocking growable K-CAS Robin Hood: cooperative
+    /// two-generation migration ([`resizable::IncResizableRobinHood`]).
+    IncResizableRh,
     /// [`sharded::Sharded`]`<KCasRobinHood>` with `shards` shards.
     ShardedKCasRh { shards: u32 },
-    /// [`sharded::Sharded`]`<ResizableRobinHood>` with `shards` shards.
+    /// [`sharded::Sharded`]`<QuiescingResize>` with `shards` shards.
     ShardedResizableRh { shards: u32 },
+    /// [`sharded::Sharded`]`<IncResizableRobinHood>` with `shards`
+    /// shards (spec `inc-resize-rh:N`).
+    ShardedIncResizableRh { shards: u32 },
 }
 
 impl TableKind {
@@ -372,10 +420,12 @@ impl TableKind {
             TableKind::Michael,
             TableKind::SerialRobinHood,
             TableKind::ResizableRobinHood,
+            TableKind::IncResizableRh,
         ];
         for shards in TableKind::SHARD_SWEEP {
             v.push(TableKind::ShardedKCasRh { shards });
             v.push(TableKind::ShardedResizableRh { shards });
+            v.push(TableKind::ShardedIncResizableRh { shards });
         }
         v
     }
@@ -390,11 +440,15 @@ impl TableKind {
             TableKind::Michael => "michael".into(),
             TableKind::SerialRobinHood => "serial-rh".into(),
             TableKind::ResizableRobinHood => "resizable-rh".into(),
+            TableKind::IncResizableRh => "inc-resize-rh".into(),
             TableKind::ShardedKCasRh { shards } => {
                 format!("sharded-kcas-rh:{shards}")
             }
             TableKind::ShardedResizableRh { shards } => {
                 format!("sharded-resizable-rh:{shards}")
+            }
+            TableKind::ShardedIncResizableRh { shards } => {
+                format!("inc-resize-rh:{shards}")
             }
         }
     }
@@ -409,12 +463,16 @@ impl TableKind {
             TableKind::LockedLp => "Locked LP".into(),
             TableKind::Michael => "Maged Michael".into(),
             TableKind::SerialRobinHood => "Serial Robin Hood".into(),
-            TableKind::ResizableRobinHood => "Resizable RH".into(),
+            TableKind::ResizableRobinHood => "Quiescing Resize RH".into(),
+            TableKind::IncResizableRh => "Incremental Resize RH".into(),
             TableKind::ShardedKCasRh { shards } => {
                 format!("Sharded K-CAS RH x{shards}")
             }
             TableKind::ShardedResizableRh { shards } => {
-                format!("Sharded Resizable RH x{shards}")
+                format!("Sharded Quiescing RH x{shards}")
+            }
+            TableKind::ShardedIncResizableRh { shards } => {
+                format!("Sharded Inc-Resize RH x{shards}")
             }
         }
     }
@@ -435,6 +493,9 @@ impl TableKind {
                 "sharded-resizable-rh" => {
                     Some(TableKind::ShardedResizableRh { shards })
                 }
+                "inc-resize-rh" | "sharded-inc-resize-rh" => {
+                    Some(TableKind::ShardedIncResizableRh { shards })
+                }
                 _ => None,
             };
         }
@@ -447,9 +508,13 @@ impl TableKind {
             "michael" => Some(TableKind::Michael),
             "serial-rh" => Some(TableKind::SerialRobinHood),
             "resizable-rh" => Some(TableKind::ResizableRobinHood),
+            "inc-resize-rh" => Some(TableKind::IncResizableRh),
             "sharded-kcas-rh" => Some(TableKind::ShardedKCasRh { shards: 4 }),
             "sharded-resizable-rh" => {
                 Some(TableKind::ShardedResizableRh { shards: 4 })
+            }
+            "sharded-inc-resize-rh" => {
+                Some(TableKind::ShardedIncResizableRh { shards: 4 })
             }
             _ => None,
         }
@@ -473,7 +538,10 @@ impl TableKind {
                 Box::new(serial_rh::SerialRobinHoodLocked::new(size_log2))
             }
             TableKind::ResizableRobinHood => {
-                Box::new(resizable::ResizableRobinHood::new(size_log2))
+                Box::new(resizable::QuiescingResize::new(size_log2))
+            }
+            TableKind::IncResizableRh => {
+                Box::new(resizable::IncResizableRobinHood::new(size_log2))
             }
             TableKind::ShardedKCasRh { shards } => {
                 assert!(shards.is_power_of_two(), "shards must be 2^k");
@@ -490,6 +558,14 @@ impl TableKind {
                         shards.trailing_zeros(),
                     ),
                 )
+            }
+            TableKind::ShardedIncResizableRh { shards } => {
+                assert!(shards.is_power_of_two(), "shards must be 2^k");
+                Box::new(sharded::Sharded::<
+                    resizable::IncResizableRobinHood,
+                >::inc_resizable(
+                    size_log2, shards.trailing_zeros()
+                ))
             }
         }
     }
@@ -527,6 +603,15 @@ mod tests {
         );
         assert_eq!(TableKind::parse("sharded-kcas-rh:3"), None);
         assert_eq!(TableKind::parse("sharded-kcas-rh:0"), None);
+        assert_eq!(
+            TableKind::parse("inc-resize-rh"),
+            Some(TableKind::IncResizableRh)
+        );
+        assert_eq!(
+            TableKind::parse("inc-resize-rh:8"),
+            Some(TableKind::ShardedIncResizableRh { shards: 8 })
+        );
+        assert_eq!(TableKind::parse("inc-resize-rh:3"), None);
         assert_eq!(TableKind::parse("nope"), None);
         assert_eq!(TableKind::parse("nope:4"), None);
     }
@@ -546,6 +631,14 @@ mod tests {
             Some(MapKind::ShardedKCasRhMap { shards: 4 })
         );
         assert_eq!(MapKind::parse("sharded-kcas-rh-map:3"), None);
+        assert_eq!(
+            MapKind::parse("inc-resize-rh-map"),
+            Some(MapKind::IncResizableRhMap)
+        );
+        assert_eq!(
+            MapKind::parse("inc-resize-rh-map:16"),
+            Some(MapKind::ShardedIncResizableRhMap { shards: 16 })
+        );
         assert_eq!(MapKind::parse("kcas-rh"), None);
         assert_eq!(MapKind::parse("nope:4"), None);
     }

@@ -17,11 +17,13 @@
 //! — probe lengths inside a shard are indistinguishable from an
 //! unsharded table at the same load factor.
 //!
-//! Composing with [`super::resizable::ResizableRobinHood`] gives
-//! incremental growth for free: each shard carries its own epoch
-//! RwLock, so a grow migration quiesces **one shard** (1/N of the
-//! keyspace) while the other N-1 shards keep serving at full speed —
-//! versus the unsharded resizable table, which stalls the world.
+//! Composing with the growable engines layers two granularities of
+//! resize isolation: [`super::resizable::QuiescingResize`] shards each
+//! carry their own epoch RwLock, so a grow quiesces **one shard** (1/N
+//! of the keyspace) while the other N-1 keep serving; and
+//! [`super::resizable::IncResizableRobinHood`] shards don't pause even
+//! that one — a growing shard keeps serving through its own
+//! two-generation migration (`sharded-inc-resize-rh:N`).
 //!
 //! `dfb_snapshot` concatenates per-shard snapshots in shard order
 //! (aggregation preserves each shard's Robin Hood run structure) and
@@ -159,6 +161,57 @@ impl Sharded<super::resizable::ResizableRobinHood> {
             .expect("more shards than buckets");
         Sharded::from_builder(shards_log2, "sharded-resizable-rh", |_| {
             super::resizable::ResizableRobinHood::with_threshold(per, grow_at)
+        })
+    }
+}
+
+impl Sharded<super::resizable::IncResizableRobinHood> {
+    /// Sharded composition of the non-blocking two-generation engine:
+    /// a growing shard keeps serving its slice of the keyspace (no
+    /// stop-shard pause at all — ROADMAP "resize under shards" item).
+    pub fn inc_resizable(size_log2: u32, shards_log2: u32) -> Self {
+        Self::inc_resizable_with_threshold(size_log2, shards_log2, 0.85)
+    }
+
+    /// As [`Sharded::inc_resizable`] with an explicit per-shard grow
+    /// threshold (tests use low thresholds to force migrations).
+    pub fn inc_resizable_with_threshold(
+        size_log2: u32,
+        shards_log2: u32,
+        grow_at: f64,
+    ) -> Self {
+        let per = size_log2
+            .checked_sub(shards_log2)
+            .expect("more shards than buckets");
+        Sharded::from_builder(shards_log2, "sharded-inc-resize-rh", |_| {
+            super::resizable::IncResizableRobinHood::with_threshold(
+                per, grow_at,
+            )
+        })
+    }
+}
+
+impl Sharded<super::resizable::ResizableRobinHoodMap> {
+    /// Sharded growable key→value composition (incremental migration
+    /// per shard).
+    pub fn inc_resizable_map(size_log2: u32, shards_log2: u32) -> Self {
+        Self::inc_resizable_map_with_threshold(size_log2, shards_log2, 0.85)
+    }
+
+    /// As [`Sharded::inc_resizable_map`] with an explicit per-shard
+    /// grow threshold.
+    pub fn inc_resizable_map_with_threshold(
+        size_log2: u32,
+        shards_log2: u32,
+        grow_at: f64,
+    ) -> Self {
+        let per = size_log2
+            .checked_sub(shards_log2)
+            .expect("more shards than buckets");
+        Sharded::from_builder(shards_log2, "sharded-inc-resize-rh-map", |_| {
+            super::resizable::ResizableRobinHoodMap::with_threshold(
+                per, grow_at,
+            )
         })
     }
 }

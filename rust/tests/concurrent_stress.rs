@@ -17,6 +17,7 @@ fn sharded_kinds() -> Vec<TableKind> {
             [
                 TableKind::ShardedKCasRh { shards },
                 TableKind::ShardedResizableRh { shards },
+                TableKind::ShardedIncResizableRh { shards },
             ]
         })
         .collect()
@@ -88,6 +89,11 @@ fn disjoint_determinism_michael() {
 #[test]
 fn disjoint_determinism_resizable() {
     disjoint_determinism(TableKind::ResizableRobinHood);
+}
+
+#[test]
+fn disjoint_determinism_inc_resize() {
+    disjoint_determinism(TableKind::IncResizableRh);
 }
 
 #[test]
@@ -226,6 +232,11 @@ fn fig5_race_hopscotch() {
 #[test]
 fn fig5_race_lockfree_lp() {
     stable_keys_under_churn(TableKind::LockFreeLp);
+}
+
+#[test]
+fn fig5_race_inc_resize() {
+    stable_keys_under_churn(TableKind::IncResizableRh);
 }
 
 #[test]

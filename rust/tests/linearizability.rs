@@ -78,6 +78,16 @@ fn linearizable_sharded_resizable_rh() {
 }
 
 #[test]
+fn linearizable_inc_resize_rh() {
+    check_table(TableKind::IncResizableRh, 60);
+}
+
+#[test]
+fn linearizable_sharded_inc_resize_rh() {
+    check_table(TableKind::ShardedIncResizableRh { shards: 4 }, 60);
+}
+
+#[test]
 fn checker_catches_a_broken_table() {
     // Sanity: a deliberately broken "set" (contains always false) must
     // be rejected by the checker, proving the harness has teeth.

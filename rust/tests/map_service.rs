@@ -86,6 +86,23 @@ fn sharded_locked_lp_map_oracle_across_shards() {
 }
 
 #[test]
+fn inc_resize_rh_map_oracle() {
+    map_oracle_check(MapKind::IncResizableRhMap, 8, 160, 1200);
+}
+
+#[test]
+fn sharded_inc_resize_rh_map_oracle() {
+    for shards in crh::maps::TableKind::SHARD_SWEEP {
+        map_oracle_check(
+            MapKind::ShardedIncResizableRhMap { shards },
+            8,
+            160,
+            1200,
+        );
+    }
+}
+
+#[test]
 fn duplicate_insert_overwrites_value_everywhere() {
     for kind in MapKind::all() {
         let m = kind.build(8);

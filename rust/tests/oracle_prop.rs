@@ -107,6 +107,23 @@ fn sharded_resizable_rh_oracle_long() {
     }
 }
 
+#[test]
+fn inc_resize_rh_oracle_long() {
+    oracle_check(TableKind::IncResizableRh, 8, 160, 1200);
+}
+
+#[test]
+fn sharded_inc_resize_rh_oracle_long() {
+    for shards in TableKind::SHARD_SWEEP {
+        oracle_check(
+            TableKind::ShardedIncResizableRh { shards },
+            8,
+            160,
+            1200,
+        );
+    }
+}
+
 /// Drive `Sharded<ResizableRobinHood>` across per-shard grow boundaries
 /// against the `HashSet` oracle: 4 shards x 64 buckets with a 70% grow
 /// threshold, an add-biased mix over 700 keys, so several shards must
@@ -220,8 +237,10 @@ fn dfb_snapshots_agree_with_membership() {
         TableKind::SerialRobinHood,
         TableKind::Hopscotch,
         TableKind::ResizableRobinHood,
+        TableKind::IncResizableRh,
         TableKind::ShardedKCasRh { shards: 4 },
         TableKind::ShardedResizableRh { shards: 4 },
+        TableKind::ShardedIncResizableRh { shards: 4 },
     ] {
         let t = kind.build(9);
         for k in 1..=300u64 {
@@ -237,8 +256,10 @@ fn dfb_snapshots_agree_with_membership() {
                 | TableKind::TxRobinHood
                 | TableKind::SerialRobinHood
                 | TableKind::ResizableRobinHood
+                | TableKind::IncResizableRh
                 | TableKind::ShardedKCasRh { .. }
                 | TableKind::ShardedResizableRh { .. }
+                | TableKind::ShardedIncResizableRh { .. }
         ) {
             let sum: i64 = snap.iter().filter(|&&d| d >= 0).map(|&d| d as i64).sum();
             let mean = sum as f64 / occupied as f64;
