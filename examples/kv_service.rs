@@ -4,10 +4,13 @@
 //! batch sizes {1, 8, 64}.
 //!
 //! Protocol (see `service::server` docs): `G k` / `P k v` / `D k`
-//! single ops, `B n` multi-op batch frames, `Q` quit; replies are the
-//! value or `-`, and malformed/out-of-range requests get `ERR <msg>`
-//! without killing the connection (the old one-op-per-line server
-//! panicked its connection thread on `k > MAX_KEY`).
+//! single ops plus the conditional verbs `C k e n`
+//! (compare-exchange, `-` = absent, replying `OK` or `!<witness>`),
+//! `U k v` (get-or-insert) and `A k d` (fetch-add); `B n` multi-op
+//! batch frames, `Q` quit; value-shaped replies are the value or `-`,
+//! and malformed/out-of-range requests get `ERR <msg>` without killing
+//! the connection (the old one-op-per-line server panicked its
+//! connection thread on `k > MAX_KEY`).
 //!
 //! The example starts the server on an ephemeral port, checks the
 //! protocol guard rails, then runs the same total op count per batch
@@ -76,6 +79,25 @@ fn main() {
     assert_eq!(probe.request_line("G 7").unwrap(), "700");
     assert_eq!(probe.request_line("D 7").unwrap(), "700");
     println!("guard rails OK (bad requests get ERR, connection survives)");
+
+    // The conditional verbs: check-then-act without read-check-write
+    // round trips or server-side locks — one wire op, one K-CAS.
+    // Lease: acquire / contended acquire (witnesses the owner) /
+    // wrong-owner release / owner release.
+    assert_eq!(probe.request_line("C 20 - 1").unwrap(), "OK");
+    assert_eq!(probe.request_line("C 20 - 2").unwrap(), "!1");
+    assert_eq!(probe.request_line("C 20 2 -").unwrap(), "!1");
+    assert_eq!(probe.request_line("C 20 1 -").unwrap(), "OK");
+    // Counter: fetch-add treats a missing key as 0.
+    assert_eq!(probe.request_line("A 21 5").unwrap(), "-");
+    assert_eq!(probe.request_line("A 21 5").unwrap(), "5");
+    assert_eq!(probe.request_line("G 21").unwrap(), "10");
+    // Memoisation: get-or-insert never overwrites the winner.
+    assert_eq!(probe.request_line("U 22 7").unwrap(), "-");
+    assert_eq!(probe.request_line("U 22 8").unwrap(), "7");
+    assert_eq!(probe.request_line("D 21").unwrap(), "10");
+    assert_eq!(probe.request_line("D 22").unwrap(), "7");
+    println!("conditional verbs OK (C/U/A: lease, counter, memoise)");
 
     let mut results: Vec<(usize, f64)> = Vec::new();
     for batch in [1usize, 8, 64] {

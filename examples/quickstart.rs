@@ -1,5 +1,8 @@
-//! Quickstart: create the paper's K-CAS Robin Hood set, hammer it from
-//! a few threads, and inspect its probe-distance profile.
+//! Quickstart: the paper's K-CAS Robin Hood table as a *set*, then as
+//! a *map* with the conditional-first API — counters via `fetch_add`,
+//! a lease via `compare_exchange`, memoisation via `get_or_insert` —
+//! and finally the probe-distance profile that makes Robin Hood reads
+//! fast.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
@@ -8,9 +11,11 @@
 use std::sync::Arc;
 
 use crh::maps::kcas_rh::KCasRobinHood;
-use crh::maps::ConcurrentSet;
+use crh::maps::kcas_rh_map::KCasRobinHoodMap;
+use crh::maps::{ConcurrentMap, ConcurrentSet};
 
 fn main() {
+    // ---- the set (what the paper benchmarks) ----
     // 2^16 buckets; keys are 62-bit integers (>= 1).
     let table = Arc::new(KCasRobinHood::new(16));
 
@@ -33,11 +38,54 @@ fn main() {
         h.join().unwrap();
     }
 
-    println!("entries: {}", table.len_quiesced());
+    println!("set entries: {}", table.len_quiesced());
     assert!(table.contains(2)); // 2 survives (not on the step_by(3) grid)
     table.check_invariant().expect("Robin Hood invariant");
 
-    // Probe-distance profile (the reason Robin Hood reads are fast).
+    // ---- the map, conditional-first ----
+    // The same algorithm over (key, value) pair buckets. Beyond
+    // get/insert/remove, the map natively provides atomic
+    // read-modify-write ops — each a single K-CAS, no locks:
+    let map = Arc::new(KCasRobinHoodMap::new(12));
+
+    // Counters: eight threads hammer one hot key with `fetch_add`;
+    // a missing key counts as 0, and no increment can be lost.
+    let mut handles = Vec::new();
+    for _ in 0..8 {
+        let map = map.clone();
+        handles.push(std::thread::spawn(move || {
+            for _ in 0..10_000 {
+                map.fetch_add(1, 1);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(map.get(1), Some(80_000), "fetch_add lost an increment");
+    println!("counter after 8x10k concurrent increments: {:?}", map.get(1));
+
+    // Leases: `compare_exchange` corners subsume insert-if-absent and
+    // remove-if-equal, so check-then-act needs no external lock.
+    let me = 42u64;
+    map.compare_exchange(2, None, Some(me)).expect("acquire free lease");
+    assert_eq!(
+        map.compare_exchange(2, None, Some(7)),
+        Err(Some(me)),
+        "second acquire must fail and witness the owner"
+    );
+    map.compare_exchange(2, Some(me), None).expect("owner releases");
+    assert_eq!(map.compare_exchange(2, None, None), Ok(()), "lease free");
+
+    // Memoisation: `get_or_insert` publishes the first computation and
+    // never overwrites a winner.
+    assert_eq!(map.get_or_insert(3, 333), None); // we inserted
+    assert_eq!(map.get_or_insert(3, 999), Some(333)); // loser observes
+    assert_eq!(map.get(3), Some(333));
+    println!("lease + memoisation corners OK");
+    map.check_invariant_quiesced().expect("map invariant");
+
+    // ---- probe-distance profile (why Robin Hood reads are fast) ----
     let snap = table.dfb_snapshot();
     let occ: Vec<i32> = snap.into_iter().filter(|&d| d >= 0).collect();
     let mean = occ.iter().map(|&d| d as f64).sum::<f64>() / occ.len() as f64;

@@ -1,0 +1,59 @@
+//! Bench: **Figure 16** (extension) — conditional read-modify-write
+//! throughput under contention skew: the CAS-heavy counter workload
+//! (70% `fetch_add`, 20% optimistic `compare_exchange`, 10% `get`)
+//! across hot-set size x thread count, native single-K-CAS
+//! conditionals vs the locked baseline. Every cell asserts the
+//! committed-increment count equals the final counter sum.
+//!
+//! ```sh
+//! cargo bench --bench fig16_rmw            # paper-scale-ish
+//! cargo bench --bench fig16_rmw -- --quick # CI smoke
+//! ```
+//! Tunables: CRH_BENCH_SIZE_LOG2, CRH_BENCH_MS, CRH_BENCH_THREADS
+//! (comma list), CRH_BENCH_HOT_KEYS (comma list of hot-set sizes),
+//! CRH_BENCH_MAPS (comma list of MapKind specs).
+
+mod common;
+
+use crh::coordinator::{fig16_rmw, ExpOpts};
+use crh::maps::MapKind;
+
+fn main() {
+    let quick = common::quick();
+    let mut opts = ExpOpts {
+        size_log2: common::env_u32("SIZE_LOG2", if quick { 14 } else { 20 }),
+        duration_ms: common::env_u64("MS", if quick { 100 } else { 500 }),
+        pin: true,
+        reps: 1,
+        ..ExpOpts::default()
+    };
+    if let Ok(ts) = std::env::var("CRH_BENCH_THREADS") {
+        opts.threads = ts.split(',').filter_map(|x| x.parse().ok()).collect();
+    } else if quick {
+        opts.threads = vec![1, 2];
+    }
+    let hot_keys: Vec<u64> = match std::env::var("CRH_BENCH_HOT_KEYS") {
+        Ok(s) => s.split(',').filter_map(|x| x.parse().ok()).collect(),
+        Err(_) => {
+            if quick {
+                vec![1, 256]
+            } else {
+                vec![1, 16, 256, 4096]
+            }
+        }
+    };
+    let maps: Vec<MapKind> = match std::env::var("CRH_BENCH_MAPS") {
+        Ok(s) => s
+            .split(',')
+            .map(|x| {
+                MapKind::parse(x)
+                    .unwrap_or_else(|| panic!("unknown CRH_BENCH_MAPS entry {x}"))
+            })
+            .collect(),
+        Err(_) => vec![
+            MapKind::ShardedKCasRhMap { shards: 4 },
+            MapKind::ShardedLockedLpMap { shards: 4 },
+        ],
+    };
+    fig16_rmw(&opts, &maps, &hot_keys);
+}

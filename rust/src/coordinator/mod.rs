@@ -394,6 +394,84 @@ pub fn fig15_resize(opts: &ExpOpts, grow_ats: &[f64]) {
     }
 }
 
+/// **Figure 16** (extension): the conditional-RMW comparison — the
+/// CAS-heavy counter workload (`service::batch::run_rmw`: 70%
+/// `fetch_add`, 20% optimistic `get`+`compare_exchange`, 10% `get`)
+/// across contention skew (hot-set size: fewer keys = hotter counters)
+/// x thread count, native single-K-CAS conditionals on the Robin Hood
+/// map vs the lock-based reference (`LockedLpMap`). Every cell also
+/// *verifies* the primitives: the committed-increment count must equal
+/// the final counter sum, or the cell panics — the experiment measures
+/// the new API and proves its atomicity in the same run.
+pub fn fig16_rmw(opts: &ExpOpts, maps: &[MapKind], hot_keys: &[u64]) {
+    use crate::service::batch::{rmw_counter_sum, run_rmw};
+    println!(
+        "# Figure 16 — conditional RMW throughput under contention skew; \
+         maps 2^{} buckets, {} ms/cell, {} rep(s)",
+        opts.size_log2, opts.duration_ms, opts.reps
+    );
+    println!(
+        "# mix: 70% fetch_add / 20% optimistic cmpex / 10% get; \
+         hot-set sizes {hot_keys:?}"
+    );
+    for &keys in hot_keys {
+        if keys == 0 {
+            println!("# skipping hot-set size 0");
+            continue;
+        }
+        println!("\n## panel: {keys} hot counter(s)");
+        println!(
+            "{:<26} {:>4} {:>10} {:>10} {:>9}",
+            "map", "thr", "ops/us", "cas-fail%", "counters"
+        );
+        for &kind in maps {
+            for &threads in &opts.threads {
+                let mut ops_us = 0.0;
+                let mut attempts = 0u64;
+                let mut fails = 0u64;
+                for rep in 0..opts.reps {
+                    let m = kind.build(opts.size_log2);
+                    let r = run_rmw(
+                        m.as_ref(),
+                        keys,
+                        opts.duration_ms,
+                        threads,
+                        opts.pin,
+                        0xF16 + rep as u64,
+                    );
+                    // The acceptance check: no committed increment may
+                    // ever be lost or double-applied.
+                    let sum = rmw_counter_sum(m.as_ref(), keys);
+                    assert_eq!(
+                        sum,
+                        r.incs,
+                        "{} keys={keys} thr={threads}: counters sum to {sum}, \
+                         committed {} increments",
+                        kind.name(),
+                        r.incs
+                    );
+                    ops_us += r.run.ops_per_us();
+                    attempts += r.cas_attempts;
+                    fails += r.cas_failures;
+                }
+                let fail_pct = if attempts == 0 {
+                    0.0
+                } else {
+                    100.0 * fails as f64 / attempts as f64
+                };
+                println!(
+                    "{:<26} {:>4} {:>10.2} {:>9.1}% {:>9}",
+                    kind.display(),
+                    threads,
+                    ops_us / opts.reps as f64,
+                    fail_pct,
+                    "OK"
+                );
+            }
+        }
+    }
+}
+
 /// **Table 1**: simulated cache misses relative to K-CAS Robin Hood
 /// (single core), via the trace models + cache hierarchy.
 pub fn table1(size_log2: u32, ops: u64) {

@@ -10,6 +10,10 @@
 //! crh fig15_resize [--grow-ats 0.7,0.85] [--size-log2 N] [--ms N]
 //!            [--threads 1,2,4] (op latency during an in-flight grow:
 //!            incremental two-generation migration vs quiescing rebuild)
+//! crh fig16_rmw [--maps sharded-kcas-rh-map:4,sharded-locked-lp-map:4]
+//!            [--hot-keys 1,16,256,4096] (conditional RMW counter
+//!            workload across contention skew: native K-CAS
+//!            compare_exchange/fetch_add vs the locked baseline)
 //! crh table1 [--size-log2 N] [--ops N]
 //! crh bench  --table kcas-rh|inc-resize-rh|sharded-kcas-rh:16|...
 //!            [--lf 0.6] [--updates 10] [--threads N] [--ms N] [--zipf]
@@ -46,8 +50,8 @@ fn parse_list<T: std::str::FromStr>(args: &[String], name: &str) -> Option<Vec<T
 fn usage() -> ! {
     eprintln!(
         "usage: crh <fig10|fig11|fig12|fig13_sharding|fig14_batching|\
-         fig15_resize|table1|bench|ablate-ts|analyze|validate|smoke> \
-         [options]\n(see `main.rs` docs or README for options)"
+         fig15_resize|fig16_rmw|table1|bench|ablate-ts|analyze|validate|\
+         smoke> [options]\n(see `main.rs` docs or README for options)"
     );
     std::process::exit(2)
 }
@@ -99,6 +103,27 @@ fn main() -> Result<()> {
             let grow_ats = parse_list(&args, "--grow-ats")
                 .unwrap_or_else(|| vec![0.7, 0.85]);
             coordinator::fig15_resize(&opts, &grow_ats);
+        }
+        "fig16_rmw" | "fig16" => {
+            let maps: Vec<MapKind> = parse_list::<String>(&args, "--maps")
+                .map(|specs| {
+                    specs
+                        .iter()
+                        .map(|s| {
+                            MapKind::parse(s)
+                                .unwrap_or_else(|| panic!("unknown map {s}"))
+                        })
+                        .collect()
+                })
+                .unwrap_or_else(|| {
+                    vec![
+                        MapKind::ShardedKCasRhMap { shards: 4 },
+                        MapKind::ShardedLockedLpMap { shards: 4 },
+                    ]
+                });
+            let hot_keys = parse_list(&args, "--hot-keys")
+                .unwrap_or_else(|| vec![1, 16, 256, 4096]);
+            coordinator::fig16_rmw(&opts, &maps, &hot_keys);
         }
         "table1" => {
             let ops = parse_flag(&args, "--ops").unwrap_or(6_000_000u64);

@@ -22,7 +22,7 @@ use std::sync::{Mutex, MutexGuard};
 use crate::util::pad::CachePadded;
 
 use super::{check_key, ConcurrentSet};
-use crate::util::hash::home_bucket;
+use crate::util::hash::{home_bucket, splitmix64};
 
 const EMPTY: u64 = 0;
 /// Virtual hop-range (bits in the hop-info word).
@@ -102,9 +102,25 @@ impl Hopscotch {
 }
 
 impl ConcurrentSet for Hopscotch {
+    // The plain trio routes through the hashed twins (Hopscotch derives
+    // only the home bucket from the hash, so the sharded facade's
+    // routing SplitMix64 is reused as-is).
+
     fn contains(&self, key: u64) -> bool {
+        self.contains_hashed(splitmix64(key), key)
+    }
+
+    fn add(&self, key: u64) -> bool {
+        self.add_hashed(splitmix64(key), key)
+    }
+
+    fn remove(&self, key: u64) -> bool {
+        self.remove_hashed(splitmix64(key), key)
+    }
+
+    fn contains_hashed(&self, h: u64, key: u64) -> bool {
         check_key(key);
-        let home = home_bucket(key, self.mask);
+        let home = (h & self.mask) as usize;
         loop {
             let t0 = self.ts[self.seg(home)].load(Ordering::Acquire);
             if self.present(home, key).is_some() {
@@ -118,9 +134,9 @@ impl ConcurrentSet for Hopscotch {
         }
     }
 
-    fn add(&self, key: u64) -> bool {
+    fn add_hashed(&self, h: u64, key: u64) -> bool {
         check_key(key);
-        let home = home_bucket(key, self.mask);
+        let home = (h & self.mask) as usize;
         // Estimated span: probe distance to the first empty bucket plus
         // hop room; grown on retry.
         let mut span = 4 * H;
@@ -199,9 +215,9 @@ impl ConcurrentSet for Hopscotch {
         }
     }
 
-    fn remove(&self, key: u64) -> bool {
+    fn remove_hashed(&self, h: u64, key: u64) -> bool {
         check_key(key);
-        let home = home_bucket(key, self.mask);
+        let home = (h & self.mask) as usize;
         let _guard = self.lock_span(home, H);
         match self.present(home, key) {
             None => false,
@@ -354,6 +370,23 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn hashed_entry_points_agree_with_plain() {
+        let t = Hopscotch::new(8);
+        for k in 1..=60u64 {
+            let h = splitmix64(k);
+            assert!(ConcurrentSet::add_hashed(&t, h, k));
+            assert!(!t.add(k));
+            assert!(ConcurrentSet::contains_hashed(&t, h, k));
+        }
+        for k in (1..=60u64).step_by(2) {
+            assert!(ConcurrentSet::remove_hashed(&t, splitmix64(k), k));
+            assert!(!t.contains(k));
+        }
+        t.check_invariant().unwrap();
+        assert_eq!(t.len_quiesced(), 30);
     }
 
     #[test]

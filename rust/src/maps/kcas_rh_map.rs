@@ -19,6 +19,29 @@
 //! Values are 62-bit (`<= kcas::MAX_VALUE`); store indices/handles for
 //! larger payloads.
 //!
+//! ## Conditional ops: one K-CAS each
+//!
+//! The conditional-first surface (`compare_exchange`, `get_or_insert`,
+//! `fetch_add`) rides the same descriptor machinery — each attempt is
+//! one probe plus **at most one K-CAS**, never a lock and never a
+//! retry loop around separate `get`+`insert` calls:
+//!
+//! * *insert-if-absent* (`compare_exchange(k, None, Some(v))`,
+//!   `get_or_insert`) reuses the insert probe; the commit descriptor's
+//!   probed-shard timestamp guards make "the key was absent along the
+//!   whole probe path" part of the atomic step, while a present key is
+//!   reported via a timestamp-validated pair read with no K-CAS at all.
+//! * *swap-if-equal* (`compare_exchange(k, Some(e), Some(v))`) commits
+//!   `{key word: k→k, value word: e→v}` — the key word guard pins the
+//!   pairing, the value word is simultaneously the compare and the
+//!   write.
+//! * *remove-if-equal* (`compare_exchange(k, Some(e), None)`) is the
+//!   backward-shift chain whose first chain link already carries the
+//!   observed value: the expected value is a free guard.
+//! * `fetch_add` swings the value word `v → (v + delta) mod 2^62` under
+//!   the key word guard, inserting `delta` (absent keys count as 0)
+//!   through the insert-if-absent path otherwise.
+//!
 //! The write paths carry the same descriptor guards as the set (probed
 //! shard timestamp guards on `insert`, a chain-terminator guard on
 //! `remove` — see `kcas_rh`'s module docs), and the same migration
@@ -59,8 +82,36 @@ enum Attempt {
     /// Seeded (transfer) insert found the key already present in the
     /// target; nothing was committed.
     Present,
+    /// Conditional op found the key present with this value (a
+    /// timestamp-validated pair read); nothing was committed.
+    Fetched(u64),
     /// Lost a race; re-probe.
     Raced,
+}
+
+/// What an insert-shaped probe does when it finds `key` already
+/// present — the dispatch point that lets one probe/displacement/guard
+/// engine serve `insert`, `get_or_insert`, insert-if-absent, and
+/// `fetch_add`. (All modes insert on a miss.)
+#[derive(Clone, Copy)]
+enum OnExisting {
+    /// Plain `insert`: swing the value word under a key-word guard.
+    Overwrite,
+    /// `get_or_insert` / insert-if-absent: report the validated value,
+    /// commit nothing.
+    Fetch,
+    /// `fetch_add`: swing the value word to `v + delta` (wrapping in
+    /// the 62-bit domain) under a key-word guard.
+    Add(u64),
+}
+
+/// Unwrap a conditional-op result in a standalone (never-frozen)
+/// table; only the migration wrappers ever see `Err(Frozen)`.
+fn live<R>(r: Result<R, Frozen>) -> R {
+    match r {
+        Ok(r) => r,
+        Err(Frozen) => unreachable!("frozen bucket in standalone table"),
+    }
 }
 
 struct Scratch {
@@ -194,11 +245,18 @@ impl KCasRobinHoodMap {
         value: u64,
     ) -> Option<u64> {
         loop {
-            match self.try_insert_one(scratch, home, key, value, None) {
+            match self.try_insert_one(
+                scratch,
+                home,
+                key,
+                value,
+                None,
+                OnExisting::Overwrite,
+            ) {
                 Ok(Attempt::Done(prev)) => return prev,
                 Ok(Attempt::Raced) => continue,
-                Ok(Attempt::Present) => {
-                    unreachable!("Present is only reported to seeded inserts")
+                Ok(Attempt::Present) | Ok(Attempt::Fetched(_)) => {
+                    unreachable!("overwrite insert always commits on a hit")
                 }
                 Err(Frozen) => {
                     unreachable!("frozen bucket in standalone table")
@@ -207,11 +265,14 @@ impl KCasRobinHoodMap {
         }
     }
 
-    /// One full `insert` attempt: probe, build the pair-displacement
-    /// descriptor, execute one K-CAS. `seed` is the generation-transfer
-    /// hook: `(src key word, src key, src val word, src val)` — the
-    /// source key is tombstoned and the source value guarded in the same
-    /// descriptor, so a pair moves between generations atomically.
+    /// One full insert-shaped attempt: probe, build the
+    /// pair-displacement descriptor, execute (at most) one K-CAS.
+    /// `seed` is the generation-transfer hook: `(src key word, src key,
+    /// src val word, src val)` — the source key is tombstoned and the
+    /// source value guarded in the same descriptor, so a pair moves
+    /// between generations atomically. `on_existing` picks what a hit
+    /// on a live `key` does (overwrite / fetch / add) — see
+    /// [`OnExisting`]; misses always insert.
     fn try_insert_one(
         &self,
         scratch: &mut Scratch,
@@ -219,6 +280,7 @@ impl KCasRobinHoodMap {
         key: u64,
         value: u64,
         seed: Option<(&Word, u64, &Word, u64)>,
+        on_existing: OnExisting,
     ) -> Result<Attempt, Frozen> {
         assert!(value <= crate::kcas::MAX_VALUE);
         scratch.op.clear();
@@ -259,19 +321,49 @@ impl KCasRobinHoodMap {
                     // report without committing (caller handles).
                     return Ok(Attempt::Present);
                 }
-                // Overwrite: value word only; pairing stays. The key
-                // could relocate between the key read and the value
-                // CAS; include the key word as a guard so the pair
-                // swap is atomic.
-                let old = self.vals[i].read();
-                scratch.op.clear();
-                scratch.op.push(&self.keys[i], key, key);
-                scratch.op.push(&self.vals[i], old, value);
-                return Ok(if scratch.op.execute() {
-                    Attempt::Done(Some(old))
-                } else {
-                    Attempt::Raced
-                });
+                match on_existing {
+                    OnExisting::Overwrite => {
+                        // Overwrite: value word only; pairing stays.
+                        // The key could relocate between the key read
+                        // and the value CAS; include the key word as a
+                        // guard so the pair swap is atomic.
+                        let old = self.vals[i].read();
+                        scratch.op.clear();
+                        scratch.op.push(&self.keys[i], key, key);
+                        scratch.op.push(&self.vals[i], old, value);
+                        return Ok(if scratch.op.execute() {
+                            Attempt::Done(Some(old))
+                        } else {
+                            Attempt::Raced
+                        });
+                    }
+                    OnExisting::Fetch => {
+                        // Report without committing. Like `get`'s hit:
+                        // the value read is paired only if the shard
+                        // timestamp stayed put around it.
+                        let v = self.vals[i].read();
+                        return Ok(if self.ts[shard].read() != ts_val {
+                            Attempt::Raced
+                        } else {
+                            Attempt::Fetched(v)
+                        });
+                    }
+                    OnExisting::Add(delta) => {
+                        // Counter bump: compare and write share the
+                        // value word; the key word guard pins pairing.
+                        let old = self.vals[i].read();
+                        let new =
+                            old.wrapping_add(delta) & crate::kcas::MAX_VALUE;
+                        scratch.op.clear();
+                        scratch.op.push(&self.keys[i], key, key);
+                        scratch.op.push(&self.vals[i], old, new);
+                        return Ok(if scratch.op.execute() {
+                            Attempt::Done(Some(old))
+                        } else {
+                            Attempt::Raced
+                        });
+                    }
+                }
             }
             // Probed over an occupied bucket: guard its shard (see
             // kcas_rh module docs — append-past-fresh-Nil race).
@@ -310,10 +402,12 @@ impl KCasRobinHoodMap {
         key: u64,
     ) -> Option<u64> {
         loop {
-            match self.try_remove_one(scratch, home, key) {
+            match self.try_remove_one(scratch, home, key, None) {
                 Ok(Attempt::Done(prev)) => return prev,
                 Ok(Attempt::Raced) => continue,
-                Ok(Attempt::Present) => unreachable!("remove never seeds"),
+                Ok(Attempt::Present) | Ok(Attempt::Fetched(_)) => {
+                    unreachable!("unconditional remove never reports")
+                }
                 Err(Frozen) => {
                     unreachable!("frozen bucket in standalone table")
                 }
@@ -323,11 +417,17 @@ impl KCasRobinHoodMap {
 
     /// One full `remove` attempt: probe, collect the pair shift chain,
     /// execute one K-CAS (chain + terminator guard + timestamp bumps).
+    /// With `expect = Some(e)` this is remove-if-equal: a hit whose
+    /// (validated) paired value differs from `e` reports
+    /// [`Attempt::Fetched`] without committing; on a match the chain's
+    /// first link (`e → next`) doubles as the value compare, so the
+    /// conditional remove is still one K-CAS.
     fn try_remove_one(
         &self,
         scratch: &mut Scratch,
         home: usize,
         key: u64,
+        expect: Option<u64>,
     ) -> Result<Attempt, Frozen> {
         scratch.seen.clear();
         scratch.op.clear();
@@ -370,6 +470,24 @@ impl KCasRobinHoodMap {
         }
         // Backward shift of (key, value) pairs.
         let removed_val = self.vals[i].read();
+        if let Some(e) = expect {
+            if removed_val != e {
+                // Conditional mismatch: report the witness off a
+                // validated pair read (same discipline as `get`'s hit
+                // path — the hit bucket's shard timestamp must not
+                // have moved across the key+value reads).
+                let (sh, tv) = *scratch.seen.last().unwrap();
+                debug_assert_eq!(sh, self.shard_of(i));
+                return Ok(if self.ts[sh].read() != tv {
+                    Attempt::Raced
+                } else {
+                    Attempt::Fetched(removed_val)
+                });
+            }
+            // Match: fall through to the shift chain. Its first link
+            // swaps the value word `e -> next`, so "still equals e at
+            // the linearization point" is guarded by the K-CAS itself.
+        }
         scratch.chain.clear();
         scratch.chain.push((key, removed_val));
         {
@@ -440,11 +558,18 @@ impl KCasRobinHoodMap {
         SCRATCH.with(|s| {
             let scratch = &mut *s.borrow_mut();
             loop {
-                match self.try_insert_one(scratch, home, key, value, None)? {
+                match self.try_insert_one(
+                    scratch,
+                    home,
+                    key,
+                    value,
+                    None,
+                    OnExisting::Overwrite,
+                )? {
                     Attempt::Done(prev) => return Ok(prev),
                     Attempt::Raced => continue,
-                    Attempt::Present => {
-                        unreachable!("Present is only reported to seeds")
+                    Attempt::Present | Attempt::Fetched(_) => {
+                        unreachable!("overwrite insert always commits on a hit")
                     }
                 }
             }
@@ -462,13 +587,264 @@ impl KCasRobinHoodMap {
         SCRATCH.with(|s| {
             let scratch = &mut *s.borrow_mut();
             loop {
-                match self.try_remove_one(scratch, home, key)? {
+                match self.try_remove_one(scratch, home, key, None)? {
                     Attempt::Done(prev) => return Ok(prev),
                     Attempt::Raced => continue,
-                    Attempt::Present => unreachable!("remove never seeds"),
+                    Attempt::Present | Attempt::Fetched(_) => {
+                        unreachable!("unconditional remove never reports")
+                    }
                 }
             }
         })
+    }
+
+    /// Migration-aware `compare_exchange` (see
+    /// [`KCasRobinHoodMap::compare_exchange`] for the corner table).
+    pub(crate) fn cmpex_mig(
+        &self,
+        h: u64,
+        key: u64,
+        expected: Option<u64>,
+        new: Option<u64>,
+    ) -> Result<Result<(), Option<u64>>, Frozen> {
+        check_key(key);
+        let home = (h & self.mask) as usize;
+        SCRATCH.with(|s| {
+            self.cmpex_in(&mut s.borrow_mut(), home, key, expected, new)
+        })
+    }
+
+    /// Migration-aware `get_or_insert`.
+    pub(crate) fn get_or_insert_mig(
+        &self,
+        h: u64,
+        key: u64,
+        value: u64,
+    ) -> Result<Option<u64>, Frozen> {
+        check_key(key);
+        let home = (h & self.mask) as usize;
+        SCRATCH.with(|s| {
+            self.get_or_insert_in(&mut s.borrow_mut(), home, key, value)
+        })
+    }
+
+    /// Migration-aware `fetch_add`.
+    pub(crate) fn fetch_add_mig(
+        &self,
+        h: u64,
+        key: u64,
+        delta: u64,
+    ) -> Result<Option<u64>, Frozen> {
+        check_key(key);
+        let home = (h & self.mask) as usize;
+        SCRATCH.with(|s| {
+            self.fetch_add_in(&mut s.borrow_mut(), home, key, delta)
+        })
+    }
+
+    /// One frozen-aware, timestamp-validated lookup locating the key's
+    /// bucket: `Some((i, v))` = `key` lives at bucket `i` paired with
+    /// `v` at the linearization point; `None` = validated miss. Retries
+    /// timestamp races internally (no K-CAS is involved); any frozen
+    /// sighting aborts to the migration wrapper — this powers the
+    /// *write*-shaped conditional corners, which must not fall through
+    /// generations the way `get_mig` does.
+    fn try_probe_one(
+        &self,
+        scratch: &mut Scratch,
+        home: usize,
+        key: u64,
+    ) -> Result<Option<(usize, u64)>, Frozen> {
+        let seen = &mut scratch.seen;
+        'retry: loop {
+            seen.clear();
+            let mut i = home;
+            let mut cur_dist = 0u64;
+            loop {
+                let shard = self.shard_of(i);
+                if seen.last().map(|&(x, _)| x) != Some(shard) {
+                    seen.push((shard, self.ts[shard].read()));
+                }
+                let cur = self.keys[i].read();
+                if is_frozen(cur) {
+                    return Err(Frozen);
+                }
+                if cur == key {
+                    let v = self.vals[i].read();
+                    let (sh, tv) = *seen.last().unwrap();
+                    if self.ts[sh].read() != tv {
+                        continue 'retry;
+                    }
+                    return Ok(Some((i, v)));
+                }
+                if cur == NIL || self.dist(cur, i) < cur_dist {
+                    break;
+                }
+                i = (i + 1) & self.mask as usize;
+                cur_dist += 1;
+                if cur_dist as usize > self.size() {
+                    break;
+                }
+            }
+            for &(shard, v) in seen.iter() {
+                if self.ts[shard].read() != v {
+                    continue 'retry;
+                }
+            }
+            return Ok(None);
+        }
+    }
+
+    /// `compare_exchange` body against borrowed scratch: dispatches the
+    /// four `(expected, new)` corners onto the probe engines. Each loop
+    /// iteration is one probe + at most one K-CAS.
+    fn cmpex_in(
+        &self,
+        scratch: &mut Scratch,
+        home: usize,
+        key: u64,
+        expected: Option<u64>,
+        new: Option<u64>,
+    ) -> Result<Result<(), Option<u64>>, Frozen> {
+        match (expected, new) {
+            // Insert-if-absent: the insert descriptor's timestamp
+            // guards atomically assert absence along the probe path.
+            (None, Some(v)) => loop {
+                match self.try_insert_one(
+                    scratch,
+                    home,
+                    key,
+                    v,
+                    None,
+                    OnExisting::Fetch,
+                )? {
+                    Attempt::Done(prev) => {
+                        debug_assert!(prev.is_none());
+                        return Ok(Ok(()));
+                    }
+                    Attempt::Fetched(cur) => return Ok(Err(Some(cur))),
+                    Attempt::Raced => continue,
+                    Attempt::Present => unreachable!("unseeded insert"),
+                }
+            },
+            // Remove-if-equal: the shift chain's first link is the
+            // value compare.
+            (Some(e), None) => loop {
+                match self.try_remove_one(scratch, home, key, Some(e))? {
+                    Attempt::Done(Some(_)) => return Ok(Ok(())),
+                    Attempt::Done(None) => return Ok(Err(None)),
+                    Attempt::Fetched(cur) => return Ok(Err(Some(cur))),
+                    Attempt::Raced => continue,
+                    Attempt::Present => unreachable!("remove never seeds"),
+                }
+            },
+            // Swap-if-equal: {key word k→k, value word e→v} — compare
+            // and write share the value word.
+            (Some(e), Some(v)) => {
+                assert!(v <= crate::kcas::MAX_VALUE);
+                loop {
+                    match self.try_probe_one(scratch, home, key)? {
+                        None => return Ok(Err(None)),
+                        Some((_, cur)) if cur != e => {
+                            return Ok(Err(Some(cur)));
+                        }
+                        Some((i, _)) => {
+                            scratch.op.clear();
+                            scratch.op.push(&self.keys[i], key, key);
+                            scratch.op.push(&self.vals[i], e, v);
+                            if scratch.op.execute() {
+                                return Ok(Ok(()));
+                            }
+                            // Raced: the pair moved or the value
+                            // changed; re-probe.
+                        }
+                    }
+                }
+            }
+            // Absence assertion: a validated miss, no K-CAS at all.
+            (None, None) => match self.try_probe_one(scratch, home, key)? {
+                None => Ok(Ok(())),
+                Some((_, cur)) => Ok(Err(Some(cur))),
+            },
+        }
+    }
+
+    /// `get_or_insert` body against borrowed scratch.
+    fn get_or_insert_in(
+        &self,
+        scratch: &mut Scratch,
+        home: usize,
+        key: u64,
+        value: u64,
+    ) -> Result<Option<u64>, Frozen> {
+        loop {
+            match self.try_insert_one(
+                scratch,
+                home,
+                key,
+                value,
+                None,
+                OnExisting::Fetch,
+            )? {
+                Attempt::Done(prev) => {
+                    debug_assert!(prev.is_none());
+                    return Ok(None);
+                }
+                Attempt::Fetched(v) => return Ok(Some(v)),
+                Attempt::Raced => continue,
+                Attempt::Present => unreachable!("unseeded insert"),
+            }
+        }
+    }
+
+    /// `fetch_add` body against borrowed scratch.
+    fn fetch_add_in(
+        &self,
+        scratch: &mut Scratch,
+        home: usize,
+        key: u64,
+        delta: u64,
+    ) -> Result<Option<u64>, Frozen> {
+        assert!(delta <= crate::kcas::MAX_VALUE);
+        loop {
+            match self.try_insert_one(
+                scratch,
+                home,
+                key,
+                delta,
+                None,
+                OnExisting::Add(delta),
+            )? {
+                Attempt::Done(prev) => return Ok(prev),
+                Attempt::Raced => continue,
+                Attempt::Fetched(_) => unreachable!("Add mode commits"),
+                Attempt::Present => unreachable!("unseeded insert"),
+            }
+        }
+    }
+
+    /// Atomic conditional write; see [`super::ConcurrentMap::compare_exchange`]
+    /// for the `(expected, new)` corner table. Every corner is a single
+    /// K-CAS (or a pure validated read) per attempt.
+    pub fn compare_exchange(
+        &self,
+        key: u64,
+        expected: Option<u64>,
+        new: Option<u64>,
+    ) -> Result<(), Option<u64>> {
+        live(self.cmpex_mig(splitmix64(key), key, expected, new))
+    }
+
+    /// Insert `value` iff absent; returns the pre-existing value
+    /// otherwise (`None` = this call inserted). Never overwrites.
+    pub fn get_or_insert(&self, key: u64, value: u64) -> Option<u64> {
+        live(self.get_or_insert_mig(splitmix64(key), key, value))
+    }
+
+    /// Atomic `value += delta` (wrapping in the 62-bit domain; missing
+    /// keys count as 0). Returns the previous value.
+    pub fn fetch_add(&self, key: u64, delta: u64) -> Option<u64> {
+        live(self.fetch_add_mig(splitmix64(key), key, delta))
     }
 
     /// Frozen-aware lookup (wrapper fast path and the source-generation
@@ -616,9 +992,16 @@ impl KCasRobinHoodMap {
         let seed = Some((&self.keys[i], key, &self.vals[i], val));
         SCRATCH.with(|s| {
             let scratch = &mut *s.borrow_mut();
-            match target.try_insert_one(scratch, home, key, val, seed) {
+            match target.try_insert_one(
+                scratch,
+                home,
+                key,
+                val,
+                seed,
+                OnExisting::Overwrite,
+            ) {
                 Ok(Attempt::Done(None)) => true,
-                Ok(Attempt::Done(Some(_))) => {
+                Ok(Attempt::Done(Some(_))) | Ok(Attempt::Fetched(_)) => {
                     unreachable!("seeded insert never overwrites")
                 }
                 Ok(Attempt::Present) => {
@@ -638,6 +1021,35 @@ impl KCasRobinHoodMap {
         })
     }
 
+    /// One op against an already-borrowed scratch and precomputed home
+    /// bucket — the shared body of both batch paths.
+    fn apply_one_in(
+        &self,
+        scratch: &mut Scratch,
+        home: usize,
+        op: MapOp,
+    ) -> MapReply {
+        let key = op.key();
+        match op {
+            MapOp::Get(_) => MapReply::Value(self.get_in(scratch, home, key)),
+            MapOp::Insert(_, v) => {
+                MapReply::Prev(self.insert_in(scratch, home, key, v))
+            }
+            MapOp::Remove(_) => {
+                MapReply::Removed(self.remove_in(scratch, home, key))
+            }
+            MapOp::CmpEx(_, e, n) => {
+                MapReply::CmpEx(live(self.cmpex_in(scratch, home, key, e, n)))
+            }
+            MapOp::GetOrInsert(_, v) => MapReply::Existing(live(
+                self.get_or_insert_in(scratch, home, key, v),
+            )),
+            MapOp::FetchAdd(_, d) => {
+                MapReply::Added(live(self.fetch_add_in(scratch, home, key, d)))
+            }
+        }
+    }
+
     /// Apply `ops` in order with the thread-local K-CAS scratch
     /// (descriptor builder + probe lists) borrowed **once** for the
     /// whole batch — the amortisation hook behind `service::batch`.
@@ -650,17 +1062,26 @@ impl KCasRobinHoodMap {
                 let key = op.key();
                 check_key(key);
                 let home = home_bucket(key, self.mask);
-                out.push(match op {
-                    MapOp::Get(_) => {
-                        MapReply::Value(self.get_in(scratch, home, key))
-                    }
-                    MapOp::Insert(_, v) => {
-                        MapReply::Prev(self.insert_in(scratch, home, key, v))
-                    }
-                    MapOp::Remove(_) => {
-                        MapReply::Removed(self.remove_in(scratch, home, key))
-                    }
-                });
+                out.push(self.apply_one_in(scratch, home, op));
+            }
+        })
+    }
+
+    /// [`KCasRobinHoodMap::apply_batch_local`] off precomputed hashes:
+    /// one scratch borrow per batch *and* zero SplitMix64 evaluations —
+    /// what the sharded facade's grouped sub-batches run through.
+    pub fn apply_batch_local_hashed(
+        &self,
+        ops: &[super::HashedMapOp],
+        out: &mut Vec<MapReply>,
+    ) {
+        SCRATCH.with(|s| {
+            let scratch = &mut *s.borrow_mut();
+            out.clear();
+            for &(h, op) in ops {
+                check_key(op.key());
+                let home = (h & self.mask) as usize;
+                out.push(self.apply_one_in(scratch, home, op));
             }
         })
     }
@@ -708,6 +1129,23 @@ impl ConcurrentMap for KCasRobinHoodMap {
         KCasRobinHoodMap::remove(self, key)
     }
 
+    fn compare_exchange(
+        &self,
+        key: u64,
+        expected: Option<u64>,
+        new: Option<u64>,
+    ) -> Result<(), Option<u64>> {
+        KCasRobinHoodMap::compare_exchange(self, key, expected, new)
+    }
+
+    fn get_or_insert(&self, key: u64, value: u64) -> Option<u64> {
+        KCasRobinHoodMap::get_or_insert(self, key, value)
+    }
+
+    fn fetch_add(&self, key: u64, delta: u64) -> Option<u64> {
+        KCasRobinHoodMap::fetch_add(self, key, delta)
+    }
+
     /// Hashed entry points (ROADMAP item): reuse the routing hash the
     /// sharded facade already computed (`home == h & mask`).
     fn get_hashed(&self, h: u64, key: u64) -> Option<u64> {
@@ -728,8 +1166,34 @@ impl ConcurrentMap for KCasRobinHoodMap {
         SCRATCH.with(|s| self.remove_in(&mut s.borrow_mut(), home, key))
     }
 
+    fn compare_exchange_hashed(
+        &self,
+        h: u64,
+        key: u64,
+        expected: Option<u64>,
+        new: Option<u64>,
+    ) -> Result<(), Option<u64>> {
+        live(self.cmpex_mig(h, key, expected, new))
+    }
+
+    fn get_or_insert_hashed(&self, h: u64, key: u64, value: u64) -> Option<u64> {
+        live(self.get_or_insert_mig(h, key, value))
+    }
+
+    fn fetch_add_hashed(&self, h: u64, key: u64, delta: u64) -> Option<u64> {
+        live(self.fetch_add_mig(h, key, delta))
+    }
+
     fn apply_batch(&self, ops: &[MapOp], out: &mut Vec<MapReply>) {
         self.apply_batch_local(ops, out)
+    }
+
+    fn apply_batch_hashed(
+        &self,
+        ops: &[super::HashedMapOp],
+        out: &mut Vec<MapReply>,
+    ) {
+        self.apply_batch_local_hashed(ops, out)
     }
 
     fn name(&self) -> &'static str {
@@ -956,6 +1420,204 @@ mod tests {
         assert!(!matches!(src.get_mig(h, 7), ProbeVal::Found(_)));
         assert_eq!(dst.get(7), Some(507));
         assert!(src.insert_mig(h, 7, 1).is_err(), "frozen run must abort");
+    }
+
+    #[test]
+    fn compare_exchange_corners_sequential() {
+        let m = KCasRobinHoodMap::new(8);
+        // Absent key.
+        assert_eq!(m.compare_exchange(5, None, None), Ok(()));
+        assert_eq!(m.compare_exchange(5, Some(1), Some(2)), Err(None));
+        assert_eq!(m.compare_exchange(5, Some(1), None), Err(None));
+        // Insert-if-absent.
+        assert_eq!(m.compare_exchange(5, None, Some(50)), Ok(()));
+        assert_eq!(m.compare_exchange(5, None, Some(51)), Err(Some(50)));
+        assert_eq!(m.compare_exchange(5, None, None), Err(Some(50)));
+        // Swap-if-equal.
+        assert_eq!(m.compare_exchange(5, Some(49), Some(51)), Err(Some(50)));
+        assert_eq!(m.compare_exchange(5, Some(50), Some(51)), Ok(()));
+        assert_eq!(m.get(5), Some(51));
+        // Remove-if-equal.
+        assert_eq!(m.compare_exchange(5, Some(50), None), Err(Some(51)));
+        assert_eq!(m.compare_exchange(5, Some(51), None), Ok(()));
+        assert_eq!(m.get(5), None);
+        assert_eq!(m.len_quiesced(), 0);
+        m.check_invariant().unwrap();
+    }
+
+    #[test]
+    fn get_or_insert_and_fetch_add_sequential() {
+        let m = KCasRobinHoodMap::new(8);
+        assert_eq!(m.get_or_insert(9, 90), None);
+        assert_eq!(m.get_or_insert(9, 91), Some(90));
+        assert_eq!(m.get(9), Some(90));
+        assert_eq!(m.fetch_add(9, 5), Some(90));
+        assert_eq!(m.get(9), Some(95));
+        assert_eq!(m.fetch_add(12, 3), None); // missing key counts as 0
+        assert_eq!(m.get(12), Some(3));
+        // Wrapping stays in the 62-bit value domain.
+        let m2 = KCasRobinHoodMap::new(6);
+        m2.insert(1, crate::kcas::MAX_VALUE);
+        assert_eq!(m2.fetch_add(1, 1), Some(crate::kcas::MAX_VALUE));
+        assert_eq!(m2.get(1), Some(0));
+    }
+
+    #[test]
+    fn conditional_ops_displace_like_inserts() {
+        // Force a crowded table so conditional inserts run the full
+        // displacement/guard machinery.
+        let m = KCasRobinHoodMap::new(6);
+        for k in 1..=40u64 {
+            assert_eq!(m.compare_exchange(k, None, Some(k * 9)), Ok(()));
+        }
+        m.check_invariant().unwrap();
+        for k in 1..=40u64 {
+            assert_eq!(m.get(k), Some(k * 9), "pair broken for {k}");
+            assert_eq!(m.get_or_insert(k, 1), Some(k * 9));
+        }
+        for k in (1..=40u64).step_by(2) {
+            assert_eq!(m.compare_exchange(k, Some(k * 9), None), Ok(()));
+        }
+        m.check_invariant().unwrap();
+        for k in 1..=40u64 {
+            let want = if k % 2 == 0 { Some(k * 9) } else { None };
+            assert_eq!(m.get(k), want, "after conditional remove, key {k}");
+        }
+    }
+
+    #[test]
+    fn concurrent_fetch_add_is_atomic() {
+        // The whole point of the native RMW: concurrent increments on
+        // one hot counter must never lose an update.
+        let m = Arc::new(KCasRobinHoodMap::new(8));
+        const THREADS: u64 = 8;
+        const INCS: u64 = 5_000;
+        let mut hs = Vec::new();
+        for _ in 0..THREADS {
+            let m = m.clone();
+            hs.push(std::thread::spawn(move || {
+                for _ in 0..INCS {
+                    m.fetch_add(7, 1);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(m.get(7), Some(THREADS * INCS));
+    }
+
+    #[test]
+    fn concurrent_get_or_insert_inserts_exactly_once() {
+        let m = Arc::new(KCasRobinHoodMap::new(10));
+        let mut hs = Vec::new();
+        for tid in 0..8u64 {
+            let m = m.clone();
+            hs.push(std::thread::spawn(move || {
+                // Every thread proposes its own value; exactly one
+                // proposal per key may win.
+                (1..=200u64)
+                    .filter(|&k| m.get_or_insert(k, 1000 + tid).is_none())
+                    .count()
+            }));
+        }
+        let wins: usize = hs.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(wins, 200, "duplicate or lost conditional inserts");
+        for k in 1..=200u64 {
+            let v = m.get(k).expect("winner's value survives");
+            assert!((1000..1008).contains(&v), "key {k} holds {v}");
+        }
+    }
+
+    #[test]
+    fn concurrent_cmpex_chain_has_single_winner_per_step() {
+        // Optimistic-update ladder: every thread tries to advance the
+        // counter via compare_exchange(v, v+1); total successes must
+        // equal the final value (no double-applied steps).
+        let m = Arc::new(KCasRobinHoodMap::new(8));
+        m.insert(3, 0);
+        let mut hs = Vec::new();
+        for _ in 0..6 {
+            let m = m.clone();
+            hs.push(std::thread::spawn(move || {
+                let mut wins = 0u64;
+                for _ in 0..4_000 {
+                    let cur = m.get(3).unwrap();
+                    if m.compare_exchange(3, Some(cur), Some(cur + 1)).is_ok() {
+                        wins += 1;
+                    }
+                }
+                wins
+            }));
+        }
+        let total: u64 = hs.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(m.get(3), Some(total));
+    }
+
+    #[test]
+    fn conditional_hashed_entry_points_agree_with_plain() {
+        let m = KCasRobinHoodMap::new(7);
+        for k in 1..=40u64 {
+            let h = splitmix64(k);
+            assert_eq!(
+                ConcurrentMap::compare_exchange_hashed(&m, h, k, None, Some(k)),
+                Ok(())
+            );
+            assert_eq!(
+                ConcurrentMap::get_or_insert_hashed(&m, h, k, 0),
+                Some(k)
+            );
+            assert_eq!(ConcurrentMap::fetch_add_hashed(&m, h, k, 2), Some(k));
+            assert_eq!(m.get(k), Some(k + 2));
+            assert_eq!(
+                ConcurrentMap::compare_exchange_hashed(
+                    &m,
+                    h,
+                    k,
+                    Some(k + 2),
+                    None
+                ),
+                Ok(())
+            );
+            assert_eq!(m.get(k), None);
+        }
+        m.check_invariant().unwrap();
+    }
+
+    #[test]
+    fn hashed_batch_matches_plain_batch() {
+        let hashed = KCasRobinHoodMap::new(8);
+        let plain = KCasRobinHoodMap::new(8);
+        let ops = vec![
+            MapOp::GetOrInsert(4, 40),
+            MapOp::FetchAdd(4, 2),
+            MapOp::CmpEx(4, Some(42), Some(43)),
+            MapOp::CmpEx(4, Some(42), Some(44)),
+            MapOp::Get(4),
+            MapOp::CmpEx(9, None, Some(90)),
+            MapOp::CmpEx(9, Some(90), None),
+            MapOp::Get(9),
+        ];
+        let hashed_ops: Vec<crate::maps::HashedMapOp> =
+            ops.iter().map(|&op| (splitmix64(op.key()), op)).collect();
+        let mut got = Vec::new();
+        hashed.apply_batch_local_hashed(&hashed_ops, &mut got);
+        let mut want = Vec::new();
+        plain.apply_batch_local(&ops, &mut want);
+        assert_eq!(got, want);
+        assert_eq!(
+            got,
+            vec![
+                MapReply::Existing(None),
+                MapReply::Added(Some(40)),
+                MapReply::CmpEx(Ok(())),
+                MapReply::CmpEx(Err(Some(43))),
+                MapReply::Value(Some(43)),
+                MapReply::CmpEx(Ok(())),
+                MapReply::CmpEx(Ok(())),
+                MapReply::Value(None),
+            ]
+        );
     }
 
     #[test]

@@ -15,7 +15,7 @@ use std::sync::Mutex;
 use crate::util::pad::CachePadded;
 
 use super::{check_key, ConcurrentMap, ConcurrentSet};
-use crate::util::hash::home_bucket;
+use crate::util::hash::{home_bucket, splitmix64};
 
 const EMPTY: u64 = 0;
 const TOMBSTONE: u64 = 1;
@@ -65,10 +65,26 @@ impl LockedLp {
 }
 
 impl ConcurrentSet for LockedLp {
+    // The plain trio routes through the hashed twins so the sharded
+    // facade's single SplitMix64 is reused rather than recomputed
+    // (linear probing derives nothing but the home bucket from it).
+
     fn contains(&self, key: u64) -> bool {
+        self.contains_hashed(splitmix64(key), key)
+    }
+
+    fn add(&self, key: u64) -> bool {
+        self.add_hashed(splitmix64(key), key)
+    }
+
+    fn remove(&self, key: u64) -> bool {
+        self.remove_hashed(splitmix64(key), key)
+    }
+
+    fn contains_hashed(&self, h: u64, key: u64) -> bool {
         check_key(key);
         let k = key + BIAS;
-        let mut i = home_bucket(key, self.mask);
+        let mut i = (h & self.mask) as usize;
         for _ in 0..self.size() {
             let cur = self.table[i].load(Ordering::Acquire);
             if cur == EMPTY {
@@ -82,10 +98,10 @@ impl ConcurrentSet for LockedLp {
         false
     }
 
-    fn add(&self, key: u64) -> bool {
+    fn add_hashed(&self, h: u64, key: u64) -> bool {
         check_key(key);
         let k = key + BIAS;
-        let home = home_bucket(key, self.mask);
+        let home = (h & self.mask) as usize;
         let _guard = self.lock_of(home).lock().unwrap();
         // Same-key operations serialize on the home lock, so a
         // scan-then-claim with tombstone reuse is race-free for `key`;
@@ -140,10 +156,10 @@ impl ConcurrentSet for LockedLp {
         }
     }
 
-    fn remove(&self, key: u64) -> bool {
+    fn remove_hashed(&self, h: u64, key: u64) -> bool {
         check_key(key);
         let k = key + BIAS;
-        let home = home_bucket(key, self.mask);
+        let home = (h & self.mask) as usize;
         let _guard = self.lock_of(home).lock().unwrap();
         let mut i = home;
         for _ in 0..self.size() {
@@ -266,23 +282,12 @@ impl LockedLpMap {
         }
         None
     }
-}
 
-impl ConcurrentMap for LockedLpMap {
-    fn get(&self, key: u64) -> Option<u64> {
-        check_key(key);
-        let home = home_bucket(key, self.mask);
-        let _guard = self.lock_of(home).lock().unwrap();
-        self.find(key + BIAS, home)
-            .map(|i| self.vals[i].load(Ordering::Acquire))
-    }
-
-    fn insert(&self, key: u64, value: u64) -> Option<u64> {
-        check_key(key);
-        assert!(value <= crate::kcas::MAX_VALUE);
-        let k = key + BIAS;
-        let home = home_bucket(key, self.mask);
-        let _guard = self.lock_of(home).lock().unwrap();
+    /// Insert-or-overwrite body; caller holds the home-segment lock
+    /// (`k` is biased). Returns the previous value. Slot claims still
+    /// CAS because probes for *other* keys (holding other locks) may
+    /// target the same bucket.
+    fn upsert_locked(&self, k: u64, home: usize, value: u64) -> Option<u64> {
         'rescan: loop {
             let mut reusable: Option<usize> = None;
             let mut i = home;
@@ -336,9 +341,141 @@ impl ConcurrentMap for LockedLpMap {
         }
     }
 
+    /// `compare_exchange` body for a precomputed home bucket: the whole
+    /// check-then-act runs under the home-segment lock — the blocking
+    /// reference semantics the K-CAS map's single-descriptor version is
+    /// checked against.
+    fn cmpex_at(
+        &self,
+        key: u64,
+        home: usize,
+        expected: Option<u64>,
+        new: Option<u64>,
+    ) -> Result<(), Option<u64>> {
+        if let Some(v) = new {
+            assert!(v <= crate::kcas::MAX_VALUE);
+        }
+        let k = key + BIAS;
+        let _guard = self.lock_of(home).lock().unwrap();
+        match self.find(k, home) {
+            Some(i) => {
+                let cur = self.vals[i].load(Ordering::Acquire);
+                match (expected, new) {
+                    (Some(e), Some(v)) if cur == e => {
+                        self.vals[i].store(v, Ordering::Release);
+                        Ok(())
+                    }
+                    (Some(e), None) if cur == e => {
+                        // Same-key ops serialise on this lock; a plain
+                        // tombstone store suffices (see `remove`).
+                        self.keys[i].store(TOMBSTONE, Ordering::Release);
+                        Ok(())
+                    }
+                    _ => Err(Some(cur)),
+                }
+            }
+            None => match (expected, new) {
+                (None, Some(v)) => {
+                    let prev = self.upsert_locked(k, home, v);
+                    debug_assert!(prev.is_none());
+                    Ok(())
+                }
+                (None, None) => Ok(()),
+                (Some(_), _) => Err(None),
+            },
+        }
+    }
+
+    /// `get_or_insert` body for a precomputed home bucket.
+    fn get_or_insert_at(&self, key: u64, home: usize, value: u64) -> Option<u64> {
+        assert!(value <= crate::kcas::MAX_VALUE);
+        let k = key + BIAS;
+        let _guard = self.lock_of(home).lock().unwrap();
+        match self.find(k, home) {
+            Some(i) => Some(self.vals[i].load(Ordering::Acquire)),
+            None => {
+                let prev = self.upsert_locked(k, home, value);
+                debug_assert!(prev.is_none());
+                None
+            }
+        }
+    }
+
+    /// `fetch_add` body for a precomputed home bucket.
+    fn fetch_add_at(&self, key: u64, home: usize, delta: u64) -> Option<u64> {
+        assert!(delta <= crate::kcas::MAX_VALUE);
+        let k = key + BIAS;
+        let _guard = self.lock_of(home).lock().unwrap();
+        match self.find(k, home) {
+            Some(i) => {
+                let cur = self.vals[i].load(Ordering::Acquire);
+                self.vals[i].store(
+                    cur.wrapping_add(delta) & crate::kcas::MAX_VALUE,
+                    Ordering::Release,
+                );
+                Some(cur)
+            }
+            None => {
+                let prev = self.upsert_locked(k, home, delta);
+                debug_assert!(prev.is_none());
+                None
+            }
+        }
+    }
+}
+
+impl ConcurrentMap for LockedLpMap {
+    // The plain entry points route through the hashed twins (one
+    // SplitMix64 per op, reused by the sharded facade).
+
+    fn get(&self, key: u64) -> Option<u64> {
+        self.get_hashed(splitmix64(key), key)
+    }
+
+    fn insert(&self, key: u64, value: u64) -> Option<u64> {
+        self.insert_hashed(splitmix64(key), key, value)
+    }
+
     fn remove(&self, key: u64) -> Option<u64> {
+        self.remove_hashed(splitmix64(key), key)
+    }
+
+    fn compare_exchange(
+        &self,
+        key: u64,
+        expected: Option<u64>,
+        new: Option<u64>,
+    ) -> Result<(), Option<u64>> {
+        self.compare_exchange_hashed(splitmix64(key), key, expected, new)
+    }
+
+    fn get_or_insert(&self, key: u64, value: u64) -> Option<u64> {
+        self.get_or_insert_hashed(splitmix64(key), key, value)
+    }
+
+    fn fetch_add(&self, key: u64, delta: u64) -> Option<u64> {
+        self.fetch_add_hashed(splitmix64(key), key, delta)
+    }
+
+    fn get_hashed(&self, h: u64, key: u64) -> Option<u64> {
         check_key(key);
-        let home = home_bucket(key, self.mask);
+        let home = (h & self.mask) as usize;
+        let _guard = self.lock_of(home).lock().unwrap();
+        self.find(key + BIAS, home)
+            .map(|i| self.vals[i].load(Ordering::Acquire))
+    }
+
+    fn insert_hashed(&self, h: u64, key: u64, value: u64) -> Option<u64> {
+        check_key(key);
+        assert!(value <= crate::kcas::MAX_VALUE);
+        let home = (h & self.mask) as usize;
+        let _guard = self.lock_of(home).lock().unwrap();
+        self.upsert_locked(key + BIAS, home, value)
+    }
+
+    fn remove_hashed(&self, h: u64, key: u64) -> Option<u64> {
+        check_key(key);
+        let home = (h & self.mask) as usize;
         let _guard = self.lock_of(home).lock().unwrap();
         let i = self.find(key + BIAS, home)?;
         let v = self.vals[i].load(Ordering::Acquire);
@@ -346,6 +483,27 @@ impl ConcurrentMap for LockedLpMap {
         // claimed slot's key; a plain store back to TOMBSTONE is safe.
         self.keys[i].store(TOMBSTONE, Ordering::Release);
         Some(v)
+    }
+
+    fn compare_exchange_hashed(
+        &self,
+        h: u64,
+        key: u64,
+        expected: Option<u64>,
+        new: Option<u64>,
+    ) -> Result<(), Option<u64>> {
+        check_key(key);
+        self.cmpex_at(key, (h & self.mask) as usize, expected, new)
+    }
+
+    fn get_or_insert_hashed(&self, h: u64, key: u64, value: u64) -> Option<u64> {
+        check_key(key);
+        self.get_or_insert_at(key, (h & self.mask) as usize, value)
+    }
+
+    fn fetch_add_hashed(&self, h: u64, key: u64, delta: u64) -> Option<u64> {
+        check_key(key);
+        self.fetch_add_at(key, (h & self.mask) as usize, delta)
     }
 
     fn name(&self) -> &'static str {
@@ -508,6 +666,70 @@ mod tests {
             let want = if k % 2 == 1 { k * 11 } else { k * 10 };
             assert_eq!(m.get(k), Some(want), "key {k}");
         }
+    }
+
+    #[test]
+    fn map_conditional_ops_reference_semantics() {
+        let m = LockedLpMap::new(8);
+        assert_eq!(m.compare_exchange(5, None, None), Ok(()));
+        assert_eq!(m.compare_exchange(5, Some(1), Some(2)), Err(None));
+        assert_eq!(m.compare_exchange(5, None, Some(50)), Ok(()));
+        assert_eq!(m.compare_exchange(5, None, Some(51)), Err(Some(50)));
+        assert_eq!(m.compare_exchange(5, Some(50), Some(51)), Ok(()));
+        assert_eq!(m.compare_exchange(5, Some(50), None), Err(Some(51)));
+        assert_eq!(m.compare_exchange(5, Some(51), None), Ok(()));
+        assert_eq!(m.get(5), None);
+        assert_eq!(m.get_or_insert(6, 60), None);
+        assert_eq!(m.get_or_insert(6, 61), Some(60));
+        assert_eq!(m.fetch_add(6, 2), Some(60));
+        assert_eq!(m.fetch_add(7, 9), None);
+        assert_eq!(m.get(6), Some(62));
+        assert_eq!(m.get(7), Some(9));
+        // Conditional insert through a tombstone (reuse path).
+        assert_eq!(m.remove(7), Some(9));
+        assert_eq!(m.compare_exchange(7, None, Some(70)), Ok(()));
+        assert_eq!(m.get(7), Some(70));
+    }
+
+    #[test]
+    fn map_concurrent_fetch_add_is_atomic() {
+        let m = Arc::new(LockedLpMap::new(8));
+        const THREADS: u64 = 4;
+        const INCS: u64 = 5_000;
+        let mut hs = Vec::new();
+        for _ in 0..THREADS {
+            let m = m.clone();
+            hs.push(std::thread::spawn(move || {
+                for _ in 0..INCS {
+                    m.fetch_add(3, 1);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(m.get(3), Some(THREADS * INCS));
+    }
+
+    #[test]
+    fn hashed_entry_points_agree_with_plain() {
+        let t = LockedLp::new(7);
+        let m = LockedLpMap::new(7);
+        for k in 1..=50u64 {
+            let h = splitmix64(k);
+            assert!(ConcurrentSet::add_hashed(&t, h, k));
+            assert!(ConcurrentSet::contains_hashed(&t, h, k));
+            assert!(t.contains(k));
+            assert_eq!(ConcurrentMap::insert_hashed(&m, h, k, k + 1), None);
+            assert_eq!(ConcurrentMap::get_hashed(&m, h, k), Some(k + 1));
+        }
+        for k in (1..=50u64).step_by(2) {
+            let h = splitmix64(k);
+            assert!(ConcurrentSet::remove_hashed(&t, h, k));
+            assert_eq!(ConcurrentMap::remove_hashed(&m, h, k), Some(k + 1));
+        }
+        assert_eq!(t.len_quiesced(), 25);
+        assert_eq!(m.len_quiesced(), 25);
     }
 
     #[test]

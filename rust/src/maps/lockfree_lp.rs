@@ -27,7 +27,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::{check_key, ConcurrentSet};
-use crate::util::hash::home_bucket;
+use crate::util::hash::{home_bucket, splitmix64};
 
 const EMPTY: u64 = 0;
 const BUSY: u64 = 1;
@@ -91,9 +91,26 @@ impl LockFreeLp {
 }
 
 impl ConcurrentSet for LockFreeLp {
+    // The plain trio routes through the hashed twins so the sharded
+    // facade's routing hash is reused for the home bucket instead of
+    // recomputed (the benches compare tables off the same entry
+    // points, so the baseline shouldn't pay a second SplitMix64).
+
     fn contains(&self, key: u64) -> bool {
+        self.contains_hashed(splitmix64(key), key)
+    }
+
+    fn add(&self, key: u64) -> bool {
+        self.add_hashed(splitmix64(key), key)
+    }
+
+    fn remove(&self, key: u64) -> bool {
+        self.remove_hashed(splitmix64(key), key)
+    }
+
+    fn contains_hashed(&self, h: u64, key: u64) -> bool {
         check_key(key);
-        let mut i = home_bucket(key, self.mask);
+        let mut i = (h & self.mask) as usize;
         for _ in 0..self.size() {
             let cur = self.load(i);
             if cur == EMPTY {
@@ -107,9 +124,9 @@ impl ConcurrentSet for LockFreeLp {
         false
     }
 
-    fn add(&self, key: u64) -> bool {
+    fn add_hashed(&self, h: u64, key: u64) -> bool {
         check_key(key);
-        let home = home_bucket(key, self.mask);
+        let home = (h & self.mask) as usize;
         let mut node: *mut Node = std::ptr::null_mut();
         'retry: loop {
             // Phase 1: scan the cluster for the key and the first
@@ -194,9 +211,9 @@ impl ConcurrentSet for LockFreeLp {
         }
     }
 
-    fn remove(&self, key: u64) -> bool {
+    fn remove_hashed(&self, h: u64, key: u64) -> bool {
         check_key(key);
-        let mut i = home_bucket(key, self.mask);
+        let mut i = (h & self.mask) as usize;
         for _ in 0..self.size() {
             let cur = self.load(i);
             if cur == EMPTY {
@@ -336,6 +353,22 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn hashed_entry_points_agree_with_plain() {
+        let t = LockFreeLp::new(8);
+        for k in 1..=60u64 {
+            let h = splitmix64(k);
+            assert!(ConcurrentSet::add_hashed(&t, h, k));
+            assert!(!t.add(k));
+            assert!(ConcurrentSet::contains_hashed(&t, h, k));
+        }
+        for k in (1..=60u64).step_by(2) {
+            assert!(ConcurrentSet::remove_hashed(&t, splitmix64(k), k));
+            assert!(!t.contains(k));
+        }
+        assert_eq!(t.len_quiesced(), 30);
     }
 
     #[test]

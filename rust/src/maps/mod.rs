@@ -20,6 +20,16 @@
 //! (`sharded-kcas-rh-map:16`). Values are 62-bit
 //! (`<= kcas::MAX_VALUE`); batch traffic uses [`MapOp`]/[`MapReply`]
 //! (see `service::batch` for the batched pipeline built on top).
+//!
+//! The map surface is **conditional-first**: beyond the unconditional
+//! `get`/`insert`/`remove` trio, every map natively provides
+//! [`ConcurrentMap::compare_exchange`] (whose `expected`/`new` corners
+//! subsume insert-if-absent and remove-if-equal),
+//! [`ConcurrentMap::get_or_insert`], and [`ConcurrentMap::fetch_add`] —
+//! on the K-CAS tables each is a *single* K-CAS (value-word guard +
+//! write), so check-then-act workloads (counters, leases, optimistic
+//! updates) need no external locking. The `fig16_rmw` experiment
+//! measures them under contention skew.
 
 pub mod hopscotch;
 pub mod kcas_rh;
@@ -95,6 +105,15 @@ pub enum MapOp {
     Insert(u64, u64),
     /// Remove a key.
     Remove(u64),
+    /// `CmpEx(key, expected, new)`: conditional write — see
+    /// [`ConcurrentMap::compare_exchange`] for the four corners.
+    CmpEx(u64, Option<u64>, Option<u64>),
+    /// `GetOrInsert(key, value)`: insert iff absent, report the
+    /// resident value otherwise.
+    GetOrInsert(u64, u64),
+    /// `FetchAdd(key, delta)`: atomic counter increment (missing keys
+    /// count as 0).
+    FetchAdd(u64, u64),
 }
 
 impl MapOp {
@@ -102,7 +121,12 @@ impl MapOp {
     #[inline]
     pub fn key(&self) -> u64 {
         match *self {
-            MapOp::Get(k) | MapOp::Insert(k, _) | MapOp::Remove(k) => k,
+            MapOp::Get(k)
+            | MapOp::Insert(k, _)
+            | MapOp::Remove(k)
+            | MapOp::CmpEx(k, _, _)
+            | MapOp::GetOrInsert(k, _)
+            | MapOp::FetchAdd(k, _) => k,
         }
     }
 }
@@ -116,18 +140,40 @@ pub enum MapReply {
     Prev(Option<u64>),
     /// `Remove`: the value that was removed, if the key existed.
     Removed(Option<u64>),
+    /// `CmpEx`: `Ok(())` if the exchange committed, `Err(witness)` with
+    /// the value observed at the linearization point otherwise.
+    CmpEx(Result<(), Option<u64>>),
+    /// `GetOrInsert`: the pre-existing value (`None` = we inserted).
+    Existing(Option<u64>),
+    /// `FetchAdd`: the previous value (`None` = the key was absent and
+    /// now holds `delta`).
+    Added(Option<u64>),
 }
 
 impl MapReply {
     /// The optional value inside, regardless of variant (what the wire
-    /// protocol prints: the value or `-`).
+    /// protocol prints for value-shaped replies: the value or `-`).
+    /// A successful `CmpEx` carries no value and reports `None`; a
+    /// failed one reports its witness (the wire layer prints `CmpEx`
+    /// replies as `OK` / `!<witness>` instead — see `service::server`).
     #[inline]
     pub fn value(&self) -> Option<u64> {
         match *self {
-            MapReply::Value(v) | MapReply::Prev(v) | MapReply::Removed(v) => v,
+            MapReply::Value(v)
+            | MapReply::Prev(v)
+            | MapReply::Removed(v)
+            | MapReply::Existing(v)
+            | MapReply::Added(v) => v,
+            MapReply::CmpEx(r) => r.err().flatten(),
         }
     }
 }
+
+/// A batch op paired with its precomputed SplitMix64 hash
+/// (`.0 == splitmix64(.1.key())`) — what `Sharded`'s batch grouping
+/// hands down so inner tables never re-hash (see
+/// [`ConcurrentMap::apply_batch_hashed`]).
+pub type HashedMapOp = (u64, MapOp);
 
 /// A concurrent key→value map — the service-layer interface, mirroring
 /// [`ConcurrentSet`] (ROADMAP "Sharded map (key→value)" milestone).
@@ -143,6 +189,41 @@ pub trait ConcurrentMap: Send + Sync {
     fn insert(&self, key: u64, value: u64) -> Option<u64>;
     /// Remove; returns the value that was present.
     fn remove(&self, key: u64) -> Option<u64>;
+
+    /// Atomic conditional write — the unified check-then-act primitive
+    /// the unconditional trio can't express without external locking.
+    /// The `expected`/`new` corners subsume the classic conditional ops:
+    ///
+    /// | `expected` | `new`     | meaning                               |
+    /// |------------|-----------|---------------------------------------|
+    /// | `None`     | `Some(v)` | insert `v` iff `key` absent           |
+    /// | `Some(e)`  | `Some(v)` | overwrite iff currently `e`           |
+    /// | `Some(e)`  | `None`    | remove iff currently `e`              |
+    /// | `None`     | `None`    | succeed iff `key` absent (assertion)  |
+    ///
+    /// Returns `Ok(())` when the exchange committed (the table held
+    /// `expected` at the linearization point and now holds `new`), or
+    /// `Err(witness)` with the value actually observed there (`None` =
+    /// absent). Implementations must make the check and the write one
+    /// atomic step — on `KCasRobinHoodMap` the whole op is a single
+    /// K-CAS (value-word guard + write), on `LockedLpMap` it runs under
+    /// the home-segment lock.
+    fn compare_exchange(
+        &self,
+        key: u64,
+        expected: Option<u64>,
+        new: Option<u64>,
+    ) -> Result<(), Option<u64>>;
+
+    /// Insert `value` iff `key` is absent; returns the pre-existing
+    /// value otherwise (`None` = this call inserted). Unlike
+    /// [`ConcurrentMap::insert`] it never overwrites.
+    fn get_or_insert(&self, key: u64, value: u64) -> Option<u64>;
+
+    /// Atomic `value += delta` (wrapping in the 62-bit value domain).
+    /// A missing key counts as 0: the op inserts `delta`. Returns the
+    /// previous value (`None` = the key was absent).
+    fn fetch_add(&self, key: u64, delta: u64) -> Option<u64>;
 
     /// Hash-aware twin of [`ConcurrentMap::get`] (`h == splitmix64(key)`;
     /// see [`ConcurrentSet::contains_hashed`]).
@@ -163,12 +244,62 @@ pub trait ConcurrentMap: Send + Sync {
         self.remove(key)
     }
 
+    /// Hash-aware twin of [`ConcurrentMap::compare_exchange`].
+    fn compare_exchange_hashed(
+        &self,
+        h: u64,
+        key: u64,
+        expected: Option<u64>,
+        new: Option<u64>,
+    ) -> Result<(), Option<u64>> {
+        let _ = h;
+        self.compare_exchange(key, expected, new)
+    }
+
+    /// Hash-aware twin of [`ConcurrentMap::get_or_insert`].
+    fn get_or_insert_hashed(&self, h: u64, key: u64, value: u64) -> Option<u64> {
+        let _ = h;
+        self.get_or_insert(key, value)
+    }
+
+    /// Hash-aware twin of [`ConcurrentMap::fetch_add`].
+    fn fetch_add_hashed(&self, h: u64, key: u64, delta: u64) -> Option<u64> {
+        let _ = h;
+        self.fetch_add(key, delta)
+    }
+
     /// Apply one op (convenience used by the default batch path).
     fn apply_one(&self, op: MapOp) -> MapReply {
         match op {
             MapOp::Get(k) => MapReply::Value(self.get(k)),
             MapOp::Insert(k, v) => MapReply::Prev(self.insert(k, v)),
             MapOp::Remove(k) => MapReply::Removed(self.remove(k)),
+            MapOp::CmpEx(k, e, n) => {
+                MapReply::CmpEx(self.compare_exchange(k, e, n))
+            }
+            MapOp::GetOrInsert(k, v) => {
+                MapReply::Existing(self.get_or_insert(k, v))
+            }
+            MapOp::FetchAdd(k, d) => MapReply::Added(self.fetch_add(k, d)),
+        }
+    }
+
+    /// Apply one op off a precomputed hash (`h == splitmix64(op.key())`)
+    /// — the per-op unit of the hashed batch path.
+    fn apply_one_hashed(&self, h: u64, op: MapOp) -> MapReply {
+        match op {
+            MapOp::Get(k) => MapReply::Value(self.get_hashed(h, k)),
+            MapOp::Insert(k, v) => MapReply::Prev(self.insert_hashed(h, k, v)),
+            MapOp::Remove(k) => MapReply::Removed(self.remove_hashed(h, k)),
+            MapOp::CmpEx(k, e, n) => {
+                MapReply::CmpEx(self.compare_exchange_hashed(h, k, e, n))
+            }
+            MapOp::GetOrInsert(k, v) => {
+                MapReply::Existing(self.get_or_insert_hashed(h, k, v))
+            }
+            MapOp::FetchAdd(k, d) => {
+                MapReply::Added(self.fetch_add_hashed(h, k, d))
+            }
         }
     }
 
@@ -184,6 +315,19 @@ pub trait ConcurrentMap: Send + Sync {
     fn apply_batch(&self, ops: &[MapOp], out: &mut Vec<MapReply>) {
         out.clear();
         out.extend(ops.iter().map(|&op| self.apply_one(op)));
+    }
+
+    /// [`ConcurrentMap::apply_batch`] over hash-carrying ops: every
+    /// `(h, op)` pair satisfies `h == splitmix64(op.key())`, so tables
+    /// with hashed entry points skip the per-op SplitMix64 entirely.
+    /// This is what `Sharded<T>` forwards per-shard sub-batches
+    /// through — the facade already hashed every key once to route it,
+    /// and this hook hands that hash down (closing the batch-path
+    /// double-hash the single-op `*_hashed` entry points closed in
+    /// PR 2). Same ordering/equivalence contract as `apply_batch`.
+    fn apply_batch_hashed(&self, ops: &[HashedMapOp], out: &mut Vec<MapReply>) {
+        out.clear();
+        out.extend(ops.iter().map(|&(h, op)| self.apply_one_hashed(h, op)));
     }
 
     /// Short stable name used in benchmark tables.
@@ -657,6 +801,47 @@ mod tests {
             assert_eq!(m.capacity(), 1024, "{}", k.name());
             assert_eq!(m.len_quiesced(), 0);
         }
+    }
+
+    #[test]
+    fn conditional_ops_smoke_all_map_kinds() {
+        for k in MapKind::all() {
+            let m = k.build(10);
+            let n = k.name();
+            // All four compare_exchange corners.
+            assert_eq!(m.compare_exchange(3, None, None), Ok(()), "{n}");
+            assert_eq!(m.compare_exchange(3, Some(1), Some(2)), Err(None));
+            assert_eq!(m.compare_exchange(3, None, Some(30)), Ok(()), "{n}");
+            assert_eq!(m.compare_exchange(3, None, Some(31)), Err(Some(30)));
+            assert_eq!(m.compare_exchange(3, None, None), Err(Some(30)));
+            assert_eq!(m.compare_exchange(3, Some(9), Some(31)), Err(Some(30)));
+            assert_eq!(m.compare_exchange(3, Some(30), Some(31)), Ok(()), "{n}");
+            assert_eq!(m.get(3), Some(31), "{n}");
+            assert_eq!(m.compare_exchange(3, Some(30), None), Err(Some(31)));
+            assert_eq!(m.compare_exchange(3, Some(31), None), Ok(()), "{n}");
+            assert_eq!(m.get(3), None, "{n}");
+            // get_or_insert never overwrites.
+            assert_eq!(m.get_or_insert(5, 50), None, "{n}");
+            assert_eq!(m.get_or_insert(5, 51), Some(50), "{n}");
+            assert_eq!(m.get(5), Some(50), "{n}");
+            // fetch_add treats a missing key as 0.
+            assert_eq!(m.fetch_add(8, 4), None, "{n}");
+            assert_eq!(m.fetch_add(8, 3), Some(4), "{n}");
+            assert_eq!(m.get(8), Some(7), "{n}");
+            assert_eq!(m.len_quiesced(), 2, "{n}");
+        }
+    }
+
+    #[test]
+    fn map_reply_value_extraction() {
+        assert_eq!(MapReply::CmpEx(Ok(())).value(), None);
+        assert_eq!(MapReply::CmpEx(Err(Some(4))).value(), Some(4));
+        assert_eq!(MapReply::CmpEx(Err(None)).value(), None);
+        assert_eq!(MapReply::Existing(Some(1)).value(), Some(1));
+        assert_eq!(MapReply::Added(None).value(), None);
+        assert_eq!(MapOp::CmpEx(9, None, Some(1)).key(), 9);
+        assert_eq!(MapOp::GetOrInsert(9, 1).key(), 9);
+        assert_eq!(MapOp::FetchAdd(9, 1).key(), 9);
     }
 
     #[test]

@@ -478,6 +478,23 @@ impl ConcurrentMap for ResizableRobinHoodMap {
         self.remove_hashed(splitmix64(key), key)
     }
 
+    fn compare_exchange(
+        &self,
+        key: u64,
+        expected: Option<u64>,
+        new: Option<u64>,
+    ) -> Result<(), Option<u64>> {
+        self.compare_exchange_hashed(splitmix64(key), key, expected, new)
+    }
+
+    fn get_or_insert(&self, key: u64, value: u64) -> Option<u64> {
+        self.get_or_insert_hashed(splitmix64(key), key, value)
+    }
+
+    fn fetch_add(&self, key: u64, delta: u64) -> Option<u64> {
+        self.fetch_add_hashed(splitmix64(key), key, delta)
+    }
+
     fn get_hashed(&self, h: u64, key: u64) -> Option<u64> {
         self.core.run_op(
             |cur| match cur.get_mig(h, key) {
@@ -523,6 +540,65 @@ impl ConcurrentMap for ResizableRobinHoodMap {
         );
         if prev.is_some() {
             self.core.note_remove();
+        }
+        prev
+    }
+
+    // Conditional ops forward like the unconditional writes: freeze the
+    // key's home run in the source generation, then run the native
+    // single-K-CAS op against the target — the conditional semantics
+    // need no extra machinery because after the freeze the target alone
+    // is authoritative for the key, and the inner op is atomic there.
+
+    fn compare_exchange_hashed(
+        &self,
+        h: u64,
+        key: u64,
+        expected: Option<u64>,
+        new: Option<u64>,
+    ) -> Result<(), Option<u64>> {
+        let r = self.core.run_op(
+            |cur| cur.cmpex_mig(h, key, expected, new),
+            |src, tgt| {
+                src.migrate_home_run(tgt, h);
+                tgt.cmpex_mig(h, key, expected, new)
+            },
+        );
+        if r.is_ok() {
+            // Only the membership-changing corners move the trigger.
+            match (expected, new) {
+                (None, Some(_)) => self.core.note_add(),
+                (Some(_), None) => self.core.note_remove(),
+                _ => {}
+            }
+        }
+        r
+    }
+
+    fn get_or_insert_hashed(&self, h: u64, key: u64, value: u64) -> Option<u64> {
+        let prev = self.core.run_op(
+            |cur| cur.get_or_insert_mig(h, key, value),
+            |src, tgt| {
+                src.migrate_home_run(tgt, h);
+                tgt.get_or_insert_mig(h, key, value)
+            },
+        );
+        if prev.is_none() {
+            self.core.note_add();
+        }
+        prev
+    }
+
+    fn fetch_add_hashed(&self, h: u64, key: u64, delta: u64) -> Option<u64> {
+        let prev = self.core.run_op(
+            |cur| cur.fetch_add_mig(h, key, delta),
+            |src, tgt| {
+                src.migrate_home_run(tgt, h);
+                tgt.fetch_add_mig(h, key, delta)
+            },
+        );
+        if prev.is_none() {
+            self.core.note_add();
         }
         prev
     }
@@ -822,6 +898,57 @@ mod tests {
         assert_eq!(m.insert(7, 99), Some(21));
         assert_eq!(m.remove(7), Some(99));
         assert_eq!(m.len_quiesced(), 299);
+        m.check_invariant_quiesced().unwrap();
+    }
+
+    #[test]
+    fn inc_map_conditional_ops_across_growth() {
+        let m = ResizableRobinHoodMap::with_threshold(6, 0.75); // 64
+        for k in 1..=300u64 {
+            assert_eq!(m.get_or_insert(k, k * 2), None, "key {k}");
+        }
+        m.finish_migration();
+        assert!(m.capacity() >= 512, "capacity {}", m.capacity());
+        for k in 1..=300u64 {
+            assert_eq!(m.fetch_add(k, 1), Some(k * 2), "key {k}");
+            assert_eq!(
+                m.compare_exchange(k, Some(k * 2 + 1), Some(k)),
+                Ok(()),
+                "key {k}"
+            );
+            assert_eq!(m.get(k), Some(k));
+        }
+        assert_eq!(m.compare_exchange(301, Some(1), Some(2)), Err(None));
+        assert_eq!(m.compare_exchange(301, None, None), Ok(()));
+        assert_eq!(m.len_quiesced(), 300);
+        m.check_invariant_quiesced().unwrap();
+    }
+
+    #[test]
+    fn inc_map_conditional_ops_mid_migration() {
+        // Trip the trigger, then run every conditional corner while the
+        // migration is still in flight: each must answer from the
+        // old/new split consistently.
+        let m = ResizableRobinHoodMap::with_threshold(7, 0.5); // 128
+        let mut k = 1u64;
+        while !m.migration_active() {
+            m.insert(k, k * 3);
+            k += 1;
+        }
+        let seeded = k - 1;
+        for q in 1..=seeded {
+            assert_eq!(m.get_or_insert(q, 0), Some(q * 3), "mid-mig {q}");
+        }
+        assert_eq!(m.fetch_add(2, 4), Some(6));
+        assert_eq!(m.get(2), Some(10));
+        assert_eq!(m.compare_exchange(2, Some(10), Some(11)), Ok(()));
+        assert_eq!(m.compare_exchange(2, Some(10), Some(12)), Err(Some(11)));
+        assert_eq!(m.compare_exchange(2, Some(11), None), Ok(()));
+        assert_eq!(m.compare_exchange(2, None, None), Ok(()));
+        assert_eq!(m.fetch_add(seeded + 100, 7), None);
+        m.finish_migration();
+        assert_eq!(m.get(seeded + 100), Some(7));
+        assert_eq!(m.len_quiesced(), seeded as usize);
         m.check_invariant_quiesced().unwrap();
     }
 

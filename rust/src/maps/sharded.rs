@@ -42,16 +42,25 @@
 
 use std::cell::RefCell;
 
-use super::{ConcurrentMap, ConcurrentSet, MapOp, MapReply};
+use super::{ConcurrentMap, ConcurrentSet, HashedMapOp, MapOp, MapReply};
 use crate::util::hash::splitmix64;
 
 /// Per-thread scratch for [`ConcurrentMap::apply_batch`] grouping, so
-/// batch routing never allocates on the steady-state hot path.
+/// batch routing never allocates on the steady-state hot path. The
+/// batch paths *take* it out of the thread-local for the duration of
+/// the batch (leaving a fresh empty scratch) rather than holding the
+/// `RefCell` borrow across inner-shard calls — a nested `Sharded`
+/// facade re-entering this thread-local mid-batch must find it
+/// borrowable, not panic.
+#[derive(Default)]
 struct BatchScratch {
     /// (shard, original index), sorted to form per-shard runs.
     order: Vec<(u32, u32)>,
-    /// Contiguous op buffer handed to one shard.
-    run_ops: Vec<MapOp>,
+    /// `(splitmix64(op.key()), op)` pairs — `apply_batch` hashes each
+    /// op once into this buffer and delegates to `apply_batch_hashed`.
+    hashed_ops: Vec<HashedMapOp>,
+    /// Contiguous hash-carrying op buffer handed to one shard.
+    run_ops: Vec<HashedMapOp>,
     /// Reply buffer for that shard's sub-batch.
     run_replies: Vec<MapReply>,
 }
@@ -59,6 +68,7 @@ struct BatchScratch {
 thread_local! {
     static BATCH_SCRATCH: RefCell<BatchScratch> = RefCell::new(BatchScratch {
         order: Vec::with_capacity(128),
+        hashed_ops: Vec::with_capacity(128),
         run_ops: Vec::with_capacity(128),
         run_replies: Vec::with_capacity(128),
     });
@@ -103,14 +113,13 @@ impl<T> Sharded<T> {
 
     /// Which shard owns `key`.
     ///
-    /// Single-op calls through the facade hash each key exactly once:
-    /// the hash computed for routing is handed down through the tables'
-    /// `*_hashed` entry points (ROADMAP "hashed entry points" item), so
-    /// the inner table's home-bucket lookup reuses it instead of
-    /// recomputing SplitMix64. (The batch path still recomputes inside
-    /// the inner map — forwarding per-op hashes through `apply_batch`
-    /// would fork that API for ~5 ALU ops per op, noise next to the
-    /// cache-missing probe; revisit if profiling ever shows it.)
+    /// Every call through the facade hashes each key exactly once: the
+    /// hash computed for routing is handed down through the tables'
+    /// `*_hashed` entry points (ROADMAP "hashed entry points" item) on
+    /// the single-op path, and through
+    /// [`ConcurrentMap::apply_batch_hashed`] on the batch path, so the
+    /// inner table's home-bucket lookup reuses it instead of
+    /// recomputing SplitMix64.
     #[inline(always)]
     pub fn shard_of(&self, key: u64) -> usize {
         self.route(splitmix64(key))
@@ -261,47 +270,132 @@ impl<T: ConcurrentMap> ConcurrentMap for Sharded<T> {
         self.shards[self.route(h)].remove_hashed(h, key)
     }
 
+    #[inline]
+    fn compare_exchange(
+        &self,
+        key: u64,
+        expected: Option<u64>,
+        new: Option<u64>,
+    ) -> Result<(), Option<u64>> {
+        let h = splitmix64(key);
+        self.shards[self.route(h)].compare_exchange_hashed(h, key, expected, new)
+    }
+
+    #[inline]
+    fn get_or_insert(&self, key: u64, value: u64) -> Option<u64> {
+        let h = splitmix64(key);
+        self.shards[self.route(h)].get_or_insert_hashed(h, key, value)
+    }
+
+    #[inline]
+    fn fetch_add(&self, key: u64, delta: u64) -> Option<u64> {
+        let h = splitmix64(key);
+        self.shards[self.route(h)].fetch_add_hashed(h, key, delta)
+    }
+
+    // Pre-hashed entry points (nested facades, and the hashed batch
+    // path below): route on the caller's hash, hand the same hash down.
+
+    #[inline]
+    fn get_hashed(&self, h: u64, key: u64) -> Option<u64> {
+        self.shards[self.route(h)].get_hashed(h, key)
+    }
+
+    #[inline]
+    fn insert_hashed(&self, h: u64, key: u64, value: u64) -> Option<u64> {
+        self.shards[self.route(h)].insert_hashed(h, key, value)
+    }
+
+    #[inline]
+    fn remove_hashed(&self, h: u64, key: u64) -> Option<u64> {
+        self.shards[self.route(h)].remove_hashed(h, key)
+    }
+
+    #[inline]
+    fn compare_exchange_hashed(
+        &self,
+        h: u64,
+        key: u64,
+        expected: Option<u64>,
+        new: Option<u64>,
+    ) -> Result<(), Option<u64>> {
+        self.shards[self.route(h)].compare_exchange_hashed(h, key, expected, new)
+    }
+
+    #[inline]
+    fn get_or_insert_hashed(&self, h: u64, key: u64, value: u64) -> Option<u64> {
+        self.shards[self.route(h)].get_or_insert_hashed(h, key, value)
+    }
+
+    #[inline]
+    fn fetch_add_hashed(&self, h: u64, key: u64, delta: u64) -> Option<u64> {
+        self.shards[self.route(h)].fetch_add_hashed(h, key, delta)
+    }
+
     /// Shard-grouped batching: stable-sort op indices by shard, forward
     /// each shard's ops as one contiguous sub-batch, scatter the replies
     /// back to op order. Equivalent to op-by-op application because the
     /// regrouping only reorders ops on *different* shards (disjoint
     /// keys, which commute) and keeps each shard's ops — in particular
     /// repeated ops on the same key — in their original relative order.
+    /// The hash computed here for routing rides along with each sub-op
+    /// ([`ConcurrentMap::apply_batch_hashed`]), so batched traffic pays
+    /// exactly one SplitMix64 per op, same as the single-op path.
     fn apply_batch(&self, ops: &[MapOp], out: &mut Vec<MapReply>) {
         if self.shard_bits == 0 {
             return self.shards[0].apply_batch(ops, out);
         }
-        BATCH_SCRATCH.with(|s| {
-            let bs = &mut *s.borrow_mut();
-            bs.order.clear();
-            for (i, op) in ops.iter().enumerate() {
-                let shard = self.route(splitmix64(op.key())) as u32;
-                bs.order.push((shard, i as u32));
+        // Hash each op exactly once, then run the single copy of the
+        // group/scatter loop in `apply_batch_hashed`. The pair buffer
+        // is taken out of the scratch (not borrowed) so the delegate —
+        // which takes the whole scratch — finds the RefCell free.
+        let mut hashed = BATCH_SCRATCH
+            .with(|s| std::mem::take(&mut s.borrow_mut().hashed_ops));
+        hashed.clear();
+        hashed.extend(ops.iter().map(|&op| (splitmix64(op.key()), op)));
+        self.apply_batch_hashed(&hashed, out);
+        BATCH_SCRATCH.with(|s| s.borrow_mut().hashed_ops = hashed);
+    }
+
+    /// Hash-carrying batch entry (a nested-facade courtesy): identical
+    /// grouping, but routes on the caller's hashes instead of
+    /// recomputing them.
+    fn apply_batch_hashed(&self, ops: &[HashedMapOp], out: &mut Vec<MapReply>) {
+        if self.shard_bits == 0 {
+            return self.shards[0].apply_batch_hashed(ops, out);
+        }
+        // Same take-don't-borrow discipline as `apply_batch`: a nested
+        // facade's re-entry must find the thread-local borrowable.
+        let mut bs = BATCH_SCRATCH.with(|s| std::mem::take(&mut *s.borrow_mut()));
+        {
+            let BatchScratch { order, run_ops, run_replies, .. } = &mut bs;
+            order.clear();
+            for (i, &(h, _)) in ops.iter().enumerate() {
+                order.push((self.route(h) as u32, i as u32));
             }
-            // Unstable sort on (shard, index) pairs is stable per shard:
-            // the index tiebreaker makes every pair distinct.
-            bs.order.sort_unstable();
+            order.sort_unstable();
             out.clear();
             out.resize(ops.len(), MapReply::Value(None));
             let mut start = 0;
-            while start < bs.order.len() {
-                let shard = bs.order[start].0;
+            while start < order.len() {
+                let shard = order[start].0;
                 let mut end = start;
-                while end < bs.order.len() && bs.order[end].0 == shard {
+                while end < order.len() && order[end].0 == shard {
                     end += 1;
                 }
-                let run = &bs.order[start..end];
-                bs.run_ops.clear();
-                bs.run_ops.extend(run.iter().map(|&(_, i)| ops[i as usize]));
+                let run = &order[start..end];
+                run_ops.clear();
+                run_ops.extend(run.iter().map(|&(_, i)| ops[i as usize]));
                 self.shards[shard as usize]
-                    .apply_batch(&bs.run_ops, &mut bs.run_replies);
-                debug_assert_eq!(bs.run_replies.len(), run.len());
-                for (&(_, i), &reply) in run.iter().zip(bs.run_replies.iter()) {
+                    .apply_batch_hashed(run_ops, run_replies);
+                debug_assert_eq!(run_replies.len(), run.len());
+                for (&(_, i), &reply) in run.iter().zip(run_replies.iter()) {
                     out[i as usize] = reply;
                 }
                 start = end;
             }
-        })
+        }
+        BATCH_SCRATCH.with(|s| *s.borrow_mut() = bs);
     }
 
     fn name(&self) -> &'static str {
@@ -526,9 +620,24 @@ mod tests {
             let ops: Vec<MapOp> = (0..n)
                 .map(|_| {
                     let k = 1 + rng.below(200);
-                    match rng.below(3) {
+                    match rng.below(6) {
                         0 => MapOp::Insert(k, rng.below(1000)),
                         1 => MapOp::Remove(k),
+                        2 => MapOp::CmpEx(
+                            k,
+                            if rng.below(2) == 0 {
+                                None
+                            } else {
+                                Some(rng.below(1000))
+                            },
+                            if rng.below(2) == 0 {
+                                None
+                            } else {
+                                Some(rng.below(1000))
+                            },
+                        ),
+                        3 => MapOp::GetOrInsert(k, rng.below(1000)),
+                        4 => MapOp::FetchAdd(k, rng.below(50)),
                         _ => MapOp::Get(k),
                     }
                 })
@@ -539,6 +648,46 @@ mod tests {
             assert_eq!(replies, expect, "round {round} ops {ops:?}");
         }
         assert_eq!(batched.len_quiesced(), serial.len_quiesced());
+    }
+
+    #[test]
+    fn nested_facade_batch_does_not_reenter_scratch() {
+        use crate::maps::kcas_rh_map::KCasRobinHoodMap;
+        // A facade of facades: both levels' batch paths use the same
+        // thread-local scratch, so the outer must not hold its borrow
+        // across the inner call (regression: BorrowMutError panic).
+        let m = Sharded::from_builder(1, "nested-kcas-rh-map", |_| {
+            Sharded::<KCasRobinHoodMap>::kcas_map(8, 1)
+        });
+        let ops: Vec<MapOp> = (1..=40u64)
+            .flat_map(|k| [MapOp::Insert(k, k * 3), MapOp::Get(k)])
+            .collect();
+        let mut replies = Vec::new();
+        ConcurrentMap::apply_batch(&m, &ops, &mut replies);
+        for (i, k) in (1..=40u64).enumerate() {
+            assert_eq!(replies[2 * i], MapReply::Prev(None), "key {k}");
+            assert_eq!(replies[2 * i + 1], MapReply::Value(Some(k * 3)));
+        }
+        assert_eq!(ConcurrentMap::len_quiesced(&m), 40);
+    }
+
+    #[test]
+    fn map_conditional_ops_route_and_agree() {
+        use crate::maps::kcas_rh_map::KCasRobinHoodMap;
+        let m = Sharded::<KCasRobinHoodMap>::kcas_map(10, 2);
+        for k in 1..=200u64 {
+            assert_eq!(m.compare_exchange(k, None, Some(k)), Ok(()));
+            assert_eq!(m.compare_exchange(k, None, Some(0)), Err(Some(k)));
+            assert_eq!(m.get_or_insert(k, 0), Some(k));
+            assert_eq!(m.fetch_add(k, 5), Some(k));
+            // The routed shard holds the updated pair.
+            assert_eq!(m.shards()[m.shard_of(k)].get(k), Some(k + 5));
+        }
+        for k in 1..=200u64 {
+            assert_eq!(m.compare_exchange(k, Some(k + 5), None), Ok(()));
+        }
+        assert_eq!(m.len_quiesced(), 0);
+        m.check_invariant_quiesced().unwrap();
     }
 
     #[test]

@@ -16,7 +16,10 @@
 //! This module also hosts the map-workload plumbing shared by the
 //! `fig14_batching` experiment: [`prefill_map`], [`map_op`], and the
 //! timed driver [`run_batched`] (the key→value sibling of
-//! `bench::driver::run_prefilled`).
+//! `bench::driver::run_prefilled`) — plus [`run_rmw`], the
+//! conditional-RMW counter-workload driver behind `fig16_rmw`, which
+//! doubles as an atomicity harness (committed increments must equal
+//! the final counter sum).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Barrier;
@@ -148,6 +151,122 @@ pub fn run_batched(
     }
 }
 
+/// Result of one [`run_rmw`] cell.
+pub struct RmwResult {
+    pub run: RunResult,
+    /// Committed increments (every `fetch_add` plus every optimistic
+    /// CAS win). The counters must sum to exactly this afterwards —
+    /// the atomicity witness `fig16_rmw` asserts per cell.
+    pub incs: u64,
+    /// Optimistic `compare_exchange` attempts (the read-then-CAS pairs).
+    pub cas_attempts: u64,
+    /// Attempts that lost the race (the contention signal fig16
+    /// reports alongside throughput).
+    pub cas_failures: u64,
+}
+
+/// Timed conditional-RMW benchmark cell: `threads` workers hammer
+/// `keys` hot counters (keys `1..=keys` — small key sets model high
+/// contention skew) with the native read-modify-write surface:
+/// 70% `fetch_add(k, 1)`, 20% optimistic `get` + `compare_exchange`
+/// increments (one attempt, win or lose), 10% `get`. This is the
+/// workload the unconditional trio cannot express without locks; the
+/// `fig16_rmw` experiment runs it across hot-set size x thread count,
+/// K-CAS map vs locked baseline.
+pub fn run_rmw(
+    map: &dyn ConcurrentMap,
+    keys: u64,
+    duration_ms: u64,
+    threads: usize,
+    pin: bool,
+    seed: u64,
+) -> RmwResult {
+    assert!(keys >= 1);
+    let stop = AtomicBool::new(false);
+    let barrier = Barrier::new(threads + 1);
+    let mut per_thread = vec![0u64; threads];
+    let mut stats = vec![(0u64, 0u64, 0u64); threads]; // (incs, attempts, fails)
+
+    let elapsed = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (idx, (slot, stat)) in
+            per_thread.iter_mut().zip(stats.iter_mut()).enumerate()
+        {
+            let stop = &stop;
+            let barrier = &barrier;
+            handles.push(s.spawn(move || {
+                if pin {
+                    affinity::pin_thread(idx);
+                }
+                let mut rng = Rng::for_thread(seed, idx as u64);
+                barrier.wait();
+                let (mut ops, mut incs) = (0u64, 0u64);
+                let (mut attempts, mut fails) = (0u64, 0u64);
+                while !stop.load(Ordering::Relaxed) {
+                    for _ in 0..64 {
+                        let k = 1 + rng.below(keys);
+                        match rng.below(10) {
+                            0 => {
+                                std::hint::black_box(map.get(k));
+                            }
+                            1 | 2 => {
+                                // Optimistic read-then-CAS increment:
+                                // a single conditional attempt, so the
+                                // failure rate exposes the contention.
+                                let cur = map.get(k);
+                                let next = cur.unwrap_or(0).wrapping_add(1)
+                                    & crate::kcas::MAX_VALUE;
+                                attempts += 1;
+                                if map
+                                    .compare_exchange(k, cur, Some(next))
+                                    .is_ok()
+                                {
+                                    incs += 1;
+                                } else {
+                                    fails += 1;
+                                }
+                            }
+                            _ => {
+                                std::hint::black_box(map.fetch_add(k, 1));
+                                incs += 1;
+                            }
+                        }
+                        ops += 1;
+                    }
+                }
+                *slot = ops;
+                *stat = (incs, attempts, fails);
+            }));
+        }
+        barrier.wait();
+        let t0 = Instant::now();
+        std::thread::sleep(Duration::from_millis(duration_ms));
+        stop.store(true, Ordering::Relaxed);
+        for h in handles {
+            h.join().unwrap();
+        }
+        t0.elapsed()
+    });
+
+    RmwResult {
+        run: RunResult {
+            threads,
+            total_ops: per_thread.iter().sum(),
+            elapsed,
+            per_thread,
+        },
+        incs: stats.iter().map(|s| s.0).sum(),
+        cas_attempts: stats.iter().map(|s| s.1).sum(),
+        cas_failures: stats.iter().map(|s| s.2).sum(),
+    }
+}
+
+/// Sum every hot counter of a finished [`run_rmw`] cell — must equal
+/// [`RmwResult::incs`] if (and only if) the map's RMW ops are atomic.
+pub fn rmw_counter_sum(map: &dyn ConcurrentMap, keys: u64) -> u64 {
+    (1..=keys).map(|k| map.get(k).unwrap_or(0)).sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -203,6 +322,34 @@ mod tests {
             let r = run_batched(m.as_ref(), &cfg, 2, batch, false);
             assert_eq!(r.per_thread.len(), 2);
             assert!(r.total_ops > 0, "batch {batch}");
+        }
+    }
+
+    #[test]
+    fn rmw_driver_counters_balance() {
+        // The driver's own atomicity witness: committed increments must
+        // equal the final counter sum, on both the K-CAS map and the
+        // locked baseline.
+        for kind in [
+            MapKind::ShardedKCasRhMap { shards: 4 },
+            MapKind::LockedLpMap,
+        ] {
+            let m = kind.build(12);
+            let r = run_rmw(m.as_ref(), 8, 50, 3, false, 0x16);
+            assert!(r.run.total_ops > 0, "{}", kind.name());
+            assert_eq!(
+                rmw_counter_sum(m.as_ref(), 8),
+                r.incs,
+                "{}: lost or duplicated increments",
+                kind.name()
+            );
+            assert!(
+                r.cas_failures <= r.cas_attempts,
+                "{}: {} failures from {} attempts",
+                kind.name(),
+                r.cas_failures,
+                r.cas_attempts
+            );
         }
     }
 

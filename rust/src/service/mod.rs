@@ -20,9 +20,19 @@
 //!   parsing from table work so clients can stream frames without
 //!   waiting for replies.
 //!
+//! Both halves speak the full **conditional-first** op vocabulary
+//! ([`crate::maps::MapOp`]: `CmpEx`/`GetOrInsert`/`FetchAdd` next to
+//! the unconditional trio; wire verbs `C`/`U`/`A`), so check-then-act
+//! traffic — counters, leases, optimistic updates — runs as native
+//! single-K-CAS operations instead of read-check-write round trips.
+//! Batched traffic carries its routing hash all the way down
+//! ([`crate::maps::ConcurrentMap::apply_batch_hashed`]): one SplitMix64
+//! per op, same as the single-op path.
+//!
 //! Maps are named by [`crate::maps::MapKind`] specs
-//! (`sharded-kcas-rh-map:16` etc.); the CLI entry point is
-//! `crh fig14_batching`.
+//! (`sharded-kcas-rh-map:16` etc.); the CLI entry points are
+//! `crh fig14_batching` (batching sweep) and `crh fig16_rmw`
+//! (conditional-RMW counter workload under contention skew).
 
 pub mod batch;
 pub mod server;

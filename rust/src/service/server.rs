@@ -8,17 +8,31 @@
 //! G <k>        get            → reply line: "<v>" or "-"
 //! P <k> <v>    put (insert)   → previous "<v>" or "-"
 //! D <k>        delete         → removed "<v>" or "-"
-//! B <n>        batch frame: the next n lines are ops (G/P/D);
-//!              one reply line with n space-separated tokens
+//! U <k> <v>    get-or-insert  → pre-existing "<v>", or "-" (inserted)
+//! A <k> <d>    fetch-add      → previous "<v>", or "-" (was absent,
+//!              now holds d; missing keys count as 0)
+//! C <k> <e> <n>  compare-exchange; <e>/<n> are a value or "-"
+//!              (absent) — the four corners of
+//!              ConcurrentMap::compare_exchange → "OK" on commit,
+//!              "!<v>" / "!-" with the witnessed value on failure
+//! B <n>        batch frame: the next n lines are ops (any of the
+//!              above); one reply line with n space-separated tokens
 //! Q            quit (close the connection)
 //! ```
+//!
+//! The conditional verbs (`C`/`U`/`A`) are the service-layer face of
+//! the map's native K-CAS read-modify-write primitives: a client
+//! counter is one `A` line, a lease acquire is `C <k> - <owner>`, a
+//! lease release is `C <k> <owner> -` — no read-check-write round
+//! trips, no server-side locking.
 //!
 //! Malformed or out-of-range requests get an `ERR <msg>` line and the
 //! connection **stays up** — in particular keys outside
 //! `[1, MAX_KEY]` are rejected at the protocol boundary with
 //! `ERR key out of range` instead of tripping the table's `check_key`
 //! assert and killing the connection thread (the old server's DoS bug),
-//! and values above `kcas::MAX_VALUE` get `ERR value out of range`.
+//! and values (including `C` operands and `A` deltas) above
+//! `kcas::MAX_VALUE` get `ERR value out of range`.
 //! A batch frame is validated as a unit: if any member op is invalid
 //! the whole frame is rejected with a single `ERR` line and nothing is
 //! applied.
@@ -61,31 +75,70 @@ fn parse_key(s: &str) -> Result<u64, &'static str> {
     Ok(k)
 }
 
-/// Parse one op line (`G <k>` / `P <k> <v>` / `D <k>`), enforcing the
-/// key and value ranges at the protocol boundary.
+fn parse_value(s: &str) -> Result<u64, &'static str> {
+    let v: u64 = s.parse().map_err(|_| ERR_BAD_REQUEST)?;
+    if v > MAX_VALUE {
+        return Err(ERR_VALUE_RANGE);
+    }
+    Ok(v)
+}
+
+/// `C` operand: a value or `-` for "absent".
+fn parse_opt_value(s: &str) -> Result<Option<u64>, &'static str> {
+    if s == "-" {
+        return Ok(None);
+    }
+    parse_value(s).map(Some)
+}
+
+/// Parse one op line (`G <k>` / `P <k> <v>` / `D <k>` / `U <k> <v>` /
+/// `A <k> <d>` / `C <k> <e> <n>`), enforcing the key and value ranges
+/// at the protocol boundary.
 pub fn parse_op(line: &str) -> Result<MapOp, &'static str> {
     let mut it = line.split_whitespace();
-    match (it.next(), it.next(), it.next(), it.next()) {
-        (Some("G"), Some(k), None, _) => Ok(MapOp::Get(parse_key(k)?)),
-        (Some("D"), Some(k), None, _) => Ok(MapOp::Remove(parse_key(k)?)),
-        (Some("P"), Some(k), Some(v), None) => {
-            let k = parse_key(k)?;
-            let v: u64 = v.parse().map_err(|_| ERR_BAD_REQUEST)?;
-            if v > MAX_VALUE {
-                return Err(ERR_VALUE_RANGE);
-            }
-            Ok(MapOp::Insert(k, v))
+    let toks = [it.next(), it.next(), it.next(), it.next(), it.next()];
+    match toks {
+        [Some("G"), Some(k), None, None, None] => {
+            Ok(MapOp::Get(parse_key(k)?))
         }
+        [Some("D"), Some(k), None, None, None] => {
+            Ok(MapOp::Remove(parse_key(k)?))
+        }
+        [Some("P"), Some(k), Some(v), None, None] => {
+            Ok(MapOp::Insert(parse_key(k)?, parse_value(v)?))
+        }
+        [Some("U"), Some(k), Some(v), None, None] => {
+            Ok(MapOp::GetOrInsert(parse_key(k)?, parse_value(v)?))
+        }
+        [Some("A"), Some(k), Some(d), None, None] => {
+            Ok(MapOp::FetchAdd(parse_key(k)?, parse_value(d)?))
+        }
+        [Some("C"), Some(k), Some(e), Some(n), None] => Ok(MapOp::CmpEx(
+            parse_key(k)?,
+            parse_opt_value(e)?,
+            parse_opt_value(n)?,
+        )),
         _ => Err(ERR_BAD_REQUEST),
     }
 }
 
-/// Append one reply token (the value, or `-` for "not present").
+/// Append one reply token: the value or `-` for value-shaped replies,
+/// `OK` / `!<witness>` / `!-` for `CmpEx`.
 pub fn push_reply(reply: MapReply, out: &mut String) {
     use std::fmt::Write as _;
-    match reply.value() {
-        Some(v) => write!(out, "{v}").expect("write to String"),
-        None => out.push('-'),
+    match reply {
+        MapReply::CmpEx(Ok(())) => out.push_str("OK"),
+        MapReply::CmpEx(Err(w)) => {
+            out.push('!');
+            match w {
+                Some(v) => write!(out, "{v}").expect("write to String"),
+                None => out.push('-'),
+            }
+        }
+        _ => match reply.value() {
+            Some(v) => write!(out, "{v}").expect("write to String"),
+            None => out.push('-'),
+        },
     }
 }
 
@@ -229,10 +282,17 @@ pub fn spawn_ephemeral(map: Arc<dyn ConcurrentMap>) -> SocketAddr {
 /// Append one op in wire format (plus newline).
 fn push_op(op: MapOp, out: &mut String) {
     use std::fmt::Write as _;
+    let opt = |v: Option<u64>| match v {
+        Some(v) => v.to_string(),
+        None => "-".into(),
+    };
     match op {
         MapOp::Get(k) => writeln!(out, "G {k}"),
         MapOp::Insert(k, v) => writeln!(out, "P {k} {v}"),
         MapOp::Remove(k) => writeln!(out, "D {k}"),
+        MapOp::GetOrInsert(k, v) => writeln!(out, "U {k} {v}"),
+        MapOp::FetchAdd(k, d) => writeln!(out, "A {k} {d}"),
+        MapOp::CmpEx(k, e, n) => writeln!(out, "C {k} {} {}", opt(e), opt(n)),
     }
     .expect("write to String");
 }
@@ -269,10 +329,63 @@ impl Client {
     /// Send a batch of ops as one frame (a bare op line for a single
     /// op, a `B <n>` frame otherwise) in a single write, then read the
     /// reply line and parse its tokens. Protocol `ERR` replies surface
-    /// as `io::ErrorKind::InvalidData`.
+    /// as `io::ErrorKind::InvalidData`. Value-shaped convenience for
+    /// `G`/`P`/`D`/`U`/`A` traffic; use [`Client::batch_typed`] when
+    /// the batch contains `CmpEx` ops (their `OK`/`!` tokens don't fit
+    /// an `Option<u64>`).
     pub fn batch(&mut self, ops: &[MapOp]) -> io::Result<Vec<Option<u64>>> {
         self.send_frame(ops)?;
         self.read_batch_reply(ops.len())
+    }
+
+    /// Send a batch and parse the reply into full [`MapReply`] values
+    /// (token shape inferred from each op's variant) — the conditional
+    /// verbs' round trip.
+    pub fn batch_typed(&mut self, ops: &[MapOp]) -> io::Result<Vec<MapReply>> {
+        self.send_frame(ops)?;
+        let line = self.read_reply_line()?;
+        if line.starts_with("ERR") {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, line));
+        }
+        let bad = |tok: &str| {
+            io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("bad reply token {tok:?}"),
+            )
+        };
+        let parse_val = |tok: &str| -> io::Result<Option<u64>> {
+            match tok {
+                "-" => Ok(None),
+                v => v.parse::<u64>().map(Some).map_err(|_| bad(v)),
+            }
+        };
+        let mut toks = line.split_whitespace();
+        let mut replies = Vec::with_capacity(ops.len());
+        for &op in ops {
+            let tok = toks.next().ok_or_else(|| bad(""))?;
+            replies.push(match op {
+                MapOp::CmpEx(..) => MapReply::CmpEx(match tok {
+                    "OK" => Ok(()),
+                    "!-" => Err(None),
+                    t if t.starts_with('!') => Err(Some(
+                        t[1..].parse::<u64>().map_err(|_| bad(t))?,
+                    )),
+                    t => return Err(bad(t)),
+                }),
+                MapOp::Get(_) => MapReply::Value(parse_val(tok)?),
+                MapOp::Insert(..) => MapReply::Prev(parse_val(tok)?),
+                MapOp::Remove(_) => MapReply::Removed(parse_val(tok)?),
+                MapOp::GetOrInsert(..) => MapReply::Existing(parse_val(tok)?),
+                MapOp::FetchAdd(..) => MapReply::Added(parse_val(tok)?),
+            });
+        }
+        if toks.next().is_some() {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "trailing reply tokens",
+            ));
+        }
+        Ok(replies)
     }
 
     /// Write one frame without waiting for the reply (pipelining).
@@ -367,6 +480,47 @@ mod tests {
         ] {
             assert_eq!(parse_op(bad), Err(ERR_BAD_REQUEST), "line {bad:?}");
         }
+    }
+
+    #[test]
+    fn parse_op_accepts_conditional_verbs() {
+        assert_eq!(parse_op("U 5 10"), Ok(MapOp::GetOrInsert(5, 10)));
+        assert_eq!(parse_op("A 5 3"), Ok(MapOp::FetchAdd(5, 3)));
+        assert_eq!(parse_op("C 5 - 10"), Ok(MapOp::CmpEx(5, None, Some(10))));
+        assert_eq!(parse_op("C 5 10 -"), Ok(MapOp::CmpEx(5, Some(10), None)));
+        assert_eq!(
+            parse_op("C 5 10 11"),
+            Ok(MapOp::CmpEx(5, Some(10), Some(11)))
+        );
+        assert_eq!(parse_op("C 5 - -"), Ok(MapOp::CmpEx(5, None, None)));
+        // Range / shape enforcement.
+        assert_eq!(
+            parse_op(&format!("A 5 {}", MAX_VALUE + 1)),
+            Err(ERR_VALUE_RANGE)
+        );
+        assert_eq!(
+            parse_op(&format!("C 5 - {}", MAX_VALUE + 1)),
+            Err(ERR_VALUE_RANGE)
+        );
+        assert_eq!(parse_op("C 0 - 1"), Err(ERR_KEY_RANGE));
+        for bad in ["U 5", "A 5", "C 5 -", "C 5 - - -", "C 5 x 1", "U 5 1 2"] {
+            assert_eq!(parse_op(bad), Err(ERR_BAD_REQUEST), "line {bad:?}");
+        }
+    }
+
+    #[test]
+    fn cmpex_reply_tokens() {
+        let mut s = String::new();
+        push_reply(MapReply::CmpEx(Ok(())), &mut s);
+        s.push(' ');
+        push_reply(MapReply::CmpEx(Err(Some(7))), &mut s);
+        s.push(' ');
+        push_reply(MapReply::CmpEx(Err(None)), &mut s);
+        s.push(' ');
+        push_reply(MapReply::Existing(None), &mut s);
+        s.push(' ');
+        push_reply(MapReply::Added(Some(3)), &mut s);
+        assert_eq!(s, "OK !7 !- - 3");
     }
 
     #[test]

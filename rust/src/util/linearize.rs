@@ -167,6 +167,250 @@ pub fn record_history(
     h
 }
 
+// ---- key→value histories (the conditional-RMW surface) ----
+
+/// Map operation kind + arguments, covering the conditional-first
+/// [`crate::maps::ConcurrentMap`] surface (`compare_exchange` corners,
+/// `get_or_insert`, `fetch_add`) alongside the unconditional trio.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MapOpKind {
+    Get(u64),
+    Insert(u64, u64),
+    Remove(u64),
+    CmpEx(u64, Option<u64>, Option<u64>),
+    GetOrInsert(u64, u64),
+    FetchAdd(u64, u64),
+}
+
+/// Result of a map op: value-shaped (`get`/`insert`/`remove`/
+/// `get_or_insert`/`fetch_add` all report an `Option<u64>`) or
+/// CAS-shaped (`compare_exchange`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MapRes {
+    Val(Option<u64>),
+    Cas(Result<(), Option<u64>>),
+}
+
+/// One completed map operation in a history.
+#[derive(Clone, Debug)]
+pub struct MapEvent {
+    pub kind: MapOpKind,
+    pub result: MapRes,
+    pub invoke: u64,
+    pub response: u64,
+}
+
+/// Replay `kind` against sequential map semantics.
+fn map_apply(state: &mut std::collections::HashMap<u64, u64>, kind: MapOpKind) -> MapRes {
+    match kind {
+        MapOpKind::Get(k) => MapRes::Val(state.get(&k).copied()),
+        MapOpKind::Insert(k, v) => MapRes::Val(state.insert(k, v)),
+        MapOpKind::Remove(k) => MapRes::Val(state.remove(&k)),
+        MapOpKind::CmpEx(k, e, n) => {
+            let cur = state.get(&k).copied();
+            if cur == e {
+                match n {
+                    Some(v) => {
+                        state.insert(k, v);
+                    }
+                    None => {
+                        state.remove(&k);
+                    }
+                }
+                MapRes::Cas(Ok(()))
+            } else {
+                MapRes::Cas(Err(cur))
+            }
+        }
+        MapOpKind::GetOrInsert(k, v) => {
+            let cur = state.get(&k).copied();
+            if cur.is_none() {
+                state.insert(k, v);
+            }
+            MapRes::Val(cur)
+        }
+        MapOpKind::FetchAdd(k, d) => {
+            let cur = state.get(&k).copied();
+            state.insert(
+                k,
+                cur.unwrap_or(0).wrapping_add(d) & crate::kcas::MAX_VALUE,
+            );
+            MapRes::Val(cur)
+        }
+    }
+}
+
+/// Reverse a [`map_apply`]; the prior state is reconstructible from
+/// `(kind, result)` for every op.
+fn map_undo(
+    state: &mut std::collections::HashMap<u64, u64>,
+    kind: MapOpKind,
+    result: MapRes,
+) {
+    let restore = |state: &mut std::collections::HashMap<u64, u64>,
+                   k: u64,
+                   prev: Option<u64>| {
+        match prev {
+            Some(v) => {
+                state.insert(k, v);
+            }
+            None => {
+                state.remove(&k);
+            }
+        }
+    };
+    match (kind, result) {
+        (MapOpKind::Get(_), _) => {}
+        (MapOpKind::Insert(k, _), MapRes::Val(prev))
+        | (MapOpKind::Remove(k), MapRes::Val(prev)) => restore(state, k, prev),
+        (MapOpKind::CmpEx(k, e, _), MapRes::Cas(Ok(()))) => {
+            restore(state, k, e)
+        }
+        (MapOpKind::CmpEx(..), MapRes::Cas(Err(_))) => {}
+        (MapOpKind::GetOrInsert(k, _), MapRes::Val(prev)) => {
+            if prev.is_none() {
+                state.remove(&k);
+            }
+        }
+        (MapOpKind::FetchAdd(k, _), MapRes::Val(prev)) => {
+            restore(state, k, prev)
+        }
+        _ => unreachable!("result shape mismatches op kind"),
+    }
+}
+
+/// Is `history` linearizable with respect to sequential *map*
+/// semantics, starting from the `initial` (key, value) pairs? Same
+/// Wing & Gong search as [`is_linearizable`], over the richer state.
+pub fn is_map_linearizable(initial: &[(u64, u64)], history: &[MapEvent]) -> bool {
+    let n = history.len();
+    assert!(n <= 64, "checker limited to 64-op windows");
+    let mut state: std::collections::HashMap<u64, u64> =
+        initial.iter().copied().collect();
+    let mut done: u64 = 0;
+    // Unlike the set checker, map states reached via different orders
+    // of the same op subset can differ (last write wins), so the memo
+    // is keyed on (done-mask, order-independent state hash).
+    let mut seen: HashSet<(u64, u64)> = HashSet::new();
+    let mut must_precede = vec![0u64; n];
+    for j in 0..n {
+        for i in 0..n {
+            if i != j && history[i].response < history[j].invoke {
+                must_precede[j] |= 1 << i;
+            }
+        }
+    }
+
+    fn state_hash(state: &std::collections::HashMap<u64, u64>) -> u64 {
+        state.iter().fold(0u64, |acc, (&k, &v)| {
+            acc ^ crate::util::hash::splitmix64(k ^ crate::util::hash::splitmix64(v))
+        })
+    }
+
+    fn dfs(
+        history: &[MapEvent],
+        must_precede: &[u64],
+        state: &mut std::collections::HashMap<u64, u64>,
+        done: &mut u64,
+        seen: &mut HashSet<(u64, u64)>,
+    ) -> bool {
+        let n = history.len();
+        if done.count_ones() as usize == n {
+            return true;
+        }
+        if !seen.insert((*done, state_hash(state))) {
+            return false;
+        }
+        for j in 0..n {
+            let bit = 1u64 << j;
+            if *done & bit != 0 || (must_precede[j] & !*done) != 0 {
+                continue;
+            }
+            let ev = &history[j];
+            let got = map_apply(state, ev.kind);
+            if got == ev.result {
+                *done |= bit;
+                if dfs(history, must_precede, state, done, seen) {
+                    return true;
+                }
+                *done &= !bit;
+            }
+            map_undo(state, ev.kind, got);
+        }
+        false
+    }
+
+    dfs(history, &must_precede, &mut state, &mut done, &mut seen)
+}
+
+/// Record a concurrent history of random map ops (conditional ops
+/// included) over a small key range against any
+/// [`crate::maps::ConcurrentMap`], for [`is_map_linearizable`].
+pub fn record_map_history(
+    map: &dyn crate::maps::ConcurrentMap,
+    threads: usize,
+    ops_per_thread: usize,
+    keys: u64,
+    seed: u64,
+) -> Vec<MapEvent> {
+    use std::sync::Mutex;
+    use std::time::Instant;
+    let clock = Instant::now();
+    let events: Mutex<Vec<MapEvent>> = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for tid in 0..threads {
+            let events = &events;
+            let clock = &clock;
+            s.spawn(move || {
+                let mut rng =
+                    crate::util::rng::Rng::for_thread(seed, tid as u64);
+                let mut local = Vec::with_capacity(ops_per_thread);
+                // Tiny value/expectation domains so conditional hits,
+                // misses, and witness mismatches all occur.
+                let opt = |rng: &mut crate::util::rng::Rng| {
+                    if rng.below(3) == 0 {
+                        None
+                    } else {
+                        Some(rng.below(4))
+                    }
+                };
+                for _ in 0..ops_per_thread {
+                    let k = 1 + rng.below(keys);
+                    let kind = match rng.below(8) {
+                        0 => MapOpKind::Get(k),
+                        1 => MapOpKind::Insert(k, rng.below(4)),
+                        2 => MapOpKind::Remove(k),
+                        3 | 4 => MapOpKind::CmpEx(k, opt(&mut rng), opt(&mut rng)),
+                        5 => MapOpKind::GetOrInsert(k, rng.below(4)),
+                        _ => MapOpKind::FetchAdd(k, 1 + rng.below(2)),
+                    };
+                    let invoke = clock.elapsed().as_nanos() as u64;
+                    let result = match kind {
+                        MapOpKind::Get(k) => MapRes::Val(map.get(k)),
+                        MapOpKind::Insert(k, v) => MapRes::Val(map.insert(k, v)),
+                        MapOpKind::Remove(k) => MapRes::Val(map.remove(k)),
+                        MapOpKind::CmpEx(k, e, n) => {
+                            MapRes::Cas(map.compare_exchange(k, e, n))
+                        }
+                        MapOpKind::GetOrInsert(k, v) => {
+                            MapRes::Val(map.get_or_insert(k, v))
+                        }
+                        MapOpKind::FetchAdd(k, d) => {
+                            MapRes::Val(map.fetch_add(k, d))
+                        }
+                    };
+                    let response = clock.elapsed().as_nanos() as u64;
+                    local.push(MapEvent { kind, result, invoke, response });
+                }
+                events.lock().unwrap().extend(local);
+            });
+        }
+    });
+    let mut h = events.into_inner().unwrap();
+    h.sort_by_key(|e| e.invoke);
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -242,5 +486,104 @@ mod tests {
         let h = vec![ev(OpKind::Contains(9), true, 0, 1)];
         assert!(is_linearizable(&[9], &h));
         assert!(!is_linearizable(&[], &h));
+    }
+
+    fn mev(kind: MapOpKind, result: MapRes, invoke: u64, response: u64) -> MapEvent {
+        MapEvent { kind, result, invoke, response }
+    }
+
+    #[test]
+    fn map_sequential_rmw_history_accepts() {
+        let h = vec![
+            mev(MapOpKind::CmpEx(1, None, Some(5)), MapRes::Cas(Ok(())), 0, 1),
+            mev(MapOpKind::FetchAdd(1, 2), MapRes::Val(Some(5)), 2, 3),
+            mev(MapOpKind::GetOrInsert(1, 9), MapRes::Val(Some(7)), 4, 5),
+            mev(
+                MapOpKind::CmpEx(1, Some(7), None),
+                MapRes::Cas(Ok(())),
+                6,
+                7,
+            ),
+            mev(MapOpKind::Get(1), MapRes::Val(None), 8, 9),
+            mev(MapOpKind::FetchAdd(1, 3), MapRes::Val(None), 10, 11),
+            mev(MapOpKind::Get(1), MapRes::Val(Some(3)), 12, 13),
+        ];
+        assert!(is_map_linearizable(&[], &h));
+    }
+
+    #[test]
+    fn map_lost_increment_rejected() {
+        // Two fetch_adds both report the same previous value without
+        // overlapping — a lost update no valid linearization allows.
+        let h = vec![
+            mev(MapOpKind::FetchAdd(1, 1), MapRes::Val(Some(5)), 0, 1),
+            mev(MapOpKind::FetchAdd(1, 1), MapRes::Val(Some(5)), 2, 3),
+        ];
+        assert!(!is_map_linearizable(&[(1, 5)], &h));
+        // Overlapping they'd still be invalid (each sees the other's
+        // commit or not — but both claiming prev=5 loses one).
+        let h2 = vec![
+            mev(MapOpKind::FetchAdd(1, 1), MapRes::Val(Some(5)), 0, 10),
+            mev(MapOpKind::FetchAdd(1, 1), MapRes::Val(Some(5)), 1, 9),
+        ];
+        assert!(!is_map_linearizable(&[(1, 5)], &h2));
+    }
+
+    #[test]
+    fn map_double_cmpex_win_rejected() {
+        // Two compare_exchange(5->6) both succeed with no one restoring
+        // 5 in between: impossible.
+        let h = vec![
+            mev(
+                MapOpKind::CmpEx(1, Some(5), Some(6)),
+                MapRes::Cas(Ok(())),
+                0,
+                10,
+            ),
+            mev(
+                MapOpKind::CmpEx(1, Some(5), Some(6)),
+                MapRes::Cas(Ok(())),
+                1,
+                9,
+            ),
+        ];
+        assert!(!is_map_linearizable(&[(1, 5)], &h));
+    }
+
+    #[test]
+    fn map_cmpex_witness_respects_overlap() {
+        // The failed CAS's witness (6) is only explicable if it
+        // linearizes after the overlapping winner.
+        let h = vec![
+            mev(
+                MapOpKind::CmpEx(1, Some(5), Some(6)),
+                MapRes::Cas(Ok(())),
+                0,
+                10,
+            ),
+            mev(
+                MapOpKind::CmpEx(1, Some(5), Some(7)),
+                MapRes::Cas(Err(Some(6))),
+                2,
+                8,
+            ),
+        ];
+        assert!(is_map_linearizable(&[(1, 5)], &h));
+        // Without overlap in the wrong order it's rejected.
+        let h2 = vec![
+            mev(
+                MapOpKind::CmpEx(1, Some(5), Some(7)),
+                MapRes::Cas(Err(Some(6))),
+                0,
+                1,
+            ),
+            mev(
+                MapOpKind::CmpEx(1, Some(5), Some(6)),
+                MapRes::Cas(Ok(())),
+                2,
+                3,
+            ),
+        ];
+        assert!(!is_map_linearizable(&[(1, 5)], &h2));
     }
 }

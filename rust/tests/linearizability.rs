@@ -5,8 +5,10 @@
 //! key range (maximum contention) and the checker searches for a valid
 //! linearization. Many independent windows are checked per table.
 
-use crh::maps::{ConcurrentSet, TableKind};
-use crh::util::linearize::{is_linearizable, record_history};
+use crh::maps::{ConcurrentMap, ConcurrentSet, MapKind, TableKind};
+use crh::util::linearize::{
+    is_linearizable, is_map_linearizable, record_history, record_map_history,
+};
 
 fn check_table(kind: TableKind, windows: u64) {
     for w in 0..windows {
@@ -85,6 +87,87 @@ fn linearizable_inc_resize_rh() {
 #[test]
 fn linearizable_sharded_inc_resize_rh() {
     check_table(TableKind::ShardedIncResizableRh { shards: 4 }, 60);
+}
+
+/// Map windows with the conditional-RMW mix (`compare_exchange`
+/// corners, `get_or_insert`, `fetch_add` interleaved with the
+/// unconditional trio) over a tiny key range: maximum same-key
+/// contention on exactly the ops whose atomicity the tentpole claims.
+fn check_map(build: impl Fn() -> Box<dyn ConcurrentMap>, windows: u64, name: &str) {
+    for w in 0..windows {
+        let m = build();
+        let mut initial = Vec::new();
+        for k in 1..=3u64 {
+            m.insert(k, k);
+            initial.push((k, k));
+        }
+        let h = record_map_history(m.as_ref(), 3, 8, 6, 0x22BB + w);
+        assert_eq!(h.len(), 24, "{name}: short history");
+        assert!(
+            is_map_linearizable(&initial, &h),
+            "{name}: non-linearizable RMW history in window {w}: {h:#?}"
+        );
+    }
+}
+
+#[test]
+fn linearizable_rmw_kcas_rh_map() {
+    check_map(|| MapKind::KCasRhMap.build(7), 60, "kcas-rh-map");
+}
+
+#[test]
+fn linearizable_rmw_locked_lp_map() {
+    check_map(|| MapKind::LockedLpMap.build(7), 60, "locked-lp-map");
+}
+
+#[test]
+fn linearizable_rmw_sharded_kcas_rh_map_across_shards() {
+    for shards in [1u32, 4, 16] {
+        check_map(
+            || MapKind::ShardedKCasRhMap { shards }.build(8),
+            20,
+            &format!("sharded-kcas-rh-map:{shards}"),
+        );
+    }
+}
+
+#[test]
+fn linearizable_rmw_inc_resize_rh_map() {
+    check_map(|| MapKind::IncResizableRhMap.build(7), 40, "inc-resize-rh-map");
+}
+
+#[test]
+fn linearizable_rmw_during_inc_resize_migration() {
+    // Windows recorded while a two-generation migration is in flight:
+    // the conditional ops must stay atomic across the freeze/transfer
+    // protocol, not just on a settled table.
+    use crh::maps::resizable::ResizableRobinHoodMap;
+    for w in 0..30u64 {
+        // 4096 buckets = 64 migration stripes, so the handful of ops a
+        // window records cannot drain the migration before the
+        // in-flight assertion below.
+        let m = ResizableRobinHoodMap::with_threshold(12, 0.4);
+        // Filler keys outside the window range trip the trigger.
+        let mut filler = 1000u64;
+        while !m.migration_active() {
+            m.insert(filler, filler);
+            filler += 1;
+        }
+        let mut initial = Vec::new();
+        for k in 1..=3u64 {
+            m.insert(k, k);
+            initial.push((k, k));
+        }
+        assert!(
+            m.migration_active(),
+            "window {w}: migration drained before recording"
+        );
+        let h = record_map_history(&m, 3, 8, 6, 0x33CC + w);
+        assert!(
+            is_map_linearizable(&initial, &h),
+            "inc-resize-rh-map mid-migration: window {w}: {h:#?}"
+        );
+    }
 }
 
 #[test]

@@ -102,6 +102,234 @@ fn sharded_inc_resize_rh_map_oracle() {
     }
 }
 
+/// Random mixed histories over the *conditional-first* surface —
+/// `compare_exchange` corners, `get_or_insert`, `fetch_add` interleaved
+/// with the unconditional trio — must match a `HashMap` oracle
+/// implementing the reference semantics, for every map kind.
+fn rmw_oracle_check(kind: MapKind, size_log2: u32, keys: u64, ops: usize) {
+    prop::check(
+        &format!("{} RMW ops match HashMap", kind.name()),
+        10,
+        |r: &mut Rng| {
+            (0..ops)
+                .map(|_| {
+                    (
+                        r.below(8) as u8,
+                        1 + r.below(keys),
+                        r.below(6),
+                        r.below(6),
+                    )
+                })
+                .collect::<Vec<(u8, u64, u64, u64)>>()
+        },
+        |seq| {
+            let m = kind.build(size_log2);
+            let mut oracle: HashMap<u64, u64> = HashMap::new();
+            for &(op, key, a, b) in seq {
+                // Tiny value domain so conditional hits and witness
+                // mismatches both occur constantly.
+                let (got, want): (String, String) = match op {
+                    0 => (
+                        format!("{:?}", m.insert(key, a)),
+                        format!("{:?}", oracle.insert(key, a)),
+                    ),
+                    1 => (
+                        format!("{:?}", m.remove(key)),
+                        format!("{:?}", oracle.remove(&key)),
+                    ),
+                    2 => (
+                        format!("{:?}", m.get(key)),
+                        format!("{:?}", oracle.get(&key).copied()),
+                    ),
+                    3 => (
+                        format!("{:?}", m.get_or_insert(key, a)),
+                        format!("{:?}", {
+                            let cur = oracle.get(&key).copied();
+                            if cur.is_none() {
+                                oracle.insert(key, a);
+                            }
+                            cur
+                        }),
+                    ),
+                    4 => (
+                        format!("{:?}", m.fetch_add(key, a)),
+                        format!("{:?}", {
+                            let cur = oracle.get(&key).copied();
+                            oracle.insert(key, cur.unwrap_or(0) + a);
+                            cur
+                        }),
+                    ),
+                    _ => {
+                        // All four corners occur: expected/new each
+                        // drawn independently as absent or a value.
+                        let e = if op % 2 == 0 { None } else { Some(a) };
+                        let n = if b == 0 { None } else { Some(b) };
+                        (
+                            format!("{:?}", m.compare_exchange(key, e, n)),
+                            format!("{:?}", {
+                                let cur = oracle.get(&key).copied();
+                                if cur == e {
+                                    match n {
+                                        Some(v) => {
+                                            oracle.insert(key, v);
+                                        }
+                                        None => {
+                                            oracle.remove(&key);
+                                        }
+                                    }
+                                    Ok::<(), Option<u64>>(())
+                                } else {
+                                    Err(cur)
+                                }
+                            }),
+                        )
+                    }
+                };
+                if got != want {
+                    return Err(format!(
+                        "{} op {op} key {key} a {a} b {b}: got {got} want {want}",
+                        kind.name()
+                    ));
+                }
+            }
+            if m.len_quiesced() != oracle.len() {
+                return Err(format!(
+                    "{}: len {} vs oracle {}",
+                    kind.name(),
+                    m.len_quiesced(),
+                    oracle.len()
+                ));
+            }
+            for k in 1..=keys {
+                if m.get(k) != oracle.get(&k).copied() {
+                    return Err(format!("{}: sweep mismatch at {k}", kind.name()));
+                }
+            }
+            m.check_invariant_quiesced().map_err(|e| e.to_string())
+        },
+    );
+}
+
+#[test]
+fn rmw_oracle_kcas_rh_map() {
+    rmw_oracle_check(MapKind::KCasRhMap, 8, 160, 1200);
+}
+
+#[test]
+fn rmw_oracle_locked_lp_map() {
+    rmw_oracle_check(MapKind::LockedLpMap, 8, 160, 1200);
+}
+
+#[test]
+fn rmw_oracle_sharded_kcas_rh_map_across_shards() {
+    for shards in [1u32, 4, 16] {
+        rmw_oracle_check(MapKind::ShardedKCasRhMap { shards }, 8, 160, 1200);
+    }
+}
+
+#[test]
+fn rmw_oracle_sharded_locked_lp_map_across_shards() {
+    for shards in [1u32, 4, 16] {
+        rmw_oracle_check(MapKind::ShardedLockedLpMap { shards }, 8, 160, 1200);
+    }
+}
+
+#[test]
+fn rmw_oracle_inc_resize_rh_map() {
+    rmw_oracle_check(MapKind::IncResizableRhMap, 8, 160, 1200);
+}
+
+#[test]
+fn rmw_oracle_sharded_inc_resize_rh_map() {
+    for shards in crh::maps::TableKind::SHARD_SWEEP {
+        rmw_oracle_check(
+            MapKind::ShardedIncResizableRhMap { shards },
+            8,
+            160,
+            1200,
+        );
+    }
+}
+
+/// Concurrent mixed `compare_exchange`/`fetch_add` histories across the
+/// shard sweep: every committed increment (a fetch_add or an optimistic
+/// CAS win) is tallied per thread; the counters must sum exactly — on
+/// sharded facades the hot keys deliberately straddle shards.
+#[test]
+fn concurrent_rmw_totals_across_shards() {
+    let mut kinds = vec![MapKind::KCasRhMap, MapKind::LockedLpMap];
+    for shards in [1u32, 4, 16] {
+        kinds.push(MapKind::ShardedKCasRhMap { shards });
+    }
+    for kind in kinds {
+        let m: Arc<dyn ConcurrentMap> = Arc::from(kind.build(10));
+        const KEYS: u64 = 6;
+        const THREADS: u64 = 6;
+        const OPS: u64 = 8_000;
+        let mut hs = Vec::new();
+        for tid in 0..THREADS {
+            let m = m.clone();
+            hs.push(std::thread::spawn(move || {
+                let mut r = Rng::for_thread(0xADD5, tid);
+                let mut incs = 0u64;
+                for _ in 0..OPS {
+                    let k = 1 + r.below(KEYS);
+                    if r.below(3) == 0 {
+                        let cur = m.get(k);
+                        let next = cur.unwrap_or(0) + 1;
+                        if m.compare_exchange(k, cur, Some(next)).is_ok() {
+                            incs += 1;
+                        }
+                    } else {
+                        m.fetch_add(k, 1);
+                        incs += 1;
+                    }
+                }
+                incs
+            }));
+        }
+        let total: u64 = hs.into_iter().map(|h| h.join().unwrap()).sum();
+        let sum: u64 = (1..=KEYS).map(|k| m.get(k).unwrap_or(0)).sum();
+        assert_eq!(sum, total, "{}: lost/duplicated increments", kind.name());
+    }
+}
+
+#[test]
+fn concurrent_cmpex_lease_has_one_owner() {
+    // Lease protocol on one hot key: acquire = cmpex(None -> owner),
+    // release = cmpex(owner -> None). At most one thread may ever hold
+    // the lease, and every successful acquire must see its own value.
+    let m: Arc<dyn ConcurrentMap> =
+        Arc::from(MapKind::ShardedKCasRhMap { shards: 4 }.build(10));
+    let held = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let mut hs = Vec::new();
+    for tid in 1..=4u64 {
+        let (m, held) = (m.clone(), held.clone());
+        hs.push(std::thread::spawn(move || {
+            let mut acquisitions = 0u64;
+            for _ in 0..20_000 {
+                if m.compare_exchange(9, None, Some(tid)).is_ok() {
+                    let other =
+                        held.swap(tid, std::sync::atomic::Ordering::SeqCst);
+                    assert_eq!(other, 0, "lease held by {other} and {tid}");
+                    assert_eq!(m.get(9), Some(tid), "lease value torn");
+                    held.store(0, std::sync::atomic::Ordering::SeqCst);
+                    assert_eq!(
+                        m.compare_exchange(9, Some(tid), None),
+                        Ok(()),
+                        "owner failed to release"
+                    );
+                    acquisitions += 1;
+                }
+            }
+            acquisitions
+        }));
+    }
+    let total: u64 = hs.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(total > 0, "no thread ever acquired the lease");
+    assert_eq!(m.get(9), None);
+}
+
 #[test]
 fn duplicate_insert_overwrites_value_everywhere() {
     for kind in MapKind::all() {
@@ -176,9 +404,11 @@ fn apply_batch_matches_op_by_op_everywhere() {
             let ops: Vec<MapOp> = (0..n)
                 .map(|_| {
                     let k = 1 + rng.below(64);
-                    match rng.below(3) {
+                    match rng.below(5) {
                         0 => MapOp::Insert(k, rng.below(500)),
                         1 => MapOp::Remove(k),
+                        2 => MapOp::GetOrInsert(k, rng.below(500)),
+                        3 => MapOp::FetchAdd(k, rng.below(50)),
                         _ => MapOp::Get(k),
                     }
                 })
@@ -202,6 +432,21 @@ fn apply_batch_matches_op_by_op_everywhere() {
                     MapOp::Remove(k) => {
                         assert_eq!(oracle.remove(&k), serial.get(k));
                         MapReply::Removed(serial.remove(k))
+                    }
+                    MapOp::GetOrInsert(k, v) => {
+                        let cur = oracle.get(&k).copied();
+                        if cur.is_none() {
+                            oracle.insert(k, v);
+                        }
+                        MapReply::Existing(serial.get_or_insert(k, v))
+                    }
+                    MapOp::FetchAdd(k, d) => {
+                        let cur = oracle.get(&k).copied();
+                        oracle.insert(k, cur.unwrap_or(0) + d);
+                        MapReply::Added(serial.fetch_add(k, d))
+                    }
+                    MapOp::CmpEx(..) => {
+                        unreachable!("this batch mix generates no CmpEx")
                     }
                 })
                 .collect();
@@ -272,6 +517,62 @@ fn server_round_trip_and_key_validation() {
     assert_eq!(c.request_line("G 3").unwrap(), "-", "bad batch was applied");
 
     assert_eq!(map.len_quiesced(), 1); // only key 5 survives
+}
+
+#[test]
+fn server_conditional_verbs_round_trip() {
+    let map: Arc<dyn ConcurrentMap> =
+        Arc::from(MapKind::ShardedKCasRhMap { shards: 4 }.build(12));
+    let addr = server::spawn_ephemeral(map.clone());
+    let mut c = Client::connect(addr).unwrap();
+
+    // Lease flow over raw lines: acquire, contended acquire, release.
+    assert_eq!(c.request_line("C 7 - 1").unwrap(), "OK");
+    assert_eq!(c.request_line("C 7 - 2").unwrap(), "!1");
+    assert_eq!(c.request_line("C 7 2 -").unwrap(), "!1");
+    assert_eq!(c.request_line("C 7 1 -").unwrap(), "OK");
+    assert_eq!(c.request_line("C 7 - -").unwrap(), "OK");
+
+    // Counter flow: fetch_add from absent, then get-or-insert.
+    assert_eq!(c.request_line("A 9 5").unwrap(), "-");
+    assert_eq!(c.request_line("A 9 2").unwrap(), "5");
+    assert_eq!(c.request_line("G 9").unwrap(), "7");
+    assert_eq!(c.request_line("U 9 100").unwrap(), "7");
+    assert_eq!(c.request_line("U 11 100").unwrap(), "-");
+
+    // Validation at the protocol boundary.
+    assert_eq!(
+        c.request_line(&format!("C {} - 1", MAX_KEY + 1)).unwrap(),
+        "ERR key out of range"
+    );
+    assert_eq!(c.request_line("C 7 x 1").unwrap(), "ERR bad request");
+    assert_eq!(c.request_line("A 7").unwrap(), "ERR bad request");
+
+    // Typed batch round trip with a same-key dependency chain.
+    let replies = c
+        .batch_typed(&[
+            MapOp::CmpEx(3, None, Some(30)),
+            MapOp::FetchAdd(3, 4),
+            MapOp::CmpEx(3, Some(34), Some(35)),
+            MapOp::CmpEx(3, Some(34), Some(36)),
+            MapOp::GetOrInsert(3, 0),
+            MapOp::CmpEx(3, Some(35), None),
+            MapOp::Get(3),
+        ])
+        .unwrap();
+    assert_eq!(
+        replies,
+        vec![
+            MapReply::CmpEx(Ok(())),
+            MapReply::Added(Some(30)),
+            MapReply::CmpEx(Ok(())),
+            MapReply::CmpEx(Err(Some(35))),
+            MapReply::Existing(Some(35)),
+            MapReply::CmpEx(Ok(())),
+            MapReply::Value(None),
+        ]
+    );
+    assert_eq!(map.len_quiesced(), 2); // keys 9 and 11 survive
 }
 
 #[test]

@@ -337,3 +337,166 @@ fn inc_map_kind_grows_through_builder() {
     assert_eq!(m.len_quiesced(), 200);
     m.check_invariant_quiesced().unwrap();
 }
+
+/// Single-threaded RMW oracle across forced migrations: the
+/// conditional surface (`compare_exchange` corners, `get_or_insert`,
+/// `fetch_add`) driven through several grow boundaries, checked op by
+/// op against `HashMap` reference semantics.
+#[test]
+fn rmw_oracle_across_grow_boundary() {
+    prop::check(
+        "conditional ops match HashMap across grow boundaries",
+        8,
+        |r: &mut Rng| {
+            (0..3000)
+                .map(|_| (r.below(8) as u8, 1 + r.below(500), r.below(6)))
+                .collect::<Vec<(u8, u64, u64)>>()
+        },
+        |seq| {
+            let m = ResizableRobinHoodMap::with_threshold(7, 0.7);
+            let initial_capacity = ConcurrentMap::capacity(&m);
+            let mut oracle: HashMap<u64, u64> = HashMap::new();
+            for &(op, key, a) in seq {
+                let (got, want): (String, String) = match op {
+                    // Growth-biased: half the mix inserts one way or
+                    // another.
+                    0 | 1 => (
+                        format!("{:?}", m.get_or_insert(key, a)),
+                        format!("{:?}", {
+                            let cur = oracle.get(&key).copied();
+                            if cur.is_none() {
+                                oracle.insert(key, a);
+                            }
+                            cur
+                        }),
+                    ),
+                    2 | 3 => (
+                        format!("{:?}", m.fetch_add(key, a)),
+                        format!("{:?}", {
+                            let cur = oracle.get(&key).copied();
+                            oracle.insert(key, cur.unwrap_or(0) + a);
+                            cur
+                        }),
+                    ),
+                    4 | 5 => {
+                        let e = if op == 4 { None } else { Some(a) };
+                        let n = if a == 0 { None } else { Some(a + 1) };
+                        (
+                            format!("{:?}", m.compare_exchange(key, e, n)),
+                            format!("{:?}", {
+                                let cur = oracle.get(&key).copied();
+                                if cur == e {
+                                    match n {
+                                        Some(v) => {
+                                            oracle.insert(key, v);
+                                        }
+                                        None => {
+                                            oracle.remove(&key);
+                                        }
+                                    }
+                                    Ok::<(), Option<u64>>(())
+                                } else {
+                                    Err(cur)
+                                }
+                            }),
+                        )
+                    }
+                    6 => (
+                        format!("{:?}", m.remove(key)),
+                        format!("{:?}", oracle.remove(&key)),
+                    ),
+                    _ => (
+                        format!("{:?}", m.get(key)),
+                        format!("{:?}", oracle.get(&key).copied()),
+                    ),
+                };
+                if got != want {
+                    return Err(format!(
+                        "op {op} key {key} a {a}: got {got} want {want}"
+                    ));
+                }
+            }
+            if m.len_quiesced() != oracle.len() {
+                return Err(format!(
+                    "len {} vs oracle {}",
+                    m.len_quiesced(),
+                    oracle.len()
+                ));
+            }
+            for k in 1..=500u64 {
+                if m.get(k) != oracle.get(&k).copied() {
+                    return Err(format!("sweep mismatch at {k}"));
+                }
+            }
+            if oracle.len() > 120
+                && ConcurrentMap::capacity(&m) == initial_capacity
+            {
+                return Err("no migration ran across the boundary".into());
+            }
+            m.check_invariant_quiesced().map_err(|e| e.to_string())
+        },
+    );
+}
+
+/// Concurrent counter workload (fetch_add + optimistic cmpex) driven
+/// straight through forced migrations, sharded and unsharded: no
+/// committed increment may be lost while pairs move between
+/// generations — the tentpole's atomicity claim under resize.
+fn rmw_totals_across_migration_on(name: &str, m: Arc<dyn ConcurrentMap>) {
+    let initial_capacity = m.capacity();
+    const KEYS: u64 = 8;
+    const THREADS: u64 = 4;
+    let mut hs = Vec::new();
+    for tid in 0..THREADS {
+        let m = m.clone();
+        hs.push(std::thread::spawn(move || {
+            let mut r = Rng::for_thread(0xF00D, tid);
+            let mut incs = 0u64;
+            // Filler inserts force migrations while the counters
+            // churn; filler keys stay out of the counter range.
+            for round in 0..6_000u64 {
+                if round % 8 == 0 {
+                    let filler = 1_000 + tid * 100_000 + round;
+                    m.insert(filler, filler);
+                }
+                let k = 1 + r.below(KEYS);
+                if r.below(3) == 0 {
+                    let cur = m.get(k);
+                    let next = cur.unwrap_or(0) + 1;
+                    if m.compare_exchange(k, cur, Some(next)).is_ok() {
+                        incs += 1;
+                    }
+                } else {
+                    m.fetch_add(k, 1);
+                    incs += 1;
+                }
+            }
+            incs
+        }));
+    }
+    let total: u64 = hs.into_iter().map(|h| h.join().unwrap()).sum();
+    let sum: u64 = (1..=KEYS).map(|k| m.get(k).unwrap_or(0)).sum();
+    assert_eq!(sum, total, "{name}: increments lost across migration");
+    // Drains any still-in-flight migration before the capacity look.
+    m.check_invariant_quiesced().unwrap();
+    assert!(
+        m.capacity() > initial_capacity,
+        "{name}: no migration ran (capacity stuck at {initial_capacity})"
+    );
+}
+
+#[test]
+fn concurrent_rmw_totals_across_migration() {
+    rmw_totals_across_migration_on(
+        "inc-resize-rh-map",
+        Arc::new(ResizableRobinHoodMap::with_threshold(7, 0.6)),
+    );
+    rmw_totals_across_migration_on(
+        "sharded inc-resize-rh-map x4",
+        Arc::new(
+            Sharded::<ResizableRobinHoodMap>::inc_resizable_map_with_threshold(
+                9, 2, 0.6,
+            ),
+        ),
+    );
+}
