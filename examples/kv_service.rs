@@ -19,8 +19,13 @@
 //! batch=64 must beat batch=1.
 //!
 //! ```sh
-//! cargo run --release --example kv_service
+//! cargo run --release --example kv_service             # threaded backend
+//! cargo run --release --example kv_service -- --reactor # epoll event loop
 //! ```
+//!
+//! `--reactor` serves the identical protocol through the epoll event
+//! loop (`crh::service::reactor`) instead of two threads per
+//! connection; every assertion below must hold on either backend.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -62,11 +67,49 @@ fn client(addr: std::net::SocketAddr, tid: u64, batch: usize) -> Vec<u128> {
     lat
 }
 
+/// Either backend's server handle, so the example can shut down and
+/// join whichever it started.
+enum Handle {
+    Threaded(server::ServerHandle),
+    Epoll(crh::service::reactor::ReactorHandle),
+}
+
+impl Handle {
+    fn addr(&self) -> std::net::SocketAddr {
+        match self {
+            Handle::Threaded(h) => h.addr(),
+            Handle::Epoll(h) => h.addr(),
+        }
+    }
+
+    fn shutdown(self) {
+        match self {
+            Handle::Threaded(h) => h.shutdown(),
+            Handle::Epoll(h) => h.shutdown(),
+        }
+    }
+}
+
 fn main() {
+    let reactor = std::env::args().any(|a| a == "--reactor");
     let kind = MapKind::parse("sharded-kcas-rh-map:4").unwrap();
     let map: Arc<dyn ConcurrentMap> = Arc::from(kind.build(16));
-    let addr = server::spawn_ephemeral(map.clone());
-    println!("kv_service: {} on {addr}", kind.display());
+    let handle = if reactor {
+        Handle::Epoll(
+            crh::service::reactor::spawn_server_epoll(map.clone(), 0)
+                .expect("spawn epoll server"),
+        )
+    } else {
+        Handle::Threaded(
+            server::spawn_server(map.clone()).expect("spawn server"),
+        )
+    };
+    let addr = handle.addr();
+    println!(
+        "kv_service: {} on {addr} ({})",
+        kind.display(),
+        if reactor { "epoll event loop" } else { "thread-per-connection" }
+    );
 
     // Protocol guard rails: an out-of-range key must be rejected at the
     // protocol boundary — and the connection must survive it.
@@ -139,5 +182,6 @@ fn main() {
     );
     println!("final map size: {}", map.len_quiesced());
     map.check_invariant_quiesced().expect("invariant");
+    handle.shutdown(); // joins every server thread — no stragglers
     println!("kv_service OK");
 }

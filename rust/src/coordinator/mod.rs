@@ -472,6 +472,234 @@ pub fn fig16_rmw(opts: &ExpOpts, maps: &[MapKind], hot_keys: &[u64]) {
     }
 }
 
+/// One measured cell of the Figure 17 front-end sweep.
+pub struct Fig17Cell {
+    pub backend: &'static str,
+    /// Event-loop workers (0 for the thread-per-connection backend,
+    /// which has no worker pool — it spawns two threads per socket).
+    pub workers: usize,
+    pub conns: usize,
+    pub kops_per_s: f64,
+}
+
+/// Key space the fig17 clients draw from (small enough that the
+/// default 2^16 map never approaches capacity).
+const FIG17_KEYS: u64 = 10_000;
+/// Frames each client keeps in flight (pipelining depth).
+const FIG17_DEPTH: usize = 16;
+
+fn fig17_map(size_log2: u32) -> std::sync::Arc<dyn crate::maps::ConcurrentMap> {
+    std::sync::Arc::from(
+        MapKind::ShardedKCasRhMap { shards: 4 }.build(size_log2),
+    )
+}
+
+/// One client connection's worth of load: `frames` pipelined frames of
+/// `batch` value-shaped ops (the conditional verbs ride along via
+/// fetch-add), replies drained with [`FIG17_DEPTH`] frames in flight.
+fn fig17_client(
+    addr: std::net::SocketAddr,
+    tid: u64,
+    frames: usize,
+    batch: usize,
+) -> std::io::Result<u64> {
+    use crate::maps::MapOp;
+    use crate::service::server::Client;
+    let mut c = Client::connect(addr)?;
+    let mut r = crate::util::rng::Rng::for_thread(0xF17, tid);
+    let mut ops: Vec<MapOp> = Vec::with_capacity(batch);
+    let mut inflight = 0usize;
+    for _ in 0..frames {
+        ops.clear();
+        for _ in 0..batch {
+            let k = 1 + r.below(FIG17_KEYS);
+            ops.push(match r.below(10) {
+                0 | 1 => MapOp::Insert(k, k),
+                2 => MapOp::Remove(k),
+                3 => MapOp::FetchAdd(k, 1),
+                _ => MapOp::Get(k),
+            });
+        }
+        c.send_frame(&ops)?;
+        inflight += 1;
+        if inflight == FIG17_DEPTH {
+            c.read_batch_reply(batch)?;
+            inflight -= 1;
+        }
+    }
+    while inflight > 0 {
+        c.read_batch_reply(batch)?;
+        inflight -= 1;
+    }
+    Ok((frames * batch) as u64)
+}
+
+/// Drive `conns` concurrent clients against `addr`; ops/second.
+fn fig17_run(
+    addr: std::net::SocketAddr,
+    conns: usize,
+    frames: usize,
+    batch: usize,
+) -> f64 {
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..conns as u64)
+        .map(|tid| {
+            std::thread::spawn(move || {
+                fig17_client(addr, tid, frames, batch).expect("fig17 client")
+            })
+        })
+        .collect();
+    let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    total as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Measure one (conns, workers) point on both backends, fresh map and
+/// server per measurement: (thread-per-conn ops/s, epoll ops/s).
+pub fn fig17_pair(
+    size_log2: u32,
+    conns: usize,
+    workers: usize,
+    frames: usize,
+    batch: usize,
+) -> (f64, f64) {
+    use crate::service::{reactor, server};
+    let h = server::spawn_server(fig17_map(size_log2)).expect("spawn server");
+    let threaded = fig17_run(h.addr(), conns, frames, batch);
+    h.shutdown();
+    let h = reactor::spawn_server_epoll(fig17_map(size_log2), workers)
+        .expect("spawn reactor");
+    let epoll = fig17_run(h.addr(), conns, frames, batch);
+    h.shutdown();
+    (threaded, epoll)
+}
+
+/// The reply transcript of the fixed fig17 op trace against `addr`,
+/// delivered in deliberately tiny write chunks so the server-side
+/// decoder sees frames split across arbitrary read boundaries.
+fn fig17_transcript(addr: std::net::SocketAddr) -> Vec<String> {
+    use crate::service::server::Client;
+    let request = "\
+P 10 100\nP 10 101\nG 10\nU 10 7\nA 10 5\nC 10 106 9\nD 10\n\
+G 0\nG 4611686018427387902\nP 1 4611686018427387904\nX 1\nG 1 junk\n\
+B 0\nB 5000\n\
+B 3\nP 2 20\nG 2\nD 2\n\
+B 2\nG 0\nG 2\n\
+G 2\nA 3 1\nA 3 1\nC 3 2 -\nC 3 2 -\nU 22 7\nU 22 8\nQ\n";
+    const REPLIES: usize = 23;
+    let mut c = Client::connect(addr).expect("connect");
+    for (i, chunk) in request.as_bytes().chunks(7).enumerate() {
+        c.send_raw(chunk).expect("send");
+        if i % 16 == 0 {
+            // Let some fragments land alone instead of coalescing.
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    (0..REPLIES).map(|_| c.read_reply_line().expect("reply")).collect()
+}
+
+/// The satellite smoke check behind the `fig17_frontend --quick` CI
+/// step: the epoll backend must answer a fixed op trace — all verbs,
+/// protocol errors, batch frames, split-across-read framing —
+/// **byte-identically** to the thread-per-connection backend (and both
+/// must match the protocol's documented semantics). Returns the
+/// transcript length; panics on any divergence.
+pub fn fig17_equivalence(size_log2: u32) -> usize {
+    use crate::service::{reactor, server};
+    let expected: Vec<&str> = vec![
+        "-", "100", "101", "101", "101", "OK", "9",
+        "ERR key out of range", "ERR key out of range",
+        "ERR value out of range", "ERR bad request", "ERR bad request",
+        "ERR bad batch size", "ERR bad batch size",
+        "- 20 20",
+        "ERR key out of range",
+        "-", "-", "1", "OK", "!-", "-", "7",
+    ];
+    let h = server::spawn_server(fig17_map(size_log2)).expect("spawn server");
+    let threaded = fig17_transcript(h.addr());
+    h.shutdown();
+    let h = reactor::spawn_server_epoll(fig17_map(size_log2), 2)
+        .expect("spawn reactor");
+    let epoll = fig17_transcript(h.addr());
+    h.shutdown();
+    assert_eq!(
+        threaded, epoll,
+        "front-ends diverged on the fixed op trace"
+    );
+    assert_eq!(threaded, expected, "trace semantics drifted");
+    threaded.len()
+}
+
+/// **Figure 17** (extension): the front-end comparison — end-to-end KV
+/// throughput over TCP, thread-per-connection pipeline vs epoll event
+/// loop, swept across connection count x event-loop worker count.
+/// Every cell runs the same work-bound load (`frames` pipelined frames
+/// of `batch` ops per connection) against a fresh server+map, so rows
+/// differ only in how sockets are multiplexed. The equivalence check
+/// runs first: both backends must answer the fixed protocol trace
+/// identically before their throughput is worth comparing.
+pub fn fig17_frontend(
+    size_log2: u32,
+    conn_counts: &[usize],
+    worker_counts: &[usize],
+    frames: usize,
+    batch: usize,
+) -> Vec<Fig17Cell> {
+    println!(
+        "# Figure 17 — KV front-ends: thread-per-conn vs epoll event loop; \
+         sharded-kcas-rh-map:4 2^{size_log2}, {frames} frames/conn x \
+         {batch} ops/frame, pipeline depth {FIG17_DEPTH}"
+    );
+    let lines = fig17_equivalence(size_log2);
+    println!(
+        "## equivalence: identical reply transcripts on the fixed op trace \
+         ({lines} lines) OK"
+    );
+    let mut cells = Vec::new();
+    println!(
+        "\n{:<18} {:>7} {:>7} {:>12}",
+        "backend", "workers", "conns", "kops/s"
+    );
+    for &conns in conn_counts {
+        let kops = |v: f64| v / 1e3;
+        // The threaded backend has no worker knob; measure it once per
+        // connection count.
+        let h = crate::service::server::spawn_server(fig17_map(size_log2))
+            .expect("spawn server");
+        let threaded = fig17_run(h.addr(), conns, frames, batch);
+        h.shutdown();
+        println!(
+            "{:<18} {:>7} {:>7} {:>12.1}",
+            "thread-per-conn", "-", conns, kops(threaded)
+        );
+        cells.push(Fig17Cell {
+            backend: "thread-per-conn",
+            workers: 0,
+            conns,
+            kops_per_s: kops(threaded),
+        });
+        for &workers in worker_counts {
+            let h = crate::service::reactor::spawn_server_epoll(
+                fig17_map(size_log2),
+                workers,
+            )
+            .expect("spawn reactor");
+            let epoll = fig17_run(h.addr(), conns, frames, batch);
+            h.shutdown();
+            println!(
+                "{:<18} {:>7} {:>7} {:>12.1}",
+                "epoll", workers, conns, kops(epoll)
+            );
+            cells.push(Fig17Cell {
+                backend: "epoll",
+                workers,
+                conns,
+                kops_per_s: kops(epoll),
+            });
+        }
+    }
+    cells
+}
+
 /// **Table 1**: simulated cache misses relative to K-CAS Robin Hood
 /// (single core), via the trace models + cache hierarchy.
 pub fn table1(size_log2: u32, ops: u64) {

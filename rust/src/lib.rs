@@ -32,9 +32,13 @@
 //!   through the same facade.
 //! * [`service`] — the KV service layer: [`service::batch`] (batched
 //!   `apply_batch` API amortising K-CAS descriptor setup, plus the
-//!   `fig14_batching` driver) and [`service::server`] (pipelined TCP
-//!   front-end with multi-op batch frames, used by the `kv_service`
-//!   example).
+//!   `fig14_batching` driver), [`service::frame`] (the wire-protocol
+//!   codec with an incremental decoder both front-ends share), and two
+//!   TCP front-ends serving the identical protocol —
+//!   [`service::server`] (thread-per-connection pipeline) and
+//!   [`service::reactor`] (epoll event loop: ops from every ready
+//!   socket applied as one hashed batch per wake-up, EPOLLOUT
+//!   backpressure, eventfd shutdown).
 //! * [`bench`] — §4.1 methodology: workload generation, pinned threads,
 //!   barrier-synced timed runs, ops/µs reporting.
 //! * [`cachesim`] — set-associative cache simulator + per-table memory
@@ -46,11 +50,14 @@
 //! * [`coordinator`] — experiment registry and CLI entry points that
 //!   regenerate each of the paper's figures and tables, plus the
 //!   extension sweeps: `fig13_sharding` (shard count x threads),
-//!   `fig14_batching` (batch size x threads), and `fig15_resize`
-//!   (op tail latency during an in-flight grow migration, incremental
-//!   vs quiescing engine).
+//!   `fig14_batching` (batch size x threads), `fig15_resize` (op tail
+//!   latency during an in-flight grow migration, incremental vs
+//!   quiescing engine), `fig16_rmw` (conditional RMW under contention
+//!   skew), and `fig17_frontend` (thread-per-connection vs epoll
+//!   event-loop front-end across connection counts).
 //! * [`util`] — hashing (bit-identical to the L1 Pallas kernel), RNG,
-//!   thread pinning, a mini property-testing driver, and the
+//!   thread pinning, a mini property-testing driver, the Linux
+//!   readiness syscalls behind the reactor (`util::sys`), and the
 //!   offline-build shims ([`util::pad`] cache padding, [`util::error`]
 //!   error plumbing) that keep the crate free of external dependencies.
 

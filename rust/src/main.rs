@@ -14,6 +14,14 @@
 //!            [--hot-keys 1,16,256,4096] (conditional RMW counter
 //!            workload across contention skew: native K-CAS
 //!            compare_exchange/fetch_add vs the locked baseline)
+//! crh fig17_frontend [--conns 16,64,256] [--workers 1,2,4]
+//!            [--frames N] [--batch N] (KV front-end comparison:
+//!            thread-per-connection pipeline vs epoll event loop,
+//!            after asserting both answer a fixed trace identically)
+//! crh serve  [--map sharded-kcas-rh-map:4] [--size-log2 N]
+//!            [--addr 127.0.0.1:7878] [--reactor] [--workers N]
+//!            (run the KV server until killed; --reactor selects the
+//!            epoll event-loop backend)
 //! crh table1 [--size-log2 N] [--ops N]
 //! crh bench  --table kcas-rh|inc-resize-rh|sharded-kcas-rh:16|...
 //!            [--lf 0.6] [--updates 10] [--threads N] [--ms N] [--zipf]
@@ -50,8 +58,9 @@ fn parse_list<T: std::str::FromStr>(args: &[String], name: &str) -> Option<Vec<T
 fn usage() -> ! {
     eprintln!(
         "usage: crh <fig10|fig11|fig12|fig13_sharding|fig14_batching|\
-         fig15_resize|fig16_rmw|table1|bench|ablate-ts|analyze|validate|\
-         smoke> [options]\n(see `main.rs` docs or README for options)"
+         fig15_resize|fig16_rmw|fig17_frontend|serve|table1|bench|\
+         ablate-ts|analyze|validate|smoke> [options]\n\
+         (see `main.rs` docs or README for options)"
     );
     std::process::exit(2)
 }
@@ -124,6 +133,61 @@ fn main() -> Result<()> {
             let hot_keys = parse_list(&args, "--hot-keys")
                 .unwrap_or_else(|| vec![1, 16, 256, 4096]);
             coordinator::fig16_rmw(&opts, &maps, &hot_keys);
+        }
+        "fig17_frontend" | "fig17" => {
+            // Network round trips, not table capacity, dominate here;
+            // default to a service-sized map instead of the paper's 2^23.
+            if parse_flag::<u32>(&args, "--size-log2").is_none() {
+                opts.size_log2 = 16;
+            }
+            let conns = parse_list(&args, "--conns")
+                .unwrap_or_else(|| vec![16, 64, 256]);
+            let workers = parse_list(&args, "--workers")
+                .unwrap_or_else(|| vec![1, 2, 4]);
+            let frames = parse_flag(&args, "--frames").unwrap_or(500usize);
+            let batch = parse_flag(&args, "--batch")
+                .unwrap_or(8usize)
+                .clamp(1, crh::service::frame::MAX_BATCH);
+            coordinator::fig17_frontend(
+                opts.size_log2,
+                &conns,
+                &workers,
+                frames,
+                batch,
+            );
+        }
+        "serve" => {
+            let spec: String = parse_flag(&args, "--map")
+                .unwrap_or_else(|| "sharded-kcas-rh-map:4".into());
+            let kind = MapKind::parse(&spec)
+                .unwrap_or_else(|| panic!("unknown map {spec}"));
+            let size = parse_flag(&args, "--size-log2").unwrap_or(20u32);
+            let bind: String = parse_flag(&args, "--addr")
+                .unwrap_or_else(|| "127.0.0.1:7878".into());
+            let listener = std::net::TcpListener::bind(&bind)?;
+            let map: std::sync::Arc<dyn crh::maps::ConcurrentMap> =
+                std::sync::Arc::from(kind.build(size));
+            if args.iter().any(|a| a == "--reactor") {
+                let workers = parse_flag(&args, "--workers").unwrap_or(0);
+                let h = crh::service::reactor::serve_epoll(
+                    listener, map, workers,
+                )?;
+                println!(
+                    "serving {} (epoll event loop) on {}",
+                    kind.display(),
+                    h.addr()
+                );
+            } else {
+                let h = crh::service::server::spawn_server_on(listener, map)?;
+                println!(
+                    "serving {} (thread-per-connection) on {}",
+                    kind.display(),
+                    h.addr()
+                );
+            }
+            loop {
+                std::thread::park();
+            }
         }
         "table1" => {
             let ops = parse_flag(&args, "--ops").unwrap_or(6_000_000u64);

@@ -1,0 +1,617 @@
+//! The wire-protocol frame codec, shared by both front-ends (the
+//! thread-per-connection pipeline in [`super::server`] and the epoll
+//! event loop in [`super::reactor`]), so the two backends cannot drift:
+//! one parser, one reply formatter, one framing state machine.
+//!
+//! ## Protocol (line-oriented text)
+//!
+//! ```text
+//! G <k>        get            → reply line: "<v>" or "-"
+//! P <k> <v>    put (insert)   → previous "<v>" or "-"
+//! D <k>        delete         → removed "<v>" or "-"
+//! U <k> <v>    get-or-insert  → pre-existing "<v>", or "-" (inserted)
+//! A <k> <d>    fetch-add      → previous "<v>", or "-" (was absent,
+//!              now holds d; missing keys count as 0)
+//! C <k> <e> <n>  compare-exchange; <e>/<n> are a value or "-"
+//!              (absent) — the four corners of
+//!              ConcurrentMap::compare_exchange → "OK" on commit,
+//!              "!<v>" / "!-" with the witnessed value on failure
+//! B <n>        batch frame: the next n lines are ops (any of the
+//!              above); one reply line with n space-separated tokens
+//! Q            quit (close the connection)
+//! ```
+//!
+//! Malformed or out-of-range requests get an `ERR <msg>` line and the
+//! connection **stays up** — keys outside `[1, MAX_KEY]` are rejected
+//! at the protocol boundary with `ERR key out of range` instead of
+//! tripping the table's `check_key` assert, and values (including `C`
+//! operands and `A` deltas) above `kcas::MAX_VALUE` get
+//! `ERR value out of range`. A batch frame is validated as a unit: if
+//! any member op is invalid the whole frame is rejected with a single
+//! `ERR` line and nothing is applied.
+//!
+//! [`FrameDecoder`] is the *incremental* face of the same grammar: it
+//! is fed raw bytes as `read()` hands them over — frames split across
+//! arbitrary read boundaries, partial lines, many frames per read —
+//! and yields complete [`Frame`]s. The blocking server wraps it over a
+//! blocking read loop; the reactor feeds it from nonblocking reads.
+
+use std::fmt::Write as _;
+
+use crate::kcas::MAX_VALUE;
+use crate::maps::{MapOp, MapReply, MAX_KEY};
+
+/// Largest accepted batch frame (bounds per-connection memory).
+pub const MAX_BATCH: usize = 4096;
+
+/// Longest accepted request line, in bytes (bounds decoder memory
+/// against a newline-less flood). Generous: the longest legal line is
+/// a `C` op with two 19-digit operands, ~70 bytes.
+pub const MAX_LINE: usize = 4096;
+
+pub const ERR_KEY_RANGE: &str = "ERR key out of range";
+pub const ERR_VALUE_RANGE: &str = "ERR value out of range";
+pub const ERR_BAD_REQUEST: &str = "ERR bad request";
+pub const ERR_BAD_BATCH: &str = "ERR bad batch size";
+pub const ERR_SERVER: &str = "ERR server error";
+
+fn parse_key(s: &str) -> Result<u64, &'static str> {
+    let k: u64 = s.parse().map_err(|_| ERR_BAD_REQUEST)?;
+    if !(1..=MAX_KEY).contains(&k) {
+        return Err(ERR_KEY_RANGE);
+    }
+    Ok(k)
+}
+
+fn parse_value(s: &str) -> Result<u64, &'static str> {
+    let v: u64 = s.parse().map_err(|_| ERR_BAD_REQUEST)?;
+    if v > MAX_VALUE {
+        return Err(ERR_VALUE_RANGE);
+    }
+    Ok(v)
+}
+
+/// `C` operand: a value or `-` for "absent".
+fn parse_opt_value(s: &str) -> Result<Option<u64>, &'static str> {
+    if s == "-" {
+        return Ok(None);
+    }
+    parse_value(s).map(Some)
+}
+
+/// Parse one op line (`G <k>` / `P <k> <v>` / `D <k>` / `U <k> <v>` /
+/// `A <k> <d>` / `C <k> <e> <n>`), enforcing the key and value ranges
+/// at the protocol boundary. Trailing garbage (extra tokens) rejects
+/// the line.
+pub fn parse_op(line: &str) -> Result<MapOp, &'static str> {
+    let mut it = line.split_whitespace();
+    let toks = [it.next(), it.next(), it.next(), it.next(), it.next()];
+    match toks {
+        [Some("G"), Some(k), None, None, None] => {
+            Ok(MapOp::Get(parse_key(k)?))
+        }
+        [Some("D"), Some(k), None, None, None] => {
+            Ok(MapOp::Remove(parse_key(k)?))
+        }
+        [Some("P"), Some(k), Some(v), None, None] => {
+            Ok(MapOp::Insert(parse_key(k)?, parse_value(v)?))
+        }
+        [Some("U"), Some(k), Some(v), None, None] => {
+            Ok(MapOp::GetOrInsert(parse_key(k)?, parse_value(v)?))
+        }
+        [Some("A"), Some(k), Some(d), None, None] => {
+            Ok(MapOp::FetchAdd(parse_key(k)?, parse_value(d)?))
+        }
+        [Some("C"), Some(k), Some(e), Some(n), None] => Ok(MapOp::CmpEx(
+            parse_key(k)?,
+            parse_opt_value(e)?,
+            parse_opt_value(n)?,
+        )),
+        _ => Err(ERR_BAD_REQUEST),
+    }
+}
+
+/// Append one reply token: the value or `-` for value-shaped replies,
+/// `OK` / `!<witness>` / `!-` for `CmpEx`.
+pub fn push_reply(reply: MapReply, out: &mut String) {
+    match reply {
+        MapReply::CmpEx(Ok(())) => out.push_str("OK"),
+        MapReply::CmpEx(Err(w)) => {
+            out.push('!');
+            match w {
+                Some(v) => write!(out, "{v}").expect("write to String"),
+                None => out.push('-'),
+            }
+        }
+        _ => match reply.value() {
+            Some(v) => write!(out, "{v}").expect("write to String"),
+            None => out.push('-'),
+        },
+    }
+}
+
+/// Append one op in wire format (plus newline) — the client-side
+/// inverse of [`parse_op`].
+pub fn push_op(op: MapOp, out: &mut String) {
+    let opt = |v: Option<u64>| match v {
+        Some(v) => v.to_string(),
+        None => "-".into(),
+    };
+    match op {
+        MapOp::Get(k) => writeln!(out, "G {k}"),
+        MapOp::Insert(k, v) => writeln!(out, "P {k} {v}"),
+        MapOp::Remove(k) => writeln!(out, "D {k}"),
+        MapOp::GetOrInsert(k, v) => writeln!(out, "U {k} {v}"),
+        MapOp::FetchAdd(k, d) => writeln!(out, "A {k} {d}"),
+        MapOp::CmpEx(k, e, n) => writeln!(out, "C {k} {} {}", opt(e), opt(n)),
+    }
+    .expect("write to String");
+}
+
+/// One parsed request frame.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Frame {
+    /// Ops to apply with a single `apply_batch` call.
+    Batch(Vec<MapOp>),
+    /// Protocol error to report; nothing is applied.
+    Err(&'static str),
+    /// Client said `Q`.
+    Quit,
+}
+
+/// One step of line extraction (see [`FrameDecoder::take_line`]).
+enum LineStep {
+    /// A complete line: `buf[start..end]` (newline excluded).
+    Line(usize, usize),
+    /// An over-long line to report as one `ERR bad request`.
+    Report,
+    /// Consumed bytes with nothing to report (over-long-line tail).
+    Skip,
+}
+
+/// A partially-received `B <n>` frame: member lines seen so far.
+struct PendingBatch {
+    remaining: usize,
+    ops: Vec<MapOp>,
+    /// First member parse error — the whole frame is rejected, but the
+    /// stream keeps consuming all `n` member lines to stay in sync.
+    err: Option<&'static str>,
+}
+
+/// Incremental frame decoder: [`FrameDecoder::feed`] it raw bytes in
+/// whatever chunks the transport delivers, then drain complete frames
+/// with [`FrameDecoder::next_frame`]. Both front-ends speak exactly
+/// this state machine, so reply streams are bit-identical no matter
+/// how the request bytes were fragmented.
+#[derive(Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    /// Consumed prefix of `buf` (compacted on feed).
+    pos: usize,
+    pending: Option<PendingBatch>,
+    /// Set while skipping an over-[`MAX_LINE`] line to its newline; the
+    /// line decodes as one `ERR bad request` once the newline arrives
+    /// (same observable as the unbounded blocking reader, but with
+    /// bounded memory).
+    discarding: bool,
+}
+
+impl FrameDecoder {
+    pub fn new() -> FrameDecoder {
+        FrameDecoder::default()
+    }
+
+    /// Hand the decoder the next chunk of received bytes.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        if self.pos > 0 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes fed but not yet consumed by a completed line.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// True when buffered bytes may still hold a complete frame —
+    /// i.e. at least one full line is waiting to be decoded.
+    pub fn has_complete_line(&self) -> bool {
+        self.buf[self.pos..].contains(&b'\n')
+    }
+
+    /// Next complete line as a `buf` range, the one-time overflow
+    /// report for an over-[`MAX_LINE`] line, or the silent skip of such
+    /// a line's already-reported tail.
+    fn take_line(&mut self) -> Option<LineStep> {
+        let rest = &self.buf[self.pos..];
+        match rest.iter().position(|&b| b == b'\n') {
+            Some(nl) => {
+                let (start, end) = (self.pos, self.pos + nl);
+                self.pos = end + 1;
+                if self.discarding {
+                    // Tail of an over-long line, reported at overflow
+                    // time: swallow it silently.
+                    self.discarding = false;
+                    return Some(LineStep::Skip);
+                }
+                Some(LineStep::Line(start, end))
+            }
+            None if rest.len() > MAX_LINE => {
+                // No newline in sight and the line is already over
+                // budget: drop what we have, discard to the newline,
+                // and report the line once.
+                self.pos = self.buf.len();
+                if self.discarding {
+                    return Some(LineStep::Skip); // already reported
+                }
+                self.discarding = true;
+                Some(LineStep::Report)
+            }
+            None => None,
+        }
+    }
+
+    /// EOF: decode the final unterminated line, if any. A blocking
+    /// `read_line` reader hands back the last line even without a
+    /// trailing newline, and clients really do end streams with
+    /// `printf 'G 5' |` — so both front-ends answer it. Implemented by
+    /// terminating whatever is buffered with a synthetic newline; a
+    /// truncated batch body (fewer member lines than promised) still
+    /// yields nothing, exactly like the blocking reader. Idempotent
+    /// once the buffer is drained.
+    pub fn finish(&mut self) -> Option<Frame> {
+        if self.buffered() == 0 && !self.discarding {
+            return None;
+        }
+        self.feed(b"\n");
+        self.next_frame()
+    }
+
+    /// Decode the next complete frame, if the buffered bytes contain
+    /// one. `None` means "feed me more bytes" — a partially received
+    /// line or batch body stays buffered.
+    pub fn next_frame(&mut self) -> Option<Frame> {
+        loop {
+            let line = match self.take_line()? {
+                LineStep::Line(start, end) => &self.buf[start..end],
+                LineStep::Skip => continue,
+                LineStep::Report => {
+                    // Over-long line: one bad-request report. Inside a
+                    // batch body it poisons the frame as a member.
+                    match self.pending.as_mut() {
+                        Some(p) => {
+                            p.err = p.err.or(Some(ERR_BAD_REQUEST));
+                            p.remaining -= 1;
+                            if p.remaining > 0 {
+                                continue;
+                            }
+                            let p = self.pending.take().expect("pending");
+                            return Some(Frame::Err(
+                                p.err.unwrap_or(ERR_BAD_REQUEST),
+                            ));
+                        }
+                        None => return Some(Frame::Err(ERR_BAD_REQUEST)),
+                    }
+                }
+            };
+            // The protocol is ASCII; a non-UTF-8 line can't parse, so
+            // treat it as any other malformed line.
+            let head = std::str::from_utf8(line).unwrap_or("\u{fffd}").trim();
+
+            if let Some(p) = self.pending.as_mut() {
+                // Member line of a `B <n>` body (any line counts, even
+                // empty or `Q` — the body length was promised).
+                match parse_op(head) {
+                    Ok(op) => p.ops.push(op),
+                    Err(e) => p.err = p.err.or(Some(e)),
+                }
+                p.remaining -= 1;
+                if p.remaining > 0 {
+                    continue;
+                }
+                let p = self.pending.take().expect("pending");
+                return Some(match p.err {
+                    None => Frame::Batch(p.ops),
+                    Some(e) => Frame::Err(e),
+                });
+            }
+
+            if head.is_empty() {
+                continue;
+            }
+            if head == "Q" {
+                return Some(Frame::Quit);
+            }
+            if let Some(rest) = head.strip_prefix("B ") {
+                match rest.trim().parse::<usize>() {
+                    Ok(n) if (1..=MAX_BATCH).contains(&n) => {
+                        self.pending = Some(PendingBatch {
+                            remaining: n,
+                            ops: Vec::with_capacity(n),
+                            err: None,
+                        });
+                        continue;
+                    }
+                    _ => return Some(Frame::Err(ERR_BAD_BATCH)),
+                }
+            }
+            return Some(match parse_op(head) {
+                Ok(op) => Frame::Batch(vec![op]),
+                Err(e) => Frame::Err(e),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(dec: &mut FrameDecoder) -> Vec<Frame> {
+        std::iter::from_fn(|| dec.next_frame()).collect()
+    }
+
+    fn decode_whole(input: &str) -> Vec<Frame> {
+        let mut dec = FrameDecoder::new();
+        dec.feed(input.as_bytes());
+        drain(&mut dec)
+    }
+
+    #[test]
+    fn parse_op_accepts_valid_lines() {
+        assert_eq!(parse_op("G 5"), Ok(MapOp::Get(5)));
+        assert_eq!(parse_op("P 5 10"), Ok(MapOp::Insert(5, 10)));
+        assert_eq!(parse_op("D 5"), Ok(MapOp::Remove(5)));
+        assert_eq!(parse_op("  G   5  "), Ok(MapOp::Get(5)));
+        assert_eq!(parse_op(&format!("G {MAX_KEY}")), Ok(MapOp::Get(MAX_KEY)));
+        assert_eq!(
+            parse_op(&format!("P 1 {MAX_VALUE}")),
+            Ok(MapOp::Insert(1, MAX_VALUE))
+        );
+    }
+
+    #[test]
+    fn parse_op_rejects_out_of_range_keys() {
+        // The original server's DoS: any k >= 1 was forwarded to the
+        // table, and k > MAX_KEY tripped check_key's assert.
+        assert_eq!(parse_op(&format!("G {}", MAX_KEY + 1)), Err(ERR_KEY_RANGE));
+        assert_eq!(parse_op("G 0"), Err(ERR_KEY_RANGE));
+        assert_eq!(parse_op(&format!("P {} 1", u64::MAX)), Err(ERR_KEY_RANGE));
+        assert_eq!(parse_op("D 0"), Err(ERR_KEY_RANGE));
+        assert_eq!(
+            parse_op(&format!("P 1 {}", MAX_VALUE + 1)),
+            Err(ERR_VALUE_RANGE)
+        );
+    }
+
+    #[test]
+    fn parse_op_rejects_malformed_lines() {
+        for bad in [
+            "", "G", "P 1", "G x", "P 1 y", "X 1", "G 1 2", "P 1 2 3", "Q 1",
+        ] {
+            assert_eq!(parse_op(bad), Err(ERR_BAD_REQUEST), "line {bad:?}");
+        }
+    }
+
+    #[test]
+    fn parse_op_accepts_conditional_verbs() {
+        assert_eq!(parse_op("U 5 10"), Ok(MapOp::GetOrInsert(5, 10)));
+        assert_eq!(parse_op("A 5 3"), Ok(MapOp::FetchAdd(5, 3)));
+        assert_eq!(parse_op("C 5 - 10"), Ok(MapOp::CmpEx(5, None, Some(10))));
+        assert_eq!(parse_op("C 5 10 -"), Ok(MapOp::CmpEx(5, Some(10), None)));
+        assert_eq!(
+            parse_op("C 5 10 11"),
+            Ok(MapOp::CmpEx(5, Some(10), Some(11)))
+        );
+        assert_eq!(parse_op("C 5 - -"), Ok(MapOp::CmpEx(5, None, None)));
+        // Range / shape enforcement.
+        assert_eq!(
+            parse_op(&format!("A 5 {}", MAX_VALUE + 1)),
+            Err(ERR_VALUE_RANGE)
+        );
+        assert_eq!(
+            parse_op(&format!("C 5 - {}", MAX_VALUE + 1)),
+            Err(ERR_VALUE_RANGE)
+        );
+        assert_eq!(parse_op("C 0 - 1"), Err(ERR_KEY_RANGE));
+        for bad in ["U 5", "A 5", "C 5 -", "C 5 - - -", "C 5 x 1", "U 5 1 2"] {
+            assert_eq!(parse_op(bad), Err(ERR_BAD_REQUEST), "line {bad:?}");
+        }
+    }
+
+    #[test]
+    fn cmpex_reply_tokens() {
+        let mut s = String::new();
+        push_reply(MapReply::CmpEx(Ok(())), &mut s);
+        s.push(' ');
+        push_reply(MapReply::CmpEx(Err(Some(7))), &mut s);
+        s.push(' ');
+        push_reply(MapReply::CmpEx(Err(None)), &mut s);
+        s.push(' ');
+        push_reply(MapReply::Existing(None), &mut s);
+        s.push(' ');
+        push_reply(MapReply::Added(Some(3)), &mut s);
+        assert_eq!(s, "OK !7 !- - 3");
+    }
+
+    #[test]
+    fn reply_tokens_round_trip() {
+        let mut s = String::new();
+        push_reply(MapReply::Value(Some(42)), &mut s);
+        s.push(' ');
+        push_reply(MapReply::Prev(None), &mut s);
+        s.push(' ');
+        push_reply(MapReply::Removed(Some(7)), &mut s);
+        assert_eq!(s, "42 - 7");
+    }
+
+    #[test]
+    fn decoder_yields_frames_in_order() {
+        let frames = decode_whole("G 1\nB 2\nP 2 20\nG 2\nD 2\nQ\n");
+        assert_eq!(
+            frames,
+            vec![
+                Frame::Batch(vec![MapOp::Get(1)]),
+                Frame::Batch(vec![MapOp::Insert(2, 20), MapOp::Get(2)]),
+                Frame::Batch(vec![MapOp::Remove(2)]),
+                Frame::Quit,
+            ]
+        );
+    }
+
+    #[test]
+    fn decoder_handles_arbitrary_split_boundaries() {
+        let input = "P 7 70\nB 3\nG 7\nC 7 70 71\nA 7 2\nnonsense\nB 0\nQ\n";
+        let whole = decode_whole(input);
+        // Byte-at-a-time delivery must produce the identical stream.
+        for chunk in 1..=7usize {
+            let mut dec = FrameDecoder::new();
+            let mut got = Vec::new();
+            for piece in input.as_bytes().chunks(chunk) {
+                dec.feed(piece);
+                got.extend(std::iter::from_fn(|| dec.next_frame()));
+            }
+            assert_eq!(got, whole, "chunk size {chunk}");
+        }
+        assert_eq!(whole.len(), 5);
+        assert_eq!(whole[2], Frame::Err(ERR_BAD_REQUEST));
+        assert_eq!(whole[3], Frame::Err(ERR_BAD_BATCH));
+        assert_eq!(whole[4], Frame::Quit);
+    }
+
+    #[test]
+    fn decoder_holds_incomplete_frames() {
+        let mut dec = FrameDecoder::new();
+        dec.feed(b"G ");
+        assert_eq!(dec.next_frame(), None);
+        dec.feed(b"5\nB 2\nG 1\n");
+        assert_eq!(dec.next_frame(), Some(Frame::Batch(vec![MapOp::Get(5)])));
+        // Batch body short one line: nothing until it arrives.
+        assert_eq!(dec.next_frame(), None);
+        dec.feed(b"G 2\n");
+        assert_eq!(
+            dec.next_frame(),
+            Some(Frame::Batch(vec![MapOp::Get(1), MapOp::Get(2)]))
+        );
+        assert_eq!(dec.next_frame(), None);
+        assert_eq!(dec.buffered(), 0);
+    }
+
+    #[test]
+    fn decoder_rejects_oversized_batch_counts() {
+        // Over-MAX_BATCH header: one ERR, no body consumed — following
+        // lines are ordinary frames.
+        let frames = decode_whole(&format!("B {}\nG 1\n", MAX_BATCH + 1));
+        assert_eq!(
+            frames,
+            vec![
+                Frame::Err(ERR_BAD_BATCH),
+                Frame::Batch(vec![MapOp::Get(1)]),
+            ]
+        );
+        assert_eq!(
+            decode_whole("B 18446744073709551616\n"), // u64::MAX + 1
+            vec![Frame::Err(ERR_BAD_BATCH)]
+        );
+        assert_eq!(decode_whole("B x\n"), vec![Frame::Err(ERR_BAD_BATCH)]);
+    }
+
+    #[test]
+    fn decoder_rejects_bad_batch_member_as_a_unit() {
+        // One bad member rejects the frame but consumes the whole body,
+        // keeping the stream in sync for the next frame.
+        let frames = decode_whole("B 3\nP 1 10\nG 0\nP 2 20\nG 1\n");
+        assert_eq!(
+            frames,
+            vec![
+                Frame::Err(ERR_KEY_RANGE),
+                Frame::Batch(vec![MapOp::Get(1)]),
+            ]
+        );
+    }
+
+    #[test]
+    fn decoder_rejects_trailing_garbage_after_frames() {
+        // Extra tokens after a complete op are a parse error...
+        assert_eq!(decode_whole("G 1 junk\n"), vec![Frame::Err(ERR_BAD_REQUEST)]);
+        // ...and garbage lines after a complete batch are their own
+        // (failed) frame, not silently absorbed into the previous one.
+        let frames = decode_whole("B 1\nG 1\ngarbage here\nG 2\n");
+        assert_eq!(
+            frames,
+            vec![
+                Frame::Batch(vec![MapOp::Get(1)]),
+                Frame::Err(ERR_BAD_REQUEST),
+                Frame::Batch(vec![MapOp::Get(2)]),
+            ]
+        );
+    }
+
+    #[test]
+    fn decoder_bounds_memory_on_newlineless_floods() {
+        let mut dec = FrameDecoder::new();
+        // A newline-less flood far past MAX_LINE: reported once as a
+        // bad request, buffered bytes stay bounded.
+        for _ in 0..64 {
+            dec.feed(&[b'x'; 1024]);
+        }
+        assert_eq!(dec.next_frame(), Some(Frame::Err(ERR_BAD_REQUEST)));
+        assert_eq!(dec.next_frame(), None);
+        assert!(dec.buffered() <= 2 * MAX_LINE, "buffered {}", dec.buffered());
+        // Once the newline finally lands, the stream resynchronizes.
+        dec.feed(b"y\nG 3\n");
+        assert_eq!(dec.next_frame(), Some(Frame::Batch(vec![MapOp::Get(3)])));
+        assert_eq!(dec.next_frame(), None);
+    }
+
+    #[test]
+    fn finish_answers_unterminated_final_line() {
+        // `printf 'G 5' |` clients: the last line arrives without a
+        // newline, then EOF — it still decodes.
+        let mut dec = FrameDecoder::new();
+        dec.feed(b"P 5 50\nG 5");
+        assert_eq!(
+            dec.next_frame(),
+            Some(Frame::Batch(vec![MapOp::Insert(5, 50)]))
+        );
+        assert_eq!(dec.next_frame(), None);
+        assert_eq!(dec.finish(), Some(Frame::Batch(vec![MapOp::Get(5)])));
+        // Idempotent once drained.
+        assert_eq!(dec.finish(), None);
+        assert_eq!(dec.buffered(), 0);
+
+        // An unterminated final member line completes its batch...
+        let mut dec = FrameDecoder::new();
+        dec.feed(b"B 2\nG 1\nG 2");
+        assert_eq!(dec.next_frame(), None);
+        assert_eq!(
+            dec.finish(),
+            Some(Frame::Batch(vec![MapOp::Get(1), MapOp::Get(2)]))
+        );
+        // ...but a truncated body (missing member lines) still yields
+        // nothing, like the blocking reader.
+        let mut dec = FrameDecoder::new();
+        dec.feed(b"B 3\nG 1\nG 2");
+        assert_eq!(dec.next_frame(), None);
+        assert_eq!(dec.finish(), None);
+
+        // Whitespace-only and quit tails.
+        let mut dec = FrameDecoder::new();
+        dec.feed(b"  ");
+        assert_eq!(dec.finish(), None);
+        let mut dec = FrameDecoder::new();
+        dec.feed(b"Q");
+        assert_eq!(dec.finish(), Some(Frame::Quit));
+    }
+
+    #[test]
+    fn decoder_skips_blank_lines_between_frames() {
+        let frames = decode_whole("\n  \nG 1\n\nQ\n");
+        assert_eq!(
+            frames,
+            vec![Frame::Batch(vec![MapOp::Get(1)]), Frame::Quit]
+        );
+    }
+}

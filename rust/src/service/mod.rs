@@ -13,14 +13,27 @@
 //!   against **one** thread-local `OpBuilder`/scratch borrow, amortising
 //!   the per-op descriptor setup. Also hosts the timed batched driver
 //!   behind the `fig14_batching` experiment.
-//! * [`server`] — a dependency-free (std threads + channels) TCP
-//!   request pipeline speaking a line-oriented protocol with multi-op
-//!   batch frames (`B <n>`), replacing the one-op-per-line loop the
-//!   `kv_service` example shipped with. Each connection decouples
-//!   parsing from table work so clients can stream frames without
-//!   waiting for replies.
+//! * [`frame`] — the wire-protocol codec (line grammar, `B <n>` batch
+//!   framing, reply formatting) plus the incremental [`frame::FrameDecoder`]
+//!   both front-ends decode through, so their reply streams cannot
+//!   drift.
+//! * [`server`] — the thread-per-connection front-end (std threads +
+//!   channels): a reader stage decodes frames while the connection
+//!   thread applies each with one `apply_batch` call. Two OS threads
+//!   per connection; simple, and fastest at small connection counts.
+//!   Returns a [`server::ServerHandle`] whose `shutdown` joins every
+//!   spawned thread.
+//! * [`reactor`] — the epoll event-loop front-end (raw syscall
+//!   bindings in [`crate::util::sys`]): N nonblocking connections per
+//!   worker thread, ops accumulated **across ready sockets** into one
+//!   `apply_batch_hashed` call per wake-up, EPOLLOUT-driven write
+//!   flushing with high/low-water backpressure, eventfd-signalled
+//!   graceful shutdown. This is the front-end that scales connection
+//!   count past the thread scheduler; `fig17_frontend` measures the
+//!   two against each other and asserts their reply streams are
+//!   identical.
 //!
-//! Both halves speak the full **conditional-first** op vocabulary
+//! All of it speaks the full **conditional-first** op vocabulary
 //! ([`crate::maps::MapOp`]: `CmpEx`/`GetOrInsert`/`FetchAdd` next to
 //! the unconditional trio; wire verbs `C`/`U`/`A`), so check-then-act
 //! traffic — counters, leases, optimistic updates — runs as native
@@ -31,8 +44,12 @@
 //!
 //! Maps are named by [`crate::maps::MapKind`] specs
 //! (`sharded-kcas-rh-map:16` etc.); the CLI entry points are
-//! `crh fig14_batching` (batching sweep) and `crh fig16_rmw`
-//! (conditional-RMW counter workload under contention skew).
+//! `crh fig14_batching` (batching sweep), `crh fig16_rmw`
+//! (conditional-RMW counter workload), `crh fig17_frontend`
+//! (front-end comparison), and `crh serve` (run either server until
+//! killed).
 
 pub mod batch;
+pub mod frame;
+pub mod reactor;
 pub mod server;

@@ -1,0 +1,694 @@
+//! Epoll event-loop front-end — the readiness-driven sibling of the
+//! thread-per-connection pipeline in [`super::server`], speaking the
+//! identical wire protocol through the same [`super::frame`] codec.
+//!
+//! ## Why
+//!
+//! The threaded front-end spawns two OS threads per connection, so its
+//! concurrency ceiling is the scheduler's, not the table's: at a few
+//! thousand sockets the machine is context-switching, not hashing.
+//! This reactor drives N nonblocking connections per worker thread off
+//! `epoll_wait` (raw syscall bindings in [`crate::util::sys`]), which
+//! turns socket multiplexing itself into a **batching amplifier**: all
+//! ops parsed from every connection that became ready in one wake-up
+//! are applied with a *single*
+//! [`crate::maps::ConcurrentMap::apply_batch_hashed`] call — one thread-local K-CAS scratch borrow for the whole wave,
+//! exactly the amortisation `fig14_batching` measures, but composed
+//! from many clients' single-op frames instead of one client's batch
+//! frame. The busier the server, the bigger the waves.
+//!
+//! ## Shape
+//!
+//! * One accept thread (epoll on the nonblocking listener + an
+//!   eventfd wake token) hands fresh sockets round-robin to workers.
+//! * Each worker owns an epoll instance, an eventfd inbox wake, and
+//!   its connections — no cross-worker sharing, no locks on the hot
+//!   path. A wake-up runs three phases: **read** every ready socket
+//!   through its [`super::frame::FrameDecoder`], **apply** the
+//!   accumulated ops in one hashed batch, **write** replies with
+//!   EPOLLOUT-driven flushing.
+//! * Backpressure: a connection whose unsent replies exceed
+//!   [`HIGH_WATER`] stops being read (its EPOLLIN interest is
+//!   dropped) until the backlog drains below [`LOW_WATER`] — a slow
+//!   reader throttles itself, not the worker.
+//! * Shutdown: [`ReactorHandle::shutdown`] flips the stop flag and
+//!   signals every eventfd; accept loop and workers unwind and are
+//!   joined, closing every socket.
+//!
+//! Protocol semantics (`ERR` lines, batch-as-a-unit validation, `Q`,
+//! panic containment as `ERR server error` + close) match the
+//! threaded backend; `fig17_frontend` asserts the two backends'
+//! reply transcripts are identical on a fixed trace, and the
+//! `map_service` round-trip tier runs against both.
+
+#[cfg(target_os = "linux")]
+pub use imp::{serve_epoll, spawn_server_epoll, ReactorHandle};
+
+#[cfg(not(target_os = "linux"))]
+pub use fallback::{serve_epoll, spawn_server_epoll, ReactorHandle};
+
+/// Unsent-reply bytes above which a connection stops being read.
+pub const HIGH_WATER: usize = 256 * 1024;
+/// Backlog below which a paused connection resumes reading.
+pub const LOW_WATER: usize = 64 * 1024;
+
+/// Default worker count (`workers == 0`): one event loop per core,
+/// capped — past a handful of loops the table, not the front-end, is
+/// the bottleneck.
+pub fn default_workers() -> usize {
+    crate::util::affinity::available_cpus().clamp(1, 8)
+}
+
+#[cfg(target_os = "linux")]
+mod imp {
+    use std::collections::HashMap;
+    use std::io::{self, Read, Write};
+    use std::net::{SocketAddr, TcpListener, TcpStream};
+    use std::os::fd::AsRawFd;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Arc, Mutex};
+    use std::thread::JoinHandle;
+
+    use super::{default_workers, HIGH_WATER, LOW_WATER};
+    use crate::maps::{ConcurrentMap, HashedMapOp, MapReply};
+    use crate::service::frame::{push_reply, Frame, FrameDecoder, ERR_SERVER};
+    use crate::util::hash::splitmix64;
+    use crate::util::sys::{
+        EpollEvent, EpollFd, EventFd, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT,
+        EPOLLRDHUP,
+    };
+
+    /// Socket-read chunk size; also bounds per-connection bytes pulled
+    /// per wake-up (×[`READS_PER_WAKE`]) so one firehose connection
+    /// cannot starve its siblings.
+    const READ_CHUNK: usize = 16 * 1024;
+    const READS_PER_WAKE: usize = 4;
+    const MAX_EVENTS: usize = 128;
+    /// Epoll token of the worker's inbox eventfd (connections count up
+    /// from 1).
+    const TOKEN_WAKE: u64 = 0;
+
+    /// One queued reply action, in frame order (replies must come back
+    /// in the order the frames arrived, and `ERR` lines interleave
+    /// with batch replies).
+    #[derive(Clone, Copy)]
+    enum Pending {
+        /// Reply line for `batch_ops[start..start + len]` of this wake.
+        Ops { start: usize, len: usize },
+        /// Literal protocol-error line.
+        Line(&'static str),
+    }
+
+    struct Conn {
+        stream: TcpStream,
+        dec: FrameDecoder,
+        /// Reply actions accumulated this wake (drained in phase 3).
+        pending: Vec<Pending>,
+        /// Unsent reply bytes; `sent` is the flushed prefix.
+        out: Vec<u8>,
+        sent: usize,
+        /// Interest set currently registered with epoll.
+        interest: u32,
+        /// Per-wake flags.
+        in_wake: bool,
+        readable: bool,
+        /// Reading suspended: reply backlog above the high-water mark.
+        paused: bool,
+        /// No more input will be consumed (Q, EOF-drained, or fatal);
+        /// close once the backlog flushes.
+        closing: bool,
+        /// Socket error: close immediately, no ceremony.
+        dead: bool,
+        /// Peer finished sending (read returned 0).
+        eof: bool,
+    }
+
+    impl Conn {
+        fn new(stream: TcpStream) -> Conn {
+            Conn {
+                stream,
+                dec: FrameDecoder::new(),
+                pending: Vec::new(),
+                out: Vec::new(),
+                sent: 0,
+                interest: EPOLLIN | EPOLLRDHUP,
+                in_wake: false,
+                readable: false,
+                paused: false,
+                closing: false,
+                dead: false,
+                eof: false,
+            }
+        }
+
+        fn backlog(&self) -> usize {
+            self.out.len() - self.sent
+        }
+    }
+
+    /// Hand-off queue from the accept thread to one worker.
+    struct Inbox {
+        conns: Mutex<Vec<TcpStream>>,
+        wake: EventFd,
+    }
+
+    /// Handle to a running epoll server. Dropping it detaches the
+    /// server; [`ReactorHandle::shutdown`] stops and joins every
+    /// thread (accept + workers), closing all sockets.
+    pub struct ReactorHandle {
+        addr: SocketAddr,
+        stop: Arc<AtomicBool>,
+        accept_wake: Arc<EventFd>,
+        inboxes: Vec<Arc<Inbox>>,
+        threads: Vec<JoinHandle<()>>,
+    }
+
+    impl ReactorHandle {
+        /// The address the server is listening on.
+        pub fn addr(&self) -> SocketAddr {
+            self.addr
+        }
+
+        /// Stop the accept loop and every worker, join them all, and
+        /// close every connection.
+        pub fn shutdown(mut self) {
+            self.stop.store(true, Ordering::SeqCst);
+            self.accept_wake.signal();
+            for inbox in &self.inboxes {
+                inbox.wake.signal();
+            }
+            for t in self.threads.drain(..) {
+                let _ = t.join();
+            }
+        }
+    }
+
+    /// Serve `map` on `listener` with `workers` event-loop threads
+    /// (0 = [`default_workers`]).
+    pub fn serve_epoll(
+        listener: TcpListener,
+        map: Arc<dyn ConcurrentMap>,
+        workers: usize,
+    ) -> io::Result<ReactorHandle> {
+        let workers = if workers == 0 { default_workers() } else { workers };
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut inboxes = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            inboxes.push(Arc::new(Inbox {
+                conns: Mutex::new(Vec::new()),
+                wake: EventFd::new()?,
+            }));
+        }
+        let accept_wake = Arc::new(EventFd::new()?);
+        let mut threads = Vec::with_capacity(workers + 1);
+        for inbox in &inboxes {
+            let (inbox, stop, map) = (inbox.clone(), stop.clone(), map.clone());
+            threads.push(std::thread::spawn(move || {
+                worker_loop(inbox, stop, map)
+            }));
+        }
+        {
+            let (inboxes, wake, stop) =
+                (inboxes.clone(), accept_wake.clone(), stop.clone());
+            threads.push(std::thread::spawn(move || {
+                accept_loop(listener, inboxes, wake, stop)
+            }));
+        }
+        Ok(ReactorHandle { addr, stop, accept_wake, inboxes, threads })
+    }
+
+    /// Bind an ephemeral localhost port and serve `map` on the epoll
+    /// backend (examples, tests, benches).
+    pub fn spawn_server_epoll(
+        map: Arc<dyn ConcurrentMap>,
+        workers: usize,
+    ) -> io::Result<ReactorHandle> {
+        serve_epoll(TcpListener::bind("127.0.0.1:0")?, map, workers)
+    }
+
+    /// Accept thread: epoll on {listener, wake eventfd}; sockets are
+    /// dealt round-robin into worker inboxes.
+    fn accept_loop(
+        listener: TcpListener,
+        inboxes: Vec<Arc<Inbox>>,
+        wake: Arc<EventFd>,
+        stop: Arc<AtomicBool>,
+    ) {
+        let Ok(ep) = EpollFd::new() else { return };
+        if listener.set_nonblocking(true).is_err()
+            || ep.add(listener.as_raw_fd(), EPOLLIN, 1).is_err()
+            || ep.add(wake.fd(), EPOLLIN, 0).is_err()
+        {
+            return;
+        }
+        let mut events = [EpollEvent::zeroed(); 8];
+        let mut rr = 0usize;
+        loop {
+            if ep.wait(&mut events, -1).is_err() {
+                return;
+            }
+            wake.drain();
+            if stop.load(Ordering::SeqCst) {
+                return; // dropping the listener closes the port
+            }
+            loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let inbox = &inboxes[rr % inboxes.len()];
+                        rr += 1;
+                        inbox.conns.lock().unwrap().push(stream);
+                        inbox.wake.signal();
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => {
+                        continue
+                    }
+                    Err(_) => break,
+                }
+            }
+        }
+    }
+
+    /// Pull freshly accepted sockets out of the inbox and register
+    /// them.
+    fn adopt_new_conns(
+        inbox: &Inbox,
+        ep: &EpollFd,
+        conns: &mut HashMap<u64, Conn>,
+        next_token: &mut u64,
+    ) {
+        for stream in inbox.conns.lock().unwrap().drain(..) {
+            if stream.set_nonblocking(true).is_err() {
+                continue;
+            }
+            stream.set_nodelay(true).ok();
+            let token = *next_token;
+            *next_token += 1;
+            let conn = Conn::new(stream);
+            if ep
+                .add(conn.stream.as_raw_fd(), conn.interest, token)
+                .is_ok()
+            {
+                conns.insert(token, conn);
+            }
+        }
+    }
+
+    /// Phase 1a: pull bytes off a ready socket into its decoder.
+    fn read_some(conn: &mut Conn, chunk: &mut [u8]) {
+        for _ in 0..READS_PER_WAKE {
+            match (&conn.stream).read(chunk) {
+                Ok(0) => {
+                    conn.eof = true;
+                    return;
+                }
+                Ok(n) => {
+                    conn.dec.feed(&chunk[..n]);
+                    if n < chunk.len() {
+                        return; // likely drained; level-trigger re-arms
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    conn.dead = true;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Phase 1b: decode complete frames, accumulating batch ops (with
+    /// their routing hash) into the wake-wide batch and recording the
+    /// per-connection reply actions in frame order.
+    fn parse_frames(conn: &mut Conn, batch_ops: &mut Vec<HashedMapOp>) {
+        while !conn.closing && conn.backlog() <= HIGH_WATER {
+            let frame = match conn.dec.next_frame() {
+                Some(f) => f,
+                // At EOF a final line without a trailing newline still
+                // deserves its reply (matches the threaded backend).
+                None if conn.eof => match conn.dec.finish() {
+                    Some(f) => f,
+                    None => break,
+                },
+                None => break,
+            };
+            match frame {
+                Frame::Batch(ops) => {
+                    let start = batch_ops.len();
+                    batch_ops.extend(
+                        ops.iter().map(|&op| (splitmix64(op.key()), op)),
+                    );
+                    conn.pending.push(Pending::Ops { start, len: ops.len() });
+                }
+                Frame::Err(e) => conn.pending.push(Pending::Line(e)),
+                Frame::Quit => {
+                    // Like the threaded backend: no reply to Q, stop
+                    // consuming input, close once replies flush.
+                    conn.closing = true;
+                }
+            }
+        }
+    }
+
+    /// Phase 3a: render this connection's reply lines into its output
+    /// buffer. If the wake batch panicked (e.g. the table's "map is
+    /// full" capacity assert), the batch may have applied partially
+    /// and cannot be retried — re-applying would double-apply
+    /// non-idempotent ops like fetch-add — so every connection with
+    /// ops in the doomed batch gets the threaded backend's fatal
+    /// treatment: one `ERR server error` line, then close. `ERR`
+    /// lines queued before the failing frame still go out in order.
+    fn format_replies(
+        conn: &mut Conn,
+        replies: &[MapReply],
+        panicked: bool,
+        line: &mut String,
+    ) {
+        // Index loop (not drain/take) so the pending buffer keeps its
+        // capacity — this runs per connection per wake on the hot path.
+        for i in 0..conn.pending.len() {
+            line.clear();
+            match conn.pending[i] {
+                Pending::Line(e) => line.push_str(e),
+                Pending::Ops { start, len } => {
+                    if panicked {
+                        // Fatal: error line, discard the rest of this
+                        // connection's pendings, close after flush.
+                        conn.out.extend_from_slice(ERR_SERVER.as_bytes());
+                        conn.out.push(b'\n');
+                        conn.closing = true;
+                        break;
+                    }
+                    for (j, &r) in
+                        replies[start..start + len].iter().enumerate()
+                    {
+                        if j > 0 {
+                            line.push(' ');
+                        }
+                        push_reply(r, line);
+                    }
+                }
+            }
+            line.push('\n');
+            conn.out.extend_from_slice(line.as_bytes());
+        }
+        conn.pending.clear();
+    }
+
+    /// Phase 3b: push buffered replies to the socket.
+    fn try_flush(conn: &mut Conn) {
+        while conn.sent < conn.out.len() {
+            match (&conn.stream).write(&conn.out[conn.sent..]) {
+                Ok(0) => {
+                    conn.dead = true;
+                    break;
+                }
+                Ok(n) => conn.sent += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    conn.dead = true;
+                    break;
+                }
+            }
+        }
+        if conn.sent == conn.out.len() {
+            conn.out.clear();
+            conn.sent = 0;
+        } else if conn.sent > LOW_WATER {
+            // Compact so the buffer tracks the backlog, not history.
+            conn.out.drain(..conn.sent);
+            conn.sent = 0;
+        }
+    }
+
+    fn worker_loop(
+        inbox: Arc<Inbox>,
+        stop: Arc<AtomicBool>,
+        map: Arc<dyn ConcurrentMap>,
+    ) {
+        let Ok(ep) = EpollFd::new() else { return };
+        if ep.add(inbox.wake.fd(), EPOLLIN, TOKEN_WAKE).is_err() {
+            return;
+        }
+        let mut conns: HashMap<u64, Conn> = HashMap::new();
+        let mut next_token: u64 = 1;
+        let mut events = vec![EpollEvent::zeroed(); MAX_EVENTS];
+        let mut chunk = vec![0u8; READ_CHUNK];
+        let mut batch_ops: Vec<HashedMapOp> = Vec::new();
+        let mut replies: Vec<MapReply> = Vec::new();
+        let mut line = String::new();
+        let mut touched: Vec<u64> = Vec::new();
+        let mut replay: Vec<u64> = Vec::new();
+        let mut to_close: Vec<u64> = Vec::new();
+
+        'outer: loop {
+            // A nonzero replay set means unpaused connections still
+            // hold decoded-but-unanswered frames: poll, don't sleep.
+            let timeout = if replay.is_empty() { -1 } else { 0 };
+            let n = match ep.wait(&mut events, timeout) {
+                Ok(n) => n,
+                Err(_) => return,
+            };
+            touched.clear();
+            batch_ops.clear();
+
+            // Re-admit replayed connections first (frame order within
+            // a connection is preserved: its decoder is the queue).
+            for token in replay.drain(..) {
+                if let Some(conn) = conns.get_mut(&token) {
+                    conn.in_wake = true;
+                    conn.readable = true;
+                    touched.push(token);
+                }
+            }
+            for i in 0..n {
+                let (ev, token) = (events[i].events, events[i].data);
+                if token == TOKEN_WAKE {
+                    inbox.wake.drain();
+                    if stop.load(Ordering::SeqCst) {
+                        break 'outer;
+                    }
+                    adopt_new_conns(&inbox, &ep, &mut conns, &mut next_token);
+                    continue;
+                }
+                let Some(conn) = conns.get_mut(&token) else { continue };
+                if !conn.in_wake {
+                    conn.in_wake = true;
+                    touched.push(token);
+                }
+                if ev & EPOLLERR != 0 {
+                    conn.dead = true;
+                }
+                if ev & (EPOLLIN | EPOLLRDHUP | EPOLLHUP) != 0 {
+                    conn.readable = true;
+                }
+                // EPOLLOUT needs no flag: every touched connection
+                // gets a flush attempt in phase 3.
+            }
+
+            // Phase 1: read ready sockets, decode frames, accumulate
+            // the wake-wide hashed op batch.
+            for &token in &touched {
+                let conn = conns.get_mut(&token).expect("touched conn");
+                if conn.readable && !conn.paused && !conn.closing && !conn.dead
+                {
+                    if !conn.eof {
+                        read_some(conn, &mut chunk);
+                    }
+                    parse_frames(conn, &mut batch_ops);
+                }
+            }
+
+            // Phase 2: one table call for every op this wake delivered,
+            // across all connections — the multiplexer *is* the batch.
+            let mut panicked = false;
+            if !batch_ops.is_empty() {
+                panicked = catch_unwind(AssertUnwindSafe(|| {
+                    map.apply_batch_hashed(&batch_ops, &mut replies)
+                }))
+                .is_err();
+            }
+
+            // Phase 3: format replies, flush, manage interest sets.
+            for &token in &touched {
+                let conn = conns.get_mut(&token).expect("touched conn");
+                conn.in_wake = false;
+                conn.readable = false;
+                if conn.dead {
+                    to_close.push(token);
+                    continue;
+                }
+                format_replies(conn, &replies, panicked, &mut line);
+                try_flush(conn);
+                if conn.dead {
+                    to_close.push(token);
+                    continue;
+                }
+                // Backpressure transitions.
+                if !conn.paused && conn.backlog() > HIGH_WATER {
+                    conn.paused = true;
+                } else if conn.paused && conn.backlog() <= LOW_WATER {
+                    conn.paused = false;
+                    if conn.dec.has_complete_line()
+                        || (conn.eof && conn.dec.buffered() > 0)
+                    {
+                        replay.push(token); // withheld frames to serve
+                    }
+                }
+                // EOF: once the decoder is fully drained (parse_frames
+                // ran finish() for any unterminated final line), the
+                // connection is done — close after the flush.
+                if conn.eof && !conn.paused && conn.dec.buffered() == 0 {
+                    conn.closing = true;
+                }
+                if conn.closing && conn.backlog() == 0 {
+                    to_close.push(token);
+                    continue;
+                }
+                let mut want = 0u32;
+                if !conn.closing && !conn.paused && !conn.eof {
+                    want |= EPOLLIN | EPOLLRDHUP;
+                }
+                if conn.backlog() > 0 {
+                    want |= EPOLLOUT;
+                }
+                if want != conn.interest {
+                    if ep
+                        .modify(conn.stream.as_raw_fd(), want, token)
+                        .is_err()
+                    {
+                        to_close.push(token);
+                        continue;
+                    }
+                    conn.interest = want;
+                }
+            }
+            for token in to_close.drain(..) {
+                // Dropping the stream closes the fd, which also
+                // removes it from the epoll set.
+                conns.remove(&token);
+            }
+        }
+        // Shutdown: drop all connections (sockets close with them).
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod fallback {
+    //! Epoll is Linux-only; elsewhere the "reactor" API serves through
+    //! the thread-per-connection backend so callers (benches, tests,
+    //! the CLI) stay portable. The protocol is identical either way.
+
+    use std::io;
+    use std::net::{SocketAddr, TcpListener};
+    use std::sync::Arc;
+
+    use crate::maps::ConcurrentMap;
+    use crate::service::server::{self, ServerHandle};
+
+    pub struct ReactorHandle(ServerHandle);
+
+    impl ReactorHandle {
+        pub fn addr(&self) -> SocketAddr {
+            self.0.addr()
+        }
+
+        pub fn shutdown(self) {
+            self.0.shutdown()
+        }
+    }
+
+    pub fn serve_epoll(
+        listener: TcpListener,
+        map: Arc<dyn ConcurrentMap>,
+        _workers: usize,
+    ) -> io::Result<ReactorHandle> {
+        server::spawn_server_on(listener, map).map(ReactorHandle)
+    }
+
+    pub fn spawn_server_epoll(
+        map: Arc<dyn ConcurrentMap>,
+        _workers: usize,
+    ) -> io::Result<ReactorHandle> {
+        serve_epoll(TcpListener::bind("127.0.0.1:0")?, map, _workers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maps::{ConcurrentMap, MapKind, MapOp};
+    use crate::service::server::Client;
+    use std::sync::Arc;
+
+    fn map() -> Arc<dyn ConcurrentMap> {
+        Arc::from(MapKind::ShardedKCasRhMap { shards: 4 }.build(12))
+    }
+
+    #[test]
+    fn round_trip_and_shutdown_joins() {
+        let h = spawn_server_epoll(map(), 2).unwrap();
+        let mut c = Client::connect(h.addr()).unwrap();
+        assert_eq!(c.request_line("P 5 50").unwrap(), "-");
+        assert_eq!(c.request_line("G 5").unwrap(), "50");
+        assert_eq!(c.request_line("A 5 1").unwrap(), "50");
+        assert_eq!(c.request_line("C 5 51 -").unwrap(), "OK");
+        assert_eq!(c.request_line("G 0").unwrap(), "ERR key out of range");
+        let replies = c
+            .batch(&[MapOp::Insert(7, 70), MapOp::Get(7), MapOp::Remove(7)])
+            .unwrap();
+        assert_eq!(replies, vec![None, Some(70), Some(70)]);
+        // The property under test: shutdown *returns* — accept loop
+        // and workers joined, no stranded threads.
+        h.shutdown();
+    }
+
+    #[test]
+    fn quit_closes_after_replies_flush() {
+        let h = spawn_server_epoll(map(), 1).unwrap();
+        let mut c = Client::connect(h.addr()).unwrap();
+        // One write carrying work *and* the quit: both replies must
+        // still arrive before the close.
+        c.send_raw(b"P 9 90\nG 9\nQ\n").unwrap();
+        assert_eq!(c.read_reply_line().unwrap(), "-");
+        assert_eq!(c.read_reply_line().unwrap(), "90");
+        assert!(c.read_reply_line().is_err(), "connection should be closed");
+        h.shutdown();
+    }
+
+    #[test]
+    fn many_connections_share_workers() {
+        let m = map();
+        let h = spawn_server_epoll(m.clone(), 2).unwrap();
+        let addr = h.addr();
+        let mut handles = Vec::new();
+        for tid in 0..16u64 {
+            handles.push(std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                let base = 1 + tid * 1000;
+                for k in base..base + 50 {
+                    assert_eq!(
+                        c.request_line(&format!("P {k} {k}")).unwrap(),
+                        "-"
+                    );
+                }
+                let ops: Vec<MapOp> =
+                    (base..base + 50).map(MapOp::Get).collect();
+                let got = c.batch(&ops).unwrap();
+                assert!(got
+                    .iter()
+                    .zip(base..base + 50)
+                    .all(|(v, k)| *v == Some(k)));
+            }));
+        }
+        for th in handles {
+            th.join().unwrap();
+        }
+        assert_eq!(m.len_quiesced(), 16 * 50);
+        h.shutdown();
+    }
+}

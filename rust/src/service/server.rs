@@ -1,207 +1,85 @@
-//! Pipelined TCP front-end for a [`ConcurrentMap`] — dependency-free
-//! (std threads + mpsc channels), replacing the one-op-per-line loop
-//! the `kv_service` example originally shipped with.
-//!
-//! ## Protocol (line-oriented text)
-//!
-//! ```text
-//! G <k>        get            → reply line: "<v>" or "-"
-//! P <k> <v>    put (insert)   → previous "<v>" or "-"
-//! D <k>        delete         → removed "<v>" or "-"
-//! U <k> <v>    get-or-insert  → pre-existing "<v>", or "-" (inserted)
-//! A <k> <d>    fetch-add      → previous "<v>", or "-" (was absent,
-//!              now holds d; missing keys count as 0)
-//! C <k> <e> <n>  compare-exchange; <e>/<n> are a value or "-"
-//!              (absent) — the four corners of
-//!              ConcurrentMap::compare_exchange → "OK" on commit,
-//!              "!<v>" / "!-" with the witnessed value on failure
-//! B <n>        batch frame: the next n lines are ops (any of the
-//!              above); one reply line with n space-separated tokens
-//! Q            quit (close the connection)
-//! ```
-//!
-//! The conditional verbs (`C`/`U`/`A`) are the service-layer face of
-//! the map's native K-CAS read-modify-write primitives: a client
-//! counter is one `A` line, a lease acquire is `C <k> - <owner>`, a
-//! lease release is `C <k> <owner> -` — no read-check-write round
-//! trips, no server-side locking.
-//!
-//! Malformed or out-of-range requests get an `ERR <msg>` line and the
-//! connection **stays up** — in particular keys outside
-//! `[1, MAX_KEY]` are rejected at the protocol boundary with
-//! `ERR key out of range` instead of tripping the table's `check_key`
-//! assert and killing the connection thread (the old server's DoS bug),
-//! and values (including `C` operands and `A` deltas) above
-//! `kcas::MAX_VALUE` get `ERR value out of range`.
-//! A batch frame is validated as a unit: if any member op is invalid
-//! the whole frame is rejected with a single `ERR` line and nothing is
-//! applied.
+//! Pipelined thread-per-connection TCP front-end for a
+//! [`ConcurrentMap`] — dependency-free (std threads + mpsc channels).
+//! The wire protocol lives in [`super::frame`] (one grammar shared
+//! with the epoll front-end, [`super::reactor`], so the two backends
+//! answer bit-identically); this module supplies the blocking
+//! transport around it plus the [`Client`] used by examples, tests,
+//! and the benchmark load generators.
 //!
 //! ## Pipeline shape
 //!
 //! Each connection runs two stages connected by a bounded channel:
-//! a *reader* thread parses lines into frames while the connection
-//! thread applies each frame with one [`ConcurrentMap::apply_batch`]
-//! call and writes the reply. Clients may therefore stream many frames
-//! without waiting for replies (replies always come back in frame
-//! order), overlapping network I/O with table work — batch frames
-//! amortise syscalls and round trips on top of the descriptor-setup
-//! amortisation `apply_batch` already provides.
+//! a *reader* thread feeds received bytes through a [`FrameDecoder`]
+//! while the connection thread applies each frame with one
+//! [`ConcurrentMap::apply_batch`] call and writes the reply. Clients
+//! may therefore stream many frames without waiting for replies
+//! (replies always come back in frame order), overlapping network I/O
+//! with table work — batch frames amortise syscalls and round trips on
+//! top of the descriptor-setup amortisation `apply_batch` already
+//! provides.
+//!
+//! ## Lifecycle
+//!
+//! [`spawn_server`] returns a [`ServerHandle`]; dropping it detaches
+//! the server (it keeps serving until process exit, the old
+//! behaviour), while [`ServerHandle::shutdown`] closes the listener
+//! and every live connection and **joins** the accept loop and all
+//! connection threads — so `cargo test` no longer strands a pair of
+//! blocked threads per connection ever served.
+//!
+//! This front-end spawns two OS threads per connection; it saturates a
+//! table at small connection counts but dies at C10K. The epoll
+//! reactor ([`super::reactor`]) serves the same protocol with a fixed
+//! worker pool; `fig17_frontend` measures the crossover.
 
-use std::io::{self, BufRead, BufReader, BufWriter, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
 
-use crate::kcas::MAX_VALUE;
-use crate::maps::{ConcurrentMap, MapOp, MapReply, MAX_KEY};
+use crate::maps::{ConcurrentMap, MapOp, MapReply};
+use crate::service::frame::{
+    push_op, push_reply, Frame, FrameDecoder, ERR_SERVER, MAX_BATCH,
+};
 
-/// Largest accepted batch frame (bounds per-connection memory).
-pub const MAX_BATCH: usize = 4096;
+// Re-export the codec surface under its historical home so protocol
+// users keep one import path per front-end.
+pub use crate::service::frame::{
+    parse_op, ERR_BAD_BATCH, ERR_BAD_REQUEST, ERR_KEY_RANGE, ERR_VALUE_RANGE,
+};
+
 /// Frames buffered between the reader and the apply/write stage.
 const PIPELINE_DEPTH: usize = 64;
 
-pub const ERR_KEY_RANGE: &str = "ERR key out of range";
-pub const ERR_VALUE_RANGE: &str = "ERR value out of range";
-pub const ERR_BAD_REQUEST: &str = "ERR bad request";
-pub const ERR_BAD_BATCH: &str = "ERR bad batch size";
-pub const ERR_SERVER: &str = "ERR server error";
-
-fn parse_key(s: &str) -> Result<u64, &'static str> {
-    let k: u64 = s.parse().map_err(|_| ERR_BAD_REQUEST)?;
-    if !(1..=MAX_KEY).contains(&k) {
-        return Err(ERR_KEY_RANGE);
-    }
-    Ok(k)
-}
-
-fn parse_value(s: &str) -> Result<u64, &'static str> {
-    let v: u64 = s.parse().map_err(|_| ERR_BAD_REQUEST)?;
-    if v > MAX_VALUE {
-        return Err(ERR_VALUE_RANGE);
-    }
-    Ok(v)
-}
-
-/// `C` operand: a value or `-` for "absent".
-fn parse_opt_value(s: &str) -> Result<Option<u64>, &'static str> {
-    if s == "-" {
-        return Ok(None);
-    }
-    parse_value(s).map(Some)
-}
-
-/// Parse one op line (`G <k>` / `P <k> <v>` / `D <k>` / `U <k> <v>` /
-/// `A <k> <d>` / `C <k> <e> <n>`), enforcing the key and value ranges
-/// at the protocol boundary.
-pub fn parse_op(line: &str) -> Result<MapOp, &'static str> {
-    let mut it = line.split_whitespace();
-    let toks = [it.next(), it.next(), it.next(), it.next(), it.next()];
-    match toks {
-        [Some("G"), Some(k), None, None, None] => {
-            Ok(MapOp::Get(parse_key(k)?))
-        }
-        [Some("D"), Some(k), None, None, None] => {
-            Ok(MapOp::Remove(parse_key(k)?))
-        }
-        [Some("P"), Some(k), Some(v), None, None] => {
-            Ok(MapOp::Insert(parse_key(k)?, parse_value(v)?))
-        }
-        [Some("U"), Some(k), Some(v), None, None] => {
-            Ok(MapOp::GetOrInsert(parse_key(k)?, parse_value(v)?))
-        }
-        [Some("A"), Some(k), Some(d), None, None] => {
-            Ok(MapOp::FetchAdd(parse_key(k)?, parse_value(d)?))
-        }
-        [Some("C"), Some(k), Some(e), Some(n), None] => Ok(MapOp::CmpEx(
-            parse_key(k)?,
-            parse_opt_value(e)?,
-            parse_opt_value(n)?,
-        )),
-        _ => Err(ERR_BAD_REQUEST),
-    }
-}
-
-/// Append one reply token: the value or `-` for value-shaped replies,
-/// `OK` / `!<witness>` / `!-` for `CmpEx`.
-pub fn push_reply(reply: MapReply, out: &mut String) {
-    use std::fmt::Write as _;
-    match reply {
-        MapReply::CmpEx(Ok(())) => out.push_str("OK"),
-        MapReply::CmpEx(Err(w)) => {
-            out.push('!');
-            match w {
-                Some(v) => write!(out, "{v}").expect("write to String"),
-                None => out.push('-'),
-            }
-        }
-        _ => match reply.value() {
-            Some(v) => write!(out, "{v}").expect("write to String"),
-            None => out.push('-'),
-        },
-    }
-}
-
-/// One parsed request frame.
-enum Frame {
-    /// Ops to apply with a single `apply_batch` call.
-    Batch(Vec<MapOp>),
-    /// Protocol error to report; nothing is applied.
-    Err(&'static str),
-    /// Client said `Q`.
-    Quit,
-}
-
-/// Reader stage: parse lines into frames until EOF/`Q`, handing them to
-/// the apply/write stage through the bounded channel.
-fn read_frames(stream: TcpStream, tx: mpsc::SyncSender<Frame>) {
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
+/// Reader stage: decode received bytes into frames until EOF/`Q`,
+/// handing them to the apply/write stage through the bounded channel.
+fn read_frames(mut stream: TcpStream, tx: mpsc::SyncSender<Frame>) {
+    let mut dec = FrameDecoder::new();
+    let mut chunk = [0u8; 4096];
     loop {
-        line.clear();
-        if reader.read_line(&mut line).unwrap_or(0) == 0 {
-            return; // EOF or broken pipe: dropping tx drains the stage
-        }
-        let head = line.trim();
-        if head.is_empty() {
-            continue;
-        }
-        if head == "Q" {
-            let _ = tx.send(Frame::Quit);
-            return;
-        }
-        let frame = if let Some(rest) = head.strip_prefix("B ") {
-            match rest.trim().parse::<usize>() {
-                Ok(n) if (1..=MAX_BATCH).contains(&n) => {
-                    let mut ops = Vec::with_capacity(n);
-                    let mut err: Option<&'static str> = None;
-                    for _ in 0..n {
-                        line.clear();
-                        if reader.read_line(&mut line).unwrap_or(0) == 0 {
-                            return; // truncated frame: connection gone
-                        }
-                        // Keep consuming the frame even after an error
-                        // so the stream stays in sync.
-                        match parse_op(line.trim()) {
-                            Ok(op) => ops.push(op),
-                            Err(e) => err = err.or(Some(e)),
-                        }
-                    }
-                    match err {
-                        None => Frame::Batch(ops),
-                        Some(e) => Frame::Err(e),
-                    }
+        let n = match stream.read(&mut chunk) {
+            Ok(0) => {
+                // EOF: a final line without a trailing newline still
+                // deserves its reply (`printf 'G 5' |` clients), as it
+                // did under the old read_line reader. Dropping tx then
+                // drains the stage.
+                if let Some(frame) = dec.finish() {
+                    let _ = tx.send(frame);
                 }
-                _ => Frame::Err(ERR_BAD_BATCH),
+                return;
             }
-        } else {
-            match parse_op(head) {
-                Ok(op) => Frame::Batch(vec![op]),
-                Err(e) => Frame::Err(e),
-            }
+            Ok(n) => n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return, // broken pipe / shutdown
         };
-        if tx.send(frame).is_err() {
-            return; // writer stage gone
+        dec.feed(&chunk[..n]);
+        while let Some(frame) = dec.next_frame() {
+            let quit = matches!(frame, Frame::Quit);
+            if tx.send(frame).is_err() || quit {
+                return; // writer stage gone, or client said Q
+            }
         }
     }
 }
@@ -211,9 +89,10 @@ fn read_frames(stream: TcpStream, tx: mpsc::SyncSender<Frame>) {
 fn serve_conn(stream: TcpStream, map: Arc<dyn ConcurrentMap>) {
     stream.set_nodelay(true).ok();
     let Ok(read_half) = stream.try_clone() else { return };
+    let Ok(close_half) = stream.try_clone() else { return };
     let (tx, rx) = mpsc::sync_channel::<Frame>(PIPELINE_DEPTH);
     let reader = std::thread::spawn(move || read_frames(read_half, tx));
-    let mut out = BufWriter::new(stream);
+    let mut out = io::BufWriter::new(stream);
     let mut replies: Vec<MapReply> = Vec::new();
     let mut line = String::new();
     for frame in rx {
@@ -257,48 +136,115 @@ fn serve_conn(stream: TcpStream, map: Arc<dyn ConcurrentMap>) {
             break;
         }
     }
-    drop(out); // close the write half before reaping the reader
+    // Shut the socket down (both halves) to unblock the reader's
+    // pending read; plain drop would leave it parked until the client
+    // hung up — the thread leak this handle-based lifecycle closes.
+    drop(out);
+    let _ = close_half.shutdown(Shutdown::Both);
     let _ = reader.join();
 }
 
-/// Accept loop: one pipelined connection handler per client.
-pub fn serve(listener: TcpListener, map: Arc<dyn ConcurrentMap>) {
+/// State shared between the accept loop and the shutdown handle.
+struct Shared {
+    stop: AtomicBool,
+    /// Read-half clones of every live connection, so shutdown can
+    /// unblock their reader threads; connection threads deregister
+    /// themselves on exit.
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    next_id: AtomicU64,
+}
+
+/// Handle to a running thread-per-connection server.
+///
+/// Dropping the handle detaches the server; [`ServerHandle::shutdown`]
+/// stops it and joins every thread it ever spawned.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The address the server is listening on.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, close every live connection, and join the
+    /// accept loop plus all connection threads.
+    pub fn shutdown(mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        // The accept loop sits in a blocking `accept`; a throwaway
+        // connection wakes it so it can observe the stop flag (it then
+        // sweeps and joins the connection threads itself).
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Accept loop: one pipelined connection handler per client; on stop,
+/// closes every live connection and joins all handlers (it owns the
+/// listener, so returning also closes the listening socket).
+fn accept_loop(
+    listener: TcpListener,
+    map: Arc<dyn ConcurrentMap>,
+    shared: Arc<Shared>,
+) {
+    let mut workers: Vec<JoinHandle<()>> = Vec::new();
     for stream in listener.incoming() {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
         let Ok(stream) = stream else { break };
+        let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
+        if let Ok(clone) = stream.try_clone() {
+            shared.conns.lock().unwrap().insert(id, clone);
+        }
         let map = map.clone();
-        std::thread::spawn(move || serve_conn(stream, map));
+        let shared = shared.clone();
+        workers.push(std::thread::spawn(move || {
+            serve_conn(stream, map);
+            shared.conns.lock().unwrap().remove(&id);
+        }));
+    }
+    // Unblock every connection's reader, then reap the handlers.
+    for s in shared.conns.lock().unwrap().values() {
+        let _ = s.shutdown(Shutdown::Both);
+    }
+    for h in workers {
+        let _ = h.join();
     }
 }
 
-/// Bind an ephemeral localhost port, serve `map` on a background
-/// thread, and return the address (examples and tests).
-pub fn spawn_ephemeral(map: Arc<dyn ConcurrentMap>) -> SocketAddr {
-    let listener = TcpListener::bind("127.0.0.1:0").expect("bind 127.0.0.1:0");
-    let addr = listener.local_addr().expect("local_addr");
-    std::thread::spawn(move || serve(listener, map));
-    addr
-}
-
-/// Append one op in wire format (plus newline).
-fn push_op(op: MapOp, out: &mut String) {
-    use std::fmt::Write as _;
-    let opt = |v: Option<u64>| match v {
-        Some(v) => v.to_string(),
-        None => "-".into(),
+/// Serve `map` on `listener` from a background accept thread.
+pub fn spawn_server_on(
+    listener: TcpListener,
+    map: Arc<dyn ConcurrentMap>,
+) -> io::Result<ServerHandle> {
+    let addr = listener.local_addr()?;
+    let shared = Arc::new(Shared {
+        stop: AtomicBool::new(false),
+        conns: Mutex::new(HashMap::new()),
+        next_id: AtomicU64::new(0),
+    });
+    let accept = {
+        let shared = shared.clone();
+        std::thread::spawn(move || accept_loop(listener, map, shared))
     };
-    match op {
-        MapOp::Get(k) => writeln!(out, "G {k}"),
-        MapOp::Insert(k, v) => writeln!(out, "P {k} {v}"),
-        MapOp::Remove(k) => writeln!(out, "D {k}"),
-        MapOp::GetOrInsert(k, v) => writeln!(out, "U {k} {v}"),
-        MapOp::FetchAdd(k, d) => writeln!(out, "A {k} {d}"),
-        MapOp::CmpEx(k, e, n) => writeln!(out, "C {k} {} {}", opt(e), opt(n)),
-    }
-    .expect("write to String");
+    Ok(ServerHandle { addr, shared, accept: Some(accept) })
+}
+
+/// Bind an ephemeral localhost port and serve `map` (examples, tests,
+/// benches). The returned handle's [`ServerHandle::shutdown`] joins
+/// every spawned thread.
+pub fn spawn_server(map: Arc<dyn ConcurrentMap>) -> io::Result<ServerHandle> {
+    spawn_server_on(TcpListener::bind("127.0.0.1:0")?, map)
 }
 
 /// Minimal blocking client for the wire protocol (examples, tests,
-/// and the example's load generator).
+/// and the benchmark load generators).
 pub struct Client {
     reader: BufReader<TcpStream>,
     out: TcpStream,
@@ -324,6 +270,13 @@ impl Client {
         self.out.write_all(line.as_bytes())?;
         self.out.write_all(b"\n")?;
         self.read_reply_line()
+    }
+
+    /// Send raw bytes without waiting for replies (adversarial-framing
+    /// tests and the equivalence trace drive arbitrary fragmentation
+    /// through this).
+    pub fn send_raw(&mut self, bytes: &[u8]) -> io::Result<()> {
+        self.out.write_all(bytes)
     }
 
     /// Send a batch of ops as one frame (a bare op line for a single
@@ -433,104 +386,13 @@ impl Client {
         Ok(vals)
     }
 
-    fn read_reply_line(&mut self) -> io::Result<String> {
+    /// Read one reply line (trimmed). Pairs with [`Client::send_raw`]
+    /// when the test knows how many reply lines its bytes will earn.
+    pub fn read_reply_line(&mut self) -> io::Result<String> {
         self.reply.clear();
         if self.reader.read_line(&mut self.reply)? == 0 {
             return Err(io::ErrorKind::UnexpectedEof.into());
         }
         Ok(self.reply.trim_end().to_string())
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn parse_op_accepts_valid_lines() {
-        assert_eq!(parse_op("G 5"), Ok(MapOp::Get(5)));
-        assert_eq!(parse_op("P 5 10"), Ok(MapOp::Insert(5, 10)));
-        assert_eq!(parse_op("D 5"), Ok(MapOp::Remove(5)));
-        assert_eq!(parse_op("  G   5  "), Ok(MapOp::Get(5)));
-        assert_eq!(parse_op(&format!("G {MAX_KEY}")), Ok(MapOp::Get(MAX_KEY)));
-        assert_eq!(
-            parse_op(&format!("P 1 {MAX_VALUE}")),
-            Ok(MapOp::Insert(1, MAX_VALUE))
-        );
-    }
-
-    #[test]
-    fn parse_op_rejects_out_of_range_keys() {
-        // The old server's DoS: any k >= 1 was forwarded to the table,
-        // and k > MAX_KEY tripped check_key's assert mid-connection.
-        assert_eq!(parse_op(&format!("G {}", MAX_KEY + 1)), Err(ERR_KEY_RANGE));
-        assert_eq!(parse_op("G 0"), Err(ERR_KEY_RANGE));
-        assert_eq!(parse_op(&format!("P {} 1", u64::MAX)), Err(ERR_KEY_RANGE));
-        assert_eq!(parse_op("D 0"), Err(ERR_KEY_RANGE));
-        assert_eq!(
-            parse_op(&format!("P 1 {}", MAX_VALUE + 1)),
-            Err(ERR_VALUE_RANGE)
-        );
-    }
-
-    #[test]
-    fn parse_op_rejects_malformed_lines() {
-        for bad in [
-            "", "G", "P 1", "G x", "P 1 y", "X 1", "G 1 2", "P 1 2 3", "Q 1",
-        ] {
-            assert_eq!(parse_op(bad), Err(ERR_BAD_REQUEST), "line {bad:?}");
-        }
-    }
-
-    #[test]
-    fn parse_op_accepts_conditional_verbs() {
-        assert_eq!(parse_op("U 5 10"), Ok(MapOp::GetOrInsert(5, 10)));
-        assert_eq!(parse_op("A 5 3"), Ok(MapOp::FetchAdd(5, 3)));
-        assert_eq!(parse_op("C 5 - 10"), Ok(MapOp::CmpEx(5, None, Some(10))));
-        assert_eq!(parse_op("C 5 10 -"), Ok(MapOp::CmpEx(5, Some(10), None)));
-        assert_eq!(
-            parse_op("C 5 10 11"),
-            Ok(MapOp::CmpEx(5, Some(10), Some(11)))
-        );
-        assert_eq!(parse_op("C 5 - -"), Ok(MapOp::CmpEx(5, None, None)));
-        // Range / shape enforcement.
-        assert_eq!(
-            parse_op(&format!("A 5 {}", MAX_VALUE + 1)),
-            Err(ERR_VALUE_RANGE)
-        );
-        assert_eq!(
-            parse_op(&format!("C 5 - {}", MAX_VALUE + 1)),
-            Err(ERR_VALUE_RANGE)
-        );
-        assert_eq!(parse_op("C 0 - 1"), Err(ERR_KEY_RANGE));
-        for bad in ["U 5", "A 5", "C 5 -", "C 5 - - -", "C 5 x 1", "U 5 1 2"] {
-            assert_eq!(parse_op(bad), Err(ERR_BAD_REQUEST), "line {bad:?}");
-        }
-    }
-
-    #[test]
-    fn cmpex_reply_tokens() {
-        let mut s = String::new();
-        push_reply(MapReply::CmpEx(Ok(())), &mut s);
-        s.push(' ');
-        push_reply(MapReply::CmpEx(Err(Some(7))), &mut s);
-        s.push(' ');
-        push_reply(MapReply::CmpEx(Err(None)), &mut s);
-        s.push(' ');
-        push_reply(MapReply::Existing(None), &mut s);
-        s.push(' ');
-        push_reply(MapReply::Added(Some(3)), &mut s);
-        assert_eq!(s, "OK !7 !- - 3");
-    }
-
-    #[test]
-    fn reply_tokens_round_trip() {
-        let mut s = String::new();
-        push_reply(MapReply::Value(Some(42)), &mut s);
-        s.push(' ');
-        push_reply(MapReply::Prev(None), &mut s);
-        s.push(' ');
-        push_reply(MapReply::Removed(Some(7)), &mut s);
-        assert_eq!(s, "42 - 7");
     }
 }

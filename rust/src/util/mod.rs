@@ -1,6 +1,8 @@
 //! Shared substrate: hashing, RNG, thread pinning, property testing,
-//! plus the offline-build shims (cache-line padding, error plumbing)
-//! that keep the crate free of external dependencies.
+//! the Linux readiness syscalls behind the epoll front-end
+//! ([`sys`], `target_os = "linux"` only), plus the offline-build shims
+//! (cache-line padding, error plumbing) that keep the crate free of
+//! external dependencies.
 
 pub mod affinity;
 pub mod error;
@@ -9,3 +11,5 @@ pub mod linearize;
 pub mod pad;
 pub mod prop;
 pub mod rng;
+#[cfg(target_os = "linux")]
+pub mod sys;

@@ -11,6 +11,31 @@ use super::rng::Rng;
 /// Outcome of a single property check.
 pub type PropResult = Result<(), String>;
 
+/// Iteration-count knob for the heavyweight concurrency tests: divide
+/// `n` by [`scale_div`] (default 1, so the normal `cargo test` run is
+/// unchanged), never below 1. The ThreadSanitizer CI lane sets a
+/// divisor so the instrumented test binaries finish in minutes while
+/// still crossing every synchronization edge the full runs cross.
+pub fn scaled(n: u64) -> u64 {
+    scaled_by(n, scale_div())
+}
+
+/// The pure scaling rule behind [`scaled`]: `n / div`, floored at 1 so
+/// no loop ever scales away entirely. Split out so it can be tested
+/// without mutating process-global environment state.
+pub fn scaled_by(n: u64, div: u64) -> u64 {
+    (n / div.max(1)).max(1)
+}
+
+/// The `CRH_TEST_SCALE_DIV` env knob (1 when unset or malformed).
+pub fn scale_div() -> u64 {
+    std::env::var("CRH_TEST_SCALE_DIV")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .filter(|&d| d >= 1)
+        .unwrap_or(1)
+}
+
 /// Run `iters` random cases of a property over generated op sequences.
 ///
 /// `gen` produces a case from an RNG; `test` checks it. On failure the

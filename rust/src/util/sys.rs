@@ -1,0 +1,257 @@
+//! Minimal Linux readiness-API surface for the epoll front-end
+//! (`service::reactor`): raw `epoll_create1` / `epoll_ctl` /
+//! `epoll_wait` / `eventfd` bindings plus RAII fd wrappers.
+//!
+//! Follows the `util::affinity` precedent: the `libc` crate is not
+//! available in this offline build, but Rust's std already links the C
+//! library on Linux, so declaring the symbols is all that is needed.
+//! Errors are surfaced through `std::io::Error::last_os_error()`, which
+//! reads the thread's errno the same way std's own syscall wrappers do.
+//!
+//! Only what the reactor needs is bound — level-triggered readiness on
+//! sockets plus an eventfd wake token for cross-thread handoff and
+//! graceful shutdown. This module is `target_os = "linux"` only; the
+//! reactor falls back to the thread-per-connection server elsewhere.
+
+use std::io;
+use std::os::fd::RawFd;
+
+pub const EPOLLIN: u32 = 0x001;
+pub const EPOLLOUT: u32 = 0x004;
+pub const EPOLLERR: u32 = 0x008;
+pub const EPOLLHUP: u32 = 0x010;
+/// Peer closed its write half (half-close detection without a read).
+pub const EPOLLRDHUP: u32 = 0x2000;
+
+const EPOLL_CTL_ADD: i32 = 1;
+const EPOLL_CTL_DEL: i32 = 2;
+const EPOLL_CTL_MOD: i32 = 3;
+
+/// `EPOLL_CLOEXEC` / `EFD_CLOEXEC` (== `O_CLOEXEC`).
+const CLOEXEC: i32 = 0o2000000;
+/// `EFD_NONBLOCK` (== `O_NONBLOCK`).
+const EFD_NONBLOCK: i32 = 0o4000;
+
+/// Mirror of the kernel's `struct epoll_event`. On x86-64 the kernel
+/// ABI packs it (no padding between `events` and `data`); other
+/// architectures use natural alignment.
+#[repr(C)]
+#[cfg_attr(target_arch = "x86_64", repr(packed))]
+#[derive(Clone, Copy)]
+pub struct EpollEvent {
+    pub events: u32,
+    /// Caller-chosen token identifying the registered fd.
+    pub data: u64,
+}
+
+impl EpollEvent {
+    pub fn zeroed() -> Self {
+        EpollEvent { events: 0, data: 0 }
+    }
+}
+
+extern "C" {
+    fn epoll_create1(flags: i32) -> i32;
+    fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+    fn epoll_wait(
+        epfd: i32,
+        events: *mut EpollEvent,
+        maxevents: i32,
+        timeout_ms: i32,
+    ) -> i32;
+    fn eventfd(initval: u32, flags: i32) -> i32;
+    fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+    fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+    fn close(fd: i32) -> i32;
+    fn setsockopt(
+        fd: i32,
+        level: i32,
+        optname: i32,
+        optval: *const u8,
+        optlen: u32,
+    ) -> i32;
+}
+
+const SOL_SOCKET: i32 = 1;
+const SO_RCVBUF: i32 = 8;
+const SO_SNDBUF: i32 = 7;
+
+fn set_buf_opt(fd: RawFd, opt: i32, bytes: i32) -> io::Result<()> {
+    let val = bytes.to_ne_bytes();
+    cvt(unsafe {
+        setsockopt(fd, SOL_SOCKET, opt, val.as_ptr(), val.len() as u32)
+    })
+    .map(|_| ())
+}
+
+/// Shrink (or grow) a socket's kernel receive buffer — the
+/// backpressure tests use a tiny one to force the peer's replies to
+/// back up into its user-space buffer deterministically.
+pub fn set_recv_buffer(fd: RawFd, bytes: i32) -> io::Result<()> {
+    set_buf_opt(fd, SO_RCVBUF, bytes)
+}
+
+/// Shrink (or grow) a socket's kernel send buffer.
+pub fn set_send_buffer(fd: RawFd, bytes: i32) -> io::Result<()> {
+    set_buf_opt(fd, SO_SNDBUF, bytes)
+}
+
+fn cvt(ret: i32) -> io::Result<i32> {
+    if ret < 0 {
+        Err(io::Error::last_os_error())
+    } else {
+        Ok(ret)
+    }
+}
+
+/// An epoll instance (closed on drop).
+pub struct EpollFd(RawFd);
+
+impl EpollFd {
+    pub fn new() -> io::Result<EpollFd> {
+        cvt(unsafe { epoll_create1(CLOEXEC) }).map(EpollFd)
+    }
+
+    fn ctl(&self, op: i32, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        let mut ev = EpollEvent { events, data: token };
+        cvt(unsafe { epoll_ctl(self.0, op, fd, &mut ev) }).map(|_| ())
+    }
+
+    /// Register `fd` with interest `events`, reporting `token`.
+    pub fn add(&self, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, events, token)
+    }
+
+    /// Change the interest set of a registered fd.
+    pub fn modify(&self, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, events, token)
+    }
+
+    /// Deregister `fd` (closing the fd also deregisters it implicitly;
+    /// this exists for fds that outlive their registration).
+    pub fn del(&self, fd: RawFd) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Wait for readiness, filling `events` from the front; returns how
+    /// many entries are valid. `timeout_ms < 0` blocks indefinitely;
+    /// `0` polls. Retries `EINTR` internally.
+    pub fn wait(
+        &self,
+        events: &mut [EpollEvent],
+        timeout_ms: i32,
+    ) -> io::Result<usize> {
+        loop {
+            let n = unsafe {
+                epoll_wait(
+                    self.0,
+                    events.as_mut_ptr(),
+                    events.len().min(i32::MAX as usize) as i32,
+                    timeout_ms,
+                )
+            };
+            match cvt(n) {
+                Ok(n) => return Ok(n as usize),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+impl Drop for EpollFd {
+    fn drop(&mut self) {
+        unsafe { close(self.0) };
+    }
+}
+
+/// A nonblocking eventfd wake token (closed on drop): `signal` from any
+/// thread, register `fd()` in an epoll set, `drain` on wake-up.
+pub struct EventFd(RawFd);
+
+impl EventFd {
+    pub fn new() -> io::Result<EventFd> {
+        cvt(unsafe { eventfd(0, CLOEXEC | EFD_NONBLOCK) }).map(EventFd)
+    }
+
+    pub fn fd(&self) -> RawFd {
+        self.0
+    }
+
+    /// Make the fd readable (wake any epoll waiter). A full counter
+    /// (`EAGAIN`) already means "signalled", so that error is ignored.
+    pub fn signal(&self) {
+        let one = 1u64.to_ne_bytes();
+        unsafe { write(self.0, one.as_ptr(), one.len()) };
+    }
+
+    /// Consume all pending signals so level-triggered polling quiesces.
+    pub fn drain(&self) {
+        let mut buf = [0u8; 8];
+        while unsafe { read(self.0, buf.as_mut_ptr(), buf.len()) } > 0 {}
+    }
+}
+
+impl Drop for EventFd {
+    fn drop(&mut self) {
+        unsafe { close(self.0) };
+    }
+}
+
+// `RawFd` operations are thread-safe at the kernel boundary; the
+// wrappers add no interior state.
+unsafe impl Send for EpollFd {}
+unsafe impl Sync for EpollFd {}
+unsafe impl Send for EventFd {}
+unsafe impl Sync for EventFd {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::os::fd::AsRawFd;
+
+    #[test]
+    fn eventfd_wakes_epoll_and_drains() {
+        let ep = EpollFd::new().unwrap();
+        let ev = EventFd::new().unwrap();
+        ep.add(ev.fd(), EPOLLIN, 42).unwrap();
+        let mut events = [EpollEvent::zeroed(); 4];
+
+        // Nothing signalled: a zero-timeout wait reports no readiness.
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+
+        ev.signal();
+        ev.signal(); // coalesces into one readable counter
+        let n = ep.wait(&mut events, 1000).unwrap();
+        assert_eq!(n, 1);
+        let (got_ev, got_tok) = (events[0].events, events[0].data);
+        assert_ne!(got_ev & EPOLLIN, 0);
+        assert_eq!(got_tok, 42);
+
+        ev.drain();
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0, "drain clears");
+    }
+
+    #[test]
+    fn epoll_reports_listener_readiness() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let ep = EpollFd::new().unwrap();
+        ep.add(listener.as_raw_fd(), EPOLLIN, 7).unwrap();
+        let mut events = [EpollEvent::zeroed(); 4];
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+
+        let _client = std::net::TcpStream::connect(addr).unwrap();
+        let n = ep.wait(&mut events, 2000).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!({ events[0].data }, 7);
+        assert!(listener.accept().is_ok());
+
+        // Interest modification: drop read interest, no more reports.
+        ep.modify(listener.as_raw_fd(), 0, 7).unwrap();
+        let _client2 = std::net::TcpStream::connect(addr).unwrap();
+        assert_eq!(ep.wait(&mut events, 50).unwrap(), 0);
+        ep.del(listener.as_raw_fd()).unwrap();
+    }
+}

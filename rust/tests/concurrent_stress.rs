@@ -6,6 +6,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use crh::maps::{ConcurrentSet, TableKind};
+use crh::util::prop::scaled;
 use crh::util::rng::Rng;
 
 /// The sharded facade kinds exercised per shard count ∈ {1, 4, 16}
@@ -112,7 +113,7 @@ fn contended_churn(kind: TableKind, size_log2: u32, keys: u64) {
         let t = t.clone();
         hs.push(std::thread::spawn(move || {
             let mut r = Rng::for_thread(0xABCD ^ keys, tid);
-            for _ in 0..6000 {
+            for _ in 0..scaled(6000) {
                 let k = 1 + r.below(keys);
                 match r.below(3) {
                     0 => {
@@ -198,7 +199,7 @@ fn stable_keys_under_churn_sized(kind: TableKind, size_log2: u32) {
         let (t, stop) = (t.clone(), stop.clone());
         hs.push(std::thread::spawn(move || {
             let mut r = Rng::for_thread(0x52, tid);
-            for _ in 0..40_000 {
+            for _ in 0..scaled(40_000) {
                 let k = CHURN + 1 + r.below(STABLE);
                 assert!(
                     t.contains(k),
@@ -265,7 +266,7 @@ fn per_thread_read_your_writes() {
             hs.push(std::thread::spawn(move || {
                 let mut r = Rng::for_thread(0x77, tid);
                 let base = 1 + tid * 100_000;
-                for round in 0..500u64 {
+                for round in 0..scaled(500) {
                     let k = base + r.below(200);
                     if t.add(k) {
                         assert!(t.contains(k), "{} RYW round {round}", t.name());
@@ -297,7 +298,7 @@ fn kcas_transfer_conservation() {
             let mut r = Rng::for_thread(0x88, tid);
             let mut op = OpBuilder::new();
             let mut done = 0;
-            while done < 2000 {
+            while done < scaled(2000) {
                 let a = r.below(ACCOUNTS as u64) as usize;
                 let b = r.below(ACCOUNTS as u64) as usize;
                 if a == b {
@@ -351,7 +352,7 @@ fn kcas_helping_under_oversubscription() {
         }));
     }
     // Reader asserting the all-equal-at-linearization invariant.
-    for _ in 0..200_000 {
+    for _ in 0..scaled(200_000) {
         let x = words[0].read();
         let y = words[7].read();
         assert!(y >= x, "torn K-CAS: {y} < {x}");

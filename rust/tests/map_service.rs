@@ -3,16 +3,40 @@
 //! compositions across the {1, 4, 16} shard sweep), the batched API's
 //! op-by-op equivalence, the map-flavoured Fig. 5 race, and the TCP
 //! request pipeline end-to-end (including the key-range guard that the
-//! original one-op-per-line server lacked).
+//! original one-op-per-line server lacked). Every server test runs
+//! against **both** front-ends — the thread-per-connection pipeline
+//! and the epoll event loop — since the wire protocol promises they
+//! are indistinguishable.
 
 use std::collections::HashMap;
+use std::net::SocketAddr;
 use std::sync::Arc;
 
 use crh::maps::{ConcurrentMap, MapKind, MapOp, MapReply, MAX_KEY};
 use crh::service::batch::apply_batch;
+use crh::service::reactor;
 use crh::service::server::{self, Client};
 use crh::util::prop;
 use crh::util::rng::Rng;
+
+/// Run a server test against both front-ends: fresh map and server per
+/// backend, shutdown (joining every spawned thread) afterwards — no
+/// stranded accept loops or connection threads survive the test run.
+fn with_both_backends(
+    build: impl Fn() -> Arc<dyn ConcurrentMap>,
+    test: impl Fn(&str, SocketAddr, &Arc<dyn ConcurrentMap>),
+) {
+    let map = build();
+    let h = server::spawn_server(map.clone()).expect("spawn server");
+    test("thread-per-conn", h.addr(), &map);
+    h.shutdown();
+
+    let map = build();
+    let h =
+        reactor::spawn_server_epoll(map.clone(), 2).expect("spawn reactor");
+    test("epoll", h.addr(), &map);
+    h.shutdown();
+}
 
 /// Random op sequences on `kind` must match `HashMap` exactly —
 /// including value overwrite on duplicate insert (`insert` returns the
@@ -463,134 +487,151 @@ fn apply_batch_matches_op_by_op_everywhere() {
 
 #[test]
 fn server_round_trip_and_key_validation() {
-    let map: Arc<dyn ConcurrentMap> =
-        Arc::from(MapKind::ShardedKCasRhMap { shards: 4 }.build(12));
-    let addr = server::spawn_ephemeral(map.clone());
-    let mut c = Client::connect(addr).unwrap();
+    with_both_backends(
+        || Arc::from(MapKind::ShardedKCasRhMap { shards: 4 }.build(12)),
+        |backend, addr, map| {
+            let mut c = Client::connect(addr).unwrap();
 
-    // Single ops.
-    assert_eq!(c.request_line("P 10 100").unwrap(), "-");
-    assert_eq!(c.request_line("P 10 101").unwrap(), "100");
-    assert_eq!(c.request_line("G 10").unwrap(), "101");
-    assert_eq!(c.request_line("D 10").unwrap(), "101");
-    assert_eq!(c.request_line("G 10").unwrap(), "-");
+            // Single ops.
+            assert_eq!(c.request_line("P 10 100").unwrap(), "-", "{backend}");
+            assert_eq!(c.request_line("P 10 101").unwrap(), "100");
+            assert_eq!(c.request_line("G 10").unwrap(), "101");
+            assert_eq!(c.request_line("D 10").unwrap(), "101");
+            assert_eq!(c.request_line("G 10").unwrap(), "-");
 
-    // Satellite regression: out-of-range keys must get ERR, not a
-    // connection-killing check_key panic — and the connection must
-    // keep serving afterwards.
-    let big = MAX_KEY + 1;
-    assert_eq!(
-        c.request_line(&format!("P {big} 1")).unwrap(),
-        "ERR key out of range"
+            // Satellite regression: out-of-range keys must get ERR,
+            // not a connection-killing check_key panic — and the
+            // connection must keep serving afterwards.
+            let big = MAX_KEY + 1;
+            assert_eq!(
+                c.request_line(&format!("P {big} 1")).unwrap(),
+                "ERR key out of range"
+            );
+            assert_eq!(
+                c.request_line(&format!("G {big}")).unwrap(),
+                "ERR key out of range"
+            );
+            assert_eq!(c.request_line("G 0").unwrap(), "ERR key out of range");
+            assert_eq!(c.request_line("A 5").unwrap(), "ERR bad request");
+            assert_eq!(c.request_line("B 0").unwrap(), "ERR bad batch size");
+            assert_eq!(c.request_line("P 5 5").unwrap(), "-");
+
+            // Batch frame, including a same-key dependency chain.
+            let replies = c
+                .batch(&[
+                    MapOp::Insert(7, 70),
+                    MapOp::Get(7),
+                    MapOp::Insert(7, 71),
+                    MapOp::Remove(7),
+                    MapOp::Get(7),
+                    MapOp::Get(5),
+                ])
+                .unwrap();
+            assert_eq!(
+                replies,
+                vec![None, Some(70), Some(70), Some(71), None, Some(5)],
+                "{backend}"
+            );
+
+            // A batch containing one bad op is rejected as a unit:
+            // nothing applied, one ERR line, stream still in sync.
+            let err = c
+                .batch(&[MapOp::Insert(3, 30), MapOp::Get(big), MapOp::Get(3)])
+                .unwrap_err();
+            assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+            assert_eq!(
+                c.request_line("G 3").unwrap(),
+                "-",
+                "{backend}: bad batch was applied"
+            );
+
+            assert_eq!(map.len_quiesced(), 1, "{backend}"); // only key 5
+        },
     );
-    assert_eq!(
-        c.request_line(&format!("G {big}")).unwrap(),
-        "ERR key out of range"
-    );
-    assert_eq!(c.request_line("G 0").unwrap(), "ERR key out of range");
-    assert_eq!(c.request_line("A 5").unwrap(), "ERR bad request");
-    assert_eq!(c.request_line("B 0").unwrap(), "ERR bad batch size");
-    assert_eq!(c.request_line("P 5 5").unwrap(), "-");
-
-    // Batch frame, including a same-key dependency chain.
-    let replies = c
-        .batch(&[
-            MapOp::Insert(7, 70),
-            MapOp::Get(7),
-            MapOp::Insert(7, 71),
-            MapOp::Remove(7),
-            MapOp::Get(7),
-            MapOp::Get(5),
-        ])
-        .unwrap();
-    assert_eq!(
-        replies,
-        vec![None, Some(70), Some(70), Some(71), None, Some(5)]
-    );
-
-    // A batch containing one bad op is rejected as a unit: nothing
-    // applied, one ERR line, stream still in sync.
-    let err = c
-        .batch(&[MapOp::Insert(3, 30), MapOp::Get(big), MapOp::Get(3)])
-        .unwrap_err();
-    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
-    assert_eq!(c.request_line("G 3").unwrap(), "-", "bad batch was applied");
-
-    assert_eq!(map.len_quiesced(), 1); // only key 5 survives
 }
 
 #[test]
 fn server_conditional_verbs_round_trip() {
-    let map: Arc<dyn ConcurrentMap> =
-        Arc::from(MapKind::ShardedKCasRhMap { shards: 4 }.build(12));
-    let addr = server::spawn_ephemeral(map.clone());
-    let mut c = Client::connect(addr).unwrap();
+    with_both_backends(
+        || Arc::from(MapKind::ShardedKCasRhMap { shards: 4 }.build(12)),
+        |backend, addr, map| {
+            let mut c = Client::connect(addr).unwrap();
 
-    // Lease flow over raw lines: acquire, contended acquire, release.
-    assert_eq!(c.request_line("C 7 - 1").unwrap(), "OK");
-    assert_eq!(c.request_line("C 7 - 2").unwrap(), "!1");
-    assert_eq!(c.request_line("C 7 2 -").unwrap(), "!1");
-    assert_eq!(c.request_line("C 7 1 -").unwrap(), "OK");
-    assert_eq!(c.request_line("C 7 - -").unwrap(), "OK");
+            // Lease flow: acquire, contended acquire, release.
+            assert_eq!(c.request_line("C 7 - 1").unwrap(), "OK", "{backend}");
+            assert_eq!(c.request_line("C 7 - 2").unwrap(), "!1");
+            assert_eq!(c.request_line("C 7 2 -").unwrap(), "!1");
+            assert_eq!(c.request_line("C 7 1 -").unwrap(), "OK");
+            assert_eq!(c.request_line("C 7 - -").unwrap(), "OK");
 
-    // Counter flow: fetch_add from absent, then get-or-insert.
-    assert_eq!(c.request_line("A 9 5").unwrap(), "-");
-    assert_eq!(c.request_line("A 9 2").unwrap(), "5");
-    assert_eq!(c.request_line("G 9").unwrap(), "7");
-    assert_eq!(c.request_line("U 9 100").unwrap(), "7");
-    assert_eq!(c.request_line("U 11 100").unwrap(), "-");
+            // Counter flow: fetch_add from absent, then get-or-insert.
+            assert_eq!(c.request_line("A 9 5").unwrap(), "-");
+            assert_eq!(c.request_line("A 9 2").unwrap(), "5");
+            assert_eq!(c.request_line("G 9").unwrap(), "7");
+            assert_eq!(c.request_line("U 9 100").unwrap(), "7");
+            assert_eq!(c.request_line("U 11 100").unwrap(), "-");
 
-    // Validation at the protocol boundary.
-    assert_eq!(
-        c.request_line(&format!("C {} - 1", MAX_KEY + 1)).unwrap(),
-        "ERR key out of range"
+            // Validation at the protocol boundary.
+            assert_eq!(
+                c.request_line(&format!("C {} - 1", MAX_KEY + 1)).unwrap(),
+                "ERR key out of range"
+            );
+            assert_eq!(c.request_line("C 7 x 1").unwrap(), "ERR bad request");
+            assert_eq!(c.request_line("A 7").unwrap(), "ERR bad request");
+
+            // Typed batch round trip with a same-key dependency chain.
+            let replies = c
+                .batch_typed(&[
+                    MapOp::CmpEx(3, None, Some(30)),
+                    MapOp::FetchAdd(3, 4),
+                    MapOp::CmpEx(3, Some(34), Some(35)),
+                    MapOp::CmpEx(3, Some(34), Some(36)),
+                    MapOp::GetOrInsert(3, 0),
+                    MapOp::CmpEx(3, Some(35), None),
+                    MapOp::Get(3),
+                ])
+                .unwrap();
+            assert_eq!(
+                replies,
+                vec![
+                    MapReply::CmpEx(Ok(())),
+                    MapReply::Added(Some(30)),
+                    MapReply::CmpEx(Ok(())),
+                    MapReply::CmpEx(Err(Some(35))),
+                    MapReply::Existing(Some(35)),
+                    MapReply::CmpEx(Ok(())),
+                    MapReply::Value(None),
+                ],
+                "{backend}"
+            );
+            assert_eq!(map.len_quiesced(), 2, "{backend}"); // keys 9, 11
+        },
     );
-    assert_eq!(c.request_line("C 7 x 1").unwrap(), "ERR bad request");
-    assert_eq!(c.request_line("A 7").unwrap(), "ERR bad request");
-
-    // Typed batch round trip with a same-key dependency chain.
-    let replies = c
-        .batch_typed(&[
-            MapOp::CmpEx(3, None, Some(30)),
-            MapOp::FetchAdd(3, 4),
-            MapOp::CmpEx(3, Some(34), Some(35)),
-            MapOp::CmpEx(3, Some(34), Some(36)),
-            MapOp::GetOrInsert(3, 0),
-            MapOp::CmpEx(3, Some(35), None),
-            MapOp::Get(3),
-        ])
-        .unwrap();
-    assert_eq!(
-        replies,
-        vec![
-            MapReply::CmpEx(Ok(())),
-            MapReply::Added(Some(30)),
-            MapReply::CmpEx(Ok(())),
-            MapReply::CmpEx(Err(Some(35))),
-            MapReply::Existing(Some(35)),
-            MapReply::CmpEx(Ok(())),
-            MapReply::Value(None),
-        ]
-    );
-    assert_eq!(map.len_quiesced(), 2); // keys 9 and 11 survive
 }
 
 #[test]
 fn server_pipelined_frames_reply_in_order() {
-    let map: Arc<dyn ConcurrentMap> =
-        Arc::from(MapKind::KCasRhMap.build(12));
-    let addr = server::spawn_ephemeral(map);
-    let mut c = Client::connect(addr).unwrap();
-    const FRAMES: u64 = 64;
-    // Stream all frames without reading a single reply...
-    for i in 1..=FRAMES {
-        c.send_frame(&[MapOp::Insert(i, i * 10), MapOp::Get(i)]).unwrap();
-    }
-    // ...then collect the replies; they must arrive in frame order.
-    for i in 1..=FRAMES {
-        let replies = c.read_batch_reply(2).unwrap();
-        assert_eq!(replies, vec![None, Some(i * 10)], "frame {i}");
-    }
+    with_both_backends(
+        || Arc::from(MapKind::KCasRhMap.build(12)),
+        |backend, addr, _map| {
+            let mut c = Client::connect(addr).unwrap();
+            const FRAMES: u64 = 64;
+            // Stream all frames without reading a single reply...
+            for i in 1..=FRAMES {
+                c.send_frame(&[MapOp::Insert(i, i * 10), MapOp::Get(i)])
+                    .unwrap();
+            }
+            // ...then collect the replies in frame order.
+            for i in 1..=FRAMES {
+                let replies = c.read_batch_reply(2).unwrap();
+                assert_eq!(
+                    replies,
+                    vec![None, Some(i * 10)],
+                    "{backend} frame {i}"
+                );
+            }
+        },
+    );
 }
 
 /// Overfilling the table is a *capacity* failure, not a protocol one:
@@ -600,53 +641,62 @@ fn server_pipelined_frames_reply_in_order() {
 /// already covers for out-of-range keys).
 #[test]
 fn server_survives_full_table_with_error_reply() {
-    let map: Arc<dyn ConcurrentMap> =
-        Arc::from(MapKind::KCasRhMap.build(4)); // 16 buckets
-    let addr = server::spawn_ephemeral(map);
-    let mut c = Client::connect(addr).unwrap();
-    let mut saw_server_err = false;
-    for k in 1..=40u64 {
-        match c.request_line(&format!("P {k} 1")) {
-            Ok(reply) if reply == "ERR server error" => {
-                saw_server_err = true;
-                break;
+    with_both_backends(
+        || Arc::from(MapKind::KCasRhMap.build(4)), // 16 buckets
+        |backend, addr, _map| {
+            let mut c = Client::connect(addr).unwrap();
+            let mut saw_server_err = false;
+            for k in 1..=40u64 {
+                match c.request_line(&format!("P {k} 1")) {
+                    Ok(reply) if reply == "ERR server error" => {
+                        saw_server_err = true;
+                        break;
+                    }
+                    Ok(reply) => assert_eq!(reply, "-", "{backend} key {k}"),
+                    Err(e) => panic!(
+                        "{backend}: connection died reply-less at key {k}: {e}"
+                    ),
+                }
             }
-            Ok(reply) => assert_eq!(reply, "-", "key {k}"),
-            Err(e) => panic!("connection died reply-less at key {k}: {e}"),
-        }
-    }
-    assert!(saw_server_err, "overfull table never reported ERR");
-    // The failed connection was dropped; the server still accepts new
-    // clients (reads against the full table work fine).
-    let mut c2 = Client::connect(addr).unwrap();
-    assert_eq!(c2.request_line("G 1").unwrap(), "1");
+            assert!(
+                saw_server_err,
+                "{backend}: overfull table never reported ERR"
+            );
+            // The failed connection was dropped; the server still
+            // accepts new clients (reads against the full table work).
+            let mut c2 = Client::connect(addr).unwrap();
+            assert_eq!(c2.request_line("G 1").unwrap(), "1", "{backend}");
+        },
+    );
 }
 
 #[test]
 fn server_concurrent_clients_mixed_batches() {
-    let map: Arc<dyn ConcurrentMap> =
-        Arc::from(MapKind::ShardedKCasRhMap { shards: 4 }.build(12));
-    let addr = server::spawn_ephemeral(map.clone());
-    let mut hs = Vec::new();
-    for tid in 0..4u64 {
-        hs.push(std::thread::spawn(move || {
-            let mut c = Client::connect(addr).unwrap();
-            let base = 1 + tid * 10_000;
-            // Disjoint key ranges so final state is deterministic.
-            for chunk in 0..25u64 {
-                let ops: Vec<MapOp> = (0..8)
-                    .map(|j| {
-                        let k = base + chunk * 8 + j;
-                        MapOp::Insert(k, k)
-                    })
-                    .collect();
-                let replies = c.batch(&ops).unwrap();
-                assert!(replies.iter().all(|v| v.is_none()));
+    with_both_backends(
+        || Arc::from(MapKind::ShardedKCasRhMap { shards: 4 }.build(12)),
+        |backend, addr, map| {
+            let mut hs = Vec::new();
+            for tid in 0..4u64 {
+                hs.push(std::thread::spawn(move || {
+                    let mut c = Client::connect(addr).unwrap();
+                    let base = 1 + tid * 10_000;
+                    // Disjoint key ranges: deterministic final state.
+                    for chunk in 0..25u64 {
+                        let ops: Vec<MapOp> = (0..8)
+                            .map(|j| {
+                                let k = base + chunk * 8 + j;
+                                MapOp::Insert(k, k)
+                            })
+                            .collect();
+                        let replies = c.batch(&ops).unwrap();
+                        assert!(replies.iter().all(|v| v.is_none()));
+                    }
+                }));
             }
-        }));
-    }
-    for h in hs {
-        h.join().unwrap();
-    }
-    assert_eq!(map.len_quiesced(), 4 * 200);
+            for h in hs {
+                h.join().unwrap();
+            }
+            assert_eq!(map.len_quiesced(), 4 * 200, "{backend}");
+        },
+    );
 }

@@ -217,7 +217,7 @@ fn map_pairs_never_tear_across_migration() {
         let m = m.clone();
         hs.push(std::thread::spawn(move || {
             let mut r = Rng::for_thread(0xF16, tid);
-            for _ in 0..15_000 {
+            for _ in 0..prop::scaled(15_000) {
                 let k = 1 + r.below(1500);
                 m.insert(k, k * 7);
                 if r.below(4) == 0 {
@@ -230,7 +230,7 @@ fn map_pairs_never_tear_across_migration() {
         let m = m.clone();
         hs.push(std::thread::spawn(move || {
             let mut r = Rng::for_thread(0xF17, tid);
-            for _ in 0..30_000 {
+            for _ in 0..prop::scaled(30_000) {
                 let k = 1 + r.below(1500);
                 if let Some(v) = m.get(k) {
                     assert_eq!(v, k * 7, "torn pair across migration: {k}");
@@ -281,7 +281,7 @@ fn stable_keys_survive_migrations() {
         let (t, stop) = (t.clone(), stop.clone());
         hs.push(std::thread::spawn(move || {
             let mut r = Rng::for_thread(0xF19, tid);
-            for _ in 0..30_000 {
+            for _ in 0..prop::scaled(30_000) {
                 let k = 1 + r.below(STABLE);
                 assert!(
                     t.contains(k),
