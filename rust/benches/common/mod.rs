@@ -18,3 +18,11 @@ pub fn env_u32(name: &str, default: u32) -> u32 {
 pub fn quick() -> bool {
     std::env::args().any(|a| a == "--quick") || env_u64("QUICK", 0) == 1
 }
+
+/// Write the run's `BENCH_<fig>.json` perf-trajectory snapshot when
+/// enabled (`CRH_BENCH_JSON=1` or a literal `--json` argument; see
+/// `crh::bench::report`). A no-op otherwise, so every bench main can
+/// call it unconditionally.
+pub fn write_snapshot(report: &crh::bench::report::BenchReport) {
+    let _ = crh::bench::report::write_if_enabled(report);
+}

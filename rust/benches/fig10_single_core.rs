@@ -19,7 +19,7 @@ fn main() {
         duration_ms: common::env_u64("MS", if quick { 100 } else { 500 }),
         threads: vec![1],
         pin: true,
-        reps: common::env_u32("REPS", if quick { 1 } else { 2 }),
+        reps: common::env_u32("REPS", if quick { 1 } else { 3 }),
     };
-    fig10(&opts);
+    common::write_snapshot(&fig10(&opts));
 }

@@ -4,8 +4,9 @@
 //! ```sh
 //! cargo bench --bench fig11_scaling_low_lf [-- --quick]
 //! ```
-//! Tunables: CRH_BENCH_SIZE_LOG2, CRH_BENCH_MS, CRH_BENCH_THREADS
-//! (comma list).
+//! Tunables: CRH_BENCH_SIZE_LOG2, CRH_BENCH_MS, CRH_BENCH_REPS,
+//! CRH_BENCH_THREADS (comma list). CRH_BENCH_JSON=1 (or `-- --json`)
+//! writes the run as a BENCH_fig11.json snapshot.
 
 mod common;
 
@@ -17,7 +18,7 @@ fn main() {
         size_log2: common::env_u32("SIZE_LOG2", if quick { 16 } else { 22 }),
         duration_ms: common::env_u64("MS", if quick { 100 } else { 500 }),
         pin: true,
-        reps: 1,
+        reps: common::env_u32("REPS", if quick { 1 } else { 3 }),
         ..ExpOpts::default()
     };
     if let Ok(ts) = std::env::var("CRH_BENCH_THREADS") {
@@ -25,5 +26,5 @@ fn main() {
     } else if quick {
         opts.threads = vec![1, 2];
     }
-    fig11(&opts);
+    common::write_snapshot(&fig11(&opts));
 }

@@ -16,7 +16,7 @@ fn main() {
         size_log2: common::env_u32("SIZE_LOG2", if quick { 16 } else { 22 }),
         duration_ms: common::env_u64("MS", if quick { 100 } else { 500 }),
         pin: true,
-        reps: 1,
+        reps: common::env_u32("REPS", if quick { 1 } else { 3 }),
         ..ExpOpts::default()
     };
     if let Ok(ts) = std::env::var("CRH_BENCH_THREADS") {
@@ -24,5 +24,5 @@ fn main() {
     } else if quick {
         opts.threads = vec![1, 2];
     }
-    fig12(&opts);
+    common::write_snapshot(&fig12(&opts));
 }

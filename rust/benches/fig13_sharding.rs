@@ -20,7 +20,7 @@ fn main() {
         size_log2: common::env_u32("SIZE_LOG2", if quick { 16 } else { 22 }),
         duration_ms: common::env_u64("MS", if quick { 100 } else { 500 }),
         pin: true,
-        reps: 1,
+        reps: common::env_u32("REPS", if quick { 1 } else { 3 }),
         ..ExpOpts::default()
     };
     if let Ok(ts) = std::env::var("CRH_BENCH_THREADS") {
@@ -32,5 +32,5 @@ fn main() {
         Ok(s) => s.split(',').filter_map(|x| x.parse().ok()).collect(),
         Err(_) => TableKind::SHARD_SWEEP.to_vec(),
     };
-    fig13_sharding(&opts, &shards);
+    common::write_snapshot(&fig13_sharding(&opts, &shards));
 }

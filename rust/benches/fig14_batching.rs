@@ -21,7 +21,7 @@ fn main() {
         size_log2: common::env_u32("SIZE_LOG2", if quick { 16 } else { 22 }),
         duration_ms: common::env_u64("MS", if quick { 100 } else { 500 }),
         pin: true,
-        reps: 1,
+        reps: common::env_u32("REPS", if quick { 1 } else { 3 }),
         ..ExpOpts::default()
     };
     if let Ok(ts) = std::env::var("CRH_BENCH_THREADS") {
@@ -38,5 +38,5 @@ fn main() {
             .unwrap_or_else(|| panic!("unknown CRH_BENCH_MAP {s}")),
         Err(_) => MapKind::ShardedKCasRhMap { shards: 4 },
     };
-    fig14_batching(&opts, map, &batches);
+    common::write_snapshot(&fig14_batching(&opts, map, &batches));
 }

@@ -7,8 +7,10 @@
 //! cargo bench --bench fig15_resize            # paper-scale-ish
 //! cargo bench --bench fig15_resize -- --quick # CI smoke
 //! ```
-//! Tunables: CRH_BENCH_SIZE_LOG2, CRH_BENCH_MS, CRH_BENCH_THREADS
-//! (comma list), CRH_BENCH_GROW_ATS (comma list of thresholds).
+//! Tunables: CRH_BENCH_SIZE_LOG2, CRH_BENCH_MS, CRH_BENCH_REPS,
+//! CRH_BENCH_THREADS (comma list), CRH_BENCH_GROW_ATS (comma list of
+//! thresholds). CRH_BENCH_JSON=1 (or `-- --json`) writes the run as a
+//! BENCH_fig15.json snapshot.
 
 mod common;
 
@@ -20,7 +22,10 @@ fn main() {
         size_log2: common::env_u32("SIZE_LOG2", if quick { 14 } else { 20 }),
         duration_ms: common::env_u64("MS", if quick { 100 } else { 500 }),
         pin: true,
-        reps: 1,
+        // These cells were the issue's flagged single-sample numbers;
+        // default to 3 reps even in quick mode (median is printed,
+        // min/median/max land in the snapshot).
+        reps: common::env_u32("REPS", 3),
         ..ExpOpts::default()
     };
     if let Ok(ts) = std::env::var("CRH_BENCH_THREADS") {
@@ -38,5 +43,5 @@ fn main() {
             }
         }
     };
-    fig15_resize(&opts, &grow_ats);
+    common::write_snapshot(&fig15_resize(&opts, &grow_ats));
 }

@@ -24,7 +24,8 @@ fn main() {
         size_log2: common::env_u32("SIZE_LOG2", if quick { 14 } else { 20 }),
         duration_ms: common::env_u64("MS", if quick { 100 } else { 500 }),
         pin: true,
-        reps: 1,
+        // Flagged single-sample cells; 3 reps even in quick mode.
+        reps: common::env_u32("REPS", 3),
         ..ExpOpts::default()
     };
     if let Ok(ts) = std::env::var("CRH_BENCH_THREADS") {
@@ -55,5 +56,5 @@ fn main() {
             MapKind::ShardedLockedLpMap { shards: 4 },
         ],
     };
-    fig16_rmw(&opts, &maps, &hot_keys);
+    common::write_snapshot(&fig16_rmw(&opts, &maps, &hot_keys));
 }

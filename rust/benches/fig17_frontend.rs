@@ -16,7 +16,9 @@
 //! cargo bench --bench fig17_frontend -- --quick # CI smoke
 //! ```
 //! Tunables: CRH_BENCH_SIZE_LOG2, CRH_BENCH_CONNS (comma list),
-//! CRH_BENCH_WORKERS (comma list), CRH_BENCH_FRAMES, CRH_BENCH_BATCH.
+//! CRH_BENCH_WORKERS (comma list), CRH_BENCH_FRAMES, CRH_BENCH_BATCH,
+//! CRH_BENCH_REPS. CRH_BENCH_JSON=1 (or `-- --json`) writes the run
+//! as a BENCH_fig17.json snapshot.
 
 mod common;
 
@@ -51,8 +53,13 @@ fn main() {
         if quick { 150 } else { 2000 },
     ) as usize;
     let batch = common::env_u64("BATCH", 8) as usize;
+    // Flagged single-sample cells; 3 reps (fresh server+map per rep)
+    // even in quick mode.
+    let reps = common::env_u32("REPS", 3);
 
-    fig17_frontend(size_log2, &conns, &workers, frames, batch);
+    common::write_snapshot(&fig17_frontend(
+        size_log2, &conns, &workers, frames, batch, reps,
+    ));
 
     if quick {
         // The acceptance gate: at 64 connections the event loop must

@@ -16,5 +16,5 @@ fn main() {
     let quick = common::quick();
     let size = common::env_u32("SIZE_LOG2", if quick { 18 } else { 22 });
     let ops = common::env_u64("OPS", if quick { 100_000 } else { 3_000_000 });
-    table1(size, ops);
+    common::write_snapshot(&table1(size, ops));
 }

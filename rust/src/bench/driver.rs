@@ -4,6 +4,16 @@
 //! the table for a fixed wall-clock duration (the paper measures time,
 //! not iterations), and report per-thread op counts. Threads are pinned
 //! in paper order (physical cores first, then SMT siblings).
+//!
+//! The measurement window is **per worker**: each worker opens its
+//! clock the moment the barrier releases it and closes it after its
+//! own final counted op. A single coordinator-side window (the
+//! previous design) both starts late — workers run counted ops before
+//! the coordinator's `t0` — and stops early relative to the up-to-63
+//! counted tail ops each worker finishes after the stop flag flips, so
+//! the reported ops/µs wobbles with scheduler noise. With per-worker
+//! windows every counted op lies inside the window that divides it,
+//! which is what lets `BENCH_*.json` snapshots gate on the number.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Barrier;
@@ -20,14 +30,48 @@ use super::workload::{prefill, Op, WorkloadCfg};
 pub struct RunResult {
     pub threads: usize,
     pub total_ops: u64,
+    /// Longest single worker window (the wall-clock measurement span).
     pub elapsed: Duration,
     pub per_thread: Vec<u64>,
+    /// Each worker's own measured window in nanoseconds, opened at its
+    /// barrier release and closed after its final counted op.
+    pub per_thread_ns: Vec<u64>,
 }
 
 impl RunResult {
-    /// The paper's headline unit: operations per microsecond.
+    /// Assemble a result from per-worker (ops, window) measurements.
+    pub fn from_workers(
+        per_thread: Vec<u64>,
+        per_thread_ns: Vec<u64>,
+    ) -> RunResult {
+        assert_eq!(per_thread.len(), per_thread_ns.len());
+        RunResult {
+            threads: per_thread.len(),
+            total_ops: per_thread.iter().sum(),
+            elapsed: Duration::from_nanos(
+                per_thread_ns.iter().copied().max().unwrap_or(0),
+            ),
+            per_thread,
+            per_thread_ns,
+        }
+    }
+
+    /// The paper's headline unit: operations per microsecond, summed
+    /// over each worker's exact rate (`ops_i / window_i`) so no op is
+    /// attributed to time it didn't run in.
     pub fn ops_per_us(&self) -> f64 {
-        self.total_ops as f64 / self.elapsed.as_micros().max(1) as f64
+        let windowed: f64 = self
+            .per_thread
+            .iter()
+            .zip(&self.per_thread_ns)
+            .filter(|&(_, &ns)| ns > 0)
+            .map(|(&ops, &ns)| ops as f64 * 1e3 / ns as f64)
+            .sum();
+        if windowed > 0.0 {
+            windowed
+        } else {
+            self.total_ops as f64 / self.elapsed.as_micros().max(1) as f64
+        }
     }
 }
 
@@ -42,11 +86,11 @@ pub fn run_prefilled(
 ) -> RunResult {
     let stop = AtomicBool::new(false);
     let barrier = Barrier::new(threads + 1);
-    let mut per_thread = vec![0u64; threads];
+    let mut slots = vec![(0u64, 0u64); threads];
 
-    let elapsed = std::thread::scope(|s| {
+    std::thread::scope(|s| {
         let mut handles = Vec::new();
-        for (idx, slot) in per_thread.iter_mut().enumerate() {
+        for (idx, slot) in slots.iter_mut().enumerate() {
             let stop = &stop;
             let barrier = &barrier;
             handles.push(s.spawn(move || {
@@ -55,6 +99,10 @@ pub fn run_prefilled(
                 }
                 let mut rng = Rng::for_thread(cfg.seed, idx as u64);
                 barrier.wait();
+                // This worker's window: opens before its first op,
+                // closes after its last (including the tail of the
+                // final 64-op batch after `stop` flips).
+                let t0 = Instant::now();
                 let mut ops = 0u64;
                 while !stop.load(Ordering::Relaxed) {
                     // Check the stop flag every 64 ops to keep the flag
@@ -74,25 +122,19 @@ pub fn run_prefilled(
                         ops += 1;
                     }
                 }
-                *slot = ops;
+                *slot = (ops, t0.elapsed().as_nanos() as u64);
             }));
         }
         barrier.wait();
-        let t0 = Instant::now();
         std::thread::sleep(Duration::from_millis(cfg.duration_ms));
         stop.store(true, Ordering::Relaxed);
         for h in handles {
             h.join().unwrap();
         }
-        t0.elapsed()
     });
 
-    RunResult {
-        threads,
-        total_ops: per_thread.iter().sum(),
-        elapsed,
-        per_thread,
-    }
+    let (per_thread, per_thread_ns) = slots.into_iter().unzip();
+    RunResult::from_workers(per_thread, per_thread_ns)
 }
 
 /// Log2-bucketed per-operation latency histogram, cheap enough to
@@ -141,8 +183,13 @@ impl LatencyHist {
         self.max_ns
     }
 
-    /// Upper bound of the bucket containing quantile `q` (0 < q <= 1);
-    /// the true max for the top bucket. 0 when empty.
+    /// Latency at quantile `q` (0 < q <= 1), reported as the
+    /// **geometric midpoint** of the log2 bucket containing the q-th
+    /// sample — bucket `[2^b, 2^(b+1))` reports `2^b * sqrt(2)` —
+    /// clamped to the observed max. (Reporting the bucket's upper
+    /// bound, as this used to, overestimates by up to 2x and makes a
+    /// p50 sitting near a bucket edge jump a full power of two between
+    /// runs.) 0 when empty.
     pub fn quantile_ns(&self, q: f64) -> u64 {
         if self.count == 0 {
             return 0;
@@ -152,7 +199,9 @@ impl LatencyHist {
         for (b, &c) in self.buckets.iter().enumerate() {
             seen += c;
             if seen >= target {
-                return (1u64 << (b + 1)).min(self.max_ns.max(1));
+                let mid = ((1u64 << b) as f64 * std::f64::consts::SQRT_2)
+                    .round() as u64;
+                return mid.min(self.max_ns.max(1));
             }
         }
         self.max_ns
@@ -178,8 +227,9 @@ pub struct LatencyCfg {
 
 /// Timed run that records **every operation's latency** into a per
 /// thread [`LatencyHist`] (merged on return). Same barrier/stop-flag
-/// shape as [`run_prefilled`]; the per-op `Instant` pair costs ~50 ns,
-/// identical across engines, so relative tails stay comparable.
+/// shape as [`run_prefilled`], with the same per-worker measurement
+/// windows; the per-op `Instant` pair costs ~50 ns, identical across
+/// engines, so relative tails stay comparable.
 pub fn run_latency(
     table: &dyn ConcurrentSet,
     cfg: &LatencyCfg,
@@ -187,14 +237,14 @@ pub fn run_latency(
 ) -> (RunResult, LatencyHist) {
     let stop = AtomicBool::new(false);
     let barrier = Barrier::new(threads + 1);
-    let mut per_thread = vec![0u64; threads];
+    let mut slots = vec![(0u64, 0u64); threads];
     let mut hists: Vec<LatencyHist> =
         (0..threads).map(|_| LatencyHist::new()).collect();
 
-    let elapsed = std::thread::scope(|s| {
+    std::thread::scope(|s| {
         let mut handles = Vec::new();
         for (idx, (slot, hist)) in
-            per_thread.iter_mut().zip(hists.iter_mut()).enumerate()
+            slots.iter_mut().zip(hists.iter_mut()).enumerate()
         {
             let stop = &stop;
             let barrier = &barrier;
@@ -204,6 +254,7 @@ pub fn run_latency(
                 }
                 let mut rng = Rng::for_thread(cfg.seed, idx as u64);
                 barrier.wait();
+                let w0 = Instant::now();
                 let mut ops = 0u64;
                 while !stop.load(Ordering::Relaxed) {
                     let key = 1 + rng.below(cfg.key_space);
@@ -219,30 +270,23 @@ pub fn run_latency(
                     hist.record(t0.elapsed().as_nanos() as u64);
                     ops += 1;
                 }
-                *slot = ops;
+                *slot = (ops, w0.elapsed().as_nanos() as u64);
             }));
         }
         barrier.wait();
-        let t0 = Instant::now();
         std::thread::sleep(Duration::from_millis(cfg.duration_ms));
         stop.store(true, Ordering::Relaxed);
         for h in handles {
             h.join().unwrap();
         }
-        t0.elapsed()
     });
 
     let mut merged = LatencyHist::new();
     for h in &hists {
         merged.merge(h);
     }
-    let result = RunResult {
-        threads,
-        total_ops: per_thread.iter().sum(),
-        elapsed,
-        per_thread,
-    };
-    (result, merged)
+    let (per_thread, per_thread_ns) = slots.into_iter().unzip();
+    (RunResult::from_workers(per_thread, per_thread_ns), merged)
 }
 
 /// Build, prefill, and run one cell (convenience for the CLI/benches).
@@ -262,6 +306,7 @@ mod tests {
     use super::*;
     use crate::bench::workload::{KeyDist, Mix};
     use crate::maps::TableKind;
+    use std::sync::atomic::AtomicU64;
 
     fn tiny_cfg() -> WorkloadCfg {
         WorkloadCfg {
@@ -301,6 +346,83 @@ mod tests {
         }
     }
 
+    /// Transparent wrapper that counts every table call, so a test can
+    /// check the driver's books against the table's.
+    struct CountingSet {
+        inner: Box<dyn ConcurrentSet>,
+        calls: AtomicU64,
+    }
+
+    impl ConcurrentSet for CountingSet {
+        fn contains(&self, key: u64) -> bool {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            self.inner.contains(key)
+        }
+        fn add(&self, key: u64) -> bool {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            self.inner.add(key)
+        }
+        fn remove(&self, key: u64) -> bool {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            self.inner.remove(key)
+        }
+        fn name(&self) -> &'static str {
+            "counting"
+        }
+        fn capacity(&self) -> usize {
+            self.inner.capacity()
+        }
+        fn len_quiesced(&self) -> usize {
+            self.inner.len_quiesced()
+        }
+    }
+
+    #[test]
+    fn window_counts_every_recorded_op_exactly_once() {
+        let cfg = tiny_cfg();
+        let t = CountingSet {
+            inner: TableKind::KCasRobinHood.build(cfg.size_log2),
+            calls: AtomicU64::new(0),
+        };
+        prefill(&t, &cfg);
+        let before = t.calls.load(Ordering::Relaxed);
+        let r = run_prefilled(&t, &cfg, 3, false);
+        let measured = t.calls.load(Ordering::Relaxed) - before;
+        // Every table call of the measured phase is recorded exactly
+        // once — no pre-window ops, no uncounted post-stop tail.
+        assert_eq!(r.total_ops, measured);
+        assert_eq!(r.per_thread.len(), 3);
+        assert_eq!(r.per_thread_ns.len(), 3);
+        for (&ops, &ns) in r.per_thread.iter().zip(&r.per_thread_ns) {
+            assert!(ops > 0);
+            // Each worker's window brackets the whole measured run: it
+            // opens at the barrier (before the coordinator's sleep
+            // starts) and closes after the worker's own final op.
+            assert!(
+                ns >= cfg.duration_ms * 1_000_000 * 8 / 10,
+                "window {ns} ns shorter than the measured run"
+            );
+        }
+        assert_eq!(
+            r.elapsed.as_nanos() as u64,
+            *r.per_thread_ns.iter().max().unwrap(),
+            "elapsed is the longest worker window"
+        );
+        assert!(r.ops_per_us() > 0.0);
+    }
+
+    #[test]
+    fn ops_per_us_sums_exact_per_worker_rates() {
+        let r = RunResult::from_workers(
+            vec![1_000, 3_000],
+            vec![1_000_000, 2_000_000], // 1 ms and 2 ms windows
+        );
+        // 1000 ops / 1000 µs + 3000 ops / 2000 µs = 1.0 + 1.5.
+        assert!((r.ops_per_us() - 2.5).abs() < 1e-9);
+        assert_eq!(r.total_ops, 4_000);
+        assert_eq!(r.elapsed, Duration::from_millis(2));
+    }
+
     #[test]
     fn latency_hist_quantiles_are_monotonic() {
         let mut h = LatencyHist::new();
@@ -315,11 +437,33 @@ mod tests {
         assert!(p50 <= p99, "p50 {p50} > p99 {p99}");
         assert!(p99 <= h.max_ns());
         assert!(h.max_ns() == 1_000_000);
+        // Pin the geometric midpoints: the 300th sample (1000 ns) sits
+        // in bucket [512, 1024) => 512 * sqrt(2) = 724; the 594th
+        // (1_000_000 ns) in [524288, 1048576) => 741455.
+        assert_eq!(p50, 724);
+        assert_eq!(p99, 741_455);
         let mut merged = LatencyHist::new();
         merged.merge(&h);
         merged.merge(&h);
         assert_eq!(merged.count(), 1200);
         assert_eq!(merged.quantile_ns(0.5), p50);
+    }
+
+    #[test]
+    fn quantile_reports_bucket_midpoint_not_upper_bound() {
+        let mut h = LatencyHist::new();
+        for _ in 0..100 {
+            h.record(1000); // bucket [512, 1024)
+        }
+        assert_eq!(h.quantile_ns(0.5), 724);
+        assert_eq!(h.quantile_ns(0.999), 724);
+        assert_ne!(h.quantile_ns(0.5), 1024, "bare upper bound is the bug");
+        // The midpoint is clamped to the observed max...
+        let mut low = LatencyHist::new();
+        low.record(600); // mid 724 > max 600
+        assert_eq!(low.quantile_ns(0.5), 600);
+        // ...and an empty histogram reports 0.
+        assert_eq!(LatencyHist::new().quantile_ns(0.5), 0);
     }
 
     #[test]
@@ -337,6 +481,11 @@ mod tests {
         assert_eq!(r.per_thread.len(), 2);
         assert_eq!(r.total_ops, hist.count());
         assert!(hist.quantile_ns(0.99) >= hist.quantile_ns(0.5));
+        // The latency driver uses the same per-worker windows.
+        assert!(r
+            .per_thread_ns
+            .iter()
+            .all(|&ns| ns >= cfg.duration_ms * 1_000_000 * 8 / 10));
     }
 
     #[test]

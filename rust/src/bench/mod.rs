@@ -4,9 +4,15 @@
 //!   20/40/60/80%, update rates 10% "light" / 20% "heavy").
 //! * [`driver`] — barrier-synchronised, pinned, timed multithreaded
 //!   runs counting per-thread operations, reported as ops/µs.
+//! * [`report`] — the perf-trajectory layer: typed per-cell results,
+//!   machine-fingerprinted `BENCH_<fig>.json` snapshots
+//!   (`CRH_BENCH_JSON=1` / `--json`), and the >15%-regression compare
+//!   mode behind `crh bench-compare`.
 
 pub mod driver;
+pub mod report;
 pub mod workload;
 
 pub use driver::{run, RunResult};
+pub use report::{BenchReport, CellResult};
 pub use workload::{Mix, WorkloadCfg};

@@ -1,0 +1,1004 @@
+//! Perf-trajectory snapshots — record what "faster" means.
+//!
+//! Every experiment cell (`coordinator::fig10..fig17`, `table1`) is
+//! captured as a typed [`CellResult`]; an experiment run bundles its
+//! cells with the machine fingerprint and sweep spec into a
+//! [`BenchReport`], which both the human-readable `println!` tables
+//! and the snapshot writer consume. When `CRH_BENCH_JSON=1` (or the
+//! process was invoked with `--json`) the report is also written to
+//! `BENCH_<fig>.json` — a dependency-free JSON document
+//! ([`crate::util::json`]) that later runs compare against with
+//! [`compare`] / `crh bench-compare`, flagging any cell whose median
+//! throughput regressed by more than [`REGRESSION_THRESHOLD`].
+//!
+//! Snapshot schema (version 1):
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "fig": "fig15",
+//!   "unix_time": 1754550000,
+//!   "fingerprint": {
+//!     "cpu_model": "...", "cpus": 8, "kernel": "6.8.0",
+//!     "os": "linux/x86_64", "env": {"CRH_BENCH_MS": "100"}
+//!   },
+//!   "spec": {"size_log2": "20", "duration_ms": "500", "reps": "3"},
+//!   "cells": [{
+//!     "labels": {"engine": "incremental", "threads": "2"},
+//!     "ops_per_us": {"min": 9.1, "median": 9.4, "max": 9.6, "reps": 3},
+//!     "latency_ns": {"p50": 724, "p99": 11585, "p999": 46341,
+//!                    "max": 812345},
+//!     "extra": {"grows": 2}
+//!   }]
+//! }
+//! ```
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+use super::driver::LatencyHist;
+
+/// Snapshot schema version written (and the only one read).
+pub const SNAPSHOT_VERSION: u64 = 1;
+
+/// A cell whose median throughput drops by more than this fraction
+/// (or whose p99 latency rises by more, for latency-only cells) is
+/// classified as regressed.
+pub const REGRESSION_THRESHOLD: f64 = 0.15;
+
+/// Min/median/max over an experiment cell's repetitions — the snapshot
+/// records the spread, the tables print the median (one scheduler
+/// hiccup must not become the recorded number).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Stat {
+    pub min: f64,
+    pub median: f64,
+    pub max: f64,
+    pub reps: u32,
+}
+
+impl Stat {
+    /// Aggregate repetition samples. Panics on an empty slice — a cell
+    /// with zero reps is a harness bug, not a measurement.
+    pub fn from_samples(samples: &[f64]) -> Stat {
+        assert!(!samples.is_empty(), "Stat::from_samples on empty slice");
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.total_cmp(b));
+        let median = if s.len() % 2 == 1 {
+            s[s.len() / 2]
+        } else {
+            (s[s.len() / 2 - 1] + s[s.len() / 2]) / 2.0
+        };
+        Stat { min: s[0], median, max: s[s.len() - 1], reps: s.len() as u32 }
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("min", Json::Num(self.min)),
+            ("median", Json::Num(self.median)),
+            ("max", Json::Num(self.max)),
+            ("reps", Json::Num(self.reps as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Stat, String> {
+        let num = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("stat missing numeric {k:?}"))
+        };
+        Ok(Stat {
+            min: num("min")?,
+            median: num("median")?,
+            max: num("max")?,
+            reps: num("reps")? as u32,
+        })
+    }
+}
+
+/// Latency quantiles of one cell (merged across reps), in nanoseconds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LatencySummary {
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    pub p999_ns: u64,
+    pub max_ns: u64,
+}
+
+impl LatencySummary {
+    pub fn from_hist(h: &LatencyHist) -> LatencySummary {
+        LatencySummary {
+            p50_ns: h.quantile_ns(0.5),
+            p99_ns: h.quantile_ns(0.99),
+            p999_ns: h.quantile_ns(0.999),
+            max_ns: h.max_ns(),
+        }
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("p50", Json::Num(self.p50_ns as f64)),
+            ("p99", Json::Num(self.p99_ns as f64)),
+            ("p999", Json::Num(self.p999_ns as f64)),
+            ("max", Json::Num(self.max_ns as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<LatencySummary, String> {
+        let num = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| format!("latency_ns missing numeric {k:?}"))
+        };
+        Ok(LatencySummary {
+            p50_ns: num("p50")?,
+            p99_ns: num("p99")?,
+            p999_ns: num("p999")?,
+            max_ns: num("max")?,
+        })
+    }
+}
+
+/// One measured experiment cell: identifying labels plus whatever
+/// metrics the experiment produced. The `println!` tables and the
+/// snapshot writer both read from this — results are never formatted
+/// inline and lost.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellResult {
+    /// Ordered identifying coordinates, e.g.
+    /// `[("engine", "incremental"), ("threads", "2")]`. Their joined
+    /// form ([`CellResult::id`]) matches cells across snapshots.
+    pub labels: Vec<(String, String)>,
+    /// Throughput in the paper's headline unit (experiments measuring
+    /// ops/s convert, so compare ratios stay unit-free).
+    pub ops_per_us: Option<Stat>,
+    /// Per-op latency quantiles, when the experiment records them.
+    pub latency: Option<LatencySummary>,
+    /// Auxiliary numbers (grow count, CAS failure rate, ...).
+    pub extra: Vec<(String, f64)>,
+}
+
+impl CellResult {
+    pub fn new<I, K, V>(labels: I) -> CellResult
+    where
+        I: IntoIterator<Item = (K, V)>,
+        K: Into<String>,
+        V: ToString,
+    {
+        CellResult {
+            labels: labels
+                .into_iter()
+                .map(|(k, v)| (k.into(), v.to_string()))
+                .collect(),
+            ops_per_us: None,
+            latency: None,
+            extra: Vec::new(),
+        }
+    }
+
+    pub fn with_ops(mut self, stat: Stat) -> CellResult {
+        self.ops_per_us = Some(stat);
+        self
+    }
+
+    pub fn with_latency(mut self, lat: LatencySummary) -> CellResult {
+        self.latency = Some(lat);
+        self
+    }
+
+    pub fn with_extra(mut self, key: &str, value: f64) -> CellResult {
+        self.extra.push((key.to_string(), value));
+        self
+    }
+
+    /// Stable identity used to match cells across snapshots:
+    /// `k1=v1/k2=v2/...` in label order.
+    pub fn id(&self) -> String {
+        self.labels
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join("/")
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![(
+            "labels",
+            Json::Obj(
+                self.labels
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                    .collect(),
+            ),
+        )];
+        if let Some(s) = self.ops_per_us {
+            pairs.push(("ops_per_us", s.to_json()));
+        }
+        if let Some(l) = self.latency {
+            pairs.push(("latency_ns", l.to_json()));
+        }
+        if !self.extra.is_empty() {
+            pairs.push((
+                "extra",
+                Json::Obj(
+                    self.extra
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(pairs)
+    }
+
+    fn from_json(v: &Json) -> Result<CellResult, String> {
+        let labels = v
+            .get("labels")
+            .and_then(Json::as_obj)
+            .ok_or("cell missing \"labels\" object")?
+            .iter()
+            .map(|(k, val)| {
+                val.as_str()
+                    .map(|s| (k.clone(), s.to_string()))
+                    .ok_or_else(|| format!("label {k:?} is not a string"))
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        let ops_per_us = match v.get("ops_per_us") {
+            Some(s) => Some(Stat::from_json(s)?),
+            None => None,
+        };
+        let latency = match v.get("latency_ns") {
+            Some(l) => Some(LatencySummary::from_json(l)?),
+            None => None,
+        };
+        let extra = match v.get("extra").and_then(Json::as_obj) {
+            Some(pairs) => pairs
+                .iter()
+                .map(|(k, val)| {
+                    val.as_f64()
+                        .map(|f| (k.clone(), f))
+                        .ok_or_else(|| format!("extra {k:?} is not numeric"))
+                })
+                .collect::<Result<Vec<_>, _>>()?,
+            None => Vec::new(),
+        };
+        Ok(CellResult { labels, ops_per_us, latency, extra })
+    }
+}
+
+/// Where a snapshot was measured. Cross-machine comparisons are
+/// legitimate but must be flagged — [`compare`] warns on any mismatch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Fingerprint {
+    pub cpu_model: String,
+    pub cpus: u64,
+    pub kernel: String,
+    pub os: String,
+    /// Every `CRH_*` environment variable at capture time, sorted —
+    /// the bench tunables ride in the environment, so two snapshots
+    /// with different `CRH_BENCH_*` knobs must not gate each other.
+    pub env: Vec<(String, String)>,
+}
+
+impl Fingerprint {
+    pub fn capture() -> Fingerprint {
+        let mut env: Vec<(String, String)> = std::env::vars()
+            .filter(|(k, _)| k.starts_with("CRH_"))
+            .collect();
+        env.sort();
+        Fingerprint {
+            cpu_model: cpu_model().unwrap_or_else(|| "unknown".to_string()),
+            cpus: crate::util::affinity::available_cpus() as u64,
+            kernel: read_trimmed("/proc/sys/kernel/osrelease")
+                .unwrap_or_else(|| "unknown".to_string()),
+            os: format!("{}/{}", std::env::consts::OS, std::env::consts::ARCH),
+            env,
+        }
+    }
+
+    /// Human-readable description of every field where `self` (the
+    /// baseline) and `other` (the fresh run) disagree.
+    pub fn diff(&self, other: &Fingerprint) -> Vec<String> {
+        let mut out = Vec::new();
+        let mut field = |name: &str, a: &str, b: &str| {
+            if a != b {
+                out.push(format!("{name}: {a:?} vs {b:?}"));
+            }
+        };
+        field("cpu_model", &self.cpu_model, &other.cpu_model);
+        field("cpus", &self.cpus.to_string(), &other.cpus.to_string());
+        field("kernel", &self.kernel, &other.kernel);
+        field("os", &self.os, &other.os);
+        let keys: std::collections::BTreeSet<&str> = self
+            .env
+            .iter()
+            .chain(other.env.iter())
+            .map(|(k, _)| k.as_str())
+            .collect();
+        for k in keys {
+            let find = |fp: &Fingerprint| {
+                fp.env
+                    .iter()
+                    .find(|(key, _)| key == k)
+                    .map(|(_, v)| v.clone())
+            };
+            let (a, b) = (find(self), find(other));
+            if a != b {
+                let show = |v: Option<String>| {
+                    v.map_or("<unset>".to_string(), |s| format!("{s:?}"))
+                };
+                out.push(format!("env {k}: {} vs {}", show(a), show(b)));
+            }
+        }
+        out
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cpu_model", Json::Str(self.cpu_model.clone())),
+            ("cpus", Json::Num(self.cpus as f64)),
+            ("kernel", Json::Str(self.kernel.clone())),
+            ("os", Json::Str(self.os.clone())),
+            (
+                "env",
+                Json::Obj(
+                    self.env
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Fingerprint, String> {
+        let s = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("fingerprint missing string {k:?}"))
+        };
+        let env = match v.get("env").and_then(Json::as_obj) {
+            Some(pairs) => pairs
+                .iter()
+                .map(|(k, val)| {
+                    val.as_str()
+                        .map(|x| (k.clone(), x.to_string()))
+                        .ok_or_else(|| format!("env {k:?} is not a string"))
+                })
+                .collect::<Result<Vec<_>, _>>()?,
+            None => Vec::new(),
+        };
+        Ok(Fingerprint {
+            cpu_model: s("cpu_model")?,
+            cpus: v
+                .get("cpus")
+                .and_then(Json::as_u64)
+                .ok_or("fingerprint missing numeric \"cpus\"")?,
+            kernel: s("kernel")?,
+            os: s("os")?,
+            env,
+        })
+    }
+}
+
+fn read_trimmed(path: &str) -> Option<String> {
+    std::fs::read_to_string(path)
+        .ok()
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+}
+
+fn cpu_model() -> Option<String> {
+    let info = std::fs::read_to_string("/proc/cpuinfo").ok()?;
+    info.lines()
+        .find(|l| l.starts_with("model name"))
+        .and_then(|l| l.split(':').nth(1))
+        .map(|s| s.trim().to_string())
+}
+
+/// One experiment run's full snapshot: fingerprint + sweep spec +
+/// every measured cell.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchReport {
+    /// Experiment id, e.g. `"fig15"` — names the snapshot file.
+    pub fig: String,
+    /// Seconds since the Unix epoch at capture.
+    pub unix_time: u64,
+    pub fingerprint: Fingerprint,
+    /// The sweep configuration (table spec, workload, durations, ...),
+    /// recorded as ordered string pairs so foreign snapshots stay
+    /// readable even when the spec grows new keys.
+    pub spec: Vec<(String, String)>,
+    pub cells: Vec<CellResult>,
+}
+
+impl BenchReport {
+    /// New report for experiment `fig`, capturing the machine
+    /// fingerprint and wall-clock time now.
+    pub fn new<I, K, V>(fig: &str, spec: I) -> BenchReport
+    where
+        I: IntoIterator<Item = (K, V)>,
+        K: Into<String>,
+        V: ToString,
+    {
+        let unix_time = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        BenchReport {
+            fig: fig.to_string(),
+            unix_time,
+            fingerprint: Fingerprint::capture(),
+            spec: spec
+                .into_iter()
+                .map(|(k, v)| (k.into(), v.to_string()))
+                .collect(),
+            cells: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, cell: CellResult) {
+        self.cells.push(cell);
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::Num(SNAPSHOT_VERSION as f64)),
+            ("fig", Json::Str(self.fig.clone())),
+            ("unix_time", Json::Num(self.unix_time as f64)),
+            ("fingerprint", self.fingerprint.to_json()),
+            (
+                "spec",
+                Json::Obj(
+                    self.spec
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                        .collect(),
+                ),
+            ),
+            (
+                "cells",
+                Json::Arr(self.cells.iter().map(CellResult::to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<BenchReport, String> {
+        let version = v
+            .get("version")
+            .and_then(Json::as_u64)
+            .ok_or("snapshot missing numeric \"version\"")?;
+        if version != SNAPSHOT_VERSION {
+            return Err(format!(
+                "unsupported snapshot version {version} (expected \
+                 {SNAPSHOT_VERSION})"
+            ));
+        }
+        let fig = v
+            .get("fig")
+            .and_then(Json::as_str)
+            .ok_or("snapshot missing string \"fig\"")?
+            .to_string();
+        let unix_time = v
+            .get("unix_time")
+            .and_then(Json::as_u64)
+            .ok_or("snapshot missing numeric \"unix_time\"")?;
+        let fingerprint = Fingerprint::from_json(
+            v.get("fingerprint").ok_or("snapshot missing \"fingerprint\"")?,
+        )?;
+        let spec = match v.get("spec").and_then(Json::as_obj) {
+            Some(pairs) => pairs
+                .iter()
+                .map(|(k, val)| {
+                    val.as_str()
+                        .map(|s| (k.clone(), s.to_string()))
+                        .ok_or_else(|| format!("spec {k:?} is not a string"))
+                })
+                .collect::<Result<Vec<_>, _>>()?,
+            None => Vec::new(),
+        };
+        let cells = v
+            .get("cells")
+            .and_then(Json::as_arr)
+            .ok_or("snapshot missing \"cells\" array")?
+            .iter()
+            .map(CellResult::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(BenchReport { fig, unix_time, fingerprint, spec, cells })
+    }
+
+    /// Render the snapshot document (pretty JSON + trailing newline).
+    pub fn render(&self) -> String {
+        self.to_json().render()
+    }
+
+    /// Parse a snapshot document.
+    pub fn parse(text: &str) -> Result<BenchReport, String> {
+        let v = Json::parse(text).map_err(|e| e.to_string())?;
+        BenchReport::from_json(&v)
+    }
+
+    /// The file name this report snapshots to: `BENCH_<fig>.json`.
+    pub fn file_name(&self) -> String {
+        format!("BENCH_{}.json", self.fig)
+    }
+
+    /// Write the snapshot into `dir`, returning the path written.
+    pub fn write_to(&self, dir: &Path) -> io::Result<PathBuf> {
+        let path = dir.join(self.file_name());
+        std::fs::write(&path, self.render())?;
+        Ok(path)
+    }
+}
+
+/// True when the process was asked to write snapshots: either
+/// `CRH_BENCH_JSON=1` (any of `1`/`true`/`yes`) or a literal `--json`
+/// argument (works for both the `crh` CLI and the
+/// `cargo bench ... -- --json` harness mains).
+pub fn snapshot_enabled() -> bool {
+    let env_on = std::env::var("CRH_BENCH_JSON")
+        .map(|v| matches!(v.as_str(), "1" | "true" | "yes"))
+        .unwrap_or(false);
+    env_on || std::env::args().any(|a| a == "--json")
+}
+
+/// Directory snapshots are written into: `CRH_BENCH_JSON_DIR` if set,
+/// else the current directory.
+pub fn snapshot_dir() -> PathBuf {
+    std::env::var("CRH_BENCH_JSON_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("."))
+}
+
+/// Write `report` to `BENCH_<fig>.json` when snapshots are enabled
+/// (see [`snapshot_enabled`]); prints the path written. A write
+/// failure is reported but never takes the benchmark down with it.
+pub fn write_if_enabled(report: &BenchReport) -> Option<PathBuf> {
+    if !snapshot_enabled() {
+        return None;
+    }
+    match report.write_to(&snapshot_dir()) {
+        Ok(path) => {
+            println!("# wrote snapshot {}", path.display());
+            Some(path)
+        }
+        Err(e) => {
+            eprintln!(
+                "warning: failed to write {}: {e}",
+                report.file_name()
+            );
+            None
+        }
+    }
+}
+
+/// Read and parse a snapshot file.
+pub fn read_snapshot(path: &Path) -> Result<BenchReport, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    BenchReport::parse(&text)
+        .map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// How one cell moved between two snapshots.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CellClass {
+    /// Within the threshold band (or no comparable metric).
+    Ok,
+    /// Primary metric worsened by more than the threshold.
+    Regressed,
+    /// Primary metric improved by more than the threshold.
+    Improved,
+    /// Present in the baseline, absent from the new snapshot.
+    Missing,
+    /// Present only in the new snapshot.
+    New,
+}
+
+/// One row of a [`Comparison`].
+#[derive(Clone, Debug)]
+pub struct CellDelta {
+    pub id: String,
+    pub class: CellClass,
+    /// Primary metric values (baseline, new) and their new/old ratio —
+    /// `None` where the side or the metric is absent.
+    pub old: Option<f64>,
+    pub new: Option<f64>,
+    pub ratio: Option<f64>,
+    /// Secondary observations (e.g. a p99 tail-latency move on a cell
+    /// whose primary metric is throughput). Never fatal on their own.
+    pub notes: Vec<String>,
+}
+
+/// Result of comparing two snapshots of the same experiment.
+#[derive(Clone, Debug)]
+pub struct Comparison {
+    pub fig: String,
+    /// Fingerprint fields that differ (warn: the machines or `CRH_*`
+    /// knobs were not identical, so deltas may not be meaningful).
+    pub fingerprint_diffs: Vec<String>,
+    pub deltas: Vec<CellDelta>,
+}
+
+impl Comparison {
+    pub fn count(&self, class: CellClass) -> usize {
+        self.deltas.iter().filter(|d| d.class == class).count()
+    }
+
+    /// True when any cell regressed — the condition `crh
+    /// bench-compare` exits non-zero on.
+    pub fn has_regressions(&self) -> bool {
+        self.count(CellClass::Regressed) > 0
+    }
+
+    /// Human-readable report (one line per non-Ok cell plus a summary).
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "# bench-compare {}: {} baseline cell(s) vs {} new cell(s)",
+            self.fig,
+            self.deltas
+                .iter()
+                .filter(|d| d.class != CellClass::New)
+                .count(),
+            self.deltas
+                .iter()
+                .filter(|d| d.class != CellClass::Missing)
+                .count(),
+        );
+        for diff in &self.fingerprint_diffs {
+            let _ = writeln!(out, "warning: fingerprint mismatch: {diff}");
+        }
+        for d in &self.deltas {
+            let tag = match d.class {
+                CellClass::Ok => continue,
+                CellClass::Regressed => "REGRESSED",
+                CellClass::Improved => "improved",
+                CellClass::Missing => "missing",
+                CellClass::New => "new",
+            };
+            let _ = write!(out, "{tag:<9} {}", d.id);
+            if let (Some(o), Some(n), Some(r)) = (d.old, d.new, d.ratio) {
+                let _ = write!(out, "  {o:.3} -> {n:.3} ({r:.2}x)");
+            }
+            let _ = writeln!(out);
+        }
+        for d in &self.deltas {
+            for note in &d.notes {
+                let _ = writeln!(out, "note: {}: {note}", d.id);
+            }
+        }
+        let _ = writeln!(
+            out,
+            "summary: {} ok, {} regressed, {} improved, {} missing, {} new",
+            self.count(CellClass::Ok),
+            self.count(CellClass::Regressed),
+            self.count(CellClass::Improved),
+            self.count(CellClass::Missing),
+            self.count(CellClass::New),
+        );
+        out
+    }
+}
+
+/// The primary comparable metric of a cell: median throughput when
+/// present (higher is better), else p99 latency (lower is better).
+fn primary_metric(cell: &CellResult) -> Option<(f64, bool)> {
+    if let Some(s) = cell.ops_per_us {
+        Some((s.median, true))
+    } else {
+        cell.latency.map(|l| (l.p99_ns as f64, false))
+    }
+}
+
+/// Compare `new` against the `old` baseline with the default
+/// [`REGRESSION_THRESHOLD`].
+pub fn compare(old: &BenchReport, new: &BenchReport) -> Comparison {
+    compare_with(old, new, REGRESSION_THRESHOLD)
+}
+
+/// Compare with an explicit threshold (fraction, e.g. `0.15`).
+pub fn compare_with(
+    old: &BenchReport,
+    new: &BenchReport,
+    threshold: f64,
+) -> Comparison {
+    let mut deltas = Vec::new();
+    let mut matched: Vec<&CellResult> = Vec::new();
+    for old_cell in &old.cells {
+        let id = old_cell.id();
+        let Some(new_cell) = new.cells.iter().find(|c| c.id() == id) else {
+            deltas.push(CellDelta {
+                id,
+                class: CellClass::Missing,
+                old: primary_metric(old_cell).map(|(v, _)| v),
+                new: None,
+                ratio: None,
+                notes: Vec::new(),
+            });
+            continue;
+        };
+        matched.push(new_cell);
+        deltas.push(classify(old_cell, new_cell, threshold));
+    }
+    for new_cell in &new.cells {
+        if !matched.iter().any(|c| std::ptr::eq(*c, new_cell)) {
+            deltas.push(CellDelta {
+                id: new_cell.id(),
+                class: CellClass::New,
+                old: None,
+                new: primary_metric(new_cell).map(|(v, _)| v),
+                ratio: None,
+                notes: Vec::new(),
+            });
+        }
+    }
+    Comparison {
+        fig: new.fig.clone(),
+        fingerprint_diffs: old.fingerprint.diff(&new.fingerprint),
+        deltas,
+    }
+}
+
+fn classify(
+    old: &CellResult,
+    new: &CellResult,
+    threshold: f64,
+) -> CellDelta {
+    let id = old.id();
+    let mut notes = Vec::new();
+    // A p99 move on a throughput cell is worth surfacing even though
+    // the gate runs on throughput (tail noise is high; warn, don't fail).
+    if let (Some(a), Some(b)) = (old.latency, new.latency) {
+        if old.ops_per_us.is_some()
+            && a.p99_ns > 0
+            && b.p99_ns as f64 > (1.0 + threshold) * a.p99_ns as f64
+        {
+            notes.push(format!(
+                "p99 latency rose {} -> {} ns",
+                a.p99_ns, b.p99_ns
+            ));
+        }
+    }
+    let (class, old_v, new_v, ratio) = match (
+        primary_metric(old),
+        primary_metric(new),
+    ) {
+        (Some((o, higher_better)), Some((n, _))) if o > 0.0 => {
+            let ratio = n / o;
+            let (lo, hi) = (1.0 - threshold, 1.0 + threshold);
+            let class = if higher_better {
+                if ratio < lo {
+                    CellClass::Regressed
+                } else if ratio > hi {
+                    CellClass::Improved
+                } else {
+                    CellClass::Ok
+                }
+            } else if ratio > hi {
+                CellClass::Regressed
+            } else if ratio < lo {
+                CellClass::Improved
+            } else {
+                CellClass::Ok
+            };
+            (class, Some(o), Some(n), Some(ratio))
+        }
+        (o, n) => {
+            (CellClass::Ok, o.map(|(v, _)| v), n.map(|(v, _)| v), None)
+        }
+    };
+    CellDelta { id, class, old: old_v, new: new_v, ratio, notes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(labels: &[(&str, &str)], ops: f64) -> CellResult {
+        CellResult::new(labels.iter().copied())
+            .with_ops(Stat::from_samples(&[ops * 0.97, ops, ops * 1.02]))
+    }
+
+    fn report(fig: &str, cells: Vec<CellResult>) -> BenchReport {
+        let mut r = BenchReport::new(fig, [("size_log2", "14")]);
+        r.cells = cells;
+        r
+    }
+
+    #[test]
+    fn stat_aggregates_samples() {
+        let s = Stat::from_samples(&[3.0, 1.0, 2.0]);
+        assert_eq!(
+            s,
+            Stat { min: 1.0, median: 2.0, max: 3.0, reps: 3 }
+        );
+        let even = Stat::from_samples(&[4.0, 1.0]);
+        assert_eq!(even.median, 2.5);
+        assert_eq!(even.reps, 2);
+        assert_eq!(Stat::from_samples(&[7.0]).median, 7.0);
+    }
+
+    #[test]
+    fn cell_ids_join_labels_in_order() {
+        let c = cell(&[("engine", "incremental"), ("threads", "2")], 1.0);
+        assert_eq!(c.id(), "engine=incremental/threads=2");
+    }
+
+    #[test]
+    fn report_round_trips_through_json() {
+        let mut r = report(
+            "fig15",
+            vec![
+                cell(&[("engine", "inc\"remental"), ("threads", "2")], 9.5)
+                    .with_latency(LatencySummary {
+                        p50_ns: 724,
+                        p99_ns: 11585,
+                        p999_ns: 46341,
+                        max_ns: 812345,
+                    })
+                    .with_extra("grows", 2.0),
+                cell(&[("engine", "quiescing"), ("threads", "2")], 8.25),
+            ],
+        );
+        r.spec.push(("note".into(), "uni\u{00e9}code".into()));
+        let parsed = BenchReport::parse(&r.render()).expect("parse");
+        assert_eq!(parsed, r);
+    }
+
+    #[test]
+    fn parse_rejects_foreign_versions_and_garbage() {
+        assert!(BenchReport::parse("{}").is_err());
+        assert!(BenchReport::parse("not json").is_err());
+        let mut r = report("fig15", vec![]);
+        let bumped = r
+            .render()
+            .replace("\"version\": 1", "\"version\": 999");
+        assert!(BenchReport::parse(&bumped).is_err());
+        // And a well-formed empty report parses.
+        r.cells.clear();
+        assert!(BenchReport::parse(&r.render()).is_ok());
+    }
+
+    #[test]
+    fn identical_snapshots_compare_clean() {
+        let r = report(
+            "fig15",
+            vec![cell(&[("t", "1")], 10.0), cell(&[("t", "2")], 17.5)],
+        );
+        let cmp = compare(&r, &r.clone());
+        assert!(!cmp.has_regressions());
+        assert_eq!(cmp.count(CellClass::Ok), 2);
+        assert!(cmp.fingerprint_diffs.is_empty());
+    }
+
+    #[test]
+    fn compare_classifies_every_case() {
+        let old = report(
+            "fig13",
+            vec![
+                cell(&[("t", "reg")], 10.0),
+                cell(&[("t", "imp")], 10.0),
+                cell(&[("t", "flat")], 10.0),
+                cell(&[("t", "gone")], 10.0),
+            ],
+        );
+        let new = report(
+            "fig13",
+            vec![
+                cell(&[("t", "reg")], 8.0),   // 0.80x < 0.85 -> regressed
+                cell(&[("t", "imp")], 12.0),  // 1.20x > 1.15 -> improved
+                cell(&[("t", "flat")], 10.5), // within band
+                cell(&[("t", "fresh")], 5.0), // only in new
+            ],
+        );
+        let cmp = compare(&old, &new);
+        let class_of = |id: &str| {
+            cmp.deltas
+                .iter()
+                .find(|d| d.id == format!("t={id}"))
+                .unwrap()
+                .class
+        };
+        assert_eq!(class_of("reg"), CellClass::Regressed);
+        assert_eq!(class_of("imp"), CellClass::Improved);
+        assert_eq!(class_of("flat"), CellClass::Ok);
+        assert_eq!(class_of("gone"), CellClass::Missing);
+        assert_eq!(class_of("fresh"), CellClass::New);
+        assert!(cmp.has_regressions());
+        let text = cmp.render();
+        assert!(text.contains("REGRESSED t=reg"), "{text}");
+        assert!(text.contains("1 regressed"), "{text}");
+        assert!(text.contains("1 missing"), "{text}");
+    }
+
+    #[test]
+    fn threshold_band_is_exclusive() {
+        let old = report("fig13", vec![cell(&[("t", "x")], 100.0)]);
+        let edge = report("fig13", vec![cell(&[("t", "x")], 85.5)]);
+        assert!(!compare(&old, &edge).has_regressions(), "0.855x is in band");
+        let over = report("fig13", vec![cell(&[("t", "x")], 84.0)]);
+        assert!(compare(&old, &over).has_regressions(), "0.84x regressed");
+    }
+
+    #[test]
+    fn latency_only_cells_gate_on_p99_inverted() {
+        let lat = |p99: u64| {
+            CellResult::new([("t", "l")]).with_latency(LatencySummary {
+                p50_ns: 100,
+                p99_ns: p99,
+                p999_ns: 2 * p99,
+                max_ns: 4 * p99,
+            })
+        };
+        let old = report("fig15", vec![lat(1000)]);
+        let slower = report("fig15", vec![lat(1300)]);
+        let cmp = compare(&old, &slower);
+        assert!(cmp.has_regressions(), "p99 +30% must regress");
+        let faster = report("fig15", vec![lat(700)]);
+        assert_eq!(
+            compare(&old, &faster).count(CellClass::Improved),
+            1,
+            "p99 -30% must improve"
+        );
+    }
+
+    #[test]
+    fn tail_move_on_throughput_cell_is_a_note_not_a_failure() {
+        let mk = |p99: u64| {
+            report(
+                "fig15",
+                vec![cell(&[("t", "x")], 10.0).with_latency(
+                    LatencySummary {
+                        p50_ns: 10,
+                        p99_ns: p99,
+                        p999_ns: p99 * 2,
+                        max_ns: p99 * 4,
+                    },
+                )],
+            )
+        };
+        let cmp = compare(&mk(1000), &mk(2000));
+        assert!(!cmp.has_regressions());
+        assert!(cmp.render().contains("p99 latency rose"), "{}", cmp.render());
+    }
+
+    #[test]
+    fn fingerprint_mismatch_is_warned() {
+        let a = report("fig15", vec![]);
+        let mut b = a.clone();
+        b.fingerprint.cpu_model = "Other CPU".into();
+        b.fingerprint.env.push(("CRH_BENCH_MS".into(), "9".into()));
+        let diffs = a.fingerprint.diff(&b.fingerprint);
+        assert_eq!(diffs.len(), 2, "{diffs:?}");
+        let cmp = compare(&a, &b);
+        assert!(cmp.render().contains("fingerprint mismatch"), "{:?}", diffs);
+        assert!(!cmp.has_regressions());
+    }
+
+    #[test]
+    fn snapshot_writes_and_reads_back() {
+        let dir = std::env::temp_dir()
+            .join(format!("crh_report_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let r = report("fig15", vec![cell(&[("t", "1")], 3.5)]);
+        let path = r.write_to(&dir).expect("write");
+        assert!(path.ends_with("BENCH_fig15.json"));
+        let back = read_snapshot(&path).expect("read");
+        assert_eq!(back, r);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fingerprint_capture_is_populated() {
+        let fp = Fingerprint::capture();
+        assert!(fp.cpus >= 1);
+        assert!(!fp.os.is_empty());
+        assert!(fp.env.windows(2).all(|w| w[0].0 <= w[1].0), "env sorted");
+    }
+}

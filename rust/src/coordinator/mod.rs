@@ -1,9 +1,17 @@
 //! Experiment coordinator: one entry point per paper figure/table,
 //! plus ad-hoc benchmark cells and the probe-statistics analysis that
 //! runs through the PJRT engine. The CLI in `main.rs` dispatches here.
+//!
+//! Every figure/table entry point measures into typed
+//! [`CellResult`]s and returns a [`BenchReport`]; the human-readable
+//! tables print *from* those cells, and the callers (bench mains, the
+//! CLI) hand the same report to `bench::report::write_if_enabled` so a
+//! `CRH_BENCH_JSON=1` / `--json` run leaves a `BENCH_<fig>.json`
+//! perf-trajectory snapshot behind.
 
 use std::time::Duration;
 
+use crate::bench::report::{BenchReport, CellResult, LatencySummary, Stat};
 use crate::bench::{driver, workload::{KeyDist, WorkloadCfg}, Mix};
 use crate::cachesim;
 use crate::maps::{MapKind, TableKind};
@@ -19,7 +27,9 @@ pub struct ExpOpts {
     pub threads: Vec<usize>,
     /// Pin threads to cores.
     pub pin: bool,
-    /// Repetitions per cell (paper: 5).
+    /// Repetitions per cell (paper: 5). Cells record min/median/max
+    /// across reps and the tables print the median, so one scheduler
+    /// hiccup cannot become the recorded number.
     pub reps: u32,
 }
 
@@ -45,30 +55,54 @@ impl Default for ExpOpts {
             duration_ms: 2000,
             threads,
             pin: true,
-            reps: 1,
+            reps: 3,
         }
     }
 }
 
-fn mean_ops_per_us(
+/// The sweep options every snapshot records as its `spec`.
+fn opts_spec(opts: &ExpOpts) -> Vec<(String, String)> {
+    vec![
+        ("size_log2".to_string(), opts.size_log2.to_string()),
+        ("duration_ms".to_string(), opts.duration_ms.to_string()),
+        (
+            "threads".to_string(),
+            opts.threads
+                .iter()
+                .map(|t| t.to_string())
+                .collect::<Vec<_>>()
+                .join(","),
+        ),
+        ("pin".to_string(), opts.pin.to_string()),
+        ("reps".to_string(), opts.reps.to_string()),
+    ]
+}
+
+/// Measure one set-workload cell `reps` times (distinct seeds) and
+/// aggregate to min/median/max ops/µs.
+fn ops_stat(
     kind: TableKind,
     cfg: &WorkloadCfg,
     threads: usize,
     pin: bool,
     reps: u32,
-) -> f64 {
-    let mut total = 0.0;
-    for rep in 0..reps {
-        let mut c = *cfg;
-        c.seed = cfg.seed.wrapping_add(rep as u64);
-        total += driver::run(kind, &c, threads, pin).ops_per_us();
-    }
-    total / reps as f64
+) -> Stat {
+    let samples: Vec<f64> = (0..reps.max(1))
+        .map(|rep| {
+            let mut c = *cfg;
+            c.seed = cfg.seed.wrapping_add(rep as u64);
+            driver::run(kind, &c, threads, pin).ops_per_us()
+        })
+        .collect();
+    Stat::from_samples(&samples)
 }
 
 /// **Figure 10**: single-core throughput of every table relative to
-/// K-CAS Robin Hood across the 8 workload configurations.
-pub fn fig10(opts: &ExpOpts) {
+/// K-CAS Robin Hood across the 8 workload configurations. Snapshot
+/// cells store *absolute* ops/µs stats; the printed table derives the
+/// relative percentages from the cell medians.
+pub fn fig10(opts: &ExpOpts) -> BenchReport {
+    let mut report = BenchReport::new("fig10", opts_spec(opts));
     println!("# Figure 10 — single-core relative performance (K-CAS RH = 100%)");
     println!(
         "# table 2^{} buckets, {} ms/cell, {} rep(s)",
@@ -80,10 +114,10 @@ pub fn fig10(opts: &ExpOpts) {
         print!(" {:>11}", cfg.label());
     }
     println!();
-    let base: Vec<f64> = grid
+    let base: Vec<Stat> = grid
         .iter()
         .map(|cfg| {
-            mean_ops_per_us(TableKind::KCasRobinHood, cfg, 1, opts.pin, opts.reps)
+            ops_stat(TableKind::KCasRobinHood, cfg, 1, opts.pin, opts.reps)
         })
         .collect();
     let mut kinds = vec![TableKind::KCasRobinHood];
@@ -96,25 +130,37 @@ pub fn fig10(opts: &ExpOpts) {
     for kind in kinds {
         print!("{:<18}", kind.display());
         for (cfg, b) in grid.iter().zip(&base) {
-            let v = if kind == TableKind::KCasRobinHood {
+            let stat = if kind == TableKind::KCasRobinHood {
                 *b
             } else {
-                mean_ops_per_us(kind, cfg, 1, opts.pin, opts.reps)
+                ops_stat(kind, cfg, 1, opts.pin, opts.reps)
             };
-            print!(" {:>10.0}%", 100.0 * v / b);
+            print!(" {:>10.0}%", 100.0 * stat.median / b.median);
+            report.push(
+                CellResult::new([
+                    ("config", cfg.label()),
+                    ("table", kind.name()),
+                ])
+                .with_ops(stat),
+            );
         }
         println!();
     }
+    report
 }
 
 /// One throughput table: header row of thread counts, one row per
-/// table kind, `mean_ops_per_us` per cell (shared by Figs. 11-13).
+/// table kind, one measured [`Stat`] per cell (shared by Figs. 11-13).
+/// The table prints the median; the full stat lands in `report` under
+/// `panel` labels + `table`/`threads`.
 fn throughput_panel(
     rows: &[TableKind],
     cfg: &WorkloadCfg,
     opts: &ExpOpts,
     label: &str,
     width: usize,
+    panel: &[(String, String)],
+    report: &mut BenchReport,
 ) {
     print!("{label:<width$}");
     for &t in &opts.threads {
@@ -124,15 +170,25 @@ fn throughput_panel(
     for &kind in rows {
         print!("{:<width$}", kind.display());
         for &t in &opts.threads {
-            let v = mean_ops_per_us(kind, cfg, t, opts.pin, opts.reps);
-            print!(" {v:>9.2}");
+            let stat = ops_stat(kind, cfg, t, opts.pin, opts.reps);
+            print!(" {:>9.2}", stat.median);
+            let mut labels = panel.to_vec();
+            labels.push(("table".to_string(), kind.name()));
+            labels.push(("threads".to_string(), t.to_string()));
+            report.push(CellResult::new(labels).with_ops(stat));
         }
         println!();
     }
 }
 
 /// Scaling panels shared by Figures 11 and 12.
-fn scaling_panels(opts: &ExpOpts, lfs: &[f64], figure: &str) {
+fn scaling_panels(
+    opts: &ExpOpts,
+    lfs: &[f64],
+    figure: &str,
+    fig_id: &str,
+) -> BenchReport {
+    let mut report = BenchReport::new(fig_id, opts_spec(opts));
     println!(
         "# {figure} — throughput (ops/us) vs threads; table 2^{}, {} ms/cell",
         opts.size_log2, opts.duration_ms
@@ -151,25 +207,32 @@ fn scaling_panels(opts: &ExpOpts, lfs: &[f64], figure: &str) {
                 (lf * 100.0) as u32,
                 mix.update_pct
             );
+            let panel = vec![
+                ("lf".to_string(), ((lf * 100.0) as u32).to_string()),
+                ("updates".to_string(), mix.update_pct.to_string()),
+            ];
             throughput_panel(
                 &TableKind::ALL_CONCURRENT,
                 &cfg,
                 opts,
                 "threads",
                 18,
+                &panel,
+                &mut report,
             );
         }
     }
+    report
 }
 
 /// **Figure 11**: scaling at 20% and 40% load factor.
-pub fn fig11(opts: &ExpOpts) {
-    scaling_panels(opts, &[0.2, 0.4], "Figure 11");
+pub fn fig11(opts: &ExpOpts) -> BenchReport {
+    scaling_panels(opts, &[0.2, 0.4], "Figure 11", "fig11")
 }
 
 /// **Figure 12**: scaling at 60% and 80% load factor.
-pub fn fig12(opts: &ExpOpts) {
-    scaling_panels(opts, &[0.6, 0.8], "Figure 12");
+pub fn fig12(opts: &ExpOpts) -> BenchReport {
+    scaling_panels(opts, &[0.6, 0.8], "Figure 12", "fig12")
 }
 
 /// **Figure 13** (extension): the sharding sweep — throughput of the
@@ -178,7 +241,8 @@ pub fn fig12(opts: &ExpOpts) {
 /// with the unsharded K-CAS Robin Hood table as the baseline row.
 /// Sharded rows keep the *total* capacity equal to the baseline, so
 /// every row runs at the same load factor.
-pub fn fig13_sharding(opts: &ExpOpts, shard_counts: &[u32]) {
+pub fn fig13_sharding(opts: &ExpOpts, shard_counts: &[u32]) -> BenchReport {
+    let mut report = BenchReport::new("fig13", opts_spec(opts));
     println!(
         "# Figure 13 — sharded K-CAS RH throughput (ops/us) vs threads; \
          table 2^{} total, {} ms/cell, {} rep(s)",
@@ -228,8 +292,21 @@ pub fn fig13_sharding(opts: &ExpOpts, shard_counts: &[u32]) {
             (lf * 100.0) as u32,
             Mix::LIGHT.update_pct
         );
-        throughput_panel(&rows, &cfg, opts, "table \\ threads", 26);
+        let panel = vec![
+            ("lf".to_string(), ((lf * 100.0) as u32).to_string()),
+            ("updates".to_string(), Mix::LIGHT.update_pct.to_string()),
+        ];
+        throughput_panel(
+            &rows,
+            &cfg,
+            opts,
+            "table \\ threads",
+            26,
+            &panel,
+            &mut report,
+        );
     }
+    report
 }
 
 /// **Figure 14** (extension): the batching sweep — throughput of the
@@ -238,8 +315,13 @@ pub fn fig13_sharding(opts: &ExpOpts, shard_counts: &[u32]) {
 /// the unbatched op-by-op map calls as the baseline row. One panel per
 /// update mix at the paper's 60% load factor; every cell rebuilds and
 /// prefills the same [`MapKind`] so rows differ only in batching.
-pub fn fig14_batching(opts: &ExpOpts, map: MapKind, batch_sizes: &[usize]) {
+pub fn fig14_batching(
+    opts: &ExpOpts,
+    map: MapKind,
+    batch_sizes: &[usize],
+) -> BenchReport {
     use crate::service::batch::{prefill_map, run_batched};
+    let mut report = BenchReport::new("fig14", opts_spec(opts));
     println!(
         "# Figure 14 — batched map pipeline throughput (ops/us) vs threads; \
          {} 2^{} total, {} ms/cell, {} rep(s)",
@@ -288,20 +370,38 @@ pub fn fig14_batching(opts: &ExpOpts, map: MapKind, batch_sizes: &[usize]) {
             };
             print!("{label:<18}");
             for &t in &opts.threads {
-                let mut total = 0.0;
-                for rep in 0..opts.reps {
-                    let mut c = cfg;
-                    c.seed = cfg.seed.wrapping_add(rep as u64);
-                    let m = map.build(c.size_log2);
-                    prefill_map(m.as_ref(), &c);
-                    total += run_batched(m.as_ref(), &c, t, batch, opts.pin)
-                        .ops_per_us();
-                }
-                print!(" {:>9.2}", total / opts.reps as f64);
+                let samples: Vec<f64> = (0..opts.reps.max(1))
+                    .map(|rep| {
+                        let mut c = cfg;
+                        c.seed = cfg.seed.wrapping_add(rep as u64);
+                        let m = map.build(c.size_log2);
+                        prefill_map(m.as_ref(), &c);
+                        run_batched(m.as_ref(), &c, t, batch, opts.pin)
+                            .ops_per_us()
+                    })
+                    .collect();
+                let stat = Stat::from_samples(&samples);
+                print!(" {:>9.2}", stat.median);
+                report.push(
+                    CellResult::new([
+                        ("updates", mix.update_pct.to_string()),
+                        (
+                            "batch",
+                            if batch == 0 {
+                                "unbatched".to_string()
+                            } else {
+                                batch.to_string()
+                            },
+                        ),
+                        ("threads", t.to_string()),
+                    ])
+                    .with_ops(stat),
+                );
             }
             println!();
         }
     }
+    report
 }
 
 /// **Figure 15** (extension): the resize-engine comparison — per-op
@@ -314,11 +414,12 @@ pub fn fig14_batching(opts: &ExpOpts, map: MapKind, batch_sizes: &[usize]) {
 /// more grows fire mid-measurement; every op's latency is recorded.
 /// The quiescing engine's tail shows the stop-the-table rebuild; the
 /// incremental engine's tail shows only the per-op helping stripe.
-pub fn fig15_resize(opts: &ExpOpts, grow_ats: &[f64]) {
+pub fn fig15_resize(opts: &ExpOpts, grow_ats: &[f64]) -> BenchReport {
     use crate::bench::driver::{run_latency, LatencyCfg, LatencyHist};
     use crate::maps::resizable::{IncResizableRobinHood, QuiescingResize};
     use crate::maps::ConcurrentSet;
 
+    let mut report = BenchReport::new("fig15", opts_spec(opts));
     println!(
         "# Figure 15 — resize engines: op latency during migration; \
          table 2^{} initial, {} ms/cell, {} rep(s), 45% add / 10% rem",
@@ -340,9 +441,9 @@ pub fn fig15_resize(opts: &ExpOpts, grow_ats: &[f64]) {
             for inc in [false, true] {
                 let label = if inc { "incremental" } else { "quiescing" };
                 let mut hist = LatencyHist::new();
-                let mut ops_us = 0.0;
+                let mut samples = Vec::new();
                 let mut grows = 0u32;
-                for rep in 0..opts.reps {
+                for rep in 0..opts.reps.max(1) {
                     let table: Box<dyn ConcurrentSet> = if inc {
                         Box::new(IncResizableRobinHood::with_threshold(
                             opts.size_log2,
@@ -369,7 +470,7 @@ pub fn fig15_resize(opts: &ExpOpts, grow_ats: &[f64]) {
                     };
                     let (r, h) = run_latency(table.as_ref(), &cfg, threads);
                     hist.merge(&h);
-                    ops_us += r.ops_per_us();
+                    samples.push(r.ops_per_us());
                     grows += (table.capacity() / cap0).trailing_zeros();
                 }
                 let note = if grows == 0 {
@@ -377,21 +478,34 @@ pub fn fig15_resize(opts: &ExpOpts, grow_ats: &[f64]) {
                 } else {
                     ""
                 };
+                let stat = Stat::from_samples(&samples);
+                let lat = LatencySummary::from_hist(&hist);
                 println!(
                     "{:<14} {:>4} {:>10.2} {:>9} {:>9} {:>9} {:>11} {:>8}{}",
                     label,
                     threads,
-                    ops_us / opts.reps as f64,
-                    us(hist.quantile_ns(0.5)),
-                    us(hist.quantile_ns(0.99)),
-                    us(hist.quantile_ns(0.999)),
-                    us(hist.max_ns()),
+                    stat.median,
+                    us(lat.p50_ns),
+                    us(lat.p99_ns),
+                    us(lat.p999_ns),
+                    us(lat.max_ns),
                     grows,
                     note
+                );
+                report.push(
+                    CellResult::new([
+                        ("grow_at", format!("{grow_at}")),
+                        ("engine", label.to_string()),
+                        ("threads", threads.to_string()),
+                    ])
+                    .with_ops(stat)
+                    .with_latency(lat)
+                    .with_extra("grows", grows as f64),
                 );
             }
         }
     }
+    report
 }
 
 /// **Figure 16** (extension): the conditional-RMW comparison — the
@@ -403,8 +517,13 @@ pub fn fig15_resize(opts: &ExpOpts, grow_ats: &[f64]) {
 /// *verifies* the primitives: the committed-increment count must equal
 /// the final counter sum, or the cell panics — the experiment measures
 /// the new API and proves its atomicity in the same run.
-pub fn fig16_rmw(opts: &ExpOpts, maps: &[MapKind], hot_keys: &[u64]) {
+pub fn fig16_rmw(
+    opts: &ExpOpts,
+    maps: &[MapKind],
+    hot_keys: &[u64],
+) -> BenchReport {
     use crate::service::batch::{rmw_counter_sum, run_rmw};
+    let mut report = BenchReport::new("fig16", opts_spec(opts));
     println!(
         "# Figure 16 — conditional RMW throughput under contention skew; \
          maps 2^{} buckets, {} ms/cell, {} rep(s)",
@@ -426,10 +545,10 @@ pub fn fig16_rmw(opts: &ExpOpts, maps: &[MapKind], hot_keys: &[u64]) {
         );
         for &kind in maps {
             for &threads in &opts.threads {
-                let mut ops_us = 0.0;
+                let mut samples = Vec::new();
                 let mut attempts = 0u64;
                 let mut fails = 0u64;
-                for rep in 0..opts.reps {
+                for rep in 0..opts.reps.max(1) {
                     let m = kind.build(opts.size_log2);
                     let r = run_rmw(
                         m.as_ref(),
@@ -450,7 +569,7 @@ pub fn fig16_rmw(opts: &ExpOpts, maps: &[MapKind], hot_keys: &[u64]) {
                         kind.name(),
                         r.incs
                     );
-                    ops_us += r.run.ops_per_us();
+                    samples.push(r.run.ops_per_us());
                     attempts += r.cas_attempts;
                     fails += r.cas_failures;
                 }
@@ -459,27 +578,28 @@ pub fn fig16_rmw(opts: &ExpOpts, maps: &[MapKind], hot_keys: &[u64]) {
                 } else {
                     100.0 * fails as f64 / attempts as f64
                 };
+                let stat = Stat::from_samples(&samples);
                 println!(
                     "{:<26} {:>4} {:>10.2} {:>9.1}% {:>9}",
                     kind.display(),
                     threads,
-                    ops_us / opts.reps as f64,
+                    stat.median,
                     fail_pct,
                     "OK"
+                );
+                report.push(
+                    CellResult::new([
+                        ("hot_keys", keys.to_string()),
+                        ("map", kind.name()),
+                        ("threads", threads.to_string()),
+                    ])
+                    .with_ops(stat)
+                    .with_extra("cas_fail_pct", fail_pct),
                 );
             }
         }
     }
-}
-
-/// One measured cell of the Figure 17 front-end sweep.
-pub struct Fig17Cell {
-    pub backend: &'static str,
-    /// Event-loop workers (0 for the thread-per-connection backend,
-    /// which has no worker pool — it spawns two threads per socket).
-    pub workers: usize,
-    pub conns: usize,
-    pub kops_per_s: f64,
+    report
 }
 
 /// Key space the fig17 clients draw from (small enough that the
@@ -637,72 +757,120 @@ pub fn fig17_equivalence(size_log2: u32) -> usize {
 /// differ only in how sockets are multiplexed. The equivalence check
 /// runs first: both backends must answer the fixed protocol trace
 /// identically before their throughput is worth comparing.
+///
+/// Each cell is measured `reps` times against a fresh server+map per
+/// rep; the table prints the median in kops/s, while the snapshot cell
+/// stores the stat in ops/µs (kops/s ÷ 1000) so `bench-compare` ratios
+/// stay unit-free across figures.
 pub fn fig17_frontend(
     size_log2: u32,
     conn_counts: &[usize],
     worker_counts: &[usize],
     frames: usize,
     batch: usize,
-) -> Vec<Fig17Cell> {
+    reps: u32,
+) -> BenchReport {
+    let mut report = BenchReport::new(
+        "fig17",
+        vec![
+            ("size_log2".to_string(), size_log2.to_string()),
+            ("frames".to_string(), frames.to_string()),
+            ("batch".to_string(), batch.to_string()),
+            ("depth".to_string(), FIG17_DEPTH.to_string()),
+            ("reps".to_string(), reps.to_string()),
+        ],
+    );
     println!(
         "# Figure 17 — KV front-ends: thread-per-conn vs epoll event loop; \
          sharded-kcas-rh-map:4 2^{size_log2}, {frames} frames/conn x \
-         {batch} ops/frame, pipeline depth {FIG17_DEPTH}"
+         {batch} ops/frame, pipeline depth {FIG17_DEPTH}, {reps} rep(s)"
     );
     let lines = fig17_equivalence(size_log2);
     println!(
         "## equivalence: identical reply transcripts on the fixed op trace \
          ({lines} lines) OK"
     );
-    let mut cells = Vec::new();
     println!(
         "\n{:<18} {:>7} {:>7} {:>12}",
         "backend", "workers", "conns", "kops/s"
     );
     for &conns in conn_counts {
-        let kops = |v: f64| v / 1e3;
         // The threaded backend has no worker knob; measure it once per
-        // connection count.
-        let h = crate::service::server::spawn_server(fig17_map(size_log2))
-            .expect("spawn server");
-        let threaded = fig17_run(h.addr(), conns, frames, batch);
-        h.shutdown();
+        // connection count. One fresh server+map per rep; stored unit
+        // is ops/µs, like every other figure.
+        let samples: Vec<f64> = (0..reps.max(1))
+            .map(|_| {
+                let h = crate::service::server::spawn_server(fig17_map(
+                    size_log2,
+                ))
+                .expect("spawn server");
+                let ops_s = fig17_run(h.addr(), conns, frames, batch);
+                h.shutdown();
+                ops_s / 1e6
+            })
+            .collect();
+        let stat = Stat::from_samples(&samples);
         println!(
             "{:<18} {:>7} {:>7} {:>12.1}",
-            "thread-per-conn", "-", conns, kops(threaded)
-        );
-        cells.push(Fig17Cell {
-            backend: "thread-per-conn",
-            workers: 0,
+            "thread-per-conn",
+            "-",
             conns,
-            kops_per_s: kops(threaded),
-        });
+            stat.median * 1e3
+        );
+        report.push(
+            CellResult::new([
+                ("backend", "thread-per-conn".to_string()),
+                ("workers", "-".to_string()),
+                ("conns", conns.to_string()),
+            ])
+            .with_ops(stat),
+        );
         for &workers in worker_counts {
-            let h = crate::service::reactor::spawn_server_epoll(
-                fig17_map(size_log2),
-                workers,
-            )
-            .expect("spawn reactor");
-            let epoll = fig17_run(h.addr(), conns, frames, batch);
-            h.shutdown();
+            let samples: Vec<f64> = (0..reps.max(1))
+                .map(|_| {
+                    let h = crate::service::reactor::spawn_server_epoll(
+                        fig17_map(size_log2),
+                        workers,
+                    )
+                    .expect("spawn reactor");
+                    let ops_s = fig17_run(h.addr(), conns, frames, batch);
+                    h.shutdown();
+                    ops_s / 1e6
+                })
+                .collect();
+            let stat = Stat::from_samples(&samples);
             println!(
                 "{:<18} {:>7} {:>7} {:>12.1}",
-                "epoll", workers, conns, kops(epoll)
-            );
-            cells.push(Fig17Cell {
-                backend: "epoll",
+                "epoll",
                 workers,
                 conns,
-                kops_per_s: kops(epoll),
-            });
+                stat.median * 1e3
+            );
+            report.push(
+                CellResult::new([
+                    ("backend", "epoll".to_string()),
+                    ("workers", workers.to_string()),
+                    ("conns", conns.to_string()),
+                ])
+                .with_ops(stat),
+            );
         }
     }
-    cells
+    report
 }
 
 /// **Table 1**: simulated cache misses relative to K-CAS Robin Hood
-/// (single core), via the trace models + cache hierarchy.
-pub fn table1(size_log2: u32, ops: u64) {
+/// (single core), via the trace models + cache hierarchy. Snapshot
+/// cells carry the relative miss percentage as an `extra` metric (the
+/// simulator is deterministic, so there is nothing to repeat).
+pub fn table1(size_log2: u32, ops: u64) -> BenchReport {
+    let mut report = BenchReport::new(
+        "table1",
+        vec![
+            ("size_log2".to_string(), size_log2.to_string()),
+            ("ops".to_string(), ops.to_string()),
+        ],
+    );
     println!(
         "# Table 1 — LLC misses relative to K-CAS Robin Hood \
          (cache simulator; table 2^{size_log2}, {ops} ops/cell)"
@@ -724,11 +892,19 @@ pub fn table1(size_log2: u32, ops: u64) {
     for kind in rows {
         let row = cachesim::table1_row(kind, size_log2, ops, &baseline);
         print!("{:<18}", kind.display());
-        for v in row {
+        for (l, v) in labels.iter().zip(&row) {
             print!(" {:>10.0}%", v);
+            report.push(
+                CellResult::new([
+                    ("config", l.clone()),
+                    ("table", kind.name()),
+                ])
+                .with_extra("llc_miss_rel_pct", *v),
+            );
         }
         println!();
     }
+    report
 }
 
 /// Ablation: timestamp shard granularity for K-CAS Robin Hood.

@@ -40,7 +40,11 @@
 //!   socket applied as one hashed batch per wake-up, EPOLLOUT
 //!   backpressure, eventfd shutdown).
 //! * [`bench`] — §4.1 methodology: workload generation, pinned threads,
-//!   barrier-synced timed runs, ops/µs reporting.
+//!   barrier-synced timed runs with per-worker measurement windows,
+//!   ops/µs reporting, and the perf-trajectory layer
+//!   ([`bench::report`]): every figure returns typed per-cell results
+//!   that `CRH_BENCH_JSON=1` / `--json` writes as machine-fingerprinted
+//!   `BENCH_<fig>.json` snapshots, diffable with `crh bench-compare`.
 //! * [`cachesim`] — set-associative cache simulator + per-table memory
 //!   trace models (PAPI substitute for Table 1).
 //! * [`runtime`] — the AOT artifact runtime behind one `Engine`

@@ -25,14 +25,31 @@
 //! crh table1 [--size-log2 N] [--ops N]
 //! crh bench  --table kcas-rh|inc-resize-rh|sharded-kcas-rh:16|...
 //!            [--lf 0.6] [--updates 10] [--threads N] [--ms N] [--zipf]
+//! crh bench-compare <old.json> <new.json>
+//!            (classify every cell of two BENCH_*.json snapshots as
+//!            regressed / improved / ok; exit 1 if any cell regressed
+//!            by more than 15%)
 //! crh analyze [--size-log2 N] [--lf 0.8]       (probe statistics)
 //! crh validate                                  (artifact golden check)
 //! crh smoke
 //! ```
+//!
+//! Every `fig*`/`table1` command measures into a
+//! [`crh::bench::report::BenchReport`]; pass `--json` (or set
+//! `CRH_BENCH_JSON=1`, optionally `CRH_BENCH_JSON_DIR=<dir>`) to also
+//! write the run as a machine-fingerprinted `BENCH_<fig>.json`
+//! perf-trajectory snapshot for later `bench-compare` runs.
 
+use crh::bench::report;
 use crh::coordinator::{self, ExpOpts};
 use crh::maps::{MapKind, TableKind};
 use crh::util::error::Result;
+
+/// Figure epilogue: write the `BENCH_<fig>.json` snapshot when
+/// `--json` / `CRH_BENCH_JSON=1` asks for one.
+fn finish(r: report::BenchReport) {
+    let _ = report::write_if_enabled(&r);
+}
 
 fn parse_flag<T: std::str::FromStr>(args: &[String], name: &str) -> Option<T> {
     args.iter()
@@ -59,8 +76,9 @@ fn usage() -> ! {
     eprintln!(
         "usage: crh <fig10|fig11|fig12|fig13_sharding|fig14_batching|\
          fig15_resize|fig16_rmw|fig17_frontend|serve|table1|bench|\
-         ablate-ts|analyze|validate|smoke> [options]\n\
-         (see `main.rs` docs or README for options)"
+         bench-compare|ablate-ts|analyze|validate|smoke> [options]\n\
+         (figures accept --json / CRH_BENCH_JSON=1 to write a \
+         BENCH_<fig>.json snapshot; see `main.rs` docs or README)"
     );
     std::process::exit(2)
 }
@@ -86,13 +104,13 @@ fn main() -> Result<()> {
     }
 
     match cmd {
-        "fig10" => coordinator::fig10(&opts),
-        "fig11" => coordinator::fig11(&opts),
-        "fig12" => coordinator::fig12(&opts),
+        "fig10" => finish(coordinator::fig10(&opts)),
+        "fig11" => finish(coordinator::fig11(&opts)),
+        "fig12" => finish(coordinator::fig12(&opts)),
         "fig13_sharding" | "fig13" => {
             let shards = parse_list(&args, "--shards")
                 .unwrap_or_else(|| TableKind::SHARD_SWEEP.to_vec());
-            coordinator::fig13_sharding(&opts, &shards);
+            finish(coordinator::fig13_sharding(&opts, &shards));
         }
         "fig14_batching" | "fig14" => {
             let map: String = parse_flag(&args, "--map")
@@ -101,7 +119,7 @@ fn main() -> Result<()> {
                 .unwrap_or_else(|| panic!("unknown map {map}"));
             let batches =
                 parse_list(&args, "--batches").unwrap_or_else(|| vec![1, 8, 64]);
-            coordinator::fig14_batching(&opts, kind, &batches);
+            finish(coordinator::fig14_batching(&opts, kind, &batches));
         }
         "fig15_resize" | "fig15" => {
             // The latency cells rebuild + prefill per rep, so default to
@@ -111,7 +129,7 @@ fn main() -> Result<()> {
             }
             let grow_ats = parse_list(&args, "--grow-ats")
                 .unwrap_or_else(|| vec![0.7, 0.85]);
-            coordinator::fig15_resize(&opts, &grow_ats);
+            finish(coordinator::fig15_resize(&opts, &grow_ats));
         }
         "fig16_rmw" | "fig16" => {
             let maps: Vec<MapKind> = parse_list::<String>(&args, "--maps")
@@ -132,7 +150,7 @@ fn main() -> Result<()> {
                 });
             let hot_keys = parse_list(&args, "--hot-keys")
                 .unwrap_or_else(|| vec![1, 16, 256, 4096]);
-            coordinator::fig16_rmw(&opts, &maps, &hot_keys);
+            finish(coordinator::fig16_rmw(&opts, &maps, &hot_keys));
         }
         "fig17_frontend" | "fig17" => {
             // Network round trips, not table capacity, dominate here;
@@ -148,13 +166,14 @@ fn main() -> Result<()> {
             let batch = parse_flag(&args, "--batch")
                 .unwrap_or(8usize)
                 .clamp(1, crh::service::frame::MAX_BATCH);
-            coordinator::fig17_frontend(
+            finish(coordinator::fig17_frontend(
                 opts.size_log2,
                 &conns,
                 &workers,
                 frames,
                 batch,
-            );
+                opts.reps,
+            ));
         }
         "serve" => {
             let spec: String = parse_flag(&args, "--map")
@@ -192,7 +211,28 @@ fn main() -> Result<()> {
         "table1" => {
             let ops = parse_flag(&args, "--ops").unwrap_or(6_000_000u64);
             let size = parse_flag(&args, "--size-log2").unwrap_or(22u32);
-            coordinator::table1(size, ops);
+            finish(coordinator::table1(size, ops));
+        }
+        "bench-compare" => {
+            let (old_p, new_p) = match (args.get(1), args.get(2)) {
+                (Some(o), Some(n)) => (o.as_str(), n.as_str()),
+                _ => {
+                    eprintln!("usage: crh bench-compare <old.json> <new.json>");
+                    std::process::exit(2);
+                }
+            };
+            let load = |p: &str| {
+                report::read_snapshot(std::path::Path::new(p))
+                    .unwrap_or_else(|e| {
+                        eprintln!("bench-compare: {p}: {e}");
+                        std::process::exit(2);
+                    })
+            };
+            let cmp = report::compare(&load(old_p), &load(new_p));
+            print!("{}", cmp.render());
+            if cmp.has_regressions() {
+                std::process::exit(1);
+            }
         }
         "bench" => {
             let table: String =

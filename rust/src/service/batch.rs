@@ -85,11 +85,11 @@ pub fn run_batched(
 ) -> RunResult {
     let stop = AtomicBool::new(false);
     let barrier = Barrier::new(threads + 1);
-    let mut per_thread = vec![0u64; threads];
+    let mut slots = vec![(0u64, 0u64); threads];
 
-    let elapsed = std::thread::scope(|s| {
+    std::thread::scope(|s| {
         let mut handles = Vec::new();
-        for (idx, slot) in per_thread.iter_mut().enumerate() {
+        for (idx, slot) in slots.iter_mut().enumerate() {
             let stop = &stop;
             let barrier = &barrier;
             handles.push(s.spawn(move || {
@@ -101,6 +101,9 @@ pub fn run_batched(
                 let mut replies: Vec<MapReply> =
                     Vec::with_capacity(batch.max(1));
                 barrier.wait();
+                // Per-worker measurement window, as in
+                // `bench::driver::run_prefilled`.
+                let t0 = Instant::now();
                 let mut ops = 0u64;
                 while !stop.load(Ordering::Relaxed) {
                     if batch == 0 {
@@ -130,25 +133,19 @@ pub fn run_batched(
                         ops += batch as u64;
                     }
                 }
-                *slot = ops;
+                *slot = (ops, t0.elapsed().as_nanos() as u64);
             }));
         }
         barrier.wait();
-        let t0 = Instant::now();
         std::thread::sleep(Duration::from_millis(cfg.duration_ms));
         stop.store(true, Ordering::Relaxed);
         for h in handles {
             h.join().unwrap();
         }
-        t0.elapsed()
     });
 
-    RunResult {
-        threads,
-        total_ops: per_thread.iter().sum(),
-        elapsed,
-        per_thread,
-    }
+    let (per_thread, per_thread_ns) = slots.into_iter().unzip();
+    RunResult::from_workers(per_thread, per_thread_ns)
 }
 
 /// Result of one [`run_rmw`] cell.
@@ -184,13 +181,13 @@ pub fn run_rmw(
     assert!(keys >= 1);
     let stop = AtomicBool::new(false);
     let barrier = Barrier::new(threads + 1);
-    let mut per_thread = vec![0u64; threads];
+    let mut slots = vec![(0u64, 0u64); threads];
     let mut stats = vec![(0u64, 0u64, 0u64); threads]; // (incs, attempts, fails)
 
-    let elapsed = std::thread::scope(|s| {
+    std::thread::scope(|s| {
         let mut handles = Vec::new();
         for (idx, (slot, stat)) in
-            per_thread.iter_mut().zip(stats.iter_mut()).enumerate()
+            slots.iter_mut().zip(stats.iter_mut()).enumerate()
         {
             let stop = &stop;
             let barrier = &barrier;
@@ -200,6 +197,9 @@ pub fn run_rmw(
                 }
                 let mut rng = Rng::for_thread(seed, idx as u64);
                 barrier.wait();
+                // Per-worker measurement window, as in
+                // `bench::driver::run_prefilled`.
+                let t0 = Instant::now();
                 let (mut ops, mut incs) = (0u64, 0u64);
                 let (mut attempts, mut fails) = (0u64, 0u64);
                 while !stop.load(Ordering::Relaxed) {
@@ -234,27 +234,21 @@ pub fn run_rmw(
                         ops += 1;
                     }
                 }
-                *slot = ops;
+                *slot = (ops, t0.elapsed().as_nanos() as u64);
                 *stat = (incs, attempts, fails);
             }));
         }
         barrier.wait();
-        let t0 = Instant::now();
         std::thread::sleep(Duration::from_millis(duration_ms));
         stop.store(true, Ordering::Relaxed);
         for h in handles {
             h.join().unwrap();
         }
-        t0.elapsed()
     });
 
+    let (per_thread, per_thread_ns) = slots.into_iter().unzip();
     RmwResult {
-        run: RunResult {
-            threads,
-            total_ops: per_thread.iter().sum(),
-            elapsed,
-            per_thread,
-        },
+        run: RunResult::from_workers(per_thread, per_thread_ns),
         incs: stats.iter().map(|s| s.0).sum(),
         cas_attempts: stats.iter().map(|s| s.1).sum(),
         cas_failures: stats.iter().map(|s| s.2).sum(),

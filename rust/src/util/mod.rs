@@ -1,12 +1,15 @@
 //! Shared substrate: hashing, RNG, thread pinning, property testing,
 //! the Linux readiness syscalls behind the epoll front-end
-//! ([`sys`], `target_os = "linux"` only), plus the offline-build shims
+//! ([`sys`], `target_os = "linux"` only), a dependency-free JSON
+//! writer/parser ([`json`], the substrate of the `BENCH_*.json`
+//! perf-trajectory snapshots), plus the offline-build shims
 //! (cache-line padding, error plumbing) that keep the crate free of
 //! external dependencies.
 
 pub mod affinity;
 pub mod error;
 pub mod hash;
+pub mod json;
 pub mod linearize;
 pub mod pad;
 pub mod prop;

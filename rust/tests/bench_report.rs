@@ -1,0 +1,69 @@
+//! End-to-end test of the perf-trajectory pipeline: a real (tiny)
+//! figure run produces a `BenchReport`, the report writes itself to
+//! disk as `BENCH_<fig>.json`, the file parses back, and comparing the
+//! run against itself is clean — the same path CI's fig15 smoke step
+//! exercises with `CRH_BENCH_JSON=1`.
+
+use crh::bench::report::{compare, read_snapshot, CellClass};
+use crh::coordinator::{fig15_resize, table1, ExpOpts};
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("crh-bench-report-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+    dir
+}
+
+#[test]
+fn fig15_snapshot_round_trips_and_self_compares_clean() {
+    let opts = ExpOpts {
+        size_log2: 14,
+        duration_ms: 30,
+        threads: vec![1],
+        pin: false,
+        reps: 1,
+    };
+    let report = fig15_resize(&opts, &[0.7]);
+    assert_eq!(report.fig, "fig15");
+    // One cell per (grow_at, threads, engine): 1 x 1 x 2.
+    assert_eq!(report.cells.len(), 2);
+    for cell in &report.cells {
+        let ops = cell.ops_per_us.expect("fig15 cells record throughput");
+        assert!(ops.median > 0.0, "cell {} measured nothing", cell.id());
+        assert_eq!(ops.reps, 1);
+        let lat = cell.latency.expect("fig15 cells record latency");
+        assert!(lat.p50_ns > 0);
+        assert!(lat.p50_ns <= lat.p99_ns && lat.p99_ns <= lat.max_ns);
+    }
+
+    let dir = temp_dir("fig15");
+    let path = report.write_to(&dir).expect("write snapshot");
+    assert!(path.ends_with("BENCH_fig15.json"));
+    let back = read_snapshot(&path).expect("snapshot parses back");
+    std::fs::remove_dir_all(&dir).ok();
+
+    assert_eq!(back.fig, report.fig);
+    assert_eq!(back.cells.len(), report.cells.len());
+    let cmp = compare(&report, &back);
+    assert!(!cmp.has_regressions(), "self-compare regressed:\n{}", cmp.render());
+    assert!(cmp.fingerprint_diffs.is_empty());
+    assert_eq!(cmp.count(CellClass::Ok), report.cells.len());
+}
+
+#[test]
+fn table1_snapshot_is_deterministic_across_runs() {
+    // The cache simulator is seeded and single-threaded, so two runs
+    // must produce byte-identical cells (only the timestamp differs).
+    let a = table1(12, 20_000);
+    let b = table1(12, 20_000);
+    assert_eq!(a.fig, "table1");
+    assert!(!a.cells.is_empty());
+    assert_eq!(a.cells.len(), b.cells.len());
+    for (ca, cb) in a.cells.iter().zip(&b.cells) {
+        assert_eq!(ca.id(), cb.id());
+        assert_eq!(ca.extra, cb.extra, "cell {} drifted between runs", ca.id());
+    }
+    let cmp = compare(&a, &b);
+    assert!(!cmp.has_regressions());
+    assert_eq!(cmp.count(CellClass::Ok), a.cells.len());
+}
