@@ -28,10 +28,17 @@
 //!     "ops_per_us": {"min": 9.1, "median": 9.4, "max": 9.6, "reps": 3},
 //!     "latency_ns": {"p50": 724, "p99": 11585, "p999": 46341,
 //!                    "max": 812345},
-//!     "extra": {"grows": 2}
+//!     "extra": {"grows": 2},
+//!     "metrics": {"probe_p99": 6.0, "kcas_retry_rate": 0.002}
 //!   }]
 //! }
 //! ```
+//!
+//! The `metrics` section is the telemetry delta the cell's measurement
+//! window observed ([`crate::util::metrics::cell_metrics`]) — probe
+//! p50/p99, K-CAS retry rate, stripes drained — so a regression report
+//! can say *why* a median moved, not just that it did; [`compare`]
+//! surfaces metric shifts beyond the threshold as warn-level notes.
 
 use std::io;
 use std::path::{Path, PathBuf};
@@ -158,6 +165,10 @@ pub struct CellResult {
     pub latency: Option<LatencySummary>,
     /// Auxiliary numbers (grow count, CAS failure rate, ...).
     pub extra: Vec<(String, f64)>,
+    /// Telemetry delta over the cell's measurement window (probe
+    /// quantiles, K-CAS retry rate, migration work) — empty when
+    /// `CRH_METRICS=0`. See [`crate::util::metrics::cell_metrics`].
+    pub metrics: Vec<(String, f64)>,
 }
 
 impl CellResult {
@@ -175,6 +186,7 @@ impl CellResult {
             ops_per_us: None,
             latency: None,
             extra: Vec::new(),
+            metrics: Vec::new(),
         }
     }
 
@@ -190,6 +202,14 @@ impl CellResult {
 
     pub fn with_extra(mut self, key: &str, value: f64) -> CellResult {
         self.extra.push((key.to_string(), value));
+        self
+    }
+
+    /// Attach the telemetry delta observed over this cell's
+    /// measurement window. A no-op for an empty delta (metrics gated
+    /// off), so disabled runs don't carry misleading zeros.
+    pub fn with_metrics(mut self, metrics: Vec<(String, f64)>) -> CellResult {
+        self.metrics = metrics;
         self
     }
 
@@ -230,6 +250,17 @@ impl CellResult {
                 ),
             ));
         }
+        if !self.metrics.is_empty() {
+            pairs.push((
+                "metrics",
+                Json::Obj(
+                    self.metrics
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                        .collect(),
+                ),
+            ));
+        }
         Json::obj(pairs)
     }
 
@@ -253,18 +284,22 @@ impl CellResult {
             Some(l) => Some(LatencySummary::from_json(l)?),
             None => None,
         };
-        let extra = match v.get("extra").and_then(Json::as_obj) {
-            Some(pairs) => pairs
-                .iter()
-                .map(|(k, val)| {
-                    val.as_f64()
-                        .map(|f| (k.clone(), f))
-                        .ok_or_else(|| format!("extra {k:?} is not numeric"))
-                })
-                .collect::<Result<Vec<_>, _>>()?,
-            None => Vec::new(),
+        let numeric_map = |key: &str| -> Result<Vec<(String, f64)>, String> {
+            match v.get(key).and_then(Json::as_obj) {
+                Some(pairs) => pairs
+                    .iter()
+                    .map(|(k, val)| {
+                        val.as_f64().map(|f| (k.clone(), f)).ok_or_else(|| {
+                            format!("{key} {k:?} is not numeric")
+                        })
+                    })
+                    .collect(),
+                None => Ok(Vec::new()),
+            }
         };
-        Ok(CellResult { labels, ops_per_us, latency, extra })
+        let extra = numeric_map("extra")?;
+        let metrics = numeric_map("metrics")?;
+        Ok(CellResult { labels, ops_per_us, latency, extra, metrics })
     }
 }
 
@@ -287,6 +322,15 @@ impl Fingerprint {
         let mut env: Vec<(String, String)> = std::env::vars()
             .filter(|(k, _)| k.starts_with("CRH_"))
             .collect();
+        // The telemetry gate changes what the snapshot's `metrics`
+        // sections contain (and costs a branch per counter hit), so
+        // record its *effective* value even when the variable is
+        // unset — two runs with different gates must warn on compare.
+        if !env.iter().any(|(k, _)| k == "CRH_METRICS") {
+            let on = crate::util::metrics::enabled();
+            let effective = if on { "1" } else { "0" };
+            env.push(("CRH_METRICS".to_string(), effective.to_string()));
+        }
         env.sort();
         Fingerprint {
             cpu_model: cpu_model().unwrap_or_else(|| "unknown".to_string()),
@@ -620,6 +664,10 @@ pub struct Comparison {
     /// Fingerprint fields that differ (warn: the machines or `CRH_*`
     /// knobs were not identical, so deltas may not be meaningful).
     pub fingerprint_diffs: Vec<String>,
+    /// Label-key sets present in only one snapshot (warn: cells went
+    /// missing/new because a sweep *dimension* changed, not because a
+    /// configuration vanished — names the differing keys).
+    pub label_key_diffs: Vec<String>,
     pub deltas: Vec<CellDelta>,
 }
 
@@ -653,6 +701,9 @@ impl Comparison {
         );
         for diff in &self.fingerprint_diffs {
             let _ = writeln!(out, "warning: fingerprint mismatch: {diff}");
+        }
+        for diff in &self.label_key_diffs {
+            let _ = writeln!(out, "warning: label keys differ: {diff}");
         }
         for d in &self.deltas {
             let tag = match d.class {
@@ -738,9 +789,33 @@ pub fn compare_with(
             });
         }
     }
+    // When cells fail to match because a sweep *dimension* changed
+    // (a label key added or dropped), name the differing key sets —
+    // a wall of missing/new ids without this is unreadable.
+    let keysets = |r: &BenchReport| -> std::collections::BTreeSet<String> {
+        r.cells
+            .iter()
+            .map(|c| {
+                c.labels
+                    .iter()
+                    .map(|(k, _)| k.as_str())
+                    .collect::<Vec<_>>()
+                    .join(",")
+            })
+            .collect()
+    };
+    let (old_keys, new_keys) = (keysets(old), keysets(new));
+    let mut label_key_diffs = Vec::new();
+    for ks in old_keys.difference(&new_keys) {
+        label_key_diffs.push(format!("[{ks}] only in baseline"));
+    }
+    for ks in new_keys.difference(&old_keys) {
+        label_key_diffs.push(format!("[{ks}] only in new snapshot"));
+    }
     Comparison {
         fig: new.fig.clone(),
         fingerprint_diffs: old.fingerprint.diff(&new.fingerprint),
+        label_key_diffs,
         deltas,
     }
 }
@@ -762,6 +837,27 @@ fn classify(
             notes.push(format!(
                 "p99 latency rose {} -> {} ns",
                 a.p99_ns, b.p99_ns
+            ));
+        }
+    }
+    // Telemetry attribution: when a cell's metrics delta moved beyond
+    // the threshold, say which mechanism shifted (probe lengths, K-CAS
+    // retries, migration work). Warn-level — the gate stays on the
+    // primary metric; this tells the reader *why* it may have moved.
+    for (k, o) in &old.metrics {
+        let Some(n) = new
+            .metrics
+            .iter()
+            .find(|(nk, _)| nk == k)
+            .map(|&(_, v)| v)
+        else {
+            continue;
+        };
+        if *o > 0.0 && ((n / o) > 1.0 + threshold || (n / o) < 1.0 - threshold)
+        {
+            notes.push(format!(
+                "metric {k} shifted {o:.3} -> {n:.3} ({:.2}x)",
+                n / o
             ));
         }
     }
@@ -842,7 +938,11 @@ mod tests {
                         p999_ns: 46341,
                         max_ns: 812345,
                     })
-                    .with_extra("grows", 2.0),
+                    .with_extra("grows", 2.0)
+                    .with_metrics(vec![
+                        ("probe_p99".into(), 6.0),
+                        ("kcas_retry_rate".into(), 0.002),
+                    ]),
                 cell(&[("engine", "quiescing"), ("threads", "2")], 8.25),
             ],
         );
@@ -966,6 +1066,63 @@ mod tests {
         let cmp = compare(&mk(1000), &mk(2000));
         assert!(!cmp.has_regressions());
         assert!(cmp.render().contains("p99 latency rose"), "{}", cmp.render());
+    }
+
+    #[test]
+    fn metric_shift_is_a_note_not_a_failure() {
+        let mk = |probe_p99: f64| {
+            report(
+                "fig15",
+                vec![cell(&[("t", "x")], 10.0).with_metrics(vec![(
+                    "probe_p99".into(),
+                    probe_p99,
+                )])],
+            )
+        };
+        // Throughput flat, probe tail doubled: warn, don't fail.
+        let cmp = compare(&mk(6.0), &mk(12.0));
+        assert!(!cmp.has_regressions());
+        let text = cmp.render();
+        assert!(
+            text.contains("metric probe_p99 shifted 6.000 -> 12.000 (2.00x)"),
+            "{text}"
+        );
+        // Inside the band: silence.
+        let quiet = compare(&mk(6.0), &mk(6.5));
+        assert!(!quiet.render().contains("metric probe_p99"), "{}",
+            quiet.render());
+    }
+
+    #[test]
+    fn changed_label_keys_are_named() {
+        let old = report("fig15", vec![cell(&[("threads", "2")], 10.0)]);
+        let new = report(
+            "fig15",
+            vec![cell(&[("threads", "2"), ("grow_at", "0.7")], 10.0)],
+        );
+        let cmp = compare(&old, &new);
+        let text = cmp.render();
+        assert!(
+            text.contains("label keys differ: [threads] only in baseline"),
+            "{text}"
+        );
+        assert!(
+            text.contains("[threads,grow_at] only in new snapshot"),
+            "{text}"
+        );
+        // Same keys, different values: no key warning.
+        let moved = report("fig15", vec![cell(&[("threads", "4")], 10.0)]);
+        assert!(compare(&old, &moved).label_key_diffs.is_empty());
+    }
+
+    #[test]
+    fn fingerprint_records_effective_metrics_gate() {
+        let fp = Fingerprint::capture();
+        assert!(
+            fp.env.iter().any(|(k, _)| k == "CRH_METRICS"),
+            "CRH_METRICS missing from {:?}",
+            fp.env
+        );
     }
 
     #[test]

@@ -79,22 +79,26 @@ fn opts_spec(opts: &ExpOpts) -> Vec<(String, String)> {
 }
 
 /// Measure one set-workload cell `reps` times (distinct seeds) and
-/// aggregate to min/median/max ops/µs.
+/// aggregate to min/median/max ops/µs, plus the telemetry delta the
+/// cell's reps produced ([`crate::util::metrics::cell_metrics`];
+/// empty when `CRH_METRICS=0`).
 fn ops_stat(
     kind: TableKind,
     cfg: &WorkloadCfg,
     threads: usize,
     pin: bool,
     reps: u32,
-) -> Stat {
-    let samples: Vec<f64> = (0..reps.max(1))
-        .map(|rep| {
-            let mut c = *cfg;
-            c.seed = cfg.seed.wrapping_add(rep as u64);
-            driver::run(kind, &c, threads, pin).ops_per_us()
-        })
-        .collect();
-    Stat::from_samples(&samples)
+) -> (Stat, Vec<(String, f64)>) {
+    let (samples, mets) = crate::util::metrics::measured(|| {
+        (0..reps.max(1))
+            .map(|rep| {
+                let mut c = *cfg;
+                c.seed = cfg.seed.wrapping_add(rep as u64);
+                driver::run(kind, &c, threads, pin).ops_per_us()
+            })
+            .collect::<Vec<f64>>()
+    });
+    (Stat::from_samples(&samples), mets)
 }
 
 /// **Figure 10**: single-core throughput of every table relative to
@@ -114,7 +118,7 @@ pub fn fig10(opts: &ExpOpts) -> BenchReport {
         print!(" {:>11}", cfg.label());
     }
     println!();
-    let base: Vec<Stat> = grid
+    let base: Vec<(Stat, Vec<(String, f64)>)> = grid
         .iter()
         .map(|cfg| {
             ops_stat(TableKind::KCasRobinHood, cfg, 1, opts.pin, opts.reps)
@@ -129,9 +133,9 @@ pub fn fig10(opts: &ExpOpts) -> BenchReport {
     kinds.push(TableKind::SerialRobinHood);
     for kind in kinds {
         print!("{:<18}", kind.display());
-        for (cfg, b) in grid.iter().zip(&base) {
-            let stat = if kind == TableKind::KCasRobinHood {
-                *b
+        for (cfg, (b, b_mets)) in grid.iter().zip(&base) {
+            let (stat, mets) = if kind == TableKind::KCasRobinHood {
+                (*b, b_mets.clone())
             } else {
                 ops_stat(kind, cfg, 1, opts.pin, opts.reps)
             };
@@ -141,7 +145,8 @@ pub fn fig10(opts: &ExpOpts) -> BenchReport {
                     ("config", cfg.label()),
                     ("table", kind.name()),
                 ])
-                .with_ops(stat),
+                .with_ops(stat)
+                .with_metrics(mets),
             );
         }
         println!();
@@ -170,12 +175,14 @@ fn throughput_panel(
     for &kind in rows {
         print!("{:<width$}", kind.display());
         for &t in &opts.threads {
-            let stat = ops_stat(kind, cfg, t, opts.pin, opts.reps);
+            let (stat, mets) = ops_stat(kind, cfg, t, opts.pin, opts.reps);
             print!(" {:>9.2}", stat.median);
             let mut labels = panel.to_vec();
             labels.push(("table".to_string(), kind.name()));
             labels.push(("threads".to_string(), t.to_string()));
-            report.push(CellResult::new(labels).with_ops(stat));
+            report.push(
+                CellResult::new(labels).with_ops(stat).with_metrics(mets),
+            );
         }
         println!();
     }
@@ -370,16 +377,18 @@ pub fn fig14_batching(
             };
             print!("{label:<18}");
             for &t in &opts.threads {
-                let samples: Vec<f64> = (0..opts.reps.max(1))
-                    .map(|rep| {
-                        let mut c = cfg;
-                        c.seed = cfg.seed.wrapping_add(rep as u64);
-                        let m = map.build(c.size_log2);
-                        prefill_map(m.as_ref(), &c);
-                        run_batched(m.as_ref(), &c, t, batch, opts.pin)
-                            .ops_per_us()
-                    })
-                    .collect();
+                let (samples, mets) = crate::util::metrics::measured(|| {
+                    (0..opts.reps.max(1))
+                        .map(|rep| {
+                            let mut c = cfg;
+                            c.seed = cfg.seed.wrapping_add(rep as u64);
+                            let m = map.build(c.size_log2);
+                            prefill_map(m.as_ref(), &c);
+                            run_batched(m.as_ref(), &c, t, batch, opts.pin)
+                                .ops_per_us()
+                        })
+                        .collect::<Vec<f64>>()
+                });
                 let stat = Stat::from_samples(&samples);
                 print!(" {:>9.2}", stat.median);
                 report.push(
@@ -395,7 +404,8 @@ pub fn fig14_batching(
                         ),
                         ("threads", t.to_string()),
                     ])
-                    .with_ops(stat),
+                    .with_ops(stat)
+                    .with_metrics(mets),
                 );
             }
             println!();
@@ -443,36 +453,39 @@ pub fn fig15_resize(opts: &ExpOpts, grow_ats: &[f64]) -> BenchReport {
                 let mut hist = LatencyHist::new();
                 let mut samples = Vec::new();
                 let mut grows = 0u32;
-                for rep in 0..opts.reps.max(1) {
-                    let table: Box<dyn ConcurrentSet> = if inc {
-                        Box::new(IncResizableRobinHood::with_threshold(
-                            opts.size_log2,
-                            grow_at,
-                        ))
-                    } else {
-                        Box::new(QuiescingResize::with_threshold(
-                            opts.size_log2,
-                            grow_at,
-                        ))
-                    };
-                    let cap0 = table.capacity();
-                    let prefill = (grow_at * cap0 as f64 * 0.9) as u64;
-                    for k in 1..=prefill {
-                        table.add(k);
+                let ((), cell_mets) = crate::util::metrics::measured(|| {
+                    for rep in 0..opts.reps.max(1) {
+                        let table: Box<dyn ConcurrentSet> = if inc {
+                            Box::new(IncResizableRobinHood::with_threshold(
+                                opts.size_log2,
+                                grow_at,
+                            ))
+                        } else {
+                            Box::new(QuiescingResize::with_threshold(
+                                opts.size_log2,
+                                grow_at,
+                            ))
+                        };
+                        let cap0 = table.capacity();
+                        let prefill = (grow_at * cap0 as f64 * 0.9) as u64;
+                        for k in 1..=prefill {
+                            table.add(k);
+                        }
+                        let cfg = LatencyCfg {
+                            duration_ms: opts.duration_ms,
+                            key_space: 4 * cap0 as u64,
+                            add_pct: 45,
+                            remove_pct: 10,
+                            seed: 0xF15 + rep as u64,
+                            pin: opts.pin,
+                        };
+                        let (r, h) =
+                            run_latency(table.as_ref(), &cfg, threads);
+                        hist.merge(&h);
+                        samples.push(r.ops_per_us());
+                        grows += (table.capacity() / cap0).trailing_zeros();
                     }
-                    let cfg = LatencyCfg {
-                        duration_ms: opts.duration_ms,
-                        key_space: 4 * cap0 as u64,
-                        add_pct: 45,
-                        remove_pct: 10,
-                        seed: 0xF15 + rep as u64,
-                        pin: opts.pin,
-                    };
-                    let (r, h) = run_latency(table.as_ref(), &cfg, threads);
-                    hist.merge(&h);
-                    samples.push(r.ops_per_us());
-                    grows += (table.capacity() / cap0).trailing_zeros();
-                }
+                });
                 let note = if grows == 0 {
                     "  (!) no migration ran — raise --ms or lower threshold"
                 } else {
@@ -500,7 +513,8 @@ pub fn fig15_resize(opts: &ExpOpts, grow_ats: &[f64]) -> BenchReport {
                     ])
                     .with_ops(stat)
                     .with_latency(lat)
-                    .with_extra("grows", grows as f64),
+                    .with_extra("grows", grows as f64)
+                    .with_metrics(cell_mets),
                 );
             }
         }
@@ -548,31 +562,33 @@ pub fn fig16_rmw(
                 let mut samples = Vec::new();
                 let mut attempts = 0u64;
                 let mut fails = 0u64;
-                for rep in 0..opts.reps.max(1) {
-                    let m = kind.build(opts.size_log2);
-                    let r = run_rmw(
-                        m.as_ref(),
-                        keys,
-                        opts.duration_ms,
-                        threads,
-                        opts.pin,
-                        0xF16 + rep as u64,
-                    );
-                    // The acceptance check: no committed increment may
-                    // ever be lost or double-applied.
-                    let sum = rmw_counter_sum(m.as_ref(), keys);
-                    assert_eq!(
-                        sum,
-                        r.incs,
-                        "{} keys={keys} thr={threads}: counters sum to {sum}, \
-                         committed {} increments",
-                        kind.name(),
-                        r.incs
-                    );
-                    samples.push(r.run.ops_per_us());
-                    attempts += r.cas_attempts;
-                    fails += r.cas_failures;
-                }
+                let ((), mets) = crate::util::metrics::measured(|| {
+                    for rep in 0..opts.reps.max(1) {
+                        let m = kind.build(opts.size_log2);
+                        let r = run_rmw(
+                            m.as_ref(),
+                            keys,
+                            opts.duration_ms,
+                            threads,
+                            opts.pin,
+                            0xF16 + rep as u64,
+                        );
+                        // The acceptance check: no committed increment
+                        // may ever be lost or double-applied.
+                        let sum = rmw_counter_sum(m.as_ref(), keys);
+                        assert_eq!(
+                            sum,
+                            r.incs,
+                            "{} keys={keys} thr={threads}: counters sum to \
+                             {sum}, committed {} increments",
+                            kind.name(),
+                            r.incs
+                        );
+                        samples.push(r.run.ops_per_us());
+                        attempts += r.cas_attempts;
+                        fails += r.cas_failures;
+                    }
+                });
                 let fail_pct = if attempts == 0 {
                     0.0
                 } else {
@@ -594,7 +610,8 @@ pub fn fig16_rmw(
                         ("threads", threads.to_string()),
                     ])
                     .with_ops(stat)
-                    .with_extra("cas_fail_pct", fail_pct),
+                    .with_extra("cas_fail_pct", fail_pct)
+                    .with_metrics(mets),
                 );
             }
         }
@@ -717,13 +734,39 @@ G 2\nA 3 1\nA 3 1\nC 3 2 -\nC 3 2 -\nU 22 7\nU 22 8\nQ\n";
     (0..REPLIES).map(|_| c.read_reply_line().expect("reply")).collect()
 }
 
+/// Flattened key schema of a `STATS` reply: top-level keys plus
+/// dotted paths into nested objects, sorted. Counter *values* differ
+/// between backends (they measure different code paths); the schema
+/// must not.
+fn stats_schema(line: &str) -> Vec<String> {
+    let j = crate::util::json::Json::parse(line)
+        .expect("STATS reply must parse as JSON");
+    let obj = j.as_obj().expect("STATS reply must be a JSON object");
+    let mut keys = Vec::new();
+    for (k, v) in obj {
+        match v.as_obj() {
+            Some(inner) => {
+                for (ik, _) in inner {
+                    keys.push(format!("{k}.{ik}"));
+                }
+            }
+            None => keys.push(k.clone()),
+        }
+    }
+    keys.sort();
+    keys
+}
+
 /// The satellite smoke check behind the `fig17_frontend --quick` CI
 /// step: the epoll backend must answer a fixed op trace — all verbs,
 /// protocol errors, batch frames, split-across-read framing —
 /// **byte-identically** to the thread-per-connection backend (and both
-/// must match the protocol's documented semantics). Returns the
-/// transcript length; panics on any divergence.
+/// must match the protocol's documented semantics). Each backend also
+/// answers a `STATS` probe whose JSON schema (key paths) must be
+/// identical across backends — the wire telemetry plane cannot drift
+/// either. Returns the transcript length; panics on any divergence.
 pub fn fig17_equivalence(size_log2: u32) -> usize {
+    use crate::service::server::Client;
     use crate::service::{reactor, server};
     let expected: Vec<&str> = vec![
         "-", "100", "101", "101", "101", "OK", "9",
@@ -734,18 +777,34 @@ pub fn fig17_equivalence(size_log2: u32) -> usize {
         "ERR key out of range",
         "-", "-", "1", "OK", "!-", "-", "7",
     ];
+    let probe_stats = |addr: std::net::SocketAddr| -> String {
+        let mut c = Client::connect(addr).expect("connect for STATS");
+        c.stats().expect("STATS reply")
+    };
     let h = server::spawn_server(fig17_map(size_log2)).expect("spawn server");
     let threaded = fig17_transcript(h.addr());
+    let threaded_stats = probe_stats(h.addr());
     h.shutdown();
     let h = reactor::spawn_server_epoll(fig17_map(size_log2), 2)
         .expect("spawn reactor");
     let epoll = fig17_transcript(h.addr());
+    let epoll_stats = probe_stats(h.addr());
     h.shutdown();
     assert_eq!(
         threaded, epoll,
         "front-ends diverged on the fixed op trace"
     );
     assert_eq!(threaded, expected, "trace semantics drifted");
+    let schema = stats_schema(&threaded_stats);
+    assert_eq!(
+        schema,
+        stats_schema(&epoll_stats),
+        "front-ends diverged on the STATS schema"
+    );
+    assert!(
+        schema.iter().any(|k| k == "counters.kcas_attempts"),
+        "STATS schema missing counters: {schema:?}"
+    );
     threaded.len()
 }
 
@@ -798,17 +857,19 @@ pub fn fig17_frontend(
         // The threaded backend has no worker knob; measure it once per
         // connection count. One fresh server+map per rep; stored unit
         // is ops/µs, like every other figure.
-        let samples: Vec<f64> = (0..reps.max(1))
-            .map(|_| {
-                let h = crate::service::server::spawn_server(fig17_map(
-                    size_log2,
-                ))
-                .expect("spawn server");
-                let ops_s = fig17_run(h.addr(), conns, frames, batch);
-                h.shutdown();
-                ops_s / 1e6
-            })
-            .collect();
+        let (samples, mets) = crate::util::metrics::measured(|| {
+            (0..reps.max(1))
+                .map(|_| {
+                    let h = crate::service::server::spawn_server(fig17_map(
+                        size_log2,
+                    ))
+                    .expect("spawn server");
+                    let ops_s = fig17_run(h.addr(), conns, frames, batch);
+                    h.shutdown();
+                    ops_s / 1e6
+                })
+                .collect::<Vec<f64>>()
+        });
         let stat = Stat::from_samples(&samples);
         println!(
             "{:<18} {:>7} {:>7} {:>12.1}",
@@ -823,21 +884,24 @@ pub fn fig17_frontend(
                 ("workers", "-".to_string()),
                 ("conns", conns.to_string()),
             ])
-            .with_ops(stat),
+            .with_ops(stat)
+            .with_metrics(mets),
         );
         for &workers in worker_counts {
-            let samples: Vec<f64> = (0..reps.max(1))
-                .map(|_| {
-                    let h = crate::service::reactor::spawn_server_epoll(
-                        fig17_map(size_log2),
-                        workers,
-                    )
-                    .expect("spawn reactor");
-                    let ops_s = fig17_run(h.addr(), conns, frames, batch);
-                    h.shutdown();
-                    ops_s / 1e6
-                })
-                .collect();
+            let (samples, mets) = crate::util::metrics::measured(|| {
+                (0..reps.max(1))
+                    .map(|_| {
+                        let h = crate::service::reactor::spawn_server_epoll(
+                            fig17_map(size_log2),
+                            workers,
+                        )
+                        .expect("spawn reactor");
+                        let ops_s = fig17_run(h.addr(), conns, frames, batch);
+                        h.shutdown();
+                        ops_s / 1e6
+                    })
+                    .collect::<Vec<f64>>()
+            });
             let stat = Stat::from_samples(&samples);
             println!(
                 "{:<18} {:>7} {:>7} {:>12.1}",
@@ -852,7 +916,8 @@ pub fn fig17_frontend(
                     ("workers", workers.to_string()),
                     ("conns", conns.to_string()),
                 ])
-                .with_ops(stat),
+                .with_ops(stat)
+                .with_metrics(mets),
             );
         }
     }

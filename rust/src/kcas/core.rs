@@ -10,6 +10,7 @@ use std::sync::atomic::{AtomicU64, Ordering::*};
 
 use super::registry::{registry, thread_id};
 use super::tagged::*;
+use crate::util::metrics::metrics;
 
 /// Linearizable read of a K-CAS-managed word (helps descriptors).
 #[inline]
@@ -84,13 +85,22 @@ pub fn kcas(entries: &[(usize, u64, u64)]) -> bool {
         desc.entries[i].old.store(old, Release);
         desc.entries[i].new.store(new, Release);
     }
-    execute(tid, seq)
+    metrics().kcas_attempts.incr();
+    let ok = execute(tid, seq);
+    if !ok {
+        // The owner's verdict is authoritative (its descriptor can't be
+        // reused concurrently), so this counts exactly the failed
+        // executions the caller will re-probe and retry.
+        metrics().kcas_retries.incr();
+    }
+    ok
 }
 
 /// Help a K-CAS referenced by `kref` (called when a reader/installer
 /// encounters the reference in a word).
 pub fn help_kcas(kref: u64) {
     debug_assert_eq!(tag_of(kref), TAG_KCAS);
+    metrics().kcas_helps.incr();
     execute(ref_tid(kref), ref_seq(kref));
 }
 

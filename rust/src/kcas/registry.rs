@@ -109,6 +109,7 @@ thread_local! {
 }
 
 fn alloc_tid() -> usize {
+    crate::util::metrics::metrics().kcas_descriptors.incr();
     if let Some(t) = FREE_TIDS.lock().unwrap().pop() {
         return t;
     }

@@ -61,9 +61,13 @@
 //!   event-loop front-end across connection counts).
 //! * [`util`] — hashing (bit-identical to the L1 Pallas kernel), RNG,
 //!   thread pinning, a mini property-testing driver, the Linux
-//!   readiness syscalls behind the reactor (`util::sys`), and the
-//!   offline-build shims ([`util::pad`] cache padding, [`util::error`]
-//!   error plumbing) that keep the crate free of external dependencies.
+//!   readiness syscalls behind the reactor (`util::sys`), the
+//!   always-on telemetry plane ([`util::metrics`]: sharded relaxed
+//!   counters + log-histograms behind a `CRH_METRICS` gate, exported
+//!   through the `STATS` wire verb, `crh stats`, and the snapshots'
+//!   `metrics` sections), and the offline-build shims ([`util::pad`]
+//!   cache padding, [`util::error`] error plumbing) that keep the
+//!   crate free of external dependencies.
 
 pub mod bench;
 pub mod cachesim;

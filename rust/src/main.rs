@@ -22,6 +22,9 @@
 //!            [--addr 127.0.0.1:7878] [--reactor] [--workers N]
 //!            (run the KV server until killed; --reactor selects the
 //!            epoll event-loop backend)
+//! crh stats  [--addr 127.0.0.1:7878]
+//!            (query a running server's STATS verb and pretty-print
+//!            the telemetry snapshot)
 //! crh table1 [--size-log2 N] [--ops N]
 //! crh bench  --table kcas-rh|inc-resize-rh|sharded-kcas-rh:16|...
 //!            [--lf 0.6] [--updates 10] [--threads N] [--ms N] [--zipf]
@@ -75,7 +78,7 @@ fn parse_list<T: std::str::FromStr>(args: &[String], name: &str) -> Option<Vec<T
 fn usage() -> ! {
     eprintln!(
         "usage: crh <fig10|fig11|fig12|fig13_sharding|fig14_batching|\
-         fig15_resize|fig16_rmw|fig17_frontend|serve|table1|bench|\
+         fig15_resize|fig16_rmw|fig17_frontend|serve|stats|table1|bench|\
          bench-compare|ablate-ts|analyze|validate|smoke> [options]\n\
          (figures accept --json / CRH_BENCH_JSON=1 to write a \
          BENCH_<fig>.json snapshot; see `main.rs` docs or README)"
@@ -206,6 +209,20 @@ fn main() -> Result<()> {
             }
             loop {
                 std::thread::park();
+            }
+        }
+        "stats" => {
+            let addr: String = parse_flag(&args, "--addr")
+                .unwrap_or_else(|| "127.0.0.1:7878".into());
+            let sock: std::net::SocketAddr = addr.parse().map_err(|_| {
+                crh::util::error::Error::msg(format!("bad --addr {addr:?}"))
+            })?;
+            let mut c = crh::service::server::Client::connect(sock)?;
+            let line = c.stats()?;
+            match crh::util::json::Json::parse(&line) {
+                Ok(j) => println!("{}", j.render()),
+                // A non-JSON line (old server?) still gets shown.
+                Err(_) => println!("{line}"),
             }
         }
         "table1" => {

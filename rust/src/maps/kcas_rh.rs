@@ -61,6 +61,7 @@ use crate::util::pad::CachePadded;
 use super::{check_key, ConcurrentSet};
 use crate::kcas::{OpBuilder, Word};
 use crate::util::hash::{dfb, home_bucket, splitmix64};
+use crate::util::metrics::metrics;
 
 const NIL: u64 = 0;
 
@@ -250,6 +251,7 @@ impl KCasRobinHood {
                     }
                 }
                 if found_key {
+                    metrics().probe_len_read.record(cur_dist + 1);
                     return true;
                 }
                 // Miss: validate every recorded timestamp (lines 16-21).
@@ -258,6 +260,7 @@ impl KCasRobinHood {
                         continue 'retry;
                     }
                 }
+                metrics().probe_len_read.record(cur_dist + 1);
                 return false;
             }
         })
@@ -292,6 +295,7 @@ impl ConcurrentSet for KCasRobinHood {
                 }
                 let cur = self.bucket(i).read();
                 if cur == key {
+                    metrics().probe_len_read.record(cur_dist + 1);
                     return true;
                 }
                 if cur == NIL {
@@ -309,6 +313,7 @@ impl ConcurrentSet for KCasRobinHood {
             // Miss: validate the single recorded timestamp (Fig. 7
             // lines 16-21 degenerate to one comparison).
             if self.ts_word(shard0).read() == ts0 {
+                metrics().probe_len_read.record(cur_dist + 1);
                 return false;
             }
             continue 'retry;
@@ -393,6 +398,7 @@ impl KCasRobinHood {
         let mut active_dist = 0u64;
         let mut i = home;
         let mut probes = 0usize;
+        let mut displaced = 0u64;
         loop {
             assert!(probes <= self.size(), "K-CAS Robin Hood table is full");
             probes += 1;
@@ -414,13 +420,16 @@ impl KCasRobinHood {
                 if let Some((word, old, new)) = seed {
                     scratch.op.push(word, old, new);
                 }
+                metrics().probe_len_write.record(probes as u64);
                 return Ok(if scratch.op.execute() {
+                    metrics().rh_displacements.add(displaced);
                     Attempt::Done(true)
                 } else {
                     Attempt::Raced
                 });
             }
             if cur == key {
+                metrics().probe_len_write.record(probes as u64);
                 return Ok(Attempt::Done(false)); // line 18: member
             }
             // Probed over an occupied bucket: its shard's timestamp now
@@ -437,6 +446,7 @@ impl KCasRobinHood {
                 if let Some(last) = scratch.guard.last_mut() {
                     last.2 = true;
                 }
+                displaced += 1;
                 active = cur;
                 active_dist = cur_d;
             }
@@ -481,6 +491,7 @@ impl KCasRobinHood {
                 break;
             }
         }
+        metrics().probe_len_write.record(cur_dist + 1);
         if !hit {
             // Miss path: timestamp validation (lines 23-28).
             for &(shard, v) in scratch.seen.iter() {
@@ -602,6 +613,7 @@ impl KCasRobinHood {
                     self.record_ts(seen, i);
                     let cur = self.bucket(i).read();
                     if cur == key {
+                        metrics().probe_len_read.record(cur_dist + 1);
                         return Probe::Found;
                     }
                     if cur == NIL {
@@ -613,6 +625,7 @@ impl KCasRobinHood {
                     }
                     if cur == FROZEN_TOMB {
                         saw_frozen = true; // skip; DFB unknowable
+                        metrics().tombstone_drift.incr();
                     } else if self.dist(cur, i) < cur_dist {
                         break;
                     }
@@ -627,6 +640,7 @@ impl KCasRobinHood {
                         continue 'retry;
                     }
                 }
+                metrics().probe_len_read.record(cur_dist + 1);
                 return if saw_frozen { Probe::FrozenMiss } else { Probe::Absent };
             }
         })

@@ -58,6 +58,7 @@ use std::cell::RefCell;
 use crate::util::pad::CachePadded;
 
 use super::kcas_rh::{is_frozen, Frozen, FROZEN_EMPTY, FROZEN_TOMB};
+use crate::util::metrics::metrics;
 use super::{check_key, ConcurrentMap, MapOp, MapReply};
 use crate::kcas::{OpBuilder, Word};
 use crate::util::hash::{dfb, home_bucket, splitmix64};
@@ -218,6 +219,7 @@ impl KCasRobinHoodMap {
                     }
                 }
                 if hit.is_some() {
+                    metrics().probe_len_read.record(cur_dist + 1);
                     return hit;
                 }
                 for &(shard, v) in seen.iter() {
@@ -225,6 +227,7 @@ impl KCasRobinHoodMap {
                         continue 'retry;
                     }
                 }
+                metrics().probe_len_read.record(cur_dist + 1);
                 return None;
             }
         }
@@ -290,6 +293,7 @@ impl KCasRobinHoodMap {
         let mut active_dist = 0u64;
         let mut i = home;
         let mut probes = 0usize;
+        let mut displaced = 0u64;
         loop {
             assert!(probes <= self.size(), "map is full");
             probes += 1;
@@ -309,13 +313,16 @@ impl KCasRobinHoodMap {
                     scratch.op.push(kw, kv, FROZEN_TOMB);
                     scratch.op.push(vw, vv, vv);
                 }
+                metrics().probe_len_write.record(probes as u64);
                 return Ok(if scratch.op.execute() {
+                    metrics().rh_displacements.add(displaced);
                     Attempt::Done(None)
                 } else {
                     Attempt::Raced
                 });
             }
             if cur == key {
+                metrics().probe_len_write.record(probes as u64);
                 if seed.is_some() {
                     // Transfer found the key already in the target:
                     // report without committing (caller handles).
@@ -379,6 +386,7 @@ impl KCasRobinHoodMap {
                 if let Some(last) = scratch.guard.last_mut() {
                     last.2 = true;
                 }
+                displaced += 1;
                 active_key = cur;
                 active_val = cur_val;
                 active_dist = cur_d;
@@ -460,6 +468,7 @@ impl KCasRobinHoodMap {
                 break;
             }
         }
+        metrics().probe_len_write.record(cur_dist + 1);
         if !hit {
             for &(shard, v) in scratch.seen.iter() {
                 if self.ts[shard].read() != v {
@@ -675,6 +684,7 @@ impl KCasRobinHoodMap {
                     if self.ts[sh].read() != tv {
                         continue 'retry;
                     }
+                    metrics().probe_len_read.record(cur_dist + 1);
                     return Ok(Some((i, v)));
                 }
                 if cur == NIL || self.dist(cur, i) < cur_dist {
@@ -691,6 +701,7 @@ impl KCasRobinHoodMap {
                     continue 'retry;
                 }
             }
+            metrics().probe_len_read.record(cur_dist + 1);
             return Ok(None);
         }
     }
@@ -875,6 +886,7 @@ impl KCasRobinHoodMap {
                         if self.ts[sh].read() != tv {
                             continue 'retry;
                         }
+                        metrics().probe_len_read.record(cur_dist + 1);
                         return ProbeVal::Found(v);
                     }
                     if cur == NIL {
@@ -886,6 +898,7 @@ impl KCasRobinHoodMap {
                     }
                     if cur == FROZEN_TOMB {
                         saw_frozen = true; // skip; DFB unknowable
+                        metrics().tombstone_drift.incr();
                     } else if self.dist(cur, i) < cur_dist {
                         break;
                     }
@@ -900,6 +913,7 @@ impl KCasRobinHoodMap {
                         continue 'retry;
                     }
                 }
+                metrics().probe_len_read.record(cur_dist + 1);
                 return if saw_frozen {
                     ProbeVal::FrozenMiss
                 } else {

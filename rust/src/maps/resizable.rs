@@ -59,6 +59,7 @@ use super::kcas_rh::{Frozen, KCasRobinHood, Probe};
 use super::kcas_rh_map::{KCasRobinHoodMap, ProbeVal};
 use super::{ConcurrentMap, ConcurrentSet};
 use crate::util::hash::splitmix64;
+use crate::util::metrics::metrics;
 
 /// Buckets migrated per helping step: every operation that runs while a
 /// migration is active first drains one stripe of this size from the
@@ -110,6 +111,9 @@ struct Gen<T> {
     /// Stripes fully drained; the helper that completes the last stripe
     /// promotes this generation to current.
     done: AtomicUsize,
+    /// Install time; promotion reports `born.elapsed()` as the
+    /// migration's wall time (telemetry only).
+    born: std::time::Instant,
 }
 
 // SAFETY: `src` is only ever read (never through a mutable alias) and
@@ -146,6 +150,7 @@ impl<T: Generation> TwoGen<T> {
             src: ptr::null(),
             cursor: AtomicUsize::new(0),
             done: AtomicUsize::new(0),
+            born: std::time::Instant::now(),
         });
         let cur = &*genesis as *const Gen<T> as *mut Gen<T>;
         TwoGen {
@@ -192,7 +197,10 @@ impl<T: Generation> TwoGen<T> {
             if mig.is_null() {
                 match fast(self.current()) {
                     Ok(r) => return r,
-                    Err(Frozen) => continue,
+                    Err(Frozen) => {
+                        metrics().freeze_encounters.incr();
+                        continue;
+                    }
                 }
             }
             let mig = unsafe { &*mig };
@@ -200,7 +208,10 @@ impl<T: Generation> TwoGen<T> {
             let src = unsafe { &(*mig.src).table };
             match slow(src, &mig.table) {
                 Ok(r) => return r,
-                Err(Frozen) => continue,
+                Err(Frozen) => {
+                    metrics().freeze_encounters.incr();
+                    continue;
+                }
             }
         }
     }
@@ -216,7 +227,9 @@ impl<T: Generation> TwoGen<T> {
         if s >= nstripes {
             return; // all stripes claimed; stragglers finish them
         }
-        src.migrate_range(&mig.table, s * STRIPE, STRIPE);
+        let moved = src.migrate_range(&mig.table, s * STRIPE, STRIPE);
+        metrics().resize_stripes_drained.incr();
+        metrics().resize_keys_migrated.add(moved as u64);
         if mig.done.fetch_add(1, Ordering::AcqRel) + 1 == nstripes {
             let mig_ptr = mig as *const Gen<T> as *mut Gen<T>;
             self.current.store(mig_ptr, Ordering::Release);
@@ -226,6 +239,10 @@ impl<T: Generation> TwoGen<T> {
                 Ordering::AcqRel,
                 Ordering::Relaxed,
             );
+            metrics().resize_generations.incr();
+            metrics()
+                .resize_wall_ns
+                .add(mig.born.elapsed().as_nanos() as u64);
         }
     }
 
@@ -286,6 +303,7 @@ impl<T: Generation> TwoGen<T> {
             src: cur_ptr,
             cursor: AtomicUsize::new(0),
             done: AtomicUsize::new(0),
+            born: std::time::Instant::now(),
         });
         let target_ptr = &*target as *const Gen<T> as *mut Gen<T>;
         gens.push(target);
@@ -667,6 +685,7 @@ impl QuiescingResize {
     }
 
     fn grow_locked(&self, guard: &mut KCasRobinHood) {
+        let t0 = std::time::Instant::now();
         let old = &*guard;
         let new_log2 = old.capacity().trailing_zeros() + 1;
         let next = KCasRobinHood::new(new_log2);
@@ -683,6 +702,9 @@ impl QuiescingResize {
         self.approx_len.store(moved, Ordering::Relaxed);
         self.cap_cache.store(next.capacity(), Ordering::Relaxed);
         *guard = next;
+        metrics().resize_keys_migrated.add(moved as u64);
+        metrics().resize_generations.incr();
+        metrics().resize_wall_ns.add(t0.elapsed().as_nanos() as u64);
     }
 
     fn maybe_grow(&self) {

@@ -18,6 +18,8 @@
 //!              "!<v>" / "!-" with the witnessed value on failure
 //! B <n>        batch frame: the next n lines are ops (any of the
 //!              above); one reply line with n space-separated tokens
+//! STATS        telemetry snapshot → one line of compact JSON (see
+//!              [`crate::util::metrics::stats_line`])
 //! Q            quit (close the connection)
 //! ```
 //!
@@ -40,6 +42,7 @@ use std::fmt::Write as _;
 
 use crate::kcas::MAX_VALUE;
 use crate::maps::{MapOp, MapReply, MAX_KEY};
+use crate::util::metrics::metrics;
 
 /// Largest accepted batch frame (bounds per-connection memory).
 pub const MAX_BATCH: usize = 4096;
@@ -153,6 +156,10 @@ pub fn push_op(op: MapOp, out: &mut String) {
 pub enum Frame {
     /// Ops to apply with a single `apply_batch` call.
     Batch(Vec<MapOp>),
+    /// Client asked for a telemetry snapshot (`STATS`); the reply is
+    /// one line of compact JSON. Only valid as a bare line — inside a
+    /// `B <n>` body it is an ordinary unparseable member.
+    Stats,
     /// Protocol error to report; nothing is applied.
     Err(&'static str),
     /// Client said `Q`.
@@ -273,6 +280,16 @@ impl FrameDecoder {
     /// one. `None` means "feed me more bytes" — a partially received
     /// line or batch body stays buffered.
     pub fn next_frame(&mut self) -> Option<Frame> {
+        let frame = self.next_frame_inner()?;
+        let m = metrics();
+        m.frames_decoded.incr();
+        if let Frame::Batch(ops) = &frame {
+            m.batch_size.record(ops.len() as u64);
+        }
+        Some(frame)
+    }
+
+    fn next_frame_inner(&mut self) -> Option<Frame> {
         loop {
             let line = match self.take_line()? {
                 LineStep::Line(start, end) => &self.buf[start..end],
@@ -323,6 +340,9 @@ impl FrameDecoder {
             }
             if head == "Q" {
                 return Some(Frame::Quit);
+            }
+            if head == "STATS" {
+                return Some(Frame::Stats);
             }
             if let Some(rest) = head.strip_prefix("B ") {
                 match rest.trim().parse::<usize>() {
@@ -604,6 +624,46 @@ mod tests {
         let mut dec = FrameDecoder::new();
         dec.feed(b"Q");
         assert_eq!(dec.finish(), Some(Frame::Quit));
+    }
+
+    #[test]
+    fn decoder_yields_stats_frames_only_as_bare_lines() {
+        // Bare STATS is its own frame, in stream order.
+        let frames = decode_whole("G 1\nSTATS\nQ\n");
+        assert_eq!(
+            frames,
+            vec![
+                Frame::Batch(vec![MapOp::Get(1)]),
+                Frame::Stats,
+                Frame::Quit,
+            ]
+        );
+        // Inside a batch body it is an unparseable member: the whole
+        // frame is rejected and the stream stays in sync.
+        let frames = decode_whole("B 2\nG 1\nSTATS\nG 2\n");
+        assert_eq!(
+            frames,
+            vec![
+                Frame::Err(ERR_BAD_REQUEST),
+                Frame::Batch(vec![MapOp::Get(2)]),
+            ]
+        );
+        // Split across arbitrary read boundaries it still decodes.
+        let input = "STATS\nG 3\nSTATS\n";
+        let whole = decode_whole(input);
+        for chunk in 1..=4usize {
+            let mut dec = FrameDecoder::new();
+            let mut got = Vec::new();
+            for piece in input.as_bytes().chunks(chunk) {
+                dec.feed(piece);
+                got.extend(std::iter::from_fn(|| dec.next_frame()));
+            }
+            assert_eq!(got, whole, "chunk size {chunk}");
+        }
+        // Unterminated STATS at EOF decodes like any final line.
+        let mut dec = FrameDecoder::new();
+        dec.feed(b"STATS");
+        assert_eq!(dec.finish(), Some(Frame::Stats));
     }
 
     #[test]

@@ -46,10 +46,28 @@
 //! (`sharded-kcas-rh-map:16` etc.); the CLI entry points are
 //! `crh fig14_batching` (batching sweep), `crh fig16_rmw`
 //! (conditional-RMW counter workload), `crh fig17_frontend`
-//! (front-end comparison), and `crh serve` (run either server until
-//! killed).
+//! (front-end comparison), `crh serve` (run either server until
+//! killed), and `crh stats` (query a running server's telemetry).
+//!
+//! Both front-ends answer the `STATS` wire verb with one line of
+//! compact JSON rendered from [`crate::util::metrics`] — same codec
+//! ([`frame::Frame::Stats`]), same renderer, so the schema cannot
+//! drift between backends.
 
 pub mod batch;
 pub mod frame;
 pub mod reactor;
 pub mod server;
+
+/// Best-effort text of a contained panic payload (the `&str` /
+/// `String` shapes `panic!` produces); both front-ends log it with
+/// the connection id and op count when a batch unwinds.
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "<non-string panic payload>"
+    }
+}

@@ -73,7 +73,9 @@ mod imp {
     use super::{default_workers, HIGH_WATER, LOW_WATER};
     use crate::maps::{ConcurrentMap, HashedMapOp, MapReply};
     use crate::service::frame::{push_reply, Frame, FrameDecoder, ERR_SERVER};
+    use crate::service::panic_message;
     use crate::util::hash::splitmix64;
+    use crate::util::metrics::{metrics, stats_line};
     use crate::util::sys::{
         EpollEvent, EpollFd, EventFd, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT,
         EPOLLRDHUP,
@@ -98,6 +100,9 @@ mod imp {
         Ops { start: usize, len: usize },
         /// Literal protocol-error line.
         Line(&'static str),
+        /// Telemetry snapshot (`STATS`): rendered at reply-format time
+        /// so the counters reflect the batch this wake applied.
+        Stats,
     }
 
     struct Conn {
@@ -305,6 +310,7 @@ mod imp {
                     return;
                 }
                 Ok(n) => {
+                    metrics().bytes_in_epoll.add(n as u64);
                     conn.dec.feed(&chunk[..n]);
                     if n < chunk.len() {
                         return; // likely drained; level-trigger re-arms
@@ -344,6 +350,7 @@ mod imp {
                     conn.pending.push(Pending::Ops { start, len: ops.len() });
                 }
                 Frame::Err(e) => conn.pending.push(Pending::Line(e)),
+                Frame::Stats => conn.pending.push(Pending::Stats),
                 Frame::Quit => {
                     // Like the threaded backend: no reply to Q, stop
                     // consuming input, close once replies flush.
@@ -373,6 +380,7 @@ mod imp {
             line.clear();
             match conn.pending[i] {
                 Pending::Line(e) => line.push_str(e),
+                Pending::Stats => line.push_str(&stats_line()),
                 Pending::Ops { start, len } => {
                     if panicked {
                         // Fatal: error line, discard the rest of this
@@ -406,7 +414,10 @@ mod imp {
                     conn.dead = true;
                     break;
                 }
-                Ok(n) => conn.sent += n,
+                Ok(n) => {
+                    metrics().bytes_out_epoll.add(n as u64);
+                    conn.sent += n;
+                }
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
                 Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
                 Err(_) => {
@@ -507,10 +518,20 @@ mod imp {
             // across all connections — the multiplexer *is* the batch.
             let mut panicked = false;
             if !batch_ops.is_empty() {
-                panicked = catch_unwind(AssertUnwindSafe(|| {
+                let applied = catch_unwind(AssertUnwindSafe(|| {
                     map.apply_batch_hashed(&batch_ops, &mut replies)
-                }))
-                .is_err();
+                }));
+                if let Err(payload) = applied {
+                    panicked = true;
+                    metrics().server_panics.incr();
+                    eprintln!(
+                        "crh-reactor: contained panic in wake batch \
+                         ({} ops across {} conns): {}",
+                        batch_ops.len(),
+                        touched.len(),
+                        panic_message(payload.as_ref()),
+                    );
+                }
             }
 
             // Phase 3: format replies, flush, manage interest sets.
@@ -531,8 +552,10 @@ mod imp {
                 // Backpressure transitions.
                 if !conn.paused && conn.backlog() > HIGH_WATER {
                     conn.paused = true;
+                    metrics().backpressure_pauses.incr();
                 } else if conn.paused && conn.backlog() <= LOW_WATER {
                     conn.paused = false;
+                    metrics().backpressure_resumes.incr();
                     if conn.dec.has_complete_line()
                         || (conn.eof && conn.dec.buffered() > 0)
                     {

@@ -43,6 +43,8 @@ use crate::maps::{ConcurrentMap, MapOp, MapReply};
 use crate::service::frame::{
     push_op, push_reply, Frame, FrameDecoder, ERR_SERVER, MAX_BATCH,
 };
+use crate::service::panic_message;
+use crate::util::metrics::{metrics, stats_line};
 
 // Re-export the codec surface under its historical home so protocol
 // users keep one import path per front-end.
@@ -74,6 +76,7 @@ fn read_frames(mut stream: TcpStream, tx: mpsc::SyncSender<Frame>) {
             Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
             Err(_) => return, // broken pipe / shutdown
         };
+        metrics().bytes_in_thread.add(n as u64);
         dec.feed(&chunk[..n]);
         while let Some(frame) = dec.next_frame() {
             let quit = matches!(frame, Frame::Quit);
@@ -86,7 +89,7 @@ fn read_frames(mut stream: TcpStream, tx: mpsc::SyncSender<Frame>) {
 
 /// Apply/write stage: one `apply_batch` call and one buffered write per
 /// frame, replies in frame order.
-fn serve_conn(stream: TcpStream, map: Arc<dyn ConcurrentMap>) {
+fn serve_conn(stream: TcpStream, map: Arc<dyn ConcurrentMap>, conn_id: u64) {
     stream.set_nodelay(true).ok();
     let Ok(read_half) = stream.try_clone() else { return };
     let Ok(close_half) = stream.try_clone() else { return };
@@ -101,6 +104,7 @@ fn serve_conn(stream: TcpStream, map: Arc<dyn ConcurrentMap>) {
         match frame {
             Frame::Quit => break,
             Frame::Err(e) => line.push_str(e),
+            Frame::Stats => line.push_str(&stats_line()),
             Frame::Batch(ops) => {
                 // Range checks happened at parse time, but the table
                 // can still panic on in-range input (e.g. the "map is
@@ -115,16 +119,26 @@ fn serve_conn(stream: TcpStream, map: Arc<dyn ConcurrentMap>) {
                         map.apply_batch(&ops, &mut replies)
                     }),
                 );
-                if applied.is_ok() {
-                    for (i, &r) in replies.iter().enumerate() {
-                        if i > 0 {
-                            line.push(' ');
+                match applied {
+                    Ok(()) => {
+                        for (i, &r) in replies.iter().enumerate() {
+                            if i > 0 {
+                                line.push(' ');
+                            }
+                            push_reply(r, &mut line);
                         }
-                        push_reply(r, &mut line);
                     }
-                } else {
-                    line.push_str(ERR_SERVER);
-                    fatal = true;
+                    Err(payload) => {
+                        metrics().server_panics.incr();
+                        eprintln!(
+                            "crh-server: contained panic on conn {conn_id} \
+                             ({} ops): {}",
+                            ops.len(),
+                            panic_message(payload.as_ref()),
+                        );
+                        line.push_str(ERR_SERVER);
+                        fatal = true;
+                    }
                 }
             }
         }
@@ -132,6 +146,7 @@ fn serve_conn(stream: TcpStream, map: Arc<dyn ConcurrentMap>) {
         if out.write_all(line.as_bytes()).is_err() || out.flush().is_err() {
             break;
         }
+        metrics().bytes_out_thread.add(line.len() as u64);
         if fatal {
             break;
         }
@@ -205,7 +220,7 @@ fn accept_loop(
         let map = map.clone();
         let shared = shared.clone();
         workers.push(std::thread::spawn(move || {
-            serve_conn(stream, map);
+            serve_conn(stream, map, id);
             shared.conns.lock().unwrap().remove(&id);
         }));
     }
@@ -263,6 +278,12 @@ impl Client {
             frame: String::new(),
             reply: String::new(),
         })
+    }
+
+    /// Request a telemetry snapshot (`STATS` verb): one line of
+    /// compact JSON rendered from the server's metrics registry.
+    pub fn stats(&mut self) -> io::Result<String> {
+        self.request_line("STATS")
     }
 
     /// Send one raw request line, read one reply line (trimmed).

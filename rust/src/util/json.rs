@@ -98,6 +98,46 @@ impl Json {
         out
     }
 
+    /// Render as a single line with no whitespace — for line-oriented
+    /// consumers (the `STATS` wire reply must be exactly one line).
+    pub fn render_compact(&self) -> String {
+        let mut out = String::new();
+        self.write_compact(&mut out);
+        out
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(v) => write_num(out, *v),
+            Json::Str(s) => write_str(out, s),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write_compact(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_str(out, k);
+                    out.push(':');
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
     fn write(&self, out: &mut String, indent: usize) {
         match self {
             Json::Null => out.push_str("null"),
@@ -467,6 +507,25 @@ mod tests {
             ("ok", Json::Bool(true)),
         ]);
         assert_eq!(roundtrip(&v), v);
+    }
+
+    #[test]
+    fn compact_render_is_one_line_and_round_trips() {
+        let v = Json::obj(vec![
+            ("s", Json::Str("a\nb".into())),
+            ("n", Json::Num(1.5)),
+            ("a", Json::Arr(vec![Json::Num(1.0), Json::Null])),
+            ("o", Json::obj(vec![("k", Json::Bool(true))])),
+            ("e", Json::Obj(vec![])),
+        ]);
+        let line = v.render_compact();
+        assert!(!line.contains('\n'), "{line}");
+        assert!(!line.contains(": "), "{line}");
+        assert_eq!(
+            line,
+            r#"{"s":"a\nb","n":1.5,"a":[1,null],"o":{"k":true},"e":{}}"#
+        );
+        assert_eq!(Json::parse(&line).unwrap(), v);
     }
 
     #[test]

@@ -1,0 +1,663 @@
+//! Always-on, dependency-free telemetry: sharded relaxed-atomic
+//! counters and power-of-two log-histograms behind a global registry
+//! of static names.
+//!
+//! The paper's core claims — low expected probe length, bounded K-CAS
+//! retry cost, non-blocking migration — are runtime *distributions*,
+//! and this module is how the tree observes them outside a benchmark
+//! post-mortem: every layer (kcas, maps, resize engine, service
+//! front-ends) increments the named metrics below on its hot paths,
+//! and the aggregate is
+//!
+//! * served live over the wire (`STATS` verb, both front-ends, one
+//!   compact JSON line rendered via [`crate::util::json`]),
+//! * dumped by the `crh stats` CLI client, and
+//! * snapshot-diffed around every benchmark cell so `BENCH_<fig>.json`
+//!   carries a per-cell `metrics` section (probe-length p50/p99,
+//!   K-CAS retry rate, stripes drained, ...) that `crh bench-compare`
+//!   can use to *attribute* a throughput shift.
+//!
+//! ## Cost model
+//!
+//! A [`Counter`] is `SHARDS` cache-line-padded `AtomicU64`s; threads
+//! pick a fixed shard on first use, so the hot path is one relaxed
+//! `fetch_add` on a line the thread effectively owns. A [`Hist`] is 48
+//! plain atomic buckets using **exactly** the `LatencyHist` bucket
+//! scheme (`b = 63 - v.leading_zeros()`, clamped to 47; quantiles
+//! report the geometric bucket midpoint `2^b * sqrt(2)` clamped to the
+//! observed max) so histogram numbers are comparable across the bench
+//! driver and this module.
+//!
+//! Recording is gated on [`enabled`]: `CRH_METRICS=0` (or `false` /
+//! `off`) turns every `add`/`record` into a single relaxed load + a
+//! predictable branch — near-zero cost, verified by the size
+//! assertions below and the behavior tests in `tests/metrics_stats.rs`.
+//! The default is **on**: telemetry you have to remember to enable is
+//! telemetry you won't have when you need it.
+//!
+//! Environment can't vary `cfg` at compile time in a dependency-free
+//! crate, so "compiled out" here means the flag is read once, cached
+//! in a static, and every record site early-outs on it; the counters
+//! themselves live in static storage either way (they add nothing to
+//! any table or connection struct — see the `const` size assertions).
+
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+
+use crate::util::json::Json;
+use crate::util::pad::CachePadded;
+
+/// Counter shards (power of two). 16 lines bounds same-line sharing to
+/// 1/16th of threads even on large boxes while keeping a full
+/// [`Metrics`] table a few tens of KiB of static storage.
+pub const SHARDS: usize = 16;
+
+/// Histogram buckets — identical to `bench::driver::LatencyHist`
+/// (`buckets[b]` counts values in `[2^b, 2^(b+1))`).
+pub const BUCKETS: usize = 48;
+
+// ---------------------------------------------------------------- gate
+
+/// Tri-state cached `CRH_METRICS` gate: 0 = unread, 1 = off, 2 = on.
+static GATE: AtomicU8 = AtomicU8::new(0);
+
+#[cold]
+fn gate_init() -> bool {
+    let on = match std::env::var("CRH_METRICS") {
+        Ok(v) => {
+            let v = v.trim().to_ascii_lowercase();
+            !matches!(v.as_str(), "0" | "false" | "off" | "no")
+        }
+        Err(_) => true,
+    };
+    GATE.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+    on
+}
+
+/// Is recording enabled? One relaxed load on the hot path.
+#[inline(always)]
+pub fn enabled() -> bool {
+    match GATE.load(Ordering::Relaxed) {
+        2 => true,
+        1 => false,
+        _ => gate_init(),
+    }
+}
+
+/// Force the gate (tests and diagnostics; normal code never calls
+/// this). Counters keep their values — disabling merely freezes them,
+/// which is what makes byte-identical `STATS` replies testable.
+pub fn set_enabled(on: bool) {
+    GATE.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+}
+
+// ------------------------------------------------------------- counter
+
+/// Monotonic sharded counter: one cache line per shard, relaxed adds,
+/// summed on read. Writers never contend with readers.
+pub struct Counter {
+    shards: [CachePadded<AtomicU64>; SHARDS],
+}
+
+// One line per shard, no hidden fields: the whole point of the
+// padding. Guards against a refactor quietly packing shards together.
+const _: () = assert!(
+    std::mem::size_of::<Counter>()
+        == SHARDS * std::mem::size_of::<CachePadded<AtomicU64>>()
+);
+
+/// Round-robin shard assignment; a thread keeps its first shard for
+/// life so its counter line stays in its own cache.
+static NEXT_SHARD: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static MY_SHARD: usize =
+        NEXT_SHARD.fetch_add(1, Ordering::Relaxed) & (SHARDS - 1);
+}
+
+#[inline]
+fn my_shard() -> usize {
+    MY_SHARD.with(|s| *s)
+}
+
+impl Counter {
+    pub const fn new() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: CachePadded<AtomicU64> =
+            CachePadded::new(AtomicU64::new(0));
+        Counter { shards: [ZERO; SHARDS] }
+    }
+
+    /// Add `n` (no-op when the gate is off).
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if !enabled() || n == 0 {
+            return;
+        }
+        self.shards[my_shard()].fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Add 1 (no-op when the gate is off).
+    #[inline]
+    pub fn incr(&self) {
+        if !enabled() {
+            return;
+        }
+        self.shards[my_shard()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Current total (sum over shards; monotonic under concurrency).
+    pub fn get(&self) -> u64 {
+        self.shards.iter().map(|s| s.load(Ordering::Relaxed)).sum()
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ----------------------------------------------------------- histogram
+
+/// Power-of-two log-histogram with the `LatencyHist` bucket scheme,
+/// made concurrent: plain (unpadded — adjacent values land in adjacent
+/// buckets anyway) atomic buckets plus a relaxed running max.
+pub struct Hist {
+    buckets: [AtomicU64; BUCKETS],
+    max: AtomicU64,
+}
+
+// Buckets + max and nothing else — `record` must stay two relaxed RMWs.
+const _: () = assert!(std::mem::size_of::<Hist>() == (BUCKETS + 1) * 8);
+
+impl Hist {
+    pub const fn new() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Hist { buckets: [ZERO; BUCKETS], max: AtomicU64::new(0) }
+    }
+
+    /// Record one value (no-op when the gate is off). Bucket `b` holds
+    /// `[2^b, 2^(b+1))`; 0 lands in bucket 0 with 1.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        if !enabled() {
+            return;
+        }
+        let b = if v == 0 { 0 } else { 63 - v.leading_zeros() as usize };
+        self.buckets[b.min(BUCKETS - 1)].fetch_add(1, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Copy out a point-in-time view (buckets read relaxed, one pass).
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut buckets = [0u64; BUCKETS];
+        for (dst, src) in buckets.iter_mut().zip(self.buckets.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        HistSnapshot { buckets, max: self.max.load(Ordering::Relaxed) }
+    }
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Plain-data view of a [`Hist`]: diffable, quantile-queryable.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; BUCKETS],
+    pub max: u64,
+}
+
+impl HistSnapshot {
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Quantile `q` (0 < q <= 1) as the geometric bucket midpoint
+    /// `2^b * sqrt(2)` clamped to the observed max — the exact
+    /// `LatencyHist::quantile_ns` rule, so numbers line up across the
+    /// bench driver and the metrics plane. 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let target = ((q * count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (b, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                let mid = ((1u64 << b) as f64 * std::f64::consts::SQRT_2)
+                    .round() as u64;
+                return mid.min(self.max.max(1));
+            }
+        }
+        self.max
+    }
+
+    /// Bucket-wise `self - earlier` (saturating: a counter reset can't
+    /// produce phantom negative buckets). The max carries over from
+    /// `self` — a running max cannot be un-seen by differencing.
+    pub fn diff(&self, earlier: &HistSnapshot) -> HistSnapshot {
+        let mut buckets = [0u64; BUCKETS];
+        for (i, dst) in buckets.iter_mut().enumerate() {
+            *dst = self.buckets[i].saturating_sub(earlier.buckets[i]);
+        }
+        HistSnapshot { buckets, max: self.max }
+    }
+
+    /// Merge two snapshots (used to pool the per-op-class probe
+    /// histograms into one headline probe-length distribution).
+    pub fn merged(&self, other: &HistSnapshot) -> HistSnapshot {
+        let mut buckets = [0u64; BUCKETS];
+        for (i, dst) in buckets.iter_mut().enumerate() {
+            *dst = self.buckets[i] + other.buckets[i];
+        }
+        HistSnapshot { buckets, max: self.max.max(other.max) }
+    }
+}
+
+// ------------------------------------------------------------ registry
+
+/// Every metric the tree exports, one static instance, grouped by
+/// layer. Field order here *is* the wire order (see [`REGISTRY`]).
+pub struct Metrics {
+    // kcas
+    /// K-CAS executions started (owner side, `kcas::kcas`).
+    pub kcas_attempts: Counter,
+    /// K-CAS executions that failed and will be retried by the caller.
+    pub kcas_retries: Counter,
+    /// Helping entries (`kcas::help_kcas`): another thread's descriptor
+    /// encountered mid-probe and completed on its behalf.
+    pub kcas_helps: Counter,
+    /// Per-thread descriptor slot acquisitions (registry `alloc_tid`).
+    pub kcas_descriptors: Counter,
+
+    // maps
+    /// Buckets examined per membership probe (contains / probe_mig).
+    pub probe_len_read: Hist,
+    /// Buckets examined per write-path probe (add / remove attempts).
+    pub probe_len_write: Hist,
+    /// Entries displaced ("stolen from the rich") by committed adds.
+    pub rh_displacements: Counter,
+    /// Probe steps spent walking over `FROZEN_TOMB` marks — the read
+    /// cost of tombstone drift during a migration.
+    pub tombstone_drift: Counter,
+    /// Ops that hit a frozen bucket and re-routed through the resize
+    /// engine's slow path.
+    pub freeze_encounters: Counter,
+
+    // resize engine
+    /// 64-bucket migration stripes drained by helping ops.
+    pub resize_stripes_drained: Counter,
+    /// Keys transferred into a successor generation (one K-CAS each).
+    pub resize_keys_migrated: Counter,
+    /// Generations promoted (migrations completed).
+    pub resize_generations: Counter,
+    /// Wall time, in ns, from generation install to promotion (summed
+    /// over migrations; divide by `resize_generations` for a mean).
+    pub resize_wall_ns: Counter,
+
+    // service
+    /// Ops per decoded `B <n>` batch frame (both front-ends decode
+    /// through the shared `service::frame` codec).
+    pub batch_size: Hist,
+    /// Frames decoded (ops, batches, errors, quits — every frame).
+    pub frames_decoded: Counter,
+    /// Reactor connections paused at the high-water mark.
+    pub backpressure_pauses: Counter,
+    /// Paused connections resumed after draining below low water.
+    pub backpressure_resumes: Counter,
+    /// Batches whose apply panicked and was contained (either backend).
+    pub server_panics: Counter,
+    /// Wire bytes, per direction and backend.
+    pub bytes_in_thread: Counter,
+    pub bytes_out_thread: Counter,
+    pub bytes_in_epoll: Counter,
+    pub bytes_out_epoll: Counter,
+}
+
+impl Metrics {
+    const fn new() -> Self {
+        Metrics {
+            kcas_attempts: Counter::new(),
+            kcas_retries: Counter::new(),
+            kcas_helps: Counter::new(),
+            kcas_descriptors: Counter::new(),
+            probe_len_read: Hist::new(),
+            probe_len_write: Hist::new(),
+            rh_displacements: Counter::new(),
+            tombstone_drift: Counter::new(),
+            freeze_encounters: Counter::new(),
+            resize_stripes_drained: Counter::new(),
+            resize_keys_migrated: Counter::new(),
+            resize_generations: Counter::new(),
+            resize_wall_ns: Counter::new(),
+            batch_size: Hist::new(),
+            frames_decoded: Counter::new(),
+            backpressure_pauses: Counter::new(),
+            backpressure_resumes: Counter::new(),
+            server_panics: Counter::new(),
+            bytes_in_thread: Counter::new(),
+            bytes_out_thread: Counter::new(),
+            bytes_in_epoll: Counter::new(),
+            bytes_out_epoll: Counter::new(),
+        }
+    }
+}
+
+static METRICS: Metrics = Metrics::new();
+
+/// The global metrics table. Record sites call
+/// `metrics().kcas_attempts.incr()` and similar.
+#[inline]
+pub fn metrics() -> &'static Metrics {
+    &METRICS
+}
+
+/// A registry row: static name + which metric it names.
+pub enum Metric {
+    Counter(&'static Counter),
+    Hist(&'static Hist),
+}
+
+/// Name -> metric, in stable export order (the order of every
+/// `STATS` reply and snapshot `metrics` section).
+pub static REGISTRY: &[(&str, Metric)] = &[
+    ("kcas_attempts", Metric::Counter(&METRICS.kcas_attempts)),
+    ("kcas_retries", Metric::Counter(&METRICS.kcas_retries)),
+    ("kcas_helps", Metric::Counter(&METRICS.kcas_helps)),
+    ("kcas_descriptors", Metric::Counter(&METRICS.kcas_descriptors)),
+    ("probe_len_read", Metric::Hist(&METRICS.probe_len_read)),
+    ("probe_len_write", Metric::Hist(&METRICS.probe_len_write)),
+    ("rh_displacements", Metric::Counter(&METRICS.rh_displacements)),
+    ("tombstone_drift", Metric::Counter(&METRICS.tombstone_drift)),
+    ("freeze_encounters", Metric::Counter(&METRICS.freeze_encounters)),
+    (
+        "resize_stripes_drained",
+        Metric::Counter(&METRICS.resize_stripes_drained),
+    ),
+    (
+        "resize_keys_migrated",
+        Metric::Counter(&METRICS.resize_keys_migrated),
+    ),
+    ("resize_generations", Metric::Counter(&METRICS.resize_generations)),
+    ("resize_wall_ns", Metric::Counter(&METRICS.resize_wall_ns)),
+    ("batch_size", Metric::Hist(&METRICS.batch_size)),
+    ("frames_decoded", Metric::Counter(&METRICS.frames_decoded)),
+    (
+        "backpressure_pauses",
+        Metric::Counter(&METRICS.backpressure_pauses),
+    ),
+    (
+        "backpressure_resumes",
+        Metric::Counter(&METRICS.backpressure_resumes),
+    ),
+    ("server_panics", Metric::Counter(&METRICS.server_panics)),
+    ("bytes_in_thread", Metric::Counter(&METRICS.bytes_in_thread)),
+    ("bytes_out_thread", Metric::Counter(&METRICS.bytes_out_thread)),
+    ("bytes_in_epoll", Metric::Counter(&METRICS.bytes_in_epoll)),
+    ("bytes_out_epoll", Metric::Counter(&METRICS.bytes_out_epoll)),
+];
+
+// ------------------------------------------------------------ snapshot
+
+/// Point-in-time copy of every registered metric, in registry order.
+/// `diff` two of these around a region to attribute its cost.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    pub counters: Vec<(&'static str, u64)>,
+    pub hists: Vec<(&'static str, HistSnapshot)>,
+}
+
+/// Capture the current value of every registered metric.
+pub fn snapshot() -> Snapshot {
+    let mut counters = Vec::new();
+    let mut hists = Vec::new();
+    for (name, m) in REGISTRY {
+        match m {
+            Metric::Counter(c) => counters.push((*name, c.get())),
+            Metric::Hist(h) => hists.push((*name, h.snapshot())),
+        }
+    }
+    Snapshot { counters, hists }
+}
+
+impl Snapshot {
+    /// `self - earlier`, name-wise (saturating). Both snapshots come
+    /// from the same static registry, so the name lists always align.
+    pub fn diff(&self, earlier: &Snapshot) -> Snapshot {
+        let counters = self
+            .counters
+            .iter()
+            .map(|&(name, v)| {
+                let base = earlier
+                    .counters
+                    .iter()
+                    .find(|&&(n, _)| n == name)
+                    .map_or(0, |&(_, b)| b);
+                (name, v.saturating_sub(base))
+            })
+            .collect();
+        let hists = self
+            .hists
+            .iter()
+            .map(|(name, h)| {
+                let diffed = match earlier.hists.iter().find(|(n, _)| n == name)
+                {
+                    Some((_, base)) => h.diff(base),
+                    None => h.clone(),
+                };
+                (*name, diffed)
+            })
+            .collect();
+        Snapshot { counters, hists }
+    }
+
+    /// Counter value by name (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|&&(n, _)| n == name)
+            .map_or(0, |&(_, v)| v)
+    }
+
+    /// Histogram snapshot by name.
+    pub fn hist(&self, name: &str) -> Option<&HistSnapshot> {
+        self.hists.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+
+    /// JSON rendering shared by the `STATS` wire verb, `crh stats`,
+    /// and diagnostics: counters as a flat object, histograms as
+    /// `{count, p50, p99, max}` summaries (full buckets stay
+    /// in-process — quantiles are what a wire consumer can act on).
+    pub fn to_json(&self) -> Json {
+        let counters = Json::obj(
+            self.counters
+                .iter()
+                .map(|&(n, v)| (n, Json::Num(v as f64)))
+                .collect(),
+        );
+        let hists = Json::obj(
+            self.hists
+                .iter()
+                .map(|(n, h)| {
+                    (
+                        *n,
+                        Json::obj(vec![
+                            ("count", Json::Num(h.count() as f64)),
+                            ("p50", Json::Num(h.quantile(0.5) as f64)),
+                            ("p99", Json::Num(h.quantile(0.99) as f64)),
+                            ("max", Json::Num(h.max as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("enabled", Json::Bool(enabled())),
+            ("counters", counters),
+            ("histograms", hists),
+        ])
+    }
+}
+
+/// The `STATS` wire reply: the full registry as **one compact JSON
+/// line** (the wire protocol is line-oriented). Identical code path on
+/// both front-ends, hence identical schema — the fig17-style
+/// equivalence assertion depends on it.
+pub fn stats_line() -> String {
+    snapshot().to_json().render_compact()
+}
+
+// -------------------------------------------------- bench integration
+
+/// Headline per-cell metrics for `BENCH_<fig>.json`: reduce a
+/// [`Snapshot::diff`] spanning one benchmark cell to the scalar series
+/// `bench-compare` tracks across runs. Empty when the gate is off (an
+/// all-zero section would read as "measured, and zero", which is the
+/// opposite of the truth).
+pub fn cell_metrics(d: &Snapshot) -> Vec<(String, f64)> {
+    if !enabled() {
+        return Vec::new();
+    }
+    let mut out: Vec<(String, f64)> = Vec::new();
+    let probes = match (d.hist("probe_len_read"), d.hist("probe_len_write")) {
+        (Some(r), Some(w)) => r.merged(w),
+        (Some(r), None) => r.clone(),
+        (None, Some(w)) => w.clone(),
+        (None, None) => HistSnapshot { buckets: [0; BUCKETS], max: 0 },
+    };
+    if probes.count() > 0 {
+        out.push(("probe_p50".into(), probes.quantile(0.5) as f64));
+        out.push(("probe_p99".into(), probes.quantile(0.99) as f64));
+    }
+    let attempts = d.counter("kcas_attempts");
+    if attempts > 0 {
+        let rate = d.counter("kcas_retries") as f64 / attempts as f64;
+        out.push(("kcas_retry_rate".into(), rate));
+    }
+    out.push((
+        "stripes_drained".into(),
+        d.counter("resize_stripes_drained") as f64,
+    ));
+    out.push((
+        "keys_migrated".into(),
+        d.counter("resize_keys_migrated") as f64,
+    ));
+    out.push((
+        "freeze_encounters".into(),
+        d.counter("freeze_encounters") as f64,
+    ));
+    let wall_ns = d.counter("resize_wall_ns");
+    if wall_ns > 0 {
+        out.push(("migration_ms".into(), wall_ns as f64 / 1.0e6));
+    }
+    out
+}
+
+/// Capture-diff convenience: metrics delta across `f()`, reduced to
+/// the headline series. Returns `(f's result, cell metrics)`.
+pub fn measured<R>(f: impl FnOnce() -> R) -> (R, Vec<(String, f64)>) {
+    let before = snapshot();
+    let r = f();
+    let d = snapshot().diff(&before);
+    (r, cell_metrics(&d))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The gate is process-global; tests that flip it hold this lock so
+    // they serialize against each other (other tests in this binary
+    // never assert on global metric *values*).
+    static GATE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    #[test]
+    fn counter_sums_across_shards() {
+        let _g = GATE_LOCK.lock().unwrap();
+        set_enabled(true);
+        let c = Counter::new();
+        c.add(5);
+        c.incr();
+        assert_eq!(c.get(), 6);
+    }
+
+    #[test]
+    fn disabled_gate_freezes_counters_and_hists() {
+        let _g = GATE_LOCK.lock().unwrap();
+        set_enabled(false);
+        let c = Counter::new();
+        let h = Hist::new();
+        c.add(7);
+        c.incr();
+        h.record(100);
+        assert_eq!(c.get(), 0);
+        assert_eq!(h.snapshot().count(), 0);
+        set_enabled(true);
+        c.incr();
+        h.record(100);
+        assert_eq!(c.get(), 1);
+        assert_eq!(h.snapshot().count(), 1);
+    }
+
+    #[test]
+    fn hist_bucket_scheme_matches_latency_hist() {
+        let _g = GATE_LOCK.lock().unwrap();
+        set_enabled(true);
+        let h = Hist::new();
+        // 0 and 1 share bucket 0; 2..4 bucket 1; 1000 sits in
+        // [512, 1024) => geometric midpoint 724 (the LatencyHist test
+        // vector).
+        for _ in 0..300 {
+            h.record(1);
+        }
+        for _ in 0..300 {
+            h.record(1000);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.buckets[0], 300);
+        assert_eq!(s.buckets[9], 300);
+        assert_eq!(s.quantile(0.5), 1);
+        assert_eq!(s.quantile(0.99), 724);
+        assert_eq!(s.max, 1000);
+    }
+
+    #[test]
+    fn snapshot_diff_is_the_delta() {
+        let _g = GATE_LOCK.lock().unwrap();
+        set_enabled(true);
+        let before = snapshot();
+        metrics().kcas_attempts.add(3);
+        metrics().probe_len_read.record(4);
+        let d = snapshot().diff(&before);
+        assert_eq!(d.counter("kcas_attempts"), 3);
+        assert_eq!(d.hist("probe_len_read").unwrap().count(), 1);
+        assert_eq!(d.counter("server_panics"), 0);
+    }
+
+    #[test]
+    fn registry_names_are_unique_and_snapshot_covers_them() {
+        let mut names: Vec<&str> = REGISTRY.iter().map(|&(n, _)| n).collect();
+        let total = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), total, "duplicate metric name");
+        let s = snapshot();
+        assert_eq!(s.counters.len() + s.hists.len(), total);
+    }
+
+    #[test]
+    fn stats_line_is_one_line_of_parseable_json() {
+        let line = stats_line();
+        assert!(!line.contains('\n'));
+        let v = Json::parse(&line).expect("STATS line parses");
+        assert!(v.get("counters").is_some());
+        assert!(v.get("histograms").is_some());
+    }
+}

@@ -2,15 +2,18 @@
 //! the Linux readiness syscalls behind the epoll front-end
 //! ([`sys`], `target_os = "linux"` only), a dependency-free JSON
 //! writer/parser ([`json`], the substrate of the `BENCH_*.json`
-//! perf-trajectory snapshots), plus the offline-build shims
-//! (cache-line padding, error plumbing) that keep the crate free of
-//! external dependencies.
+//! perf-trajectory snapshots), the always-on telemetry plane
+//! ([`metrics`]: sharded counters + log-histograms behind the `STATS`
+//! wire verb and per-cell snapshot metrics), plus the offline-build
+//! shims (cache-line padding, error plumbing) that keep the crate free
+//! of external dependencies.
 
 pub mod affinity;
 pub mod error;
 pub mod hash;
 pub mod json;
 pub mod linearize;
+pub mod metrics;
 pub mod pad;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,244 @@
+//! Telemetry-plane tier: the `util::metrics` primitives under real
+//! concurrency (counter monotonicity, histogram bucket boundaries,
+//! snapshot-diff correctness), the `CRH_METRICS=0` disabled path being
+//! invisible end-to-end, and the `STATS` wire verb answering
+//! byte-identically on both TCP front-ends.
+//!
+//! The metrics gate and registry are process-global, so every test in
+//! this binary serializes on [`lock_gate`]; this test file owns its own
+//! process (Cargo builds each integration test as a separate binary),
+//! so nothing outside this file races the gate.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crh::maps::{ConcurrentMap, MapKind};
+use crh::service::reactor;
+use crh::service::server::{self, Client};
+use crh::util::json::Json;
+use crh::util::metrics::{
+    self, metrics, set_enabled, snapshot, stats_line, Counter, Hist,
+};
+
+static GATE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize gate flips and global-registry assertions across the
+/// parallel test threads. A panicking holder must not wedge the rest
+/// of the file, so poison is ignored.
+fn lock_gate() -> MutexGuard<'static, ()> {
+    GATE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Drop guard: tests that disable the gate re-enable it on every exit
+/// path (the default state for the rest of the binary).
+struct Reenable;
+
+impl Drop for Reenable {
+    fn drop(&mut self) {
+        set_enabled(true);
+    }
+}
+
+fn map(size_log2: u32) -> Arc<dyn ConcurrentMap> {
+    Arc::from(MapKind::ShardedKCasRhMap { shards: 2 }.build(size_log2))
+}
+
+/// Writers hammer one sharded counter from many threads while a reader
+/// polls it: every observed value is non-decreasing (monotonic under
+/// concurrency), and the final total is exact — no lost updates across
+/// shards.
+#[test]
+fn counter_is_monotonic_under_concurrent_hammering() {
+    let _g = lock_gate();
+    set_enabled(true);
+    const THREADS: u64 = 8;
+    let per: u64 = crh::util::prop::scaled(50_000);
+    let c = Arc::new(Counter::new());
+    let done = Arc::new(AtomicBool::new(false));
+
+    let reader = {
+        let c = Arc::clone(&c);
+        let done = Arc::clone(&done);
+        std::thread::spawn(move || {
+            let mut last = 0u64;
+            while !done.load(Ordering::Acquire) {
+                let now = c.get();
+                assert!(now >= last, "counter went backwards: {last} -> {now}");
+                last = now;
+            }
+        })
+    };
+    let writers: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let c = Arc::clone(&c);
+            std::thread::spawn(move || {
+                for i in 0..per {
+                    // Exercise both entry points.
+                    if (i + t) % 2 == 0 {
+                        c.incr();
+                    } else {
+                        c.add(1);
+                    }
+                }
+            })
+        })
+        .collect();
+    for w in writers {
+        w.join().unwrap();
+    }
+    done.store(true, Ordering::Release);
+    reader.join().unwrap();
+    assert_eq!(c.get(), THREADS * per, "increments were lost");
+}
+
+/// Bucket `b` holds `[2^b, 2^(b+1))`, 0 shares bucket 0 with 1, and
+/// values past the last bucket clamp into it — the exact `LatencyHist`
+/// scheme the bench driver uses, so the two planes stay comparable.
+#[test]
+fn hist_bucket_boundaries_follow_powers_of_two() {
+    let _g = lock_gate();
+    set_enabled(true);
+    let h = Hist::new();
+    for v in [0, 1, 2, 3, 4, 7, 8, 1 << 46, u64::MAX] {
+        h.record(v);
+    }
+    let s = h.snapshot();
+    assert_eq!(s.buckets[0], 2, "0 and 1 share bucket 0");
+    assert_eq!(s.buckets[1], 2, "[2,4) is bucket 1");
+    assert_eq!(s.buckets[2], 2, "[4,8) is bucket 2");
+    assert_eq!(s.buckets[3], 1, "8 opens bucket 3");
+    assert_eq!(s.buckets[46], 1);
+    assert_eq!(s.buckets[47], 1, "u64::MAX clamps into the last bucket");
+    assert_eq!(s.count(), 9);
+    assert_eq!(s.max, u64::MAX);
+    // Quantiles report the geometric bucket midpoint, clamped to max.
+    assert_eq!(s.quantile(0.01), 1);
+}
+
+/// A snapshot diff spanning a region reports exactly that region's
+/// activity — bumped metrics show their delta, untouched ones read 0 —
+/// and `measured` reduces the delta to the headline cell series.
+#[test]
+fn snapshot_diff_isolates_a_region() {
+    let _g = lock_gate();
+    set_enabled(true);
+    let before = snapshot();
+    metrics().rh_displacements.add(11);
+    metrics().batch_size.record(32);
+    metrics().batch_size.record(33);
+    let d = snapshot().diff(&before);
+    assert_eq!(d.counter("rh_displacements"), 11);
+    assert_eq!(d.counter("server_panics"), 0, "untouched counter moved");
+    let bs = d.hist("batch_size").unwrap();
+    assert_eq!(bs.count(), 2, "exactly the two recorded batch sizes");
+
+    let ((), mets) = metrics::measured(|| {
+        metrics().resize_stripes_drained.add(2);
+        metrics().resize_keys_migrated.add(5);
+    });
+    let get = |k: &str| {
+        mets.iter().find(|(n, _)| n == k).map(|&(_, v)| v)
+    };
+    assert_eq!(get("stripes_drained"), Some(2.0));
+    assert_eq!(get("keys_migrated"), Some(5.0));
+}
+
+/// With the gate off, a full wire round trip (connect, put, get,
+/// shutdown) through a real map moves *no* registered metric: the
+/// disabled path is invisible, and `cell_metrics` refuses to emit an
+/// all-zero section that would read as "measured, and zero".
+#[test]
+fn disabled_gate_is_invisible_end_to_end() {
+    let _g = lock_gate();
+    set_enabled(false);
+    let _re = Reenable;
+    let before = snapshot();
+
+    let h = server::spawn_server(map(12)).unwrap();
+    let mut c = Client::connect(h.addr()).unwrap();
+    assert_eq!(c.request_line("P 1 10").unwrap(), "-");
+    assert_eq!(c.request_line("G 1").unwrap(), "10");
+    h.shutdown();
+
+    let d = snapshot().diff(&before);
+    for (name, v) in &d.counters {
+        assert_eq!(*v, 0, "counter {name} moved while disabled");
+    }
+    for (name, hist) in &d.hists {
+        assert_eq!(hist.count(), 0, "hist {name} recorded while disabled");
+    }
+    assert!(
+        metrics::cell_metrics(&d).is_empty(),
+        "cell metrics must be empty while disabled"
+    );
+}
+
+/// Both front-ends answer `STATS` through the shared codec and the
+/// shared renderer: with the gate frozen between the two reads, the
+/// replies are byte-identical to each other and to an in-process
+/// `stats_line()`, and parse as the documented JSON shape.
+#[test]
+fn stats_round_trips_identically_on_both_backends() {
+    let _g = lock_gate();
+    set_enabled(true);
+
+    let th = server::spawn_server(map(12)).unwrap();
+    let eh = reactor::spawn_server_epoll(map(12), 1).unwrap();
+    let mut tc = Client::connect(th.addr()).unwrap();
+    let mut ec = Client::connect(eh.addr()).unwrap();
+    // Warm real traffic through both so the snapshot is non-trivial.
+    assert_eq!(tc.request_line("P 3 30").unwrap(), "-");
+    assert_eq!(ec.request_line("G 3").unwrap(), "-");
+
+    // Freeze: the two STATS reads (which themselves decode frames and
+    // move wire bytes) must not perturb the snapshot they render.
+    set_enabled(false);
+    let _re = Reenable;
+    let a = tc.stats().unwrap();
+    let b = ec.stats().unwrap();
+    assert_eq!(a, b, "backends rendered different STATS replies");
+    assert_eq!(a, stats_line(), "wire reply differs from in-process line");
+
+    let j = Json::parse(&a).expect("STATS reply parses as JSON");
+    assert_eq!(j.get("enabled"), Some(&Json::Bool(false)));
+    let counters = j.get("counters").and_then(Json::as_obj).unwrap();
+    assert!(
+        counters.iter().any(|(k, _)| k == "kcas_attempts"),
+        "counters section lost the kcas series"
+    );
+    let hists = j.get("histograms").and_then(Json::as_obj).unwrap();
+    let probe = hists
+        .iter()
+        .find(|(k, _)| k == "probe_len_read")
+        .map(|(_, v)| v)
+        .expect("probe_len_read histogram missing");
+    for field in ["count", "p50", "p99", "max"] {
+        assert!(probe.get(field).is_some(), "histogram lost {field}");
+    }
+    th.shutdown();
+    eh.shutdown();
+}
+
+/// With the gate on, real wire activity registers: decoded frames,
+/// batch sizes, and per-direction byte counters all move, and the
+/// batch reply comes back correct while being counted.
+#[test]
+fn enabled_gate_counts_wire_activity() {
+    let _g = lock_gate();
+    set_enabled(true);
+    let before = snapshot();
+
+    let h = reactor::spawn_server_epoll(map(12), 1).unwrap();
+    let mut c = Client::connect(h.addr()).unwrap();
+    c.send_raw(b"B 2\nP 5 50\nG 5\n").unwrap();
+    assert_eq!(c.read_reply_line().unwrap(), "- 50");
+    h.shutdown();
+
+    let d = snapshot().diff(&before);
+    assert!(d.counter("frames_decoded") >= 1, "no frames counted");
+    let bs = d.hist("batch_size").unwrap();
+    assert!(bs.count() >= 1, "batch size not recorded");
+    assert!(bs.buckets[1] >= 1, "the 2-op batch belongs in bucket [2,4)");
+    assert!(d.counter("bytes_in_epoll") > 0, "request bytes not counted");
+    assert!(d.counter("bytes_out_epoll") > 0, "reply bytes not counted");
+}
