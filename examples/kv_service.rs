@@ -20,18 +20,22 @@
 //!
 //! ```sh
 //! cargo run --release --example kv_service             # threaded backend
-//! cargo run --release --example kv_service -- --reactor # epoll event loop
+//! cargo run --release --example kv_service -- --backend reactor
+//! cargo run --release --example kv_service -- --backend uring
 //! ```
 //!
-//! `--reactor` serves the identical protocol through the epoll event
-//! loop (`crh::service::reactor`) instead of two threads per
-//! connection; every assertion below must hold on either backend.
+//! `--backend {threads,reactor,uring}` serves the identical protocol
+//! through the chosen front-end (`--reactor` is kept as an alias for
+//! `--backend reactor`; `uring` transparently falls back to the epoll
+//! reactor on kernels without io_uring); every assertion below must
+//! hold on any backend.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use crh::maps::{ConcurrentMap, MapKind, MapOp, MAX_KEY};
-use crh::service::server::{self, Client};
+use crh::service::server::Client;
+use crh::service::Backend;
 use crh::util::rng::Rng;
 
 const KEY_SPACE: u64 = 10_000;
@@ -67,49 +71,38 @@ fn client(addr: std::net::SocketAddr, tid: u64, batch: usize) -> Vec<u128> {
     lat
 }
 
-/// Either backend's server handle, so the example can shut down and
-/// join whichever it started.
-enum Handle {
-    Threaded(server::ServerHandle),
-    Epoll(crh::service::reactor::ReactorHandle),
-}
-
-impl Handle {
-    fn addr(&self) -> std::net::SocketAddr {
-        match self {
-            Handle::Threaded(h) => h.addr(),
-            Handle::Epoll(h) => h.addr(),
-        }
-    }
-
-    fn shutdown(self) {
-        match self {
-            Handle::Threaded(h) => h.shutdown(),
-            Handle::Epoll(h) => h.shutdown(),
-        }
-    }
-}
-
 fn main() {
-    let reactor = std::env::args().any(|a| a == "--reactor");
+    let args: Vec<String> = std::env::args().collect();
+    let backend = if args.iter().any(|a| a == "--reactor") {
+        Backend::Reactor // pre-matrix alias, kept for scripts
+    } else {
+        args.iter()
+            .position(|a| a == "--backend")
+            .and_then(|i| args.get(i + 1))
+            .map(|s| {
+                Backend::parse(s)
+                    .unwrap_or_else(|| panic!("unknown backend {s}"))
+            })
+            .unwrap_or(Backend::Threads)
+    };
     let kind = MapKind::parse("sharded-kcas-rh-map:4").unwrap();
     let map: Arc<dyn ConcurrentMap> = Arc::from(kind.build(16));
-    let handle = if reactor {
-        Handle::Epoll(
-            crh::service::reactor::spawn_server_epoll(map.clone(), 0)
-                .expect("spawn epoll server"),
-        )
-    } else {
-        Handle::Threaded(
-            server::spawn_server(map.clone()).expect("spawn server"),
-        )
-    };
+    let handle = backend
+        .spawn(map.clone(), 0)
+        .unwrap_or_else(|e| panic!("spawn {backend} server: {e}"));
     let addr = handle.addr();
-    println!(
-        "kv_service: {} on {addr} ({})",
-        kind.display(),
-        if reactor { "epoll event loop" } else { "thread-per-connection" }
-    );
+    let mode = match backend {
+        Backend::Threads => "thread-per-connection",
+        Backend::Reactor => "epoll event loop",
+        Backend::Uring => {
+            if crh::service::uring::uring_frontend_available() {
+                "io_uring completion rings"
+            } else {
+                "io_uring → epoll fallback (kernel lacks io_uring)"
+            }
+        }
+    };
+    println!("kv_service: {} on {addr} ({mode})", kind.display());
 
     // Protocol guard rails: an out-of-range key must be rejected at the
     // protocol boundary — and the connection must survive it.

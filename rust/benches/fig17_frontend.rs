@@ -1,28 +1,39 @@
 //! Bench: **Figure 17** (extension) — KV front-end comparison over
-//! real TCP: the thread-per-connection pipeline (two OS threads per
-//! socket) vs the epoll event loop (fixed worker pool, ops batched
-//! across ready sockets into one `apply_batch_hashed` per wake-up),
-//! swept across connection count x event-loop worker count.
+//! real TCP across the three-backend matrix: the thread-per-connection
+//! pipeline (two OS threads per socket), the epoll event loop (fixed
+//! worker pool, ops batched across ready sockets into one
+//! `apply_batch_hashed` per wake-up), and the io_uring completion-ring
+//! backend (same wake-batch structure, but one `io_uring_enter` per
+//! wake in each direction instead of one `read`/`write` per
+//! connection), swept across connection count x event-loop worker
+//! count plus a high-connection-count churn cell.
 //!
-//! Before any throughput is reported, both backends must answer a
+//! Before any throughput is reported, every backend must answer a
 //! fixed protocol trace (all verbs, protocol errors, batch frames,
 //! frames split across read boundaries) **byte-identically** — the CI
-//! smoke gate. Quick mode additionally asserts the event loop is at
-//! least as fast as thread-per-connection at 64 connections, where the
-//! threaded backend is juggling 128 server threads.
+//! smoke gate. Quick mode additionally asserts (a) the event loop is
+//! at least as fast as thread-per-connection at 64 connections, and
+//! (b) at 256 connections the uring backend's server-side
+//! syscalls-per-op is measurably below the epoll reactor's — a count
+//! comparison, immune to CI-runner timing noise.
 //!
 //! ```sh
-//! cargo bench --bench fig17_frontend            # full sweep
-//! cargo bench --bench fig17_frontend -- --quick # CI smoke
+//! cargo bench --bench fig17_frontend                    # full sweep
+//! cargo bench --bench fig17_frontend -- --quick         # CI smoke
+//! cargo bench --bench fig17_frontend -- --quick --backend uring
 //! ```
-//! Tunables: CRH_BENCH_SIZE_LOG2, CRH_BENCH_CONNS (comma list),
+//! `--backend a,b` (or CRH_BENCH_BACKEND) filters the matrix; a
+//! uring-only run on a kernel without io_uring skips with a notice
+//! instead of silently measuring the epoll fallback. Tunables:
+//! CRH_BENCH_SIZE_LOG2, CRH_BENCH_CONNS (comma list),
 //! CRH_BENCH_WORKERS (comma list), CRH_BENCH_FRAMES, CRH_BENCH_BATCH,
 //! CRH_BENCH_REPS. CRH_BENCH_JSON=1 (or `-- --json`) writes the run
 //! as a BENCH_fig17.json snapshot.
 
 mod common;
 
-use crh::coordinator::{fig17_frontend, fig17_pair};
+use crh::coordinator::{fig17_frontend, fig17_pair, fig17_syscalls};
+use crh::service::Backend;
 
 fn env_list(name: &str, default: Vec<usize>) -> Vec<usize> {
     match std::env::var(format!("CRH_BENCH_{name}")) {
@@ -37,6 +48,14 @@ fn env_list(name: &str, default: Vec<usize>) -> Vec<usize> {
         }
         Err(_) => default,
     }
+}
+
+fn arg_value(name: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
 }
 
 fn main() {
@@ -56,24 +75,50 @@ fn main() {
     // Flagged single-sample cells; 3 reps (fresh server+map per rep)
     // even in quick mode.
     let reps = common::env_u32("REPS", 3);
+    let backends: Vec<Backend> = match arg_value("--backend")
+        .or_else(|| std::env::var("CRH_BENCH_BACKEND").ok())
+    {
+        Some(s) => s
+            .split(',')
+            .map(|b| {
+                Backend::parse(b)
+                    .unwrap_or_else(|| panic!("unknown backend {b}"))
+            })
+            .collect(),
+        None => Backend::ALL.to_vec(),
+    };
+    let uring_live = crh::service::uring::uring_frontend_available();
+    if backends == [Backend::Uring] && !uring_live {
+        // The CI uring lane on a kernel without io_uring: running the
+        // sweep would measure the epoll fallback under a uring label.
+        println!(
+            "fig17_frontend: kernel lacks io_uring — uring lane SKIPPED"
+        );
+        return;
+    }
 
     common::write_snapshot(&fig17_frontend(
-        size_log2, &conns, &workers, frames, batch, reps,
+        size_log2, &conns, &workers, frames, batch, reps, &backends,
     ));
 
-    if quick {
-        // The acceptance gate: at 64 connections the event loop must
-        // at least match thread-per-connection throughput. Timing
-        // noise on small shared CI runners can make two healthy
+    if !quick {
+        return;
+    }
+    if backends.contains(&Backend::Threads)
+        && backends.contains(&Backend::Reactor)
+    {
+        // The original acceptance gate: at 64 connections the event
+        // loop must at least match thread-per-connection throughput.
+        // Timing noise on small shared CI runners can make two healthy
         // backends measure within a few percent of each other, so the
         // strict comparison gets retries at longer measurements, and
         // only a clear loss (below 90% on the final, longest run)
         // fails the job — a real regression (the event loop collapsing
         // under 128 competing threads' worth of load) shows up as a
         // large ratio, not a coin flip.
-        let workers = workers[0];
+        let w = workers[0];
         let (mut threaded, mut epoll) =
-            fig17_pair(size_log2, 64, workers, frames, batch);
+            fig17_pair(size_log2, 64, w, frames, batch);
         for scale in [4usize, 8] {
             if epoll >= threaded {
                 break;
@@ -84,7 +129,7 @@ fn main() {
                 epoll, threaded
             );
             (threaded, epoll) =
-                fig17_pair(size_log2, 64, workers, scale * frames, batch);
+                fig17_pair(size_log2, 64, w, scale * frames, batch);
         }
         assert!(
             epoll >= 0.9 * threaded,
@@ -97,6 +142,55 @@ fn main() {
             epoll,
             threaded,
             epoll / threaded
+        );
+    }
+    if backends.contains(&Backend::Uring) {
+        if !uring_live {
+            println!(
+                "syscalls-per-op gate SKIPPED: kernel lacks io_uring"
+            );
+            return;
+        }
+        // The io_uring acceptance gate, on syscall *counts* rather
+        // than throughput: at 256 connections the ring backend must
+        // spend measurably fewer syscalls per op than the epoll
+        // reactor — that is the entire point of the backend, and
+        // counts don't flake with runner load the way timings do.
+        let gate_conns = 256usize;
+        let w = workers[0];
+        let (_, epoll_spo) = fig17_syscalls(
+            Backend::Reactor,
+            size_log2,
+            gate_conns,
+            w,
+            frames,
+            batch,
+        );
+        let (_, uring_spo) = fig17_syscalls(
+            Backend::Uring,
+            size_log2,
+            gate_conns,
+            w,
+            frames,
+            batch,
+        );
+        if !epoll_spo.is_finite() || !uring_spo.is_finite() {
+            println!(
+                "syscalls-per-op gate SKIPPED: metrics disabled \
+                 (CRH_METRICS=0)"
+            );
+            return;
+        }
+        assert!(
+            uring_spo < 0.8 * epoll_spo,
+            "uring backend's syscalls-per-op not measurably below \
+             epoll's at {gate_conns} connections: {uring_spo:.3} vs \
+             {epoll_spo:.3}"
+        );
+        println!(
+            "syscalls-per-op gate OK at {gate_conns} connections: uring \
+             {uring_spo:.3} vs epoll {epoll_spo:.3} ({:.1}x fewer)",
+            epoll_spo / uring_spo
         );
     }
 }

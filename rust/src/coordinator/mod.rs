@@ -690,8 +690,70 @@ fn fig17_run(
     total as f64 / t0.elapsed().as_secs_f64()
 }
 
-/// Measure one (conns, workers) point on both backends, fresh map and
-/// server per measurement: (thread-per-conn ops/s, epoll ops/s).
+/// Connection-churn load: every client thread runs `rounds` short
+/// lived sessions — connect, push `frames` pipelined frames, drain,
+/// disconnect — so the cell exercises the accept path (`SO_REUSEPORT`
+/// distribution vs accept-thread dealing) as hard as the data path.
+fn fig17_churn_run(
+    addr: std::net::SocketAddr,
+    conns: usize,
+    rounds: usize,
+    frames: usize,
+    batch: usize,
+) -> f64 {
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..conns as u64)
+        .map(|tid| {
+            std::thread::spawn(move || {
+                let mut total = 0u64;
+                for round in 0..rounds as u64 {
+                    total += fig17_client(
+                        addr,
+                        tid ^ (round << 32),
+                        frames,
+                        batch,
+                    )
+                    .expect("fig17 churn client");
+                }
+                total
+            })
+        })
+        .collect();
+    let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    total as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Spawn a fig17 server (fresh map) on `backend`.
+fn fig17_spawn(
+    backend: crate::service::Backend,
+    size_log2: u32,
+    workers: usize,
+) -> crate::service::FrontendHandle {
+    backend
+        .spawn(fig17_map(size_log2), workers)
+        .unwrap_or_else(|e| panic!("spawn {backend} server: {e}"))
+}
+
+/// Sum of the per-backend server-side syscall counters in a
+/// measurement window's metric delta, divided by the ops the window
+/// delivered — the series the ≥256-connection acceptance gate reads.
+/// `None` when metrics are disabled (`CRH_METRICS=0`).
+fn fig17_syscalls_per_op(
+    mets: &[(String, f64)],
+    total_ops: f64,
+) -> Option<f64> {
+    let s: f64 = mets
+        .iter()
+        .filter(|(k, _)| k.starts_with("syscalls_"))
+        .map(|(_, v)| v)
+        .sum();
+    (s > 0.0 && total_ops > 0.0).then(|| s / total_ops)
+}
+
+/// Measure one (conns, workers) point on both original backends,
+/// fresh map and server per measurement: (thread-per-conn ops/s,
+/// epoll ops/s). The quick-mode throughput gate in
+/// `benches/fig17_frontend.rs` is built on this.
 pub fn fig17_pair(
     size_log2: u32,
     conns: usize,
@@ -708,6 +770,31 @@ pub fn fig17_pair(
     let epoll = fig17_run(h.addr(), conns, frames, batch);
     h.shutdown();
     (threaded, epoll)
+}
+
+/// Measure one backend at one cell: (ops/s, server-side
+/// syscalls-per-op). The syscall figure is `NaN` when metrics are
+/// disabled. The uring-vs-epoll quick gate compares this across
+/// backends — a *count*, not a timing, so it is immune to CI-runner
+/// noise.
+pub fn fig17_syscalls(
+    backend: crate::service::Backend,
+    size_log2: u32,
+    conns: usize,
+    workers: usize,
+    frames: usize,
+    batch: usize,
+) -> (f64, f64) {
+    let (ops_s, mets) = crate::util::metrics::measured(|| {
+        let h = fig17_spawn(backend, size_log2, workers);
+        let ops_s = fig17_run(h.addr(), conns, frames, batch);
+        h.shutdown();
+        ops_s
+    });
+    let total_ops = (conns * frames * batch) as f64;
+    let per_op =
+        fig17_syscalls_per_op(&mets, total_ops).unwrap_or(f64::NAN);
+    (ops_s, per_op)
 }
 
 /// The reply transcript of the fixed fig17 op trace against `addr`,
@@ -758,16 +845,19 @@ fn stats_schema(line: &str) -> Vec<String> {
 }
 
 /// The satellite smoke check behind the `fig17_frontend --quick` CI
-/// step: the epoll backend must answer a fixed op trace — all verbs,
-/// protocol errors, batch frames, split-across-read framing —
-/// **byte-identically** to the thread-per-connection backend (and both
-/// must match the protocol's documented semantics). Each backend also
-/// answers a `STATS` probe whose JSON schema (key paths) must be
-/// identical across backends — the wire telemetry plane cannot drift
-/// either. Returns the transcript length; panics on any divergence.
+/// step: **every** backend (thread-per-connection, epoll reactor,
+/// io_uring) must answer a fixed op trace — all verbs, protocol
+/// errors, batch frames, split-across-read framing —
+/// **byte-identically**, and all must match the protocol's documented
+/// semantics. Each backend also answers a `STATS` probe whose JSON
+/// schema (key paths) must be identical across backends — the wire
+/// telemetry plane cannot drift either. On kernels without io_uring
+/// the uring backend transparently serves through the reactor, so the
+/// gate still covers its spawn/shutdown surface. Returns the
+/// transcript length; panics on any divergence.
 pub fn fig17_equivalence(size_log2: u32) -> usize {
     use crate::service::server::Client;
-    use crate::service::{reactor, server};
+    use crate::service::Backend;
     let expected: Vec<&str> = vec![
         "-", "100", "101", "101", "101", "OK", "9",
         "ERR key out of range", "ERR key out of range",
@@ -781,46 +871,64 @@ pub fn fig17_equivalence(size_log2: u32) -> usize {
         let mut c = Client::connect(addr).expect("connect for STATS");
         c.stats().expect("STATS reply")
     };
-    let h = server::spawn_server(fig17_map(size_log2)).expect("spawn server");
-    let threaded = fig17_transcript(h.addr());
-    let threaded_stats = probe_stats(h.addr());
-    h.shutdown();
-    let h = reactor::spawn_server_epoll(fig17_map(size_log2), 2)
-        .expect("spawn reactor");
-    let epoll = fig17_transcript(h.addr());
-    let epoll_stats = probe_stats(h.addr());
-    h.shutdown();
-    assert_eq!(
-        threaded, epoll,
-        "front-ends diverged on the fixed op trace"
-    );
-    assert_eq!(threaded, expected, "trace semantics drifted");
-    let schema = stats_schema(&threaded_stats);
-    assert_eq!(
-        schema,
-        stats_schema(&epoll_stats),
-        "front-ends diverged on the STATS schema"
-    );
-    assert!(
-        schema.iter().any(|k| k == "counters.kcas_attempts"),
-        "STATS schema missing counters: {schema:?}"
-    );
-    threaded.len()
+    let mut lines = 0;
+    let mut first_schema: Option<(&'static str, Vec<String>)> = None;
+    for backend in Backend::ALL {
+        let h = fig17_spawn(backend, size_log2, 2);
+        let transcript = fig17_transcript(h.addr());
+        let stats = probe_stats(h.addr());
+        h.shutdown();
+        assert_eq!(
+            transcript,
+            expected,
+            "{backend} backend diverged on the fixed op trace"
+        );
+        lines = transcript.len();
+        let schema = stats_schema(&stats);
+        assert!(
+            schema.iter().any(|k| k == "counters.kcas_attempts"),
+            "{backend} STATS schema missing counters: {schema:?}"
+        );
+        match &first_schema {
+            None => first_schema = Some((backend.name(), schema)),
+            Some((first, expected_schema)) => assert_eq!(
+                &schema, expected_schema,
+                "{backend} and {first} diverged on the STATS schema"
+            ),
+        }
+    }
+    lines
 }
 
+/// Rounds each churn client reconnects; its frame budget is divided
+/// across them so the churn cell moves the same op count as a plain
+/// cell with the same (conns, frames) figures.
+const FIG17_CHURN_ROUNDS: usize = 8;
+
 /// **Figure 17** (extension): the front-end comparison — end-to-end KV
-/// throughput over TCP, thread-per-connection pipeline vs epoll event
-/// loop, swept across connection count x event-loop worker count.
-/// Every cell runs the same work-bound load (`frames` pipelined frames
-/// of `batch` ops per connection) against a fresh server+map, so rows
-/// differ only in how sockets are multiplexed. The equivalence check
-/// runs first: both backends must answer the fixed protocol trace
-/// identically before their throughput is worth comparing.
+/// throughput over TCP across a **three-backend matrix**:
+/// thread-per-connection pipeline, epoll event loop, and io_uring
+/// completion rings, swept across connection count x event-loop
+/// worker count, plus a high-connection-count connection-*churn* cell
+/// per event-loop backend (short-lived sessions hammering the accept
+/// path). Every cell runs the same work-bound load (`frames`
+/// pipelined frames of `batch` ops per connection) against a fresh
+/// server+map, so rows differ only in how sockets are multiplexed.
+/// The equivalence check runs first: all selected backends must
+/// answer the fixed protocol trace identically before their
+/// throughput is worth comparing.
 ///
 /// Each cell is measured `reps` times against a fresh server+map per
-/// rep; the table prints the median in kops/s, while the snapshot cell
-/// stores the stat in ops/µs (kops/s ÷ 1000) so `bench-compare` ratios
-/// stay unit-free across figures.
+/// rep; the table prints the median in kops/s and the server-side
+/// syscalls-per-op (from the `syscalls_*` counters — the number the
+/// io_uring backend exists to shrink), while the snapshot cell stores
+/// the stat in ops/µs (kops/s ÷ 1000) and carries `syscalls_per_op`
+/// as an extra so `BENCH_fig17.json` records the series.
+///
+/// `backends` selects the matrix rows (CLI/bench `--backend` filter);
+/// uring cells are skipped with a notice when the kernel lacks
+/// io_uring — measuring the fallback as if it were the ring would
+/// poison baselines.
 pub fn fig17_frontend(
     size_log2: u32,
     conn_counts: &[usize],
@@ -828,7 +936,9 @@ pub fn fig17_frontend(
     frames: usize,
     batch: usize,
     reps: u32,
+    backends: &[crate::service::Backend],
 ) -> BenchReport {
+    use crate::service::Backend;
     let mut report = BenchReport::new(
         "fig17",
         vec![
@@ -840,7 +950,7 @@ pub fn fig17_frontend(
         ],
     );
     println!(
-        "# Figure 17 — KV front-ends: thread-per-conn vs epoll event loop; \
+        "# Figure 17 — KV front-ends: thread-per-conn vs epoll vs io_uring; \
          sharded-kcas-rh-map:4 2^{size_log2}, {frames} frames/conn x \
          {batch} ops/frame, pipeline depth {FIG17_DEPTH}, {reps} rep(s)"
     );
@@ -849,76 +959,108 @@ pub fn fig17_frontend(
         "## equivalence: identical reply transcripts on the fixed op trace \
          ({lines} lines) OK"
     );
+    let uring_live = crate::service::uring::uring_frontend_available();
+    if backends.contains(&Backend::Uring) && !uring_live {
+        println!(
+            "## NOTE: kernel lacks io_uring — uring cells skipped \
+             (the fallback would measure the epoll reactor twice)"
+        );
+    }
     println!(
-        "\n{:<18} {:>7} {:>7} {:>12}",
-        "backend", "workers", "conns", "kops/s"
+        "\n{:<10} {:>7} {:>7} {:>6} {:>12} {:>14}",
+        "backend", "workers", "conns", "churn", "kops/s", "syscalls/op"
     );
-    for &conns in conn_counts {
-        // The threaded backend has no worker knob; measure it once per
-        // connection count. One fresh server+map per rep; stored unit
-        // is ops/µs, like every other figure.
+    // One measured cell: `reps` fresh server+map runs on `backend`,
+    // reported in ops/µs with the syscalls-per-op extra derived from
+    // the metric delta over the whole window.
+    let mut cell = |backend: Backend, workers: usize, conns: usize, churn: bool| {
         let (samples, mets) = crate::util::metrics::measured(|| {
             (0..reps.max(1))
                 .map(|_| {
-                    let h = crate::service::server::spawn_server(fig17_map(
-                        size_log2,
-                    ))
-                    .expect("spawn server");
-                    let ops_s = fig17_run(h.addr(), conns, frames, batch);
+                    let h = fig17_spawn(backend, size_log2, workers);
+                    let ops_s = if churn {
+                        fig17_churn_run(
+                            h.addr(),
+                            conns,
+                            FIG17_CHURN_ROUNDS,
+                            (frames / FIG17_CHURN_ROUNDS).max(1),
+                            batch,
+                        )
+                    } else {
+                        fig17_run(h.addr(), conns, frames, batch)
+                    };
                     h.shutdown();
                     ops_s / 1e6
                 })
                 .collect::<Vec<f64>>()
         });
         let stat = Stat::from_samples(&samples);
+        let ops_per_rep = if churn {
+            (conns * FIG17_CHURN_ROUNDS * (frames / FIG17_CHURN_ROUNDS).max(1)
+                * batch) as f64
+        } else {
+            (conns * frames * batch) as f64
+        };
+        let per_op = fig17_syscalls_per_op(
+            &mets,
+            ops_per_rep * reps.max(1) as f64,
+        );
+        let workers_label = if backend == Backend::Threads {
+            "-".to_string()
+        } else {
+            workers.to_string()
+        };
         println!(
-            "{:<18} {:>7} {:>7} {:>12.1}",
-            "thread-per-conn",
-            "-",
+            "{:<10} {:>7} {:>7} {:>6} {:>12.1} {:>14}",
+            backend.name(),
+            workers_label,
             conns,
-            stat.median * 1e3
+            if churn { "yes" } else { "-" },
+            stat.median * 1e3,
+            per_op.map_or("-".to_string(), |v| format!("{v:.3}")),
         );
-        report.push(
-            CellResult::new([
-                ("backend", "thread-per-conn".to_string()),
-                ("workers", "-".to_string()),
-                ("conns", conns.to_string()),
-            ])
-            .with_ops(stat)
-            .with_metrics(mets),
-        );
-        for &workers in worker_counts {
-            let (samples, mets) = crate::util::metrics::measured(|| {
-                (0..reps.max(1))
-                    .map(|_| {
-                        let h = crate::service::reactor::spawn_server_epoll(
-                            fig17_map(size_log2),
-                            workers,
-                        )
-                        .expect("spawn reactor");
-                        let ops_s = fig17_run(h.addr(), conns, frames, batch);
-                        h.shutdown();
-                        ops_s / 1e6
-                    })
-                    .collect::<Vec<f64>>()
-            });
-            let stat = Stat::from_samples(&samples);
-            println!(
-                "{:<18} {:>7} {:>7} {:>12.1}",
-                "epoll",
-                workers,
-                conns,
-                stat.median * 1e3
-            );
-            report.push(
-                CellResult::new([
-                    ("backend", "epoll".to_string()),
-                    ("workers", workers.to_string()),
-                    ("conns", conns.to_string()),
-                ])
-                .with_ops(stat)
-                .with_metrics(mets),
-            );
+        let mut c = CellResult::new([
+            ("backend", backend.name().to_string()),
+            ("workers", workers_label),
+            ("conns", conns.to_string()),
+            ("churn", if churn { "yes" } else { "-" }.to_string()),
+        ])
+        .with_ops(stat)
+        .with_metrics(mets);
+        if let Some(v) = per_op {
+            c = c.with_extra("syscalls_per_op", v);
+        }
+        report.push(c);
+    };
+    let selected: Vec<Backend> = backends
+        .iter()
+        .copied()
+        .filter(|&b| b != Backend::Uring || uring_live)
+        .collect();
+    for &conns in conn_counts {
+        for &backend in &selected {
+            if backend == Backend::Threads {
+                // No worker knob: the backend spawns per connection.
+                cell(backend, 0, conns, false);
+            } else {
+                for &workers in worker_counts {
+                    cell(backend, workers, conns, false);
+                }
+            }
+        }
+    }
+    // The churn row: shortest-lived connections at the highest
+    // connection count, one cell per event-loop backend at the widest
+    // worker setting — accept-path stress the plain sweep never
+    // applies.
+    let churn_conns = conn_counts.iter().copied().max().unwrap_or(0);
+    let churn_workers = worker_counts.iter().copied().max().unwrap_or(1);
+    if churn_conns > 0 {
+        for &backend in &selected {
+            if backend == Backend::Threads {
+                continue;
+            }
+            cell(backend, churn_workers, churn_conns, true);
         }
     }
     report

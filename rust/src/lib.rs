@@ -33,12 +33,15 @@
 //! * [`service`] — the KV service layer: [`service::batch`] (batched
 //!   `apply_batch` API amortising K-CAS descriptor setup, plus the
 //!   `fig14_batching` driver), [`service::frame`] (the wire-protocol
-//!   codec with an incremental decoder both front-ends share), and two
-//!   TCP front-ends serving the identical protocol —
-//!   [`service::server`] (thread-per-connection pipeline) and
+//!   codec with an incremental decoder every front-end shares), and
+//!   three TCP front-ends serving the identical protocol —
+//!   [`service::server`] (thread-per-connection pipeline),
 //!   [`service::reactor`] (epoll event loop: ops from every ready
 //!   socket applied as one hashed batch per wake-up, EPOLLOUT
-//!   backpressure, eventfd shutdown).
+//!   backpressure, eventfd shutdown), and [`service::uring`]
+//!   (io_uring completion loop, one ring + SO_REUSEPORT listener per
+//!   worker, epoll fallback on old kernels) — selectable via
+//!   [`service::Backend`].
 //! * [`bench`] — §4.1 methodology: workload generation, pinned threads,
 //!   barrier-synced timed runs with per-worker measurement windows,
 //!   ops/µs reporting, and the perf-trajectory layer
@@ -57,11 +60,13 @@
 //!   `fig14_batching` (batch size x threads), `fig15_resize` (op tail
 //!   latency during an in-flight grow migration, incremental vs
 //!   quiescing engine), `fig16_rmw` (conditional RMW under contention
-//!   skew), and `fig17_frontend` (thread-per-connection vs epoll
-//!   event-loop front-end across connection counts).
+//!   skew), and `fig17_frontend` (thread-per-connection vs epoll vs
+//!   io_uring front-ends across connection counts, with a
+//!   connection-churn cell and syscalls-per-op columns).
 //! * [`util`] — hashing (bit-identical to the L1 Pallas kernel), RNG,
 //!   thread pinning, a mini property-testing driver, the Linux
-//!   readiness syscalls behind the reactor (`util::sys`), the
+//!   readiness + io_uring syscalls behind the event front-ends
+//!   (`util::sys`), the
 //!   always-on telemetry plane ([`util::metrics`]: sharded relaxed
 //!   counters + log-histograms behind a `CRH_METRICS` gate, exported
 //!   through the `STATS` wire verb, `crh stats`, and the snapshots'

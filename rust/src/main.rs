@@ -15,13 +15,18 @@
 //!            workload across contention skew: native K-CAS
 //!            compare_exchange/fetch_add vs the locked baseline)
 //! crh fig17_frontend [--conns 16,64,256] [--workers 1,2,4]
-//!            [--frames N] [--batch N] (KV front-end comparison:
-//!            thread-per-connection pipeline vs epoll event loop,
-//!            after asserting both answer a fixed trace identically)
+//!            [--frames N] [--batch N] [--backends threads,reactor,uring]
+//!            (KV front-end comparison across the three-backend
+//!            matrix — thread-per-connection, epoll event loop,
+//!            io_uring completion rings — after asserting all answer
+//!            a fixed trace identically; includes a connection-churn
+//!            cell and a syscalls-per-op series)
 //! crh serve  [--map sharded-kcas-rh-map:4] [--size-log2 N]
-//!            [--addr 127.0.0.1:7878] [--reactor] [--workers N]
-//!            (run the KV server until killed; --reactor selects the
-//!            epoll event-loop backend)
+//!            [--addr 127.0.0.1:7878] [--backend threads|reactor|uring]
+//!            [--workers N] (run the KV server until killed;
+//!            --reactor is kept as an alias for --backend reactor;
+//!            uring falls back to the reactor on kernels without
+//!            io_uring)
 //! crh stats  [--addr 127.0.0.1:7878]
 //!            (query a running server's STATS verb and pretty-print
 //!            the telemetry snapshot)
@@ -169,6 +174,19 @@ fn main() -> Result<()> {
             let batch = parse_flag(&args, "--batch")
                 .unwrap_or(8usize)
                 .clamp(1, crh::service::frame::MAX_BATCH);
+            let backends: Vec<crh::service::Backend> =
+                parse_list::<String>(&args, "--backends")
+                    .map(|specs| {
+                        specs
+                            .iter()
+                            .map(|s| {
+                                crh::service::Backend::parse(s).unwrap_or_else(
+                                    || panic!("unknown backend {s}"),
+                                )
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_else(|| crh::service::Backend::ALL.to_vec());
             finish(coordinator::fig17_frontend(
                 opts.size_log2,
                 &conns,
@@ -176,6 +194,7 @@ fn main() -> Result<()> {
                 frames,
                 batch,
                 opts.reps,
+                &backends,
             ));
         }
         "serve" => {
@@ -189,24 +208,31 @@ fn main() -> Result<()> {
             let listener = std::net::TcpListener::bind(&bind)?;
             let map: std::sync::Arc<dyn crh::maps::ConcurrentMap> =
                 std::sync::Arc::from(kind.build(size));
-            if args.iter().any(|a| a == "--reactor") {
-                let workers = parse_flag(&args, "--workers").unwrap_or(0);
-                let h = crh::service::reactor::serve_epoll(
-                    listener, map, workers,
-                )?;
-                println!(
-                    "serving {} (epoll event loop) on {}",
-                    kind.display(),
-                    h.addr()
-                );
+            let backend = if args.iter().any(|a| a == "--reactor") {
+                // Pre-matrix alias, kept for scripts.
+                crh::service::Backend::Reactor
             } else {
-                let h = crh::service::server::spawn_server_on(listener, map)?;
-                println!(
-                    "serving {} (thread-per-connection) on {}",
-                    kind.display(),
-                    h.addr()
-                );
-            }
+                parse_flag::<String>(&args, "--backend")
+                    .map(|s| {
+                        crh::service::Backend::parse(&s)
+                            .unwrap_or_else(|| panic!("unknown backend {s}"))
+                    })
+                    .unwrap_or(crh::service::Backend::Threads)
+            };
+            let workers = parse_flag(&args, "--workers").unwrap_or(0);
+            let h = backend.serve(listener, map, workers)?;
+            let mode = match backend {
+                crh::service::Backend::Threads => "thread-per-connection",
+                crh::service::Backend::Reactor => "epoll event loop",
+                crh::service::Backend::Uring => {
+                    if crh::service::uring::uring_frontend_available() {
+                        "io_uring completion rings"
+                    } else {
+                        "io_uring → epoll fallback (kernel lacks io_uring)"
+                    }
+                }
+            };
+            println!("serving {} ({mode}) on {}", kind.display(), h.addr());
             loop {
                 std::thread::park();
             }

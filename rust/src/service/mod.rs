@@ -29,9 +29,19 @@
 //!   `apply_batch_hashed` call per wake-up, EPOLLOUT-driven write
 //!   flushing with high/low-water backpressure, eventfd-signalled
 //!   graceful shutdown. This is the front-end that scales connection
-//!   count past the thread scheduler; `fig17_frontend` measures the
-//!   two against each other and asserts their reply streams are
-//!   identical.
+//!   count past the thread scheduler. Accepts either through a
+//!   dealing accept thread (legacy) or per-worker `SO_REUSEPORT`
+//!   listeners.
+//! * [`uring`] — the io_uring completion-ring front-end: same
+//!   wake-batch structure as the reactor, but reads, writes, and
+//!   accepts are ring submissions, so a wake-batch costs one
+//!   `io_uring_enter` in each direction regardless of how many
+//!   connections participate, and per-worker `SO_REUSEPORT` listeners
+//!   remove the accept hand-off hop entirely. Falls back to the
+//!   reactor on kernels without io_uring, behind the same API.
+//!   `fig17_frontend` measures all three backends against each other
+//!   (including a syscalls-per-op series) and asserts their reply
+//!   streams are identical.
 //!
 //! All of it speaks the full **conditional-first** op vocabulary
 //! ([`crate::maps::MapOp`]: `CmpEx`/`GetOrInsert`/`FetchAdd` next to
@@ -49,7 +59,7 @@
 //! (front-end comparison), `crh serve` (run either server until
 //! killed), and `crh stats` (query a running server's telemetry).
 //!
-//! Both front-ends answer the `STATS` wire verb with one line of
+//! Every front-end answers the `STATS` wire verb with one line of
 //! compact JSON rendered from [`crate::util::metrics`] — same codec
 //! ([`frame::Frame::Stats`]), same renderer, so the schema cannot
 //! drift between backends.
@@ -58,6 +68,126 @@ pub mod batch;
 pub mod frame;
 pub mod reactor;
 pub mod server;
+pub mod uring;
+
+use std::io;
+use std::net::SocketAddr;
+use std::sync::Arc;
+
+use crate::maps::ConcurrentMap;
+
+/// Which server front-end to run. All three speak the identical wire
+/// protocol through [`frame`]; they differ only in how sockets are
+/// multiplexed onto threads and syscalls.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Thread-per-connection ([`server`]).
+    Threads,
+    /// Epoll event loop ([`reactor`]).
+    Reactor,
+    /// io_uring completion rings ([`uring`]); transparently serves
+    /// through the reactor when the kernel lacks io_uring.
+    Uring,
+}
+
+impl Backend {
+    /// All backends, in bench/matrix order.
+    pub const ALL: [Backend; 3] =
+        [Backend::Threads, Backend::Reactor, Backend::Uring];
+
+    /// The flag/bench label for this backend.
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Threads => "threads",
+            Backend::Reactor => "reactor",
+            Backend::Uring => "uring",
+        }
+    }
+
+    /// Parse a `--backend` flag value (aliases: `thread`, `epoll`,
+    /// `io_uring`).
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "threads" | "thread" => Some(Backend::Threads),
+            "reactor" | "epoll" => Some(Backend::Reactor),
+            "uring" | "io_uring" | "io-uring" => Some(Backend::Uring),
+            _ => None,
+        }
+    }
+
+    /// Spawn a server for `map` on an ephemeral localhost port.
+    /// `workers` is ignored by the threaded backend (it spawns per
+    /// connection); 0 means [`reactor::default_workers`] for the
+    /// event-loop backends.
+    pub fn spawn(
+        self,
+        map: Arc<dyn ConcurrentMap>,
+        workers: usize,
+    ) -> io::Result<FrontendHandle> {
+        match self {
+            Backend::Threads => {
+                server::spawn_server(map).map(FrontendHandle::Threads)
+            }
+            Backend::Reactor => reactor::spawn_server_epoll(map, workers)
+                .map(FrontendHandle::Reactor),
+            Backend::Uring => uring::spawn_server_uring(map, workers)
+                .map(FrontendHandle::Uring),
+        }
+    }
+
+    /// Serve `map` on an already-bound listener (e.g. from `crh
+    /// serve --addr`). See [`Backend::spawn`] for `workers`.
+    pub fn serve(
+        self,
+        listener: std::net::TcpListener,
+        map: Arc<dyn ConcurrentMap>,
+        workers: usize,
+    ) -> io::Result<FrontendHandle> {
+        match self {
+            Backend::Threads => {
+                server::spawn_server_on(listener, map).map(FrontendHandle::Threads)
+            }
+            Backend::Reactor => reactor::serve_epoll(listener, map, workers)
+                .map(FrontendHandle::Reactor),
+            Backend::Uring => uring::serve_uring(listener, map, workers)
+                .map(FrontendHandle::Uring),
+        }
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A running server of any backend: one `addr`/`shutdown` surface so
+/// benches, tests, and the CLI can treat the three interchangeably.
+pub enum FrontendHandle {
+    Threads(server::ServerHandle),
+    Reactor(reactor::ReactorHandle),
+    Uring(uring::UringHandle),
+}
+
+impl FrontendHandle {
+    /// The address the server is listening on.
+    pub fn addr(&self) -> SocketAddr {
+        match self {
+            FrontendHandle::Threads(h) => h.addr(),
+            FrontendHandle::Reactor(h) => h.addr(),
+            FrontendHandle::Uring(h) => h.addr(),
+        }
+    }
+
+    /// Stop the server and join every thread it spawned.
+    pub fn shutdown(self) {
+        match self {
+            FrontendHandle::Threads(h) => h.shutdown(),
+            FrontendHandle::Reactor(h) => h.shutdown(),
+            FrontendHandle::Uring(h) => h.shutdown(),
+        }
+    }
+}
 
 /// Best-effort text of a contained panic payload (the `&str` /
 /// `String` shapes `panic!` produces); both front-ends log it with

@@ -19,8 +19,13 @@
 //!
 //! ## Shape
 //!
-//! * One accept thread (epoll on the nonblocking listener + an
-//!   eventfd wake token) hands fresh sockets round-robin to workers.
+//! * Accepting has two modes: the default for self-bound servers is
+//!   one `SO_REUSEPORT` listener **per worker**
+//!   ([`crate::util::sys::bind_reuseport_group`]) — the kernel
+//!   load-balances connections and each worker accepts its own, no
+//!   hand-off hop; an externally bound listener (which cannot gain
+//!   reuseport siblings post-bind) falls back to the legacy accept
+//!   thread that deals sockets round-robin into worker inboxes.
 //! * Each worker owns an epoll instance, an eventfd inbox wake, and
 //!   its connections — no cross-worker sharing, no locks on the hot
 //!   path. A wake-up runs three phases: **read** every ready socket
@@ -37,12 +42,14 @@
 //!
 //! Protocol semantics (`ERR` lines, batch-as-a-unit validation, `Q`,
 //! panic containment as `ERR server error` + close) match the
-//! threaded backend; `fig17_frontend` asserts the two backends'
-//! reply transcripts are identical on a fixed trace, and the
-//! `map_service` round-trip tier runs against both.
+//! threaded backend; `fig17_frontend` asserts all backends' reply
+//! transcripts are identical on a fixed trace, and the `map_service`
+//! round-trip tier runs against every front-end.
 
 #[cfg(target_os = "linux")]
-pub use imp::{serve_epoll, spawn_server_epoll, ReactorHandle};
+pub use imp::{
+    serve_epoll, serve_epoll_reuseport, spawn_server_epoll, ReactorHandle,
+};
 
 #[cfg(not(target_os = "linux"))]
 pub use fallback::{serve_epoll, spawn_server_epoll, ReactorHandle};
@@ -77,8 +84,8 @@ mod imp {
     use crate::util::hash::splitmix64;
     use crate::util::metrics::{metrics, stats_line};
     use crate::util::sys::{
-        EpollEvent, EpollFd, EventFd, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT,
-        EPOLLRDHUP,
+        bind_reuseport_group, EpollEvent, EpollFd, EventFd, EPOLLERR,
+        EPOLLHUP, EPOLLIN, EPOLLOUT, EPOLLRDHUP,
     };
 
     /// Socket-read chunk size; also bounds per-connection bytes pulled
@@ -87,9 +94,11 @@ mod imp {
     const READ_CHUNK: usize = 16 * 1024;
     const READS_PER_WAKE: usize = 4;
     const MAX_EVENTS: usize = 128;
-    /// Epoll token of the worker's inbox eventfd (connections count up
-    /// from 1).
+    /// Epoll token of the worker's inbox eventfd.
     const TOKEN_WAKE: u64 = 0;
+    /// Epoll token of the worker's own `SO_REUSEPORT` listener
+    /// (multi-listener mode only; connections count up from 2).
+    const TOKEN_LISTEN: u64 = 1;
 
     /// One queued reply action, in frame order (replies must come back
     /// in the order the frames arrived, and `ERR` lines interleave
@@ -189,15 +198,23 @@ mod imp {
         }
     }
 
-    /// Serve `map` on `listener` with `workers` event-loop threads
-    /// (0 = [`default_workers`]).
-    pub fn serve_epoll(
-        listener: TcpListener,
+    /// How fresh connections reach workers.
+    enum AcceptMode {
+        /// Legacy: one accept thread epolls the shared listener and
+        /// deals sockets round-robin into worker inboxes.
+        Deal(TcpListener),
+        /// One `SO_REUSEPORT` listener per worker: the kernel
+        /// load-balances accepts, each worker accepts its own
+        /// connections, no hand-off hop.
+        PerWorker(Vec<TcpListener>),
+    }
+
+    fn serve_on(
+        addr: SocketAddr,
+        mode: AcceptMode,
         map: Arc<dyn ConcurrentMap>,
         workers: usize,
     ) -> io::Result<ReactorHandle> {
-        let workers = if workers == 0 { default_workers() } else { workers };
-        let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let mut inboxes = Vec::with_capacity(workers);
         for _ in 0..workers {
@@ -207,14 +224,21 @@ mod imp {
             }));
         }
         let accept_wake = Arc::new(EventFd::new()?);
+        let (accept, mut per_worker) = match mode {
+            AcceptMode::Deal(l) => (Some(l), Vec::new()),
+            AcceptMode::PerWorker(ls) => {
+                (None, ls.into_iter().map(Some).collect::<Vec<_>>())
+            }
+        };
         let mut threads = Vec::with_capacity(workers + 1);
-        for inbox in &inboxes {
+        for (i, inbox) in inboxes.iter().enumerate() {
             let (inbox, stop, map) = (inbox.clone(), stop.clone(), map.clone());
+            let listener = per_worker.get_mut(i).and_then(Option::take);
             threads.push(std::thread::spawn(move || {
-                worker_loop(inbox, stop, map)
+                worker_loop(listener, inbox, stop, map)
             }));
         }
-        {
+        if let Some(listener) = accept {
             let (inboxes, wake, stop) =
                 (inboxes.clone(), accept_wake.clone(), stop.clone());
             threads.push(std::thread::spawn(move || {
@@ -224,13 +248,48 @@ mod imp {
         Ok(ReactorHandle { addr, stop, accept_wake, inboxes, threads })
     }
 
+    /// Serve `map` on `listener` with `workers` event-loop threads
+    /// (0 = [`default_workers`]). `SO_REUSEPORT` must be set pre-bind,
+    /// so an externally bound listener cannot gain per-worker
+    /// siblings: this path uses the legacy accept-thread deal. Prefer
+    /// [`serve_epoll_reuseport`] when the reactor owns the bind.
+    pub fn serve_epoll(
+        listener: TcpListener,
+        map: Arc<dyn ConcurrentMap>,
+        workers: usize,
+    ) -> io::Result<ReactorHandle> {
+        let workers = if workers == 0 { default_workers() } else { workers };
+        let addr = listener.local_addr()?;
+        serve_on(addr, AcceptMode::Deal(listener), map, workers)
+    }
+
+    /// Bind `workers` `SO_REUSEPORT` listeners to `addr` (port 0 for
+    /// ephemeral) and serve `map` with each worker accepting on its
+    /// own — the kernel load-balances connections across workers and
+    /// the accept-thread hand-off hop disappears.
+    pub fn serve_epoll_reuseport(
+        addr: SocketAddr,
+        map: Arc<dyn ConcurrentMap>,
+        workers: usize,
+    ) -> io::Result<ReactorHandle> {
+        let workers = if workers == 0 { default_workers() } else { workers };
+        let (addr, listeners) = bind_reuseport_group(addr, workers)?;
+        serve_on(addr, AcceptMode::PerWorker(listeners), map, workers)
+    }
+
     /// Bind an ephemeral localhost port and serve `map` on the epoll
-    /// backend (examples, tests, benches).
+    /// backend (examples, tests, benches). Uses per-worker
+    /// `SO_REUSEPORT` listeners, falling back to the legacy
+    /// accept-thread deal if the reuseport bind is refused.
     pub fn spawn_server_epoll(
         map: Arc<dyn ConcurrentMap>,
         workers: usize,
     ) -> io::Result<ReactorHandle> {
-        serve_epoll(TcpListener::bind("127.0.0.1:0")?, map, workers)
+        let local = SocketAddr::from(([127, 0, 0, 1], 0));
+        match serve_epoll_reuseport(local, map.clone(), workers) {
+            Ok(h) => Ok(h),
+            Err(_) => serve_epoll(TcpListener::bind(local)?, map, workers),
+        }
     }
 
     /// Accept thread: epoll on {listener, wake eventfd}; sockets are
@@ -259,6 +318,7 @@ mod imp {
                 return; // dropping the listener closes the port
             }
             loop {
+                metrics().syscalls_epoll.incr();
                 match listener.accept() {
                     Ok((stream, _)) => {
                         let inbox = &inboxes[rr % inboxes.len()];
@@ -272,6 +332,40 @@ mod imp {
                     }
                     Err(_) => break,
                 }
+            }
+        }
+    }
+
+    /// Multi-listener mode: accept directly on this worker's own
+    /// `SO_REUSEPORT` listener — the kernel already picked this
+    /// worker, so the socket is registered without any hand-off hop.
+    fn accept_direct(
+        listener: &TcpListener,
+        ep: &EpollFd,
+        conns: &mut HashMap<u64, Conn>,
+        next_token: &mut u64,
+    ) {
+        loop {
+            metrics().syscalls_epoll.incr();
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    stream.set_nodelay(true).ok();
+                    let token = *next_token;
+                    *next_token += 1;
+                    let conn = Conn::new(stream);
+                    if ep
+                        .add(conn.stream.as_raw_fd(), conn.interest, token)
+                        .is_ok()
+                    {
+                        conns.insert(token, conn);
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
             }
         }
     }
@@ -304,6 +398,7 @@ mod imp {
     /// Phase 1a: pull bytes off a ready socket into its decoder.
     fn read_some(conn: &mut Conn, chunk: &mut [u8]) {
         for _ in 0..READS_PER_WAKE {
+            metrics().syscalls_epoll.incr();
             match (&conn.stream).read(chunk) {
                 Ok(0) => {
                     conn.eof = true;
@@ -409,6 +504,7 @@ mod imp {
     /// Phase 3b: push buffered replies to the socket.
     fn try_flush(conn: &mut Conn) {
         while conn.sent < conn.out.len() {
+            metrics().syscalls_epoll.incr();
             match (&conn.stream).write(&conn.out[conn.sent..]) {
                 Ok(0) => {
                     conn.dead = true;
@@ -437,6 +533,7 @@ mod imp {
     }
 
     fn worker_loop(
+        listener: Option<TcpListener>,
         inbox: Arc<Inbox>,
         stop: Arc<AtomicBool>,
         map: Arc<dyn ConcurrentMap>,
@@ -445,8 +542,15 @@ mod imp {
         if ep.add(inbox.wake.fd(), EPOLLIN, TOKEN_WAKE).is_err() {
             return;
         }
+        if let Some(l) = &listener {
+            if l.set_nonblocking(true).is_err()
+                || ep.add(l.as_raw_fd(), EPOLLIN, TOKEN_LISTEN).is_err()
+            {
+                return;
+            }
+        }
         let mut conns: HashMap<u64, Conn> = HashMap::new();
-        let mut next_token: u64 = 1;
+        let mut next_token: u64 = 2;
         let mut events = vec![EpollEvent::zeroed(); MAX_EVENTS];
         let mut chunk = vec![0u8; READ_CHUNK];
         let mut batch_ops: Vec<HashedMapOp> = Vec::new();
@@ -484,6 +588,12 @@ mod imp {
                         break 'outer;
                     }
                     adopt_new_conns(&inbox, &ep, &mut conns, &mut next_token);
+                    continue;
+                }
+                if token == TOKEN_LISTEN {
+                    if let Some(l) = &listener {
+                        accept_direct(l, &ep, &mut conns, &mut next_token);
+                    }
                     continue;
                 }
                 let Some(conn) = conns.get_mut(&token) else { continue };

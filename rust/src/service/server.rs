@@ -61,6 +61,7 @@ fn read_frames(mut stream: TcpStream, tx: mpsc::SyncSender<Frame>) {
     let mut dec = FrameDecoder::new();
     let mut chunk = [0u8; 4096];
     loop {
+        metrics().syscalls_thread.incr();
         let n = match stream.read(&mut chunk) {
             Ok(0) => {
                 // EOF: a final line without a trailing newline still
@@ -143,6 +144,8 @@ fn serve_conn(stream: TcpStream, map: Arc<dyn ConcurrentMap>, conn_id: u64) {
             }
         }
         line.push('\n');
+        // One buffered write + flush per frame ≈ one `write` syscall.
+        metrics().syscalls_thread.incr();
         if out.write_all(line.as_bytes()).is_err() || out.flush().is_err() {
             break;
         }

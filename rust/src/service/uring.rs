@@ -1,0 +1,983 @@
+//! io_uring completion-ring front-end — the third server backend,
+//! speaking the identical wire protocol through the same
+//! [`super::frame`] codec as [`super::server`] and [`super::reactor`].
+//!
+//! ## Why
+//!
+//! The epoll reactor already batches *table* work (all ops from all
+//! ready sockets apply in one
+//! [`crate::maps::ConcurrentMap::apply_batch_hashed`] call), but it
+//! still pays one `read` and one `write` syscall per ready connection
+//! per wake-up, plus `epoll_wait` and `epoll_ctl` traffic. This
+//! backend extends the batching amplifier down to the kernel boundary:
+//! reads, writes, and accepts are submission-queue entries on a
+//! per-worker io_uring ([`crate::util::sys::Uring`]), and each
+//! wake-batch costs **one** `io_uring_enter` in each direction no
+//! matter how many connections participated. `fig17_frontend`'s
+//! syscalls-per-op series measures exactly this.
+//!
+//! ## Shape
+//!
+//! * No accept thread: with [`spawn_server_uring`] each worker binds
+//!   its own `SO_REUSEPORT` listener
+//!   ([`crate::util::sys::bind_reuseport`]) and the kernel
+//!   load-balances incoming connections across workers; with
+//!   [`serve_uring`] (externally bound listener — `SO_REUSEPORT` must
+//!   be set pre-bind, so siblings can't be added retroactively) every
+//!   worker arms an accept SQE on a dup of the same listener fd.
+//!   Either way the hand-off hop is gone.
+//! * Each worker owns one ring and its connections outright. A
+//!   wake-batch runs the reactor's three phases: drain the CQ and feed
+//!   read completions through per-connection
+//!   [`FrameDecoder`](super::frame::FrameDecoder)s, apply
+//!   every decoded op with one `apply_batch_hashed`, then queue reply
+//!   writes and re-arm reads as SQEs that the next `io_uring_enter`
+//!   submits together.
+//! * Backpressure mirrors the reactor's high/low-water scheme
+//!   ([`super::reactor::HIGH_WATER`]/[`super::reactor::LOW_WATER`]): a
+//!   connection
+//!   whose unsent replies exceed the high-water mark gets no new read
+//!   SQE until the backlog drains below low water, and withheld
+//!   decoded frames replay on resume.
+//! * Panic containment is the reactor's doomed-wake-batch rule: a
+//!   batch that unwinds may have applied partially, so every
+//!   connection with ops in it gets one `ERR server error` line and a
+//!   close.
+//! * Shutdown: [`UringHandle::shutdown`] signals each worker's
+//!   eventfd (armed as a read SQE), workers cancel their accepts,
+//!   shut down every socket, drain in-flight completions to zero, and
+//!   are joined.
+//!
+//! ## Buffer-stability safety
+//!
+//! The kernel reads and writes our buffers *asynchronously*, so every
+//! byte handed to an SQE must stay valid and un-moved until its CQE is
+//! reaped. Three invariants enforce that:
+//!
+//! 1. each connection's read buffer is a `Box<[u8]>` — heap address
+//!    stable even as the connection table reallocates;
+//! 2. writes are double-buffered: `wbuf` is **frozen** (never touched)
+//!    while a write SQE is in flight and new replies accumulate in
+//!    `out`; the two swap only between flights;
+//! 3. a connection slot is never freed while it has an SQE in flight —
+//!    teardown shuts the socket down (forcing the completions) and
+//!    frees the slot when the in-flight count reaches zero.
+//!
+//! ## Fallback
+//!
+//! Kernels without io_uring (pre-5.6 opcodes, `ENOSYS`, seccomp
+//! `EPERM`) are detected at spawn by a runtime probe
+//! ([`crate::util::sys::uring_supported`]) and the same API serves
+//! through the epoll reactor instead — [`UringHandle::is_fallback`]
+//! reports which path was taken, `CRH_URING=0` forces it from the
+//! environment, and [`force_fallback`] forces it programmatically
+//! (tests can't mutate the environment of a multithreaded binary).
+
+#[cfg(target_os = "linux")]
+pub use imp::{
+    force_fallback, serve_uring, spawn_server_uring,
+    uring_frontend_available, UringHandle,
+};
+
+#[cfg(not(target_os = "linux"))]
+pub use fallback::{
+    force_fallback, serve_uring, spawn_server_uring,
+    uring_frontend_available, UringHandle,
+};
+
+#[cfg(target_os = "linux")]
+mod imp {
+    use std::io;
+    use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+    use std::os::fd::{AsRawFd, FromRawFd};
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Arc, OnceLock};
+    use std::thread::JoinHandle;
+
+    use crate::maps::{ConcurrentMap, HashedMapOp, MapReply};
+    use crate::service::frame::{push_reply, Frame, FrameDecoder, ERR_SERVER};
+    use crate::service::panic_message;
+    use crate::service::reactor::{
+        self, ReactorHandle, HIGH_WATER, LOW_WATER,
+    };
+    use crate::util::hash::splitmix64;
+    use crate::util::metrics::{metrics, stats_line};
+    use crate::util::sys::{
+        bind_reuseport_group, uring_supported, Cqe, EventFd, Sqe, Uring,
+    };
+
+    /// Per-connection read-buffer size (one read SQE's worth).
+    const READ_CHUNK: usize = 16 * 1024;
+    /// Submission ring slots. The ring is a *queue to the kernel*, not
+    /// an in-flight bound — `Uring::push` flushes when full.
+    const SQ_ENTRIES: u32 = 256;
+    /// Completion ring slots. In-flight SQEs are bounded by
+    /// 2/connection (one read + one write) + accept + wake, so this
+    /// accommodates ~2k connections per worker without CQ overflow.
+    const CQ_ENTRIES: u32 = 4096;
+
+    // user_data token layout: tag(8) | gen(16) | zero(8) | slot(32).
+    const TAG_READ: u64 = 1 << 56;
+    const TAG_WRITE: u64 = 2 << 56;
+    const TAG_ACCEPT: u64 = 3 << 56;
+    const TAG_WAKE: u64 = 4 << 56;
+    const TAG_CANCEL: u64 = 5 << 56;
+    const TAG_MASK: u64 = 0xff << 56;
+
+    fn tok(tag: u64, gen: u16, slot: u32) -> u64 {
+        tag | ((gen as u64) << 32) | slot as u64
+    }
+
+    fn tok_gen(ud: u64) -> u16 {
+        (ud >> 32) as u16
+    }
+
+    fn tok_slot(ud: u64) -> u32 {
+        ud as u32
+    }
+
+    // ------------------------------------------------- fallback gating
+
+    static FORCE_FALLBACK: AtomicBool = AtomicBool::new(false);
+
+    /// Force the epoll-fallback path for subsequent spawns (tests:
+    /// mutating the environment of a multithreaded test binary is a
+    /// data race, so the kernel-too-old path is exercised through this
+    /// hook instead, like `metrics::set_enabled`).
+    pub fn force_fallback(on: bool) {
+        FORCE_FALLBACK.store(on, Ordering::Relaxed);
+    }
+
+    fn env_enabled() -> bool {
+        static CACHE: OnceLock<bool> = OnceLock::new();
+        *CACHE.get_or_init(|| match std::env::var("CRH_URING") {
+            Ok(v) => !matches!(
+                v.trim().to_ascii_lowercase().as_str(),
+                "0" | "false" | "off" | "no"
+            ),
+            Err(_) => true,
+        })
+    }
+
+    /// Will a uring spawn actually use io_uring here and now? False on
+    /// old kernels (runtime probe), under `CRH_URING=0`, or while
+    /// [`force_fallback`] is on — the CI smoke lane prints its skip
+    /// notice off this.
+    pub fn uring_frontend_available() -> bool {
+        env_enabled()
+            && !FORCE_FALLBACK.load(Ordering::Relaxed)
+            && uring_supported()
+    }
+
+    // ------------------------------------------------------ connection
+
+    /// One queued reply action, in frame order (identical semantics to
+    /// the reactor's).
+    #[derive(Clone, Copy)]
+    enum Pending {
+        /// Reply line for `batch_ops[start..start + len]` of this wake.
+        Ops { start: usize, len: usize },
+        /// Literal protocol-error line.
+        Line(&'static str),
+        /// Telemetry snapshot (`STATS`), rendered at reply-format time.
+        Stats,
+    }
+
+    struct Conn {
+        stream: TcpStream,
+        dec: FrameDecoder,
+        /// Reply actions accumulated this wake (drained in phase 3).
+        pending: Vec<Pending>,
+        /// Read landing zone — boxed so its heap address survives the
+        /// connection table reallocating under it (invariant 1).
+        rbuf: Box<[u8]>,
+        /// Replies not yet handed to the kernel (ours to grow freely).
+        out: Vec<u8>,
+        /// Bytes a write SQE may be flying over — frozen while
+        /// `write_inflight` (invariant 2); `wsent` is the completed
+        /// prefix.
+        wbuf: Vec<u8>,
+        wsent: usize,
+        read_inflight: bool,
+        write_inflight: bool,
+        /// In this wake's touched set already.
+        touched: bool,
+        /// Reading suspended: reply backlog above the high-water mark.
+        paused: bool,
+        /// No more input will be consumed (Q, EOF-drained, or fatal);
+        /// close once the backlog flushes.
+        closing: bool,
+        /// Fatal: close as soon as in-flight SQEs drain.
+        dead: bool,
+        /// Peer finished sending (read completed with 0).
+        eof: bool,
+    }
+
+    impl Conn {
+        fn new(stream: TcpStream) -> Conn {
+            Conn {
+                stream,
+                dec: FrameDecoder::new(),
+                pending: Vec::new(),
+                rbuf: vec![0u8; READ_CHUNK].into_boxed_slice(),
+                out: Vec::new(),
+                wbuf: Vec::new(),
+                wsent: 0,
+                read_inflight: false,
+                write_inflight: false,
+                touched: false,
+                paused: false,
+                closing: false,
+                dead: false,
+                eof: false,
+            }
+        }
+
+        /// Unsent reply bytes (accumulating + frozen-unflown).
+        fn backlog(&self) -> usize {
+            self.out.len() + (self.wbuf.len() - self.wsent)
+        }
+
+        fn inflight(&self) -> bool {
+            self.read_inflight || self.write_inflight
+        }
+    }
+
+    /// Decode complete frames, accumulating batch ops (with their
+    /// routing hash) into the wake-wide batch and recording the
+    /// per-connection reply actions in frame order — the reactor's
+    /// phase 1b verbatim.
+    fn parse_frames(conn: &mut Conn, batch_ops: &mut Vec<HashedMapOp>) {
+        while !conn.closing && conn.backlog() <= HIGH_WATER {
+            let frame = match conn.dec.next_frame() {
+                Some(f) => f,
+                None if conn.eof => match conn.dec.finish() {
+                    Some(f) => f,
+                    None => break,
+                },
+                None => break,
+            };
+            match frame {
+                Frame::Batch(ops) => {
+                    let start = batch_ops.len();
+                    batch_ops.extend(
+                        ops.iter().map(|&op| (splitmix64(op.key()), op)),
+                    );
+                    conn.pending.push(Pending::Ops { start, len: ops.len() });
+                }
+                Frame::Err(e) => conn.pending.push(Pending::Line(e)),
+                Frame::Stats => conn.pending.push(Pending::Stats),
+                Frame::Quit => conn.closing = true,
+            }
+        }
+    }
+
+    /// Render this connection's reply lines into `out` — the reactor's
+    /// phase 3a, doomed-wake-batch semantics included: if the wake
+    /// batch panicked it may have applied partially and cannot be
+    /// retried, so every connection with ops in it gets one
+    /// `ERR server error` line and closes (earlier `ERR` lines still
+    /// go out in order).
+    fn format_replies(
+        conn: &mut Conn,
+        replies: &[MapReply],
+        panicked: bool,
+        line: &mut String,
+    ) {
+        for i in 0..conn.pending.len() {
+            line.clear();
+            match conn.pending[i] {
+                Pending::Line(e) => line.push_str(e),
+                Pending::Stats => line.push_str(&stats_line()),
+                Pending::Ops { start, len } => {
+                    if panicked {
+                        conn.out.extend_from_slice(ERR_SERVER.as_bytes());
+                        conn.out.push(b'\n');
+                        conn.closing = true;
+                        break;
+                    }
+                    for (j, &r) in
+                        replies[start..start + len].iter().enumerate()
+                    {
+                        if j > 0 {
+                            line.push(' ');
+                        }
+                        push_reply(r, line);
+                    }
+                }
+            }
+            line.push('\n');
+            conn.out.extend_from_slice(line.as_bytes());
+        }
+        conn.pending.clear();
+    }
+
+    // ---------------------------------------------------------- worker
+
+    struct Worker {
+        ring: Uring,
+        listener: TcpListener,
+        wake: Arc<EventFd>,
+        /// Landing zone for the wake eventfd's read SQE (boxed:
+        /// invariant 1 applies to it too).
+        wake_buf: Box<[u8; 8]>,
+        stop: Arc<AtomicBool>,
+        map: Arc<dyn ConcurrentMap>,
+        conns: Vec<Option<Conn>>,
+        /// Per-slot generation, bumped on free so a stale CQE can
+        /// never act on a recycled slot.
+        gens: Vec<u16>,
+        free: Vec<u32>,
+        live: usize,
+        accept_inflight: bool,
+        stopping: bool,
+    }
+
+    impl Worker {
+        fn new(
+            ring: Uring,
+            listener: TcpListener,
+            wake: Arc<EventFd>,
+            stop: Arc<AtomicBool>,
+            map: Arc<dyn ConcurrentMap>,
+        ) -> Worker {
+            Worker {
+                ring,
+                listener,
+                wake,
+                wake_buf: Box::new([0u8; 8]),
+                stop,
+                map,
+                conns: Vec::new(),
+                gens: Vec::new(),
+                free: Vec::new(),
+                live: 0,
+                accept_inflight: false,
+                stopping: false,
+            }
+        }
+
+        fn arm_wake(&mut self) -> io::Result<()> {
+            let sqe = Sqe::read(
+                self.wake.fd(),
+                self.wake_buf.as_mut_ptr(),
+                8,
+                TAG_WAKE,
+            );
+            self.ring.push(sqe)
+        }
+
+        fn arm_accept(&mut self) -> io::Result<()> {
+            let sqe = Sqe::accept(self.listener.as_raw_fd(), TAG_ACCEPT);
+            self.accept_inflight = true;
+            self.ring.push(sqe)
+        }
+
+        fn arm_read(&mut self, slot: u32) -> io::Result<()> {
+            let gen = self.gens[slot as usize];
+            let conn = self.conns[slot as usize].as_mut().expect("armed conn");
+            let sqe = Sqe::read(
+                conn.stream.as_raw_fd(),
+                conn.rbuf.as_mut_ptr(),
+                conn.rbuf.len() as u32,
+                tok(TAG_READ, gen, slot),
+            );
+            conn.read_inflight = true;
+            self.ring.push(sqe)
+        }
+
+        fn arm_write(&mut self, slot: u32) -> io::Result<()> {
+            let gen = self.gens[slot as usize];
+            let conn = self.conns[slot as usize].as_mut().expect("armed conn");
+            // Safety: wbuf is frozen until this SQE's completion, so
+            // the pointer outlives the kernel's use of it.
+            let ptr = unsafe { conn.wbuf.as_ptr().add(conn.wsent) };
+            let len = (conn.wbuf.len() - conn.wsent) as u32;
+            let sqe = Sqe::write(
+                conn.stream.as_raw_fd(),
+                ptr,
+                len,
+                tok(TAG_WRITE, gen, slot),
+            );
+            conn.write_inflight = true;
+            self.ring.push(sqe)
+        }
+
+        fn alloc_slot(&mut self, stream: TcpStream) -> u32 {
+            self.live += 1;
+            match self.free.pop() {
+                Some(slot) => {
+                    self.conns[slot as usize] = Some(Conn::new(stream));
+                    slot
+                }
+                None => {
+                    self.conns.push(Some(Conn::new(stream)));
+                    self.gens.push(0);
+                    (self.conns.len() - 1) as u32
+                }
+            }
+        }
+
+        /// Free the slot if the connection is finished *and* no SQE
+        /// still references its buffers (invariant 3). A finished
+        /// connection with flights pending gets its socket shut down,
+        /// which forces those completions; the last one lands back
+        /// here.
+        fn maybe_free(&mut self, slot: u32) {
+            let idx = slot as usize;
+            let Some(conn) = self.conns[idx].as_mut() else { return };
+            let done = conn.dead || (conn.closing && conn.backlog() == 0);
+            if !done {
+                return;
+            }
+            if conn.inflight() {
+                let _ = conn.stream.shutdown(Shutdown::Both);
+                conn.dead = true;
+                return;
+            }
+            self.conns[idx] = None;
+            self.gens[idx] = self.gens[idx].wrapping_add(1);
+            self.free.push(slot);
+            self.live -= 1;
+        }
+
+        fn on_wake(&mut self) -> io::Result<()> {
+            if !self.stop.load(Ordering::SeqCst) {
+                // Spurious signal: re-arm and keep serving.
+                return self.arm_wake();
+            }
+            self.stopping = true;
+            if self.accept_inflight {
+                self.ring.push(Sqe::cancel(TAG_ACCEPT, TAG_CANCEL))?;
+            }
+            for slot in 0..self.conns.len() as u32 {
+                if let Some(conn) = self.conns[slot as usize].as_mut() {
+                    conn.dead = true;
+                } else {
+                    continue;
+                }
+                self.maybe_free(slot);
+            }
+            Ok(())
+        }
+
+        fn on_accept(&mut self, res: i32) -> io::Result<()> {
+            self.accept_inflight = false;
+            if self.stopping {
+                if res >= 0 {
+                    // Adopted just to close it.
+                    drop(unsafe { TcpStream::from_raw_fd(res) });
+                }
+                return Ok(());
+            }
+            if res >= 0 {
+                let stream = unsafe { TcpStream::from_raw_fd(res) };
+                stream.set_nodelay(true).ok();
+                let slot = self.alloc_slot(stream);
+                self.arm_read(slot)?;
+            }
+            // Negative res here is a transient accept error
+            // (ECONNABORTED and kin): re-arm, same resilience as a
+            // blocking accept loop.
+            self.arm_accept()
+        }
+
+        fn on_read(
+            &mut self,
+            slot: u32,
+            gen: u16,
+            res: i32,
+            batch_ops: &mut Vec<HashedMapOp>,
+            touched: &mut Vec<u32>,
+        ) {
+            if self.gens.get(slot as usize) != Some(&gen) {
+                return; // stale completion for a recycled slot
+            }
+            let Some(conn) = self.conns[slot as usize].as_mut() else {
+                return;
+            };
+            conn.read_inflight = false;
+            if !conn.touched {
+                conn.touched = true;
+                touched.push(slot);
+            }
+            if res > 0 {
+                metrics().bytes_in_uring.add(res as u64);
+                let n = res as usize;
+                // rbuf sliced immutably here; the SQE that wrote it is
+                // the one this completion just retired.
+                let (rbuf, dec) = (&conn.rbuf[..n], &mut conn.dec);
+                dec.feed(rbuf);
+            } else if res == 0 {
+                conn.eof = true;
+            } else {
+                conn.dead = true;
+            }
+            if !conn.dead && !conn.closing && !conn.paused {
+                parse_frames(conn, batch_ops);
+            }
+        }
+
+        fn on_write(
+            &mut self,
+            slot: u32,
+            gen: u16,
+            res: i32,
+            touched: &mut Vec<u32>,
+        ) -> io::Result<()> {
+            if self.gens.get(slot as usize) != Some(&gen) {
+                return Ok(());
+            }
+            let Some(conn) = self.conns[slot as usize].as_mut() else {
+                return Ok(());
+            };
+            conn.write_inflight = false;
+            if !conn.touched {
+                conn.touched = true;
+                touched.push(slot);
+            }
+            let mut resubmit = false;
+            if res > 0 {
+                metrics().bytes_out_uring.add(res as u64);
+                conn.wsent += res as usize;
+                // Partial write: fly the remainder immediately; wbuf
+                // stays frozen across the re-flight.
+                resubmit = !conn.dead && conn.wsent < conn.wbuf.len();
+            } else {
+                conn.dead = true;
+            }
+            if resubmit {
+                self.arm_write(slot)?;
+            }
+            Ok(())
+        }
+
+        /// Phase 3 for one touched connection: render replies, swap
+        /// the accumulated bytes into the (idle) write buffer and arm
+        /// a write SQE, manage backpressure and lifecycle, re-arm the
+        /// read SQE when reading is allowed.
+        fn finish_wake(
+            &mut self,
+            slot: u32,
+            replies: &[MapReply],
+            panicked: bool,
+            line: &mut String,
+            replay: &mut Vec<u32>,
+        ) -> io::Result<()> {
+            let stopping = self.stopping;
+            let Some(conn) = self.conns[slot as usize].as_mut() else {
+                return Ok(());
+            };
+            conn.touched = false;
+            if !conn.dead {
+                format_replies(conn, replies, panicked, line);
+            }
+            let want_write = !conn.dead
+                && !conn.write_inflight
+                && conn.wsent == conn.wbuf.len()
+                && !conn.out.is_empty();
+            if want_write {
+                conn.wbuf.clear();
+                conn.wsent = 0;
+                std::mem::swap(&mut conn.out, &mut conn.wbuf);
+            }
+            // Backpressure transitions — bounded in-flight write bytes:
+            // a paused connection gets no read SQE, so its backlog is
+            // capped at HIGH_WATER plus one read's worth of replies.
+            if !conn.paused && conn.backlog() > HIGH_WATER {
+                conn.paused = true;
+                metrics().backpressure_pauses.incr();
+            } else if conn.paused && conn.backlog() <= LOW_WATER {
+                conn.paused = false;
+                metrics().backpressure_resumes.incr();
+                if conn.dec.has_complete_line()
+                    || (conn.eof && conn.dec.buffered() > 0)
+                {
+                    replay.push(slot); // withheld frames to serve
+                }
+            }
+            if conn.eof && !conn.paused && conn.dec.buffered() == 0 {
+                conn.closing = true;
+            }
+            let want_read = !conn.dead
+                && !conn.read_inflight
+                && !conn.paused
+                && !conn.closing
+                && !conn.eof
+                && !stopping;
+            if want_write {
+                self.arm_write(slot)?;
+            }
+            if want_read {
+                self.arm_read(slot)?;
+            }
+            self.maybe_free(slot);
+            Ok(())
+        }
+
+        fn run(mut self) {
+            if self.arm_wake().is_err() || self.arm_accept().is_err() {
+                return;
+            }
+            let mut cqes: Vec<Cqe> = Vec::new();
+            let mut batch_ops: Vec<HashedMapOp> = Vec::new();
+            let mut replies: Vec<MapReply> = Vec::new();
+            let mut line = String::new();
+            let mut touched: Vec<u32> = Vec::new();
+            let mut replay: Vec<u32> = Vec::new();
+            loop {
+                // A nonzero replay set means unpaused connections
+                // still hold decoded-but-unanswered frames: submit
+                // without blocking, serve them now.
+                let wait = if replay.is_empty() { 1 } else { 0 };
+                if self.ring.enter(wait).is_err() {
+                    return;
+                }
+                cqes.clear();
+                self.ring.reap(&mut cqes);
+                batch_ops.clear();
+                touched.clear();
+
+                // Re-admit replayed connections first (frame order
+                // within a connection is preserved: its decoder is the
+                // queue).
+                for slot in std::mem::take(&mut replay) {
+                    let Some(conn) = self.conns[slot as usize].as_mut()
+                    else {
+                        continue;
+                    };
+                    if !conn.touched {
+                        conn.touched = true;
+                        touched.push(slot);
+                    }
+                    if !conn.dead && !conn.closing && !conn.paused {
+                        parse_frames(conn, &mut batch_ops);
+                    }
+                }
+
+                // Phase 1: dispatch completions — reads feed decoders
+                // and accumulate the wake-wide hashed op batch.
+                for i in 0..cqes.len() {
+                    let c = cqes[i];
+                    let (gen, slot) = (tok_gen(c.user_data), tok_slot(c.user_data));
+                    let step = match c.user_data & TAG_MASK {
+                        TAG_WAKE => self.on_wake(),
+                        TAG_ACCEPT => self.on_accept(c.res),
+                        TAG_READ => {
+                            self.on_read(
+                                slot, gen, c.res, &mut batch_ops,
+                                &mut touched,
+                            );
+                            Ok(())
+                        }
+                        TAG_WRITE => {
+                            self.on_write(slot, gen, c.res, &mut touched)
+                        }
+                        // TAG_CANCEL (and anything else): the cancel
+                        // op's own completion carries no state.
+                        _ => Ok(()),
+                    };
+                    if step.is_err() {
+                        return;
+                    }
+                }
+
+                // Phase 2: one table call for every op this wake
+                // delivered, across all connections.
+                let mut panicked = false;
+                if !batch_ops.is_empty() {
+                    let applied = catch_unwind(AssertUnwindSafe(|| {
+                        self.map.apply_batch_hashed(&batch_ops, &mut replies)
+                    }));
+                    if let Err(payload) = applied {
+                        panicked = true;
+                        metrics().server_panics.incr();
+                        eprintln!(
+                            "crh-uring: contained panic in wake batch \
+                             ({} ops across {} conns): {}",
+                            batch_ops.len(),
+                            touched.len(),
+                            panic_message(payload.as_ref()),
+                        );
+                    }
+                }
+
+                // Phase 3: format replies, queue write/read SQEs (the
+                // next enter submits them all at once), lifecycle.
+                for i in 0..touched.len() {
+                    let slot = touched[i];
+                    if self
+                        .finish_wake(
+                            slot, &replies, panicked, &mut line, &mut replay,
+                        )
+                        .is_err()
+                    {
+                        return;
+                    }
+                }
+
+                if self.stopping && self.live == 0 && !self.accept_inflight {
+                    return; // ring drop closes the fd and the ring
+                }
+            }
+        }
+    }
+
+    // ---------------------------------------------------------- handle
+
+    enum Inner {
+        Ring {
+            addr: SocketAddr,
+            stop: Arc<AtomicBool>,
+            wakes: Vec<Arc<EventFd>>,
+            threads: Vec<JoinHandle<()>>,
+        },
+        Fallback(ReactorHandle),
+    }
+
+    /// Handle to a running io_uring server (or its epoll fallback).
+    /// Dropping it detaches the server; [`UringHandle::shutdown`]
+    /// stops and joins every worker, closing all sockets.
+    pub struct UringHandle {
+        inner: Inner,
+    }
+
+    impl UringHandle {
+        /// The address the server is listening on.
+        pub fn addr(&self) -> SocketAddr {
+            match &self.inner {
+                Inner::Ring { addr, .. } => *addr,
+                Inner::Fallback(h) => h.addr(),
+            }
+        }
+
+        /// Did this spawn fall back to the epoll reactor (kernel
+        /// without io_uring, `CRH_URING=0`, or [`force_fallback`])?
+        pub fn is_fallback(&self) -> bool {
+            matches!(self.inner, Inner::Fallback(_))
+        }
+
+        /// Stop every worker, join them all, and close every
+        /// connection.
+        pub fn shutdown(self) {
+            match self.inner {
+                Inner::Ring { stop, wakes, mut threads, .. } => {
+                    stop.store(true, Ordering::SeqCst);
+                    for w in &wakes {
+                        w.signal();
+                    }
+                    for t in threads.drain(..) {
+                        let _ = t.join();
+                    }
+                }
+                Inner::Fallback(h) => h.shutdown(),
+            }
+        }
+    }
+
+    fn serve_on(
+        listeners: Vec<TcpListener>,
+        addr: SocketAddr,
+        map: Arc<dyn ConcurrentMap>,
+    ) -> io::Result<UringHandle> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut wakes = Vec::with_capacity(listeners.len());
+        let mut workers = Vec::with_capacity(listeners.len());
+        for listener in listeners {
+            let ring = Uring::new(SQ_ENTRIES, CQ_ENTRIES)?;
+            let wake = Arc::new(EventFd::new()?);
+            wakes.push(wake.clone());
+            workers.push(Worker::new(
+                ring,
+                listener,
+                wake,
+                stop.clone(),
+                map.clone(),
+            ));
+        }
+        let threads = workers
+            .into_iter()
+            .map(|w| std::thread::spawn(move || w.run()))
+            .collect();
+        Ok(UringHandle { inner: Inner::Ring { addr, stop, wakes, threads } })
+    }
+
+    /// Serve `map` on `listener` with `workers` ring-driven threads
+    /// (0 = [`reactor::default_workers`]). `SO_REUSEPORT` must be set
+    /// pre-bind, so an externally bound listener can't gain reuseport
+    /// siblings; instead every worker arms an accept SQE on a dup of
+    /// the same listener fd — still no hand-off hop. Falls back to the
+    /// epoll reactor when io_uring is unavailable.
+    pub fn serve_uring(
+        listener: TcpListener,
+        map: Arc<dyn ConcurrentMap>,
+        workers: usize,
+    ) -> io::Result<UringHandle> {
+        let workers =
+            if workers == 0 { reactor::default_workers() } else { workers };
+        if !uring_frontend_available() {
+            return reactor::serve_epoll(listener, map, workers)
+                .map(|h| UringHandle { inner: Inner::Fallback(h) });
+        }
+        let addr = listener.local_addr()?;
+        let mut listeners = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            listeners.push(listener.try_clone()?);
+        }
+        serve_on(listeners, addr, map)
+    }
+
+    /// Bind an ephemeral localhost port and serve `map` on the uring
+    /// backend with a per-worker `SO_REUSEPORT` listener group — each
+    /// worker accepts its own connections, kernel-load-balanced.
+    /// Falls back to a shared listener if reuseport binding fails, and
+    /// to the epoll reactor if io_uring is unavailable.
+    pub fn spawn_server_uring(
+        map: Arc<dyn ConcurrentMap>,
+        workers: usize,
+    ) -> io::Result<UringHandle> {
+        let workers =
+            if workers == 0 { reactor::default_workers() } else { workers };
+        if !uring_frontend_available() {
+            return reactor::spawn_server_epoll(map, workers)
+                .map(|h| UringHandle { inner: Inner::Fallback(h) });
+        }
+        let local = SocketAddr::from(([127, 0, 0, 1], 0));
+        match bind_reuseport_group(local, workers) {
+            Ok((addr, listeners)) => serve_on(listeners, addr, map),
+            Err(_) => {
+                serve_uring(TcpListener::bind(local)?, map, workers)
+            }
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod fallback {
+    //! io_uring is Linux-only; elsewhere the "uring" API serves
+    //! through the reactor module (whose own non-Linux fallback is the
+    //! thread-per-connection backend). The protocol is identical
+    //! either way.
+
+    use std::io;
+    use std::net::{SocketAddr, TcpListener};
+    use std::sync::Arc;
+
+    use crate::maps::ConcurrentMap;
+    use crate::service::reactor::{self, ReactorHandle};
+
+    pub struct UringHandle(ReactorHandle);
+
+    impl UringHandle {
+        pub fn addr(&self) -> SocketAddr {
+            self.0.addr()
+        }
+
+        pub fn is_fallback(&self) -> bool {
+            true
+        }
+
+        pub fn shutdown(self) {
+            self.0.shutdown()
+        }
+    }
+
+    pub fn force_fallback(_on: bool) {}
+
+    pub fn uring_frontend_available() -> bool {
+        false
+    }
+
+    pub fn serve_uring(
+        listener: TcpListener,
+        map: Arc<dyn ConcurrentMap>,
+        workers: usize,
+    ) -> io::Result<UringHandle> {
+        reactor::serve_epoll(listener, map, workers).map(UringHandle)
+    }
+
+    pub fn spawn_server_uring(
+        map: Arc<dyn ConcurrentMap>,
+        workers: usize,
+    ) -> io::Result<UringHandle> {
+        reactor::spawn_server_epoll(map, workers).map(UringHandle)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maps::{ConcurrentMap, MapKind, MapOp};
+    use crate::service::server::Client;
+    use std::sync::Arc;
+
+    fn map() -> Arc<dyn ConcurrentMap> {
+        Arc::from(MapKind::ShardedKCasRhMap { shards: 4 }.build(12))
+    }
+
+    // These run on whatever the host kernel provides: with io_uring
+    // they exercise the ring path, without it the transparent epoll
+    // fallback — the protocol contract is identical by construction,
+    // and tests/frontend.rs covers the forced-fallback path
+    // explicitly.
+
+    #[test]
+    fn round_trip_and_shutdown_joins() {
+        let h = spawn_server_uring(map(), 2).unwrap();
+        let mut c = Client::connect(h.addr()).unwrap();
+        assert_eq!(c.request_line("P 5 50").unwrap(), "-");
+        assert_eq!(c.request_line("G 5").unwrap(), "50");
+        assert_eq!(c.request_line("A 5 1").unwrap(), "50");
+        assert_eq!(c.request_line("C 5 51 -").unwrap(), "OK");
+        assert_eq!(c.request_line("G 0").unwrap(), "ERR key out of range");
+        let replies = c
+            .batch(&[MapOp::Insert(7, 70), MapOp::Get(7), MapOp::Remove(7)])
+            .unwrap();
+        assert_eq!(replies, vec![None, Some(70), Some(70)]);
+        h.shutdown();
+    }
+
+    #[test]
+    fn quit_closes_after_replies_flush() {
+        let h = spawn_server_uring(map(), 1).unwrap();
+        let mut c = Client::connect(h.addr()).unwrap();
+        c.send_raw(b"P 9 90\nG 9\nQ\n").unwrap();
+        assert_eq!(c.read_reply_line().unwrap(), "-");
+        assert_eq!(c.read_reply_line().unwrap(), "90");
+        assert!(c.read_reply_line().is_err(), "connection should be closed");
+        h.shutdown();
+    }
+
+    #[test]
+    fn many_connections_share_workers() {
+        let m = map();
+        let h = spawn_server_uring(m.clone(), 2).unwrap();
+        let addr = h.addr();
+        let mut handles = Vec::new();
+        for tid in 0..16u64 {
+            handles.push(std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                let base = 1 + tid * 1000;
+                for k in base..base + 50 {
+                    assert_eq!(
+                        c.request_line(&format!("P {k} {k}")).unwrap(),
+                        "-"
+                    );
+                }
+                let ops: Vec<MapOp> =
+                    (base..base + 50).map(MapOp::Get).collect();
+                let got = c.batch(&ops).unwrap();
+                assert!(got
+                    .iter()
+                    .zip(base..base + 50)
+                    .all(|(v, k)| *v == Some(k)));
+            }));
+        }
+        for th in handles {
+            th.join().unwrap();
+        }
+        assert_eq!(m.len_quiesced(), 16 * 50);
+        h.shutdown();
+    }
+}

@@ -319,6 +319,20 @@ pub struct Metrics {
     pub bytes_out_thread: Counter,
     pub bytes_in_epoll: Counter,
     pub bytes_out_epoll: Counter,
+    pub bytes_in_uring: Counter,
+    pub bytes_out_uring: Counter,
+    /// Wire-path syscalls, per backend: every `read`/`write` on the
+    /// thread server, every `epoll_*`/`read`/`write`/`accept` on the
+    /// reactor, every `io_uring_setup`/`enter` on the uring backend.
+    /// Divide by ops applied for the syscalls-per-op series fig17
+    /// tracks — the number this whole backend exists to shrink.
+    pub syscalls_thread: Counter,
+    pub syscalls_epoll: Counter,
+    pub syscalls_uring: Counter,
+    /// SQEs submitted per `io_uring_enter` (batching in the submit
+    /// direction) and CQEs drained per reap (completion direction).
+    pub uring_sqe_batch: Hist,
+    pub uring_cqe_batch: Hist,
 }
 
 impl Metrics {
@@ -346,6 +360,13 @@ impl Metrics {
             bytes_out_thread: Counter::new(),
             bytes_in_epoll: Counter::new(),
             bytes_out_epoll: Counter::new(),
+            bytes_in_uring: Counter::new(),
+            bytes_out_uring: Counter::new(),
+            syscalls_thread: Counter::new(),
+            syscalls_epoll: Counter::new(),
+            syscalls_uring: Counter::new(),
+            uring_sqe_batch: Hist::new(),
+            uring_cqe_batch: Hist::new(),
         }
     }
 }
@@ -402,6 +423,13 @@ pub static REGISTRY: &[(&str, Metric)] = &[
     ("bytes_out_thread", Metric::Counter(&METRICS.bytes_out_thread)),
     ("bytes_in_epoll", Metric::Counter(&METRICS.bytes_in_epoll)),
     ("bytes_out_epoll", Metric::Counter(&METRICS.bytes_out_epoll)),
+    ("bytes_in_uring", Metric::Counter(&METRICS.bytes_in_uring)),
+    ("bytes_out_uring", Metric::Counter(&METRICS.bytes_out_uring)),
+    ("syscalls_thread", Metric::Counter(&METRICS.syscalls_thread)),
+    ("syscalls_epoll", Metric::Counter(&METRICS.syscalls_epoll)),
+    ("syscalls_uring", Metric::Counter(&METRICS.syscalls_uring)),
+    ("uring_sqe_batch", Metric::Hist(&METRICS.uring_sqe_batch)),
+    ("uring_cqe_batch", Metric::Hist(&METRICS.uring_cqe_batch)),
 ];
 
 // ------------------------------------------------------------ snapshot
@@ -556,6 +584,19 @@ pub fn cell_metrics(d: &Snapshot) -> Vec<(String, f64)> {
     let wall_ns = d.counter("resize_wall_ns");
     if wall_ns > 0 {
         out.push(("migration_ms".into(), wall_ns as f64 / 1.0e6));
+    }
+    for name in ["syscalls_thread", "syscalls_epoll", "syscalls_uring"] {
+        let n = d.counter(name);
+        if n > 0 {
+            out.push((name.into(), n as f64));
+        }
+    }
+    for name in ["uring_sqe_batch", "uring_cqe_batch"] {
+        if let Some(h) = d.hist(name) {
+            if h.count() > 0 {
+                out.push((format!("{name}_p50"), h.quantile(0.5) as f64));
+            }
+        }
     }
     out
 }

@@ -1,20 +1,32 @@
-//! Minimal Linux readiness-API surface for the epoll front-end
-//! (`service::reactor`): raw `epoll_create1` / `epoll_ctl` /
-//! `epoll_wait` / `eventfd` bindings plus RAII fd wrappers.
+//! Minimal Linux kernel-API surface for the event-driven front-ends:
+//! raw `epoll_create1` / `epoll_ctl` / `epoll_wait` / `eventfd`
+//! bindings plus RAII fd wrappers (`service::reactor`), and raw
+//! `io_uring_setup` / `io_uring_enter` with mmap'd submission and
+//! completion rings (`service::uring`).
 //!
 //! Follows the `util::affinity` precedent: the `libc` crate is not
 //! available in this offline build, but Rust's std already links the C
 //! library on Linux, so declaring the symbols is all that is needed.
 //! Errors are surfaced through `std::io::Error::last_os_error()`, which
 //! reads the thread's errno the same way std's own syscall wrappers do.
+//! The io_uring entry points have no libc wrappers at all on older
+//! distributions, so those two go through `syscall(2)` with the
+//! asm-generic numbers (425/426 — identical on x86-64 and aarch64,
+//! both of which postdate the unified syscall table).
 //!
-//! Only what the reactor needs is bound — level-triggered readiness on
-//! sockets plus an eventfd wake token for cross-thread handoff and
-//! graceful shutdown. This module is `target_os = "linux"` only; the
-//! reactor falls back to the thread-per-connection server elsewhere.
+//! Only what the front-ends need is bound — level-triggered readiness
+//! on sockets, an eventfd wake token for cross-thread handoff and
+//! graceful shutdown, the [`Uring`] submission/completion ring pair,
+//! and pre-bind `SO_REUSEPORT` listener construction
+//! ([`bind_reuseport`]) so each server worker can accept its own
+//! connections with no hand-off hop. This module is
+//! `target_os = "linux"` only; the event-driven backends fall back to
+//! portable siblings elsewhere.
 
 use std::io;
 use std::os::fd::RawFd;
+
+use crate::util::metrics::metrics;
 
 pub const EPOLLIN: u32 = 0x001;
 pub const EPOLLOUT: u32 = 0x004;
@@ -114,6 +126,7 @@ impl EpollFd {
 
     fn ctl(&self, op: i32, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
         let mut ev = EpollEvent { events, data: token };
+        metrics().syscalls_epoll.incr();
         cvt(unsafe { epoll_ctl(self.0, op, fd, &mut ev) }).map(|_| ())
     }
 
@@ -142,6 +155,7 @@ impl EpollFd {
         timeout_ms: i32,
     ) -> io::Result<usize> {
         loop {
+            metrics().syscalls_epoll.incr();
             let n = unsafe {
                 epoll_wait(
                     self.0,
@@ -204,6 +218,588 @@ unsafe impl Send for EpollFd {}
 unsafe impl Sync for EpollFd {}
 unsafe impl Send for EventFd {}
 unsafe impl Sync for EventFd {}
+
+// ------------------------------------------------- SO_REUSEPORT bind
+
+const AF_INET: i32 = 2;
+const SOCK_STREAM: i32 = 1;
+/// `SOCK_CLOEXEC` (== `O_CLOEXEC`).
+const SOCK_CLOEXEC: i32 = 0o2000000;
+const SO_REUSEADDR: i32 = 2;
+const SO_REUSEPORT: i32 = 15;
+const LISTEN_BACKLOG: i32 = 1024;
+
+/// Mirror of the kernel's `struct sockaddr_in` (IPv4 only — the
+/// front-ends bind v4 addresses; a v6 bind request falls back to the
+/// single-listener path at the call site).
+#[repr(C)]
+struct SockAddrIn {
+    family: u16,
+    /// Big-endian.
+    port: u16,
+    /// Big-endian.
+    addr: u32,
+    zero: [u8; 8],
+}
+
+extern "C" {
+    fn socket(domain: i32, ty: i32, protocol: i32) -> i32;
+    fn bind(fd: i32, addr: *const SockAddrIn, len: u32) -> i32;
+    fn listen(fd: i32, backlog: i32) -> i32;
+}
+
+fn set_int_opt(fd: RawFd, opt: i32, val: i32) -> io::Result<()> {
+    let bytes = val.to_ne_bytes();
+    cvt(unsafe {
+        setsockopt(fd, SOL_SOCKET, opt, bytes.as_ptr(), bytes.len() as u32)
+    })
+    .map(|_| ())
+}
+
+/// Bind a TCP listener with `SO_REUSEPORT` set **before** `bind` — the
+/// ordering the kernel requires for reuseport groups, which std's
+/// `TcpListener::bind` cannot express. Every worker of an event-driven
+/// front-end binds its own listener to the same address this way, so
+/// the kernel load-balances incoming connections across workers and
+/// the accept-thread hand-off hop disappears.
+///
+/// IPv4 only; a v6 address returns `Unsupported` and the caller falls
+/// back to sharing one listener.
+pub fn bind_reuseport(addr: std::net::SocketAddr) -> io::Result<std::net::TcpListener> {
+    use std::os::fd::FromRawFd;
+    let std::net::SocketAddr::V4(v4) = addr else {
+        return Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "SO_REUSEPORT listener groups are IPv4-only here",
+        ));
+    };
+    let fd = cvt(unsafe { socket(AF_INET, SOCK_STREAM | SOCK_CLOEXEC, 0) })?;
+    // From here the raw fd must not leak on error paths.
+    let listener = unsafe { std::net::TcpListener::from_raw_fd(fd) };
+    set_int_opt(fd, SO_REUSEADDR, 1)?;
+    set_int_opt(fd, SO_REUSEPORT, 1)?;
+    let sa = SockAddrIn {
+        family: AF_INET as u16,
+        port: v4.port().to_be(),
+        addr: u32::from_be_bytes(v4.ip().octets()).to_be(),
+        zero: [0; 8],
+    };
+    cvt(unsafe { bind(fd, &sa, std::mem::size_of::<SockAddrIn>() as u32) })?;
+    cvt(unsafe { listen(fd, LISTEN_BACKLOG) })?;
+    Ok(listener)
+}
+
+/// Bind `n` listeners of one `SO_REUSEPORT` group to the same address:
+/// the first to `addr` (possibly port 0 for an ephemeral pick), the
+/// siblings to the port the kernel assigned it. Returns the effective
+/// address with the bound listeners, one per worker.
+pub fn bind_reuseport_group(
+    addr: std::net::SocketAddr,
+    n: usize,
+) -> io::Result<(std::net::SocketAddr, Vec<std::net::TcpListener>)> {
+    let first = bind_reuseport(addr)?;
+    let actual = first.local_addr()?;
+    let mut listeners = vec![first];
+    for _ in 1..n {
+        listeners.push(bind_reuseport(actual)?);
+    }
+    Ok((actual, listeners))
+}
+
+// ------------------------------------------------------------ io_uring
+//
+// Raw submission/completion rings (kernel >= 5.1; the service layer
+// requires the 5.6+ `IORING_OP_READ`/`WRITE` opcodes and probes for
+// them at ring construction — see `Uring::probe_rw`). The layout
+// structs below mirror `<linux/io_uring.h>` exactly; the ring head and
+// tail words live in kernel-shared memory and are accessed through
+// `AtomicU32` with the acquire/release pairing the io_uring ABI
+// specifies (kernel writes SQ head + CQ tail, userspace writes SQ tail
+// + CQ head).
+
+/// asm-generic syscall numbers (x86-64 and aarch64 agree).
+const SYS_IO_URING_SETUP: i64 = 425;
+const SYS_IO_URING_ENTER: i64 = 426;
+
+/// `io_uring_setup` flag: honour `cq_entries` in the params.
+const IORING_SETUP_CQSIZE: u32 = 1 << 3;
+/// SQ and CQ rings come back in one mmap region.
+const IORING_FEAT_SINGLE_MMAP: u32 = 1 << 0;
+/// `io_uring_enter` flag: block until `min_complete` CQEs.
+const IORING_ENTER_GETEVENTS: u32 = 1;
+
+const IORING_OFF_SQ_RING: i64 = 0;
+const IORING_OFF_CQ_RING: i64 = 0x0800_0000;
+const IORING_OFF_SQES: i64 = 0x1000_0000;
+
+/// The SQE opcodes the front-end uses (numeric values are kernel ABI).
+pub const IORING_OP_NOP: u8 = 0;
+/// Kernel 5.5+.
+pub const IORING_OP_ACCEPT: u8 = 13;
+/// Kernel 5.5+.
+pub const IORING_OP_ASYNC_CANCEL: u8 = 14;
+/// Kernel 5.6+ — the floor `Uring::probe_rw` enforces.
+pub const IORING_OP_READ: u8 = 22;
+/// Kernel 5.6+.
+pub const IORING_OP_WRITE: u8 = 23;
+
+#[repr(C)]
+#[derive(Clone, Copy, Default)]
+struct SqringOffsets {
+    head: u32,
+    tail: u32,
+    ring_mask: u32,
+    ring_entries: u32,
+    flags: u32,
+    dropped: u32,
+    array: u32,
+    resv1: u32,
+    user_addr: u64,
+}
+
+#[repr(C)]
+#[derive(Clone, Copy, Default)]
+struct CqringOffsets {
+    head: u32,
+    tail: u32,
+    ring_mask: u32,
+    ring_entries: u32,
+    overflow: u32,
+    cqes: u32,
+    flags: u32,
+    resv1: u32,
+    user_addr: u64,
+}
+
+#[repr(C)]
+#[derive(Clone, Copy, Default)]
+struct IoUringParams {
+    sq_entries: u32,
+    cq_entries: u32,
+    flags: u32,
+    sq_thread_cpu: u32,
+    sq_thread_idle: u32,
+    features: u32,
+    wq_fd: u32,
+    resv: [u32; 3],
+    sq_off: SqringOffsets,
+    cq_off: CqringOffsets,
+}
+
+/// One submission-queue entry (64 bytes, kernel ABI). Constructed via
+/// the op-specific helpers; the trailing words cover the ABI's unions
+/// (`buf_index`/`personality`/address padding) and stay zero.
+#[repr(C)]
+#[derive(Clone, Copy)]
+pub struct Sqe {
+    opcode: u8,
+    flags: u8,
+    ioprio: u16,
+    fd: i32,
+    off: u64,
+    addr: u64,
+    len: u32,
+    op_flags: u32,
+    user_data: u64,
+    extra: [u64; 3],
+}
+
+const _: () = assert!(std::mem::size_of::<Sqe>() == 64);
+
+impl Sqe {
+    const fn zeroed() -> Sqe {
+        Sqe {
+            opcode: 0,
+            flags: 0,
+            ioprio: 0,
+            fd: 0,
+            off: 0,
+            addr: 0,
+            len: 0,
+            op_flags: 0,
+            user_data: 0,
+            extra: [0; 3],
+        }
+    }
+
+    pub fn nop(user_data: u64) -> Sqe {
+        Sqe { opcode: IORING_OP_NOP, user_data, ..Sqe::zeroed() }
+    }
+
+    /// `read(fd, buf, len)` at the file's current position (offset -1
+    /// means "use the fd position"; sockets ignore it either way).
+    ///
+    /// Safety contract (enforced by the caller): `buf` must stay valid
+    /// and un-moved until this SQE's completion is reaped — the kernel
+    /// writes into it asynchronously.
+    pub fn read(fd: RawFd, buf: *mut u8, len: u32, user_data: u64) -> Sqe {
+        Sqe {
+            opcode: IORING_OP_READ,
+            fd,
+            off: u64::MAX,
+            addr: buf as u64,
+            len,
+            user_data,
+            ..Sqe::zeroed()
+        }
+    }
+
+    /// `write(fd, buf, len)`. Same buffer-stability contract as
+    /// [`Sqe::read`]: the kernel reads from `buf` asynchronously.
+    pub fn write(fd: RawFd, buf: *const u8, len: u32, user_data: u64) -> Sqe {
+        Sqe {
+            opcode: IORING_OP_WRITE,
+            fd,
+            off: u64::MAX,
+            addr: buf as u64,
+            len,
+            user_data,
+            ..Sqe::zeroed()
+        }
+    }
+
+    /// `accept4(fd, NULL, NULL, SOCK_CLOEXEC)`; the completion's `res`
+    /// is the connected socket's fd.
+    pub fn accept(fd: RawFd, user_data: u64) -> Sqe {
+        Sqe {
+            opcode: IORING_OP_ACCEPT,
+            fd,
+            op_flags: SOCK_CLOEXEC as u32,
+            user_data,
+            ..Sqe::zeroed()
+        }
+    }
+
+    /// Cancel the in-flight SQE whose `user_data` is `target` (its CQE
+    /// arrives with `-ECANCELED`; this SQE's own CQE reports whether a
+    /// match was found). Used at shutdown to retire armed accepts.
+    pub fn cancel(target: u64, user_data: u64) -> Sqe {
+        Sqe {
+            opcode: IORING_OP_ASYNC_CANCEL,
+            addr: target,
+            user_data,
+            ..Sqe::zeroed()
+        }
+    }
+}
+
+/// One completion-queue entry (16 bytes, kernel ABI). `res` is the
+/// op's return value — byte count or connected fd on success, negated
+/// errno on failure.
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct Cqe {
+    pub user_data: u64,
+    pub res: i32,
+    pub flags: u32,
+}
+
+const _: () = assert!(std::mem::size_of::<Cqe>() == 16);
+
+const PROT_READ: i32 = 1;
+const PROT_WRITE: i32 = 2;
+const MAP_SHARED: i32 = 0x01;
+/// Pre-fault the ring pages: they are hot from the first submission.
+const MAP_POPULATE: i32 = 0x8000;
+
+extern "C" {
+    fn syscall(num: i64, ...) -> i64;
+    fn mmap(
+        addr: *mut u8,
+        len: usize,
+        prot: i32,
+        flags: i32,
+        fd: i32,
+        offset: i64,
+    ) -> *mut u8;
+    fn munmap(addr: *mut u8, len: usize) -> i32;
+}
+
+/// One mmap'd ring region (unmapped on drop).
+struct RingMmap {
+    ptr: *mut u8,
+    len: usize,
+}
+
+impl RingMmap {
+    fn map(fd: RawFd, len: usize, offset: i64) -> io::Result<RingMmap> {
+        let ptr = unsafe {
+            mmap(
+                std::ptr::null_mut(),
+                len,
+                PROT_READ | PROT_WRITE,
+                MAP_SHARED | MAP_POPULATE,
+                fd,
+                offset,
+            )
+        };
+        if ptr as isize == -1 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(RingMmap { ptr, len })
+    }
+
+    /// Typed pointer at byte offset `off`.
+    fn at<T>(&self, off: u32) -> *mut T {
+        unsafe { self.ptr.add(off as usize) as *mut T }
+    }
+}
+
+impl Drop for RingMmap {
+    fn drop(&mut self) {
+        unsafe { munmap(self.ptr, self.len) };
+    }
+}
+
+/// An io_uring instance: the ring fd plus mmap'd SQ/CQ rings and SQE
+/// array, torn down in reverse on drop. Single-producer by design —
+/// each server worker owns one ring outright, so no synchronisation
+/// exists on the userspace side beyond the kernel-mandated
+/// acquire/release on the shared head/tail words.
+pub struct Uring {
+    fd: RawFd,
+    sq_ring: RingMmap,
+    /// `None` when `IORING_FEAT_SINGLE_MMAP` aliased it to `sq_ring`.
+    cq_ring: Option<RingMmap>,
+    sqe_mem: RingMmap,
+    // Cached SQ geometry.
+    sq_head: *const std::sync::atomic::AtomicU32,
+    sq_tail: *const std::sync::atomic::AtomicU32,
+    sq_mask: u32,
+    sq_entries: u32,
+    sq_array: *mut u32,
+    sqes: *mut Sqe,
+    /// Local mirror of the SQ tail (sole producer).
+    tail: u32,
+    /// Pushed but not yet handed to the kernel.
+    to_submit: u32,
+    // Cached CQ geometry.
+    cq_head: *const std::sync::atomic::AtomicU32,
+    cq_tail: *const std::sync::atomic::AtomicU32,
+    cq_mask: u32,
+    cqes: *const Cqe,
+}
+
+// The ring is owned and driven by exactly one worker thread; sending
+// that ownership across the spawn boundary is safe (the raw pointers
+// target the mmap regions the struct itself keeps alive).
+unsafe impl Send for Uring {}
+
+impl Uring {
+    /// Set up a ring with `sq_entries` submission slots and (at least)
+    /// `cq_entries` completion slots. Returns the raw-OS error from
+    /// `io_uring_setup` untouched, so callers can distinguish
+    /// kernel-too-old (`ENOSYS`) from seccomp (`EPERM`) from resource
+    /// pressure.
+    pub fn new(sq_entries: u32, cq_entries: u32) -> io::Result<Uring> {
+        use std::sync::atomic::AtomicU32;
+        let mut p = IoUringParams {
+            flags: IORING_SETUP_CQSIZE,
+            cq_entries,
+            ..IoUringParams::default()
+        };
+        metrics().syscalls_uring.incr();
+        let fd = unsafe {
+            syscall(
+                SYS_IO_URING_SETUP,
+                sq_entries as usize,
+                &mut p as *mut IoUringParams as usize,
+            )
+        };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        let fd = fd as RawFd;
+        // Wrap the fd immediately so mmap failures below still close it.
+        struct FdGuard(RawFd);
+        impl Drop for FdGuard {
+            fn drop(&mut self) {
+                unsafe { close(self.0) };
+            }
+        }
+        let guard = FdGuard(fd);
+
+        let sq_len =
+            p.sq_off.array as usize + p.sq_entries as usize * std::mem::size_of::<u32>();
+        let cq_len =
+            p.cq_off.cqes as usize + p.cq_entries as usize * std::mem::size_of::<Cqe>();
+        let single = p.features & IORING_FEAT_SINGLE_MMAP != 0;
+        let sq_ring = RingMmap::map(
+            fd,
+            if single { sq_len.max(cq_len) } else { sq_len },
+            IORING_OFF_SQ_RING,
+        )?;
+        let cq_ring = if single {
+            None
+        } else {
+            Some(RingMmap::map(fd, cq_len, IORING_OFF_CQ_RING)?)
+        };
+        let sqe_mem = RingMmap::map(
+            fd,
+            p.sq_entries as usize * std::mem::size_of::<Sqe>(),
+            IORING_OFF_SQES,
+        )?;
+
+        let cq_base: &RingMmap = cq_ring.as_ref().unwrap_or(&sq_ring);
+        let ring = Uring {
+            fd,
+            sq_head: sq_ring.at::<AtomicU32>(p.sq_off.head),
+            sq_tail: sq_ring.at::<AtomicU32>(p.sq_off.tail),
+            sq_mask: unsafe { *sq_ring.at::<u32>(p.sq_off.ring_mask) },
+            sq_entries: p.sq_entries,
+            sq_array: sq_ring.at::<u32>(p.sq_off.array),
+            sqes: sqe_mem.at::<Sqe>(0),
+            tail: 0,
+            to_submit: 0,
+            cq_head: cq_base.at::<AtomicU32>(p.cq_off.head),
+            cq_tail: cq_base.at::<AtomicU32>(p.cq_off.tail),
+            cq_mask: unsafe { *cq_base.at::<u32>(p.cq_off.ring_mask) },
+            cqes: cq_base.at::<Cqe>(p.cq_off.cqes),
+            sq_ring,
+            cq_ring,
+            sqe_mem,
+        };
+        std::mem::forget(guard); // Uring::drop owns the fd now
+        Ok(ring)
+    }
+
+    /// Free submission slots right now.
+    pub fn sq_space(&self) -> u32 {
+        use std::sync::atomic::Ordering;
+        let head = unsafe { &*self.sq_head }.load(Ordering::Acquire);
+        self.sq_entries - self.tail.wrapping_sub(head)
+    }
+
+    /// Queue one SQE, flushing with a submit-only `io_uring_enter`
+    /// when the ring is full (in-flight ops are not bounded by ring
+    /// size — slots free as soon as the kernel consumes them).
+    pub fn push(&mut self, sqe: Sqe) -> io::Result<()> {
+        use std::sync::atomic::Ordering;
+        while self.sq_space() == 0 {
+            self.enter(0)?;
+        }
+        let idx = self.tail & self.sq_mask;
+        unsafe {
+            *self.sqes.add(idx as usize) = sqe;
+            *self.sq_array.add(idx as usize) = idx;
+        }
+        self.tail = self.tail.wrapping_add(1);
+        unsafe { &*self.sq_tail }.store(self.tail, Ordering::Release);
+        self.to_submit += 1;
+        Ok(())
+    }
+
+    /// One `io_uring_enter`: submit everything queued since the last
+    /// enter and, when `wait > 0`, block until that many completions
+    /// are available. This is the *only* syscall on the uring hot path
+    /// — the batch sizes it carries are what `fig17_frontend`'s
+    /// syscalls-per-op series measures.
+    pub fn enter(&mut self, wait: u32) -> io::Result<u32> {
+        let m = metrics();
+        loop {
+            let n = self.to_submit;
+            m.syscalls_uring.incr();
+            if n > 0 {
+                m.uring_sqe_batch.record(n as u64);
+            }
+            let flags = if wait > 0 { IORING_ENTER_GETEVENTS } else { 0 };
+            let r = unsafe {
+                syscall(
+                    SYS_IO_URING_ENTER,
+                    self.fd as usize,
+                    n as usize,
+                    wait as usize,
+                    flags as usize,
+                    0usize,
+                    0usize,
+                )
+            };
+            if r < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    continue;
+                }
+                return Err(e);
+            }
+            self.to_submit -= (r as u32).min(self.to_submit);
+            return Ok(r as u32);
+        }
+    }
+
+    /// Drain every available completion into `out`; returns how many
+    /// arrived. Never blocks — pair with [`Uring::enter`]`(wait)`.
+    pub fn reap(&mut self, out: &mut Vec<Cqe>) -> usize {
+        use std::sync::atomic::Ordering;
+        let tail = unsafe { &*self.cq_tail }.load(Ordering::Acquire);
+        let mut head = unsafe { &*self.cq_head }.load(Ordering::Relaxed);
+        let n = tail.wrapping_sub(head) as usize;
+        out.reserve(n);
+        while head != tail {
+            let idx = head & self.cq_mask;
+            out.push(unsafe { *self.cqes.add(idx as usize) });
+            head = head.wrapping_add(1);
+        }
+        unsafe { &*self.cq_head }.store(head, Ordering::Release);
+        if n > 0 {
+            metrics().uring_cqe_batch.record(n as u64);
+        }
+        n
+    }
+
+    /// Verify the kernel supports the 5.6+ `IORING_OP_READ` this
+    /// module's service consumer is written against: signal an
+    /// eventfd, read it back through the ring, expect 8 bytes. An old
+    /// kernel (5.1–5.5) sets up the ring fine but fails the opcode
+    /// with `EINVAL` — that surfaces here instead of on the first real
+    /// connection.
+    pub fn probe_rw(&mut self) -> io::Result<()> {
+        let ev = EventFd::new()?;
+        ev.signal();
+        let mut buf = [0u8; 8];
+        self.push(Sqe::read(ev.fd(), buf.as_mut_ptr(), 8, 0x5eed))?;
+        self.enter(1)?;
+        let mut cqes = Vec::with_capacity(1);
+        self.reap(&mut cqes);
+        match cqes.first() {
+            Some(c) if c.user_data == 0x5eed && c.res == 8 => Ok(()),
+            Some(c) => Err(io::Error::from_raw_os_error(
+                c.res.checked_neg().filter(|&e| e > 0).unwrap_or(22), // EINVAL
+            )),
+            None => Err(io::Error::new(
+                io::ErrorKind::Other,
+                "io_uring probe produced no completion",
+            )),
+        }
+    }
+}
+
+impl Drop for Uring {
+    fn drop(&mut self) {
+        // The mmap regions unmap via their own drops; closing the ring
+        // fd releases the kernel context (which cancels or waits out
+        // anything still in flight — the service layer drains to zero
+        // in-flight before dropping, so its buffers never dangle).
+        unsafe { close(self.fd) };
+    }
+}
+
+/// Best-effort "does this kernel speak the io_uring dialect we need?"
+/// probe, cached after the first call (rings are cheap but not free,
+/// and every server spawn asks). Failure reasons collapse to `false`:
+/// ENOSYS (pre-5.1), EINVAL from `probe_rw` (pre-5.6), EPERM
+/// (seccomp/container policy).
+pub fn uring_supported() -> bool {
+    use std::sync::atomic::{AtomicU8, Ordering};
+    static CACHE: AtomicU8 = AtomicU8::new(0);
+    match CACHE.load(Ordering::Relaxed) {
+        2 => return true,
+        1 => return false,
+        _ => {}
+    }
+    let ok = Uring::new(8, 16).and_then(|mut r| r.probe_rw()).is_ok();
+    CACHE.store(if ok { 2 } else { 1 }, Ordering::Relaxed);
+    ok
+}
 
 #[cfg(test)]
 mod tests {

@@ -1,9 +1,11 @@
-//! Front-end tier tests: the epoll reactor and the thread-per-conn
-//! server against adversarial framing (frames split across `read()`
-//! boundaries, oversized `B <n>` counts, trailing garbage), a
-//! slow-reader client driving the EPOLLOUT backpressure machinery,
-//! reply-transcript equivalence between the two backends, and the
-//! shutdown handles actually joining every thread they spawned.
+//! Front-end tier tests: the epoll reactor, the io_uring backend, and
+//! the thread-per-conn server against adversarial framing (frames
+//! split across `read()` boundaries, oversized `B <n>` counts,
+//! trailing garbage), a slow-reader client driving the backpressure
+//! machinery, reply-transcript equivalence across the three backends,
+//! the kernel-too-old fallback path, `SO_REUSEPORT` multi-listener
+//! accepting, and the shutdown handles actually joining every thread
+//! they spawned.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -11,15 +13,15 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crh::maps::{ConcurrentMap, MapKind};
-use crh::service::reactor;
 use crh::service::server::{self, Client};
+use crh::service::{reactor, uring, FrontendHandle};
 
 fn map(size_log2: u32) -> Arc<dyn ConcurrentMap> {
     Arc::from(MapKind::ShardedKCasRhMap { shards: 4 }.build(size_log2))
 }
 
 /// The fixed-trace equivalence gate that the `fig17_frontend --quick`
-/// CI step also runs: both backends must answer the full protocol
+/// CI step also runs: all three backends must answer the full protocol
 /// trace (every verb, every ERR class, batch frames, fragmented
 /// writes) byte-identically.
 #[test]
@@ -32,9 +34,7 @@ fn backends_answer_fixed_trace_identically() {
 /// coalesced ones — including a batch frame whose header and body
 /// straddle fragments, an oversized batch count, and trailing garbage
 /// between valid frames.
-#[test]
-fn reactor_reassembles_fragmented_frames() {
-    let h = reactor::spawn_server_epoll(map(12), 2).unwrap();
+fn check_reassembles_fragmented_frames(h: FrontendHandle) {
     let mut c = Client::connect(h.addr()).unwrap();
     let blob = "P 4 44\nB 2\nG 4\nA 4 6\nB 9999\nG 4 junk\nG 4\n";
     for byte in blob.as_bytes() {
@@ -48,12 +48,24 @@ fn reactor_reassembles_fragmented_frames() {
     h.shutdown();
 }
 
+#[test]
+fn reactor_reassembles_fragmented_frames() {
+    check_reassembles_fragmented_frames(FrontendHandle::Reactor(
+        reactor::spawn_server_epoll(map(12), 2).unwrap(),
+    ));
+}
+
+#[test]
+fn uring_reassembles_fragmented_frames() {
+    check_reassembles_fragmented_frames(FrontendHandle::Uring(
+        uring::spawn_server_uring(map(12), 2).unwrap(),
+    ));
+}
+
 /// A batch body split across many writes, with the connection still
 /// serving afterwards when a member op is invalid (frame rejected as a
 /// unit, stream stays in sync).
-#[test]
-fn reactor_batch_member_validation_across_fragments() {
-    let h = reactor::spawn_server_epoll(map(12), 1).unwrap();
+fn check_batch_member_validation_across_fragments(h: FrontendHandle) {
     let mut c = Client::connect(h.addr()).unwrap();
     let blob = "B 3\nP 6 60\nG 0\nP 6 61\nG 6\n";
     for chunk in blob.as_bytes().chunks(3) {
@@ -64,21 +76,32 @@ fn reactor_batch_member_validation_across_fragments() {
     h.shutdown();
 }
 
-/// A client that floods requests while refusing to read replies: the
-/// reply backlog must back up through the reactor's high-water pause
-/// (EPOLLOUT-driven resume) without losing, duplicating, or
-/// reordering a single reply. Tiny kernel socket buffers force the
-/// backlog into the reactor's user-space buffer rather than the
-/// kernel's.
 #[test]
-fn reactor_slow_reader_backpressure_keeps_reply_order() {
+fn reactor_batch_member_validation_across_fragments() {
+    check_batch_member_validation_across_fragments(FrontendHandle::Reactor(
+        reactor::spawn_server_epoll(map(12), 1).unwrap(),
+    ));
+}
+
+#[test]
+fn uring_batch_member_validation_across_fragments() {
+    check_batch_member_validation_across_fragments(FrontendHandle::Uring(
+        uring::spawn_server_uring(map(12), 1).unwrap(),
+    ));
+}
+
+/// A client that floods requests while refusing to read replies: the
+/// reply backlog must back up through the backend's high-water pause
+/// and low-water resume without losing, duplicating, or reordering a
+/// single reply. Tiny kernel socket buffers force the backlog into
+/// the server's user-space buffer rather than the kernel's.
+fn check_slow_reader_backpressure(h: FrontendHandle) {
     // Scaled down under the sanitizer lane (CRH_TEST_SCALE_DIV): the
     // instrumented run still crosses every pause/flush/replay edge,
     // just with a smaller backlog.
     let adds: u64 = crh::util::prop::scaled(100_000);
     const BASE: u64 = 4_000_000_000_000_000_000;
 
-    let h = reactor::spawn_server_epoll(map(14), 2).unwrap();
     let stream = TcpStream::connect(h.addr()).unwrap();
     stream.set_nodelay(true).unwrap();
     #[cfg(target_os = "linux")]
@@ -127,6 +150,20 @@ fn reactor_slow_reader_backpressure_keeps_reply_order() {
     h.shutdown();
 }
 
+#[test]
+fn reactor_slow_reader_backpressure_keeps_reply_order() {
+    check_slow_reader_backpressure(FrontendHandle::Reactor(
+        reactor::spawn_server_epoll(map(14), 2).unwrap(),
+    ));
+}
+
+#[test]
+fn uring_slow_reader_backpressure_keeps_reply_order() {
+    check_slow_reader_backpressure(FrontendHandle::Uring(
+        uring::spawn_server_uring(map(14), 2).unwrap(),
+    ));
+}
+
 /// The threaded server's shutdown handle joins the accept loop *and*
 /// every connection thread, even with live mid-conversation clients —
 /// the `spawn_server` leak fix.
@@ -166,6 +203,95 @@ fn reactor_shutdown_joins_and_closes_listener() {
         Err(_) => {}
         Ok(mut c2) => assert!(c2.request_line("G 2").is_err()),
     }
+}
+
+/// Same property for the uring handle, with live mid-conversation
+/// clients across multiple ring workers (or the epoll fallback on
+/// kernels without io_uring — the contract is identical).
+#[test]
+fn uring_shutdown_joins_and_closes_listener() {
+    let h = uring::spawn_server_uring(map(12), 3).unwrap();
+    let addr = h.addr();
+    let mut clients: Vec<Client> = (1..=3u64)
+        .map(|k| {
+            let mut c = Client::connect(addr).unwrap();
+            assert_eq!(c.request_line(&format!("P {k} {k}")).unwrap(), "-");
+            c
+        })
+        .collect();
+    h.shutdown();
+    for c in clients.iter_mut() {
+        assert!(c.request_line("G 1").is_err());
+    }
+    match Client::connect(addr) {
+        Err(_) => {}
+        Ok(mut c2) => assert!(c2.request_line("G 2").is_err()),
+    }
+}
+
+/// The kernel-too-old path: with the fallback forced (the programmatic
+/// stand-in for `io_uring_setup` returning `ENOSYS` — mutating
+/// process-global env from a multithreaded test binary is the
+/// setenv/getenv race the TSan lane exists to catch, so a hook is used
+/// instead), the uring spawn must cleanly serve through the epoll
+/// reactor behind the same handle API, and report that it did.
+///
+/// The hook is process-global, so other uring tests running
+/// concurrently may transiently spawn in fallback mode too — they
+/// assert protocol behaviour, which is identical by construction, not
+/// ring mode.
+#[test]
+fn uring_kernel_too_old_falls_back_to_epoll() {
+    uring::force_fallback(true);
+    assert!(
+        !uring::uring_frontend_available(),
+        "forced fallback must gate availability"
+    );
+    let h = uring::spawn_server_uring(map(12), 2).unwrap();
+    assert!(h.is_fallback(), "forced fallback must take the epoll path");
+    let mut c = Client::connect(h.addr()).unwrap();
+    assert_eq!(c.request_line("P 3 33").unwrap(), "-");
+    assert_eq!(c.request_line("A 3 2").unwrap(), "33");
+    assert_eq!(c.request_line("G 3").unwrap(), "35");
+    h.shutdown();
+    uring::force_fallback(false);
+}
+
+/// The reactor's `SO_REUSEPORT` multi-listener mode: every worker
+/// accepts on its own listener bound to one shared port; connections
+/// land on different workers but serve one map.
+#[cfg(target_os = "linux")]
+#[test]
+fn reactor_reuseport_listeners_share_one_port() {
+    let m = map(12);
+    let h = reactor::serve_epoll_reuseport(
+        std::net::SocketAddr::from(([127, 0, 0, 1], 0)),
+        m.clone(),
+        3,
+    )
+    .unwrap();
+    let addr = h.addr();
+    let handles: Vec<_> = (0..12u64)
+        .map(|tid| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                let k = 1 + tid;
+                assert_eq!(
+                    c.request_line(&format!("P {k} {}", k * 10)).unwrap(),
+                    "-"
+                );
+                assert_eq!(
+                    c.request_line(&format!("G {k}")).unwrap(),
+                    (k * 10).to_string()
+                );
+            })
+        })
+        .collect();
+    for th in handles {
+        th.join().unwrap();
+    }
+    assert_eq!(m.len_quiesced(), 12);
+    h.shutdown();
 }
 
 /// The CRH_TEST_SCALE_DIV knob the sanitizer CI lane uses to shrink

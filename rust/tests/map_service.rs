@@ -4,9 +4,10 @@
 //! op-by-op equivalence, the map-flavoured Fig. 5 race, and the TCP
 //! request pipeline end-to-end (including the key-range guard that the
 //! original one-op-per-line server lacked). Every server test runs
-//! against **both** front-ends — the thread-per-connection pipeline
-//! and the epoll event loop — since the wire protocol promises they
-//! are indistinguishable.
+//! against **all three** front-ends — the thread-per-connection
+//! pipeline, the epoll event loop, and the io_uring completion-ring
+//! backend — since the wire protocol promises they are
+//! indistinguishable.
 
 use std::collections::HashMap;
 use std::net::SocketAddr;
@@ -14,28 +15,30 @@ use std::sync::Arc;
 
 use crh::maps::{ConcurrentMap, MapKind, MapOp, MapReply, MAX_KEY};
 use crh::service::batch::apply_batch;
-use crh::service::reactor;
-use crh::service::server::{self, Client};
+use crh::service::server::Client;
+use crh::service::Backend;
 use crh::util::prop;
 use crh::util::rng::Rng;
 
-/// Run a server test against both front-ends: fresh map and server per
-/// backend, shutdown (joining every spawned thread) afterwards — no
-/// stranded accept loops or connection threads survive the test run.
-fn with_both_backends(
+/// Run a server test against every front-end — thread-per-connection,
+/// epoll reactor, io_uring — fresh map and server per backend,
+/// shutdown (joining every spawned thread) afterwards: no stranded
+/// accept loops or connection threads survive the test run. On
+/// kernels without io_uring the uring backend transparently serves
+/// through the epoll reactor, so the tier still covers its
+/// spawn/shutdown surface there.
+fn with_all_backends(
     build: impl Fn() -> Arc<dyn ConcurrentMap>,
     test: impl Fn(&str, SocketAddr, &Arc<dyn ConcurrentMap>),
 ) {
-    let map = build();
-    let h = server::spawn_server(map.clone()).expect("spawn server");
-    test("thread-per-conn", h.addr(), &map);
-    h.shutdown();
-
-    let map = build();
-    let h =
-        reactor::spawn_server_epoll(map.clone(), 2).expect("spawn reactor");
-    test("epoll", h.addr(), &map);
-    h.shutdown();
+    for backend in Backend::ALL {
+        let map = build();
+        let h = backend
+            .spawn(map.clone(), 2)
+            .unwrap_or_else(|e| panic!("spawn {backend} server: {e}"));
+        test(backend.name(), h.addr(), &map);
+        h.shutdown();
+    }
 }
 
 /// Random op sequences on `kind` must match `HashMap` exactly —
@@ -487,7 +490,7 @@ fn apply_batch_matches_op_by_op_everywhere() {
 
 #[test]
 fn server_round_trip_and_key_validation() {
-    with_both_backends(
+    with_all_backends(
         || Arc::from(MapKind::ShardedKCasRhMap { shards: 4 }.build(12)),
         |backend, addr, map| {
             let mut c = Client::connect(addr).unwrap();
@@ -552,7 +555,7 @@ fn server_round_trip_and_key_validation() {
 
 #[test]
 fn server_conditional_verbs_round_trip() {
-    with_both_backends(
+    with_all_backends(
         || Arc::from(MapKind::ShardedKCasRhMap { shards: 4 }.build(12)),
         |backend, addr, map| {
             let mut c = Client::connect(addr).unwrap();
@@ -611,7 +614,7 @@ fn server_conditional_verbs_round_trip() {
 
 #[test]
 fn server_pipelined_frames_reply_in_order() {
-    with_both_backends(
+    with_all_backends(
         || Arc::from(MapKind::KCasRhMap.build(12)),
         |backend, addr, _map| {
             let mut c = Client::connect(addr).unwrap();
@@ -641,7 +644,7 @@ fn server_pipelined_frames_reply_in_order() {
 /// already covers for out-of-range keys).
 #[test]
 fn server_survives_full_table_with_error_reply() {
-    with_both_backends(
+    with_all_backends(
         || Arc::from(MapKind::KCasRhMap.build(4)), // 16 buckets
         |backend, addr, _map| {
             let mut c = Client::connect(addr).unwrap();
@@ -672,7 +675,7 @@ fn server_survives_full_table_with_error_reply() {
 
 #[test]
 fn server_concurrent_clients_mixed_batches() {
-    with_both_backends(
+    with_all_backends(
         || Arc::from(MapKind::ShardedKCasRhMap { shards: 4 }.build(12)),
         |backend, addr, map| {
             let mut hs = Vec::new();

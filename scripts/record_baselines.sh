@@ -1,0 +1,36 @@
+#!/usr/bin/env bash
+# Record the committed perf-trajectory baselines (fig15 + fig17) on a
+# machine with a Rust toolchain — the reference numbers that `crh
+# bench-compare` and the CI compare step diff fresh runs against.
+#
+# Usage, from the repo root:
+#
+#   scripts/record_baselines.sh            # full-size runs (slow, real)
+#   QUICK=1 scripts/record_baselines.sh    # smoke-size dry run (do NOT
+#                                          # commit these as baselines)
+#
+# Then inspect `benchmarks/baselines/BENCH_*.json` and commit them.
+# Snapshots embed a machine fingerprint (CPU model/count, kernel,
+# CRH_* env); record on the machine CI actually runs on, or the
+# compare step will warn about cross-fingerprint diffs instead of
+# gating.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+out_dir="$(pwd)/benchmarks/baselines"
+
+args=()
+if [ "${QUICK:-0}" = "1" ]; then
+    echo "record_baselines: QUICK=1 — smoke sizes, not commit-worthy" >&2
+    args+=(-- --quick)
+fi
+
+cd rust
+for bench in fig15_resize fig17_frontend; do
+    echo "== recording ${bench} -> ${out_dir}/BENCH_*.json" >&2
+    CRH_BENCH_JSON=1 CRH_BENCH_JSON_DIR="${out_dir}" \
+        cargo bench --bench "${bench}" "${args[@]}"
+done
+
+echo "== done; review and commit:" >&2
+ls -l "${out_dir}"/BENCH_*.json >&2
