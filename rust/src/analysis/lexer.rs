@@ -1,0 +1,538 @@
+//! A lightweight Rust lexer for the in-tree lint pass.
+//!
+//! This is not a parser: it produces a flat token stream with source
+//! spans, which is exactly enough for the adjacency- and
+//! pattern-matching rules in [`super::rules`]. What it *must* get
+//! right — because every rule depends on it — is classification:
+//! comments (line, block with nesting, doc), string-ish literals
+//! (plain, raw with `#` fences, byte, byte-raw), char literals vs
+//! lifetimes, and raw identifiers. A rule that mistook the word
+//! `unsafe` inside a doc comment or a string for the keyword would
+//! drown the real findings in noise.
+//!
+//! Numbers and multi-character punctuation are deliberately sloppy
+//! (`1e-5` lexes as three tokens, `::` as two colons): no rule needs
+//! them, and keeping the lexer small keeps it auditable.
+
+/// Token classification. Comments are *kept* in the stream — the
+/// rules' whole job is reasoning about comment adjacency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (including raw `r#ident`).
+    Ident,
+    /// `'lifetime` (no closing quote).
+    Lifetime,
+    /// Char or byte literal: `'x'`, `'\n'`, `b'x'`.
+    Char,
+    /// String-ish literal: `"…"`, `r"…"`, `r#"…"#`, `b"…"`, `br#"…"#`.
+    Str,
+    /// Numeric literal.
+    Num,
+    /// Single punctuation character.
+    Punct,
+    /// `// …` (includes `///` and `//!` doc comments).
+    LineComment,
+    /// `/* … */`, nesting handled; may span lines.
+    BlockComment,
+}
+
+/// One token with its source span (1-based line/column of the first
+/// character; `end_line` for multi-line block comments and strings).
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+    pub col: u32,
+    pub end_line: u32,
+}
+
+impl Tok {
+    /// Does this (comment) token's text carry `marker`?
+    pub fn contains(&self, marker: &str) -> bool {
+        self.text.contains(marker)
+    }
+
+    pub fn is_comment(&self) -> bool {
+        matches!(self.kind, TokKind::LineComment | TokKind::BlockComment)
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.chars().next() == Some(c)
+    }
+
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c == '_' || c.is_alphabetic()
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c == '_' || c.is_alphanumeric()
+}
+
+/// Cursor over the source chars with line/column tracking.
+struct Cursor {
+    chars: Vec<char>,
+    i: usize,
+    line: u32,
+    col: u32,
+}
+
+impl Cursor {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.i + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.i).copied()?;
+        self.i += 1;
+        if c == '\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+}
+
+/// Lex `src` into a token stream. Whitespace is dropped; everything
+/// else (comments included) becomes a token. Unterminated literals and
+/// comments lex as one token running to end-of-file — the lint then
+/// still sees every site before the breakage, and rustc itself is the
+/// authority on rejecting such a file.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let mut cur = Cursor { chars: src.chars().collect(), i: 0, line: 1, col: 1 };
+    let mut out = Vec::new();
+    while let Some(c) = cur.peek(0) {
+        let (line, col) = (cur.line, cur.col);
+        match c {
+            _ if c.is_whitespace() => {
+                cur.bump();
+            }
+            '/' if cur.peek(1) == Some('/') => {
+                let mut text = String::new();
+                while let Some(c) = cur.peek(0) {
+                    if c == '\n' {
+                        break;
+                    }
+                    text.push(c);
+                    cur.bump();
+                }
+                out.push(Tok {
+                    kind: TokKind::LineComment,
+                    text,
+                    line,
+                    col,
+                    end_line: line,
+                });
+            }
+            '/' if cur.peek(1) == Some('*') => {
+                let mut text = String::new();
+                let mut depth = 0usize;
+                while let Some(c) = cur.peek(0) {
+                    if c == '/' && cur.peek(1) == Some('*') {
+                        depth += 1;
+                        text.push_str("/*");
+                        cur.bump();
+                        cur.bump();
+                    } else if c == '*' && cur.peek(1) == Some('/') {
+                        depth -= 1;
+                        text.push_str("*/");
+                        cur.bump();
+                        cur.bump();
+                        if depth == 0 {
+                            break;
+                        }
+                    } else {
+                        text.push(c);
+                        cur.bump();
+                    }
+                }
+                out.push(Tok {
+                    kind: TokKind::BlockComment,
+                    text,
+                    line,
+                    col,
+                    end_line: cur.line,
+                });
+            }
+            // Raw strings and raw identifiers share the `r` prefix;
+            // byte strings add a `b`. Decide by lookahead before
+            // falling back to a plain identifier.
+            'r' | 'b' if starts_string_like(&cur) => {
+                out.push(lex_string_like(&mut cur, line, col));
+            }
+            '\'' => out.push(lex_quote(&mut cur, line, col)),
+            '"' => out.push(lex_plain_string(&mut cur, line, col, '"')),
+            _ if is_ident_start(c) => {
+                let mut text = String::new();
+                // Raw identifier: keep the `r#` prefix in the token
+                // text, so `r#unsafe` is NOT the keyword `unsafe`.
+                if c == 'r'
+                    && cur.peek(1) == Some('#')
+                    && cur.peek(2).is_some_and(is_ident_start)
+                {
+                    text.push_str("r#");
+                    cur.bump();
+                    cur.bump();
+                }
+                while let Some(c) = cur.peek(0) {
+                    if !is_ident_continue(c) {
+                        break;
+                    }
+                    text.push(c);
+                    cur.bump();
+                }
+                out.push(Tok {
+                    kind: TokKind::Ident,
+                    text,
+                    line,
+                    col,
+                    end_line: line,
+                });
+            }
+            _ if c.is_ascii_digit() => {
+                let mut text = String::new();
+                while let Some(c) = cur.peek(0) {
+                    if is_ident_continue(c) {
+                        text.push(c);
+                        cur.bump();
+                    } else if c == '.'
+                        && cur.peek(1).is_some_and(|d| d.is_ascii_digit())
+                        && !text.contains('.')
+                    {
+                        text.push(c);
+                        cur.bump();
+                    } else {
+                        break;
+                    }
+                }
+                out.push(Tok {
+                    kind: TokKind::Num,
+                    text,
+                    line,
+                    col,
+                    end_line: line,
+                });
+            }
+            _ => {
+                cur.bump();
+                out.push(Tok {
+                    kind: TokKind::Punct,
+                    text: c.to_string(),
+                    line,
+                    col,
+                    end_line: line,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Is the cursor (sitting on `r` or `b`) at the start of a raw / byte
+/// string or byte char, as opposed to an ordinary identifier?
+fn starts_string_like(cur: &Cursor) -> bool {
+    match (cur.peek(0), cur.peek(1)) {
+        (Some('r'), Some('"')) => true,
+        (Some('r'), Some('#')) => {
+            // r#"…"# is a raw string; r#ident is a raw identifier.
+            let mut j = 1;
+            while cur.peek(j) == Some('#') {
+                j += 1;
+            }
+            cur.peek(j) == Some('"')
+        }
+        (Some('b'), Some('"')) | (Some('b'), Some('\'')) => true,
+        (Some('b'), Some('r')) => {
+            matches!(cur.peek(2), Some('"') | Some('#'))
+        }
+        _ => false,
+    }
+}
+
+/// Lex `r"…"`, `r#+"…"#+`, `b"…"`, `br…`, `b'…'` (cursor on the
+/// prefix letter).
+fn lex_string_like(cur: &mut Cursor, line: u32, col: u32) -> Tok {
+    let mut text = String::new();
+    let mut raw = false;
+    // Consume the prefix letters (`r`, `b`, `br`).
+    while let Some(c) = cur.peek(0) {
+        if c == 'r' || c == 'b' {
+            if c == 'r' {
+                raw = true;
+            }
+            text.push(c);
+            cur.bump();
+        } else {
+            break;
+        }
+    }
+    if cur.peek(0) == Some('\'') {
+        // b'x' — byte char.
+        let t = lex_quote(cur, line, col);
+        return Tok { text: text + &t.text, ..t };
+    }
+    if raw {
+        let mut hashes = 0usize;
+        while cur.peek(0) == Some('#') {
+            hashes += 1;
+            text.push('#');
+            cur.bump();
+        }
+        text.push('"');
+        cur.bump(); // opening quote
+        let mut fence = String::from("\"");
+        for _ in 0..hashes {
+            fence.push('#');
+        }
+        loop {
+            match cur.peek(0) {
+                None => break,
+                Some('"') => {
+                    // Candidate close: must be followed by `hashes` #s.
+                    let matched =
+                        (1..=hashes).all(|k| cur.peek(k) == Some('#'));
+                    if matched {
+                        text.push_str(&fence);
+                        for _ in 0..=hashes {
+                            cur.bump();
+                        }
+                        break;
+                    }
+                    text.push('"');
+                    cur.bump();
+                }
+                Some(c) => {
+                    text.push(c);
+                    cur.bump();
+                }
+            }
+        }
+        Tok { kind: TokKind::Str, text, line, col, end_line: cur.line }
+    } else {
+        let t = lex_plain_string(cur, line, col, '"');
+        Tok { text: text + &t.text, ..t }
+    }
+}
+
+/// Lex a `"…"` string with escapes (cursor on the opening quote).
+fn lex_plain_string(cur: &mut Cursor, line: u32, col: u32, quote: char) -> Tok {
+    let mut text = String::new();
+    text.push(quote);
+    cur.bump();
+    while let Some(c) = cur.peek(0) {
+        if c == '\\' {
+            text.push(c);
+            cur.bump();
+            if let Some(e) = cur.peek(0) {
+                text.push(e);
+                cur.bump();
+            }
+        } else if c == quote {
+            text.push(c);
+            cur.bump();
+            break;
+        } else {
+            text.push(c);
+            cur.bump();
+        }
+    }
+    Tok { kind: TokKind::Str, text, line, col, end_line: cur.line }
+}
+
+/// Lex from a `'`: either a char literal (`'x'`, `'\n'`) or a
+/// lifetime (`'a`, `'static`). The grammar is ambiguous one character
+/// at a time, so look ahead: an escape or a close-quote two chars out
+/// means char literal, an identifier run without a closing quote means
+/// lifetime.
+fn lex_quote(cur: &mut Cursor, line: u32, col: u32) -> Tok {
+    debug_assert_eq!(cur.peek(0), Some('\''));
+    let next = cur.peek(1);
+    let is_char = match next {
+        Some('\\') => true,
+        Some(c) if is_ident_start(c) => {
+            // 'a' vs 'a: scan the ident run; a closing quote right
+            // after it makes this a char literal.
+            let mut j = 2;
+            while cur.peek(j).is_some_and(is_ident_continue) {
+                j += 1;
+            }
+            cur.peek(j) == Some('\'')
+        }
+        // '1', ' ', '(' … anything non-ident with a close quote after.
+        Some(_) => cur.peek(2) == Some('\''),
+        None => false,
+    };
+    let mut text = String::new();
+    text.push('\'');
+    cur.bump();
+    if is_char {
+        while let Some(c) = cur.peek(0) {
+            if c == '\\' {
+                text.push(c);
+                cur.bump();
+                if let Some(e) = cur.peek(0) {
+                    text.push(e);
+                    cur.bump();
+                }
+            } else if c == '\'' {
+                text.push(c);
+                cur.bump();
+                break;
+            } else {
+                text.push(c);
+                cur.bump();
+            }
+        }
+        Tok { kind: TokKind::Char, text, line, col, end_line: cur.line }
+    } else {
+        while let Some(c) = cur.peek(0) {
+            if !is_ident_continue(c) {
+                break;
+            }
+            text.push(c);
+            cur.bump();
+        }
+        Tok { kind: TokKind::Lifetime, text, line, col, end_line: line }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_keywords_punct() {
+        let toks = kinds("unsafe { x.y() }");
+        assert_eq!(
+            toks,
+            vec![
+                (TokKind::Ident, "unsafe".into()),
+                (TokKind::Punct, "{".into()),
+                (TokKind::Ident, "x".into()),
+                (TokKind::Punct, ".".into()),
+                (TokKind::Ident, "y".into()),
+                (TokKind::Punct, "(".into()),
+                (TokKind::Punct, ")".into()),
+                (TokKind::Punct, "}".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn line_and_doc_comments_keep_text() {
+        let toks = lex("// SAFETY: fine\n/// docs\nlet x = 1;");
+        assert_eq!(toks[0].kind, TokKind::LineComment);
+        assert!(toks[0].contains("SAFETY:"));
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[1].kind, TokKind::LineComment);
+        assert_eq!(toks[1].text, "/// docs");
+        assert_eq!(toks[2].text, "let");
+        assert_eq!(toks[2].line, 3);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let toks = lex("/* a /* nested */ b */ x /* tail");
+        assert_eq!(toks[0].kind, TokKind::BlockComment);
+        assert_eq!(toks[0].text, "/* a /* nested */ b */");
+        assert_eq!(toks[1].text, "x");
+        // Unterminated tail comment runs to EOF as one token.
+        assert_eq!(toks[2].kind, TokKind::BlockComment);
+        assert_eq!(toks.len(), 3);
+    }
+
+    #[test]
+    fn block_comment_spans_lines() {
+        let toks = lex("/* one\ntwo\nthree */ unsafe");
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[0].end_line, 3);
+        assert_eq!(toks[1].text, "unsafe");
+        assert_eq!(toks[1].line, 3);
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        // The word `unsafe` inside any string form must not become an
+        // Ident token.
+        for src in [
+            "\"unsafe { }\"",
+            "r\"unsafe\"",
+            "r#\"unsafe \" still\"#",
+            "r##\"one \"# two\"##",
+            "b\"unsafe\"",
+            "br#\"unsafe\"#",
+        ] {
+            let toks = lex(src);
+            assert_eq!(toks.len(), 1, "src {src:?} -> {toks:?}");
+            assert_eq!(toks[0].kind, TokKind::Str, "src {src:?}");
+        }
+    }
+
+    #[test]
+    fn string_escapes_do_not_end_early() {
+        let toks = kinds(r#""a \" b" x"#);
+        assert_eq!(toks.len(), 2);
+        assert_eq!(toks[0].0, TokKind::Str);
+        assert_eq!(toks[1].1, "x");
+    }
+
+    #[test]
+    fn raw_ident_is_not_the_keyword() {
+        let toks = kinds("r#unsafe x");
+        assert_eq!(toks[0], (TokKind::Ident, "r#unsafe".into()));
+        assert_eq!(toks[1], (TokKind::Ident, "x".into()));
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let toks = kinds("&'a T; 'x'; '\\n'; '\\''; b'z'; 'static");
+        let find = |txt: &str| {
+            toks.iter().find(|(_, t)| t == txt).map(|(k, _)| *k)
+        };
+        assert_eq!(find("'a"), Some(TokKind::Lifetime));
+        assert_eq!(find("'x'"), Some(TokKind::Char));
+        assert_eq!(find("'\\n'"), Some(TokKind::Char));
+        assert_eq!(find("'\\''"), Some(TokKind::Char));
+        assert_eq!(find("b'z'"), Some(TokKind::Char));
+        assert_eq!(find("'static"), Some(TokKind::Lifetime));
+    }
+
+    #[test]
+    fn char_literal_with_digit_and_space() {
+        assert_eq!(kinds("'1'")[0].0, TokKind::Char);
+        assert_eq!(kinds("' '")[0].0, TokKind::Char);
+        assert_eq!(kinds("'{'")[0].0, TokKind::Char);
+    }
+
+    #[test]
+    fn numbers_lex_whole() {
+        let toks = kinds("0x1f 1_000 0.5 1..9");
+        assert_eq!(toks[0], (TokKind::Num, "0x1f".into()));
+        assert_eq!(toks[1], (TokKind::Num, "1_000".into()));
+        assert_eq!(toks[2], (TokKind::Num, "0.5".into()));
+        // Range: the dots stay punct, both endpoints are numbers.
+        assert_eq!(toks[3], (TokKind::Num, "1".into()));
+        assert_eq!(toks[4], (TokKind::Punct, ".".into()));
+        assert_eq!(toks[5], (TokKind::Punct, ".".into()));
+        assert_eq!(toks[6], (TokKind::Num, "9".into()));
+    }
+
+    #[test]
+    fn spans_are_one_based_and_accurate() {
+        let toks = lex("ab cd\n  ef");
+        assert_eq!((toks[0].line, toks[0].col), (1, 1));
+        assert_eq!((toks[1].line, toks[1].col), (1, 4));
+        assert_eq!((toks[2].line, toks[2].col), (2, 3));
+    }
+}

@@ -1,0 +1,141 @@
+//! In-tree static analysis: the `crh lint` concurrency lint pass.
+//!
+//! The paper's table lives or dies on the correctness of its atomic
+//! orderings and unsafe publication sites — exactly the properties
+//! neither rustc nor clippy checks and a human reviewer can't reliably
+//! eyeball across a growing crate. This subsystem makes the crate's
+//! memory-model documentation *machine-checked*: a lightweight Rust
+//! lexer ([`lexer`]) feeds a rules engine ([`rules`]) that enforces
+//! the conventions the codebase audit established:
+//!
+//! * **L001** — every `unsafe` block/fn/impl carries an adjacent
+//!   `// SAFETY:` comment (or `# Safety` doc section) stating the
+//!   invariant that makes it sound.
+//! * **L002** — every `Ordering::Relaxed` outside `util::metrics` and
+//!   test code carries an adjacent `// ORDERING:` comment justifying
+//!   why no happens-before edge is needed.
+//! * **L003** — every `#[allow(…)]` opt-out carries an adjacent
+//!   justification comment.
+//! * **L004** — metric name strings are declared exactly once in the
+//!   `util::metrics` registry, and every string lookup names a
+//!   declared metric (a typo'd counter can't silently drift out of
+//!   the `STATS` schema).
+//! * **L005** — every wire `Frame` variant the shared codec can yield
+//!   is dispatched by all three front-ends (threads/reactor/uring), so
+//!   a new verb can't ship on only one backend.
+//!
+//! Run it as `crh lint [path…]` (defaults to `src`, `tests`,
+//! `benches`, and `../examples` relative to the working directory,
+//! skipping `tests/lint_fixtures`); CI runs it as a blocking lane.
+//! The engine is dependency-free and deliberately small: a token
+//! stream plus adjacency rules, not a parser — see `rules` for the
+//! exact adjacency definition.
+
+pub mod lexer;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+pub use rules::{lint_files, lint_sources, Diag, SourceFile};
+
+use crate::util::error::{Error, Result};
+
+/// Directories never walked: build output, VCS internals, and the
+/// deliberately-violating lint fixtures (they are linted explicitly by
+/// the test tier, never as part of the tree).
+const SKIP_DIRS: &[&str] = &["target", ".git", "lint_fixtures"];
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .collect::<std::io::Result<Vec<_>>>()?
+        .into_iter()
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
+    for path in entries {
+        let name = path
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        if path.is_dir() {
+            if !SKIP_DIRS.contains(&name.as_str()) {
+                walk(&path, out)?;
+            }
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Collect every `.rs` file under `paths` (files are taken as-is,
+/// directories are walked recursively).
+pub fn collect_rs_files(paths: &[PathBuf]) -> Result<Vec<PathBuf>> {
+    let mut files = Vec::new();
+    for p in paths {
+        if p.is_dir() {
+            walk(p, &mut files)?;
+        } else if p.is_file() {
+            files.push(p.clone());
+        } else {
+            return Err(Error::msg(format!("lint: no such path {p:?}")));
+        }
+    }
+    files.sort();
+    files.dedup();
+    Ok(files)
+}
+
+/// Lint every `.rs` file under `paths`. Diagnostics come back sorted
+/// by (path, line, column).
+pub fn lint_paths(paths: &[PathBuf]) -> Result<Vec<Diag>> {
+    let mut files = Vec::new();
+    for path in collect_rs_files(paths)? {
+        let src = std::fs::read_to_string(&path)?;
+        files.push(SourceFile::new(path, &src));
+    }
+    Ok(lint_files(&files))
+}
+
+/// The default lint scope when `crh lint` gets no path arguments:
+/// the crate source plus its test/bench/example trees, whichever
+/// exist relative to the working directory (CI runs from `rust/`).
+pub fn default_paths() -> Vec<PathBuf> {
+    ["src", "tests", "benches", "../examples"]
+        .iter()
+        .map(PathBuf::from)
+        .filter(|p| p.is_dir())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collect_skips_fixture_and_target_dirs() {
+        let dir = std::env::temp_dir().join(format!(
+            "crh_lint_walk_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(dir.join("a/lint_fixtures")).unwrap();
+        std::fs::create_dir_all(dir.join("target")).unwrap();
+        std::fs::write(dir.join("a/keep.rs"), "fn f() {}\n").unwrap();
+        std::fs::write(dir.join("a/skip.txt"), "not rust\n").unwrap();
+        std::fs::write(dir.join("a/lint_fixtures/bad.rs"), "unsafe {}\n")
+            .unwrap();
+        std::fs::write(dir.join("target/gen.rs"), "unsafe {}\n").unwrap();
+        let files = collect_rs_files(&[dir.clone()]).unwrap();
+        assert_eq!(files, vec![dir.join("a/keep.rs")]);
+        let diags = lint_paths(&[dir.clone()]).unwrap();
+        assert!(diags.is_empty(), "{diags:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_path_is_an_error() {
+        assert!(lint_paths(&[PathBuf::from("/no/such/crh/path")]).is_err());
+    }
+}

@@ -1,0 +1,803 @@
+//! The lint rules (`L001`–`L005`) over the [`super::lexer`] token
+//! stream.
+//!
+//! | id   | rule |
+//! |------|------|
+//! | L001 | every `unsafe` (block, fn, impl, trait) needs an adjacent `// SAFETY:` comment (or a `# Safety` doc section) |
+//! | L002 | every `Ordering::Relaxed` outside `util::metrics` / test code needs an adjacent `// ORDERING:` comment |
+//! | L003 | every `#[allow(…)]` / `#![allow(…)]` needs an adjacent justification comment |
+//! | L004 | metric name strings: declared exactly once in the `util::metrics` `REGISTRY`, and every `.counter("…")` / `.hist("…")` lookup names a declared metric |
+//! | L005 | every `Frame` variant the `service::frame` codec can yield is dispatched in all three backends (`server.rs`, `reactor.rs`, `uring.rs`) |
+//!
+//! "Adjacent" means: a comment on the same line as the site, in the
+//! contiguous comment/attribute block directly above it (blank lines
+//! break adjacency), mid-statement between the statement start and the
+//! site, or in the comment block directly above the start of the
+//! statement containing the site. That covers every reasonable comment
+//! placement while rejecting a justification stranded behind
+//! unrelated code.
+
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use super::lexer::{lex, Tok, TokKind};
+
+/// One span-accurate diagnostic. `line`/`col` are 1-based.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diag {
+    pub rule: &'static str,
+    pub path: PathBuf,
+    pub line: u32,
+    pub col: u32,
+    pub msg: String,
+}
+
+impl fmt::Display for Diag {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}:{}: {} {}",
+            self.path.display(),
+            self.line,
+            self.col,
+            self.rule,
+            self.msg
+        )
+    }
+}
+
+/// One attribute occurrence: `#[name(…)]` or `#![name(…)]`.
+struct Attr {
+    /// Index of the opening `#` token.
+    hash_idx: usize,
+    /// Index one past the closing `]`.
+    end_idx: usize,
+    /// First identifier inside the brackets (`allow`, `cfg`, `test` …).
+    name: String,
+    /// All identifiers inside the brackets, in order.
+    inner: Vec<String>,
+}
+
+/// A lexed file plus the derived indexes the rules share.
+pub struct SourceFile {
+    pub path: PathBuf,
+    toks: Vec<Tok>,
+    attrs: Vec<Attr>,
+    /// Token is part of an attribute (`#`, brackets and contents).
+    attr_tok: Vec<bool>,
+    /// Token sits inside a `#[cfg(test)]` / `#[test]` item body.
+    test_tok: Vec<bool>,
+    /// Lines carrying at least one non-comment, non-attribute token.
+    code_lines: HashSet<u32>,
+    /// Lines whose only non-comment tokens belong to attributes.
+    attr_lines: HashSet<u32>,
+    /// Line -> indexes of comment tokens covering that line.
+    comments_by_line: HashMap<u32, Vec<usize>>,
+}
+
+impl SourceFile {
+    pub fn new(path: PathBuf, src: &str) -> SourceFile {
+        let toks = lex(src);
+        let attrs = collect_attrs(&toks);
+        let mut attr_tok = vec![false; toks.len()];
+        for a in &attrs {
+            for t in attr_tok.iter_mut().take(a.end_idx).skip(a.hash_idx) {
+                *t = true;
+            }
+        }
+        let test_tok = mark_test_regions(&toks, &attrs);
+
+        let mut code_lines = HashSet::new();
+        let mut attr_line_cand = HashSet::new();
+        let mut comments_by_line: HashMap<u32, Vec<usize>> = HashMap::new();
+        for (i, t) in toks.iter().enumerate() {
+            if t.is_comment() {
+                for l in t.line..=t.end_line {
+                    comments_by_line.entry(l).or_default().push(i);
+                }
+            } else if attr_tok[i] {
+                for l in t.line..=t.end_line {
+                    attr_line_cand.insert(l);
+                }
+            } else {
+                for l in t.line..=t.end_line {
+                    code_lines.insert(l);
+                }
+            }
+        }
+        let attr_lines =
+            attr_line_cand.difference(&code_lines).copied().collect();
+        SourceFile {
+            path,
+            toks,
+            attrs,
+            attr_tok,
+            test_tok,
+            code_lines,
+            attr_lines,
+            comments_by_line,
+        }
+    }
+
+    /// Do the path's trailing components match `suffix` (e.g.
+    /// `["util", "metrics.rs"]`)?
+    fn path_ends_with(&self, suffix: &[&str]) -> bool {
+        let comps: Vec<_> = self
+            .path
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect();
+        comps.len() >= suffix.len()
+            && comps[comps.len() - suffix.len()..]
+                .iter()
+                .zip(suffix)
+                .all(|(a, b)| a == b)
+    }
+
+    /// Is this file test code by location (an integration-test tree)?
+    fn in_tests_dir(&self) -> bool {
+        self.path
+            .components()
+            .any(|c| c.as_os_str().to_string_lossy() == "tests")
+    }
+
+    /// Does any comment covering `line` satisfy `pred`?
+    fn line_comment_matches(
+        &self,
+        line: u32,
+        pred: &dyn Fn(&Tok) -> bool,
+    ) -> bool {
+        self.comments_by_line
+            .get(&line)
+            .is_some_and(|idxs| idxs.iter().any(|&i| pred(&self.toks[i])))
+    }
+
+    /// Walk the contiguous comment/attribute block directly above
+    /// `line` (blank or code lines break the walk) looking for a
+    /// comment satisfying `pred`.
+    fn block_above_matches(
+        &self,
+        line: u32,
+        pred: &dyn Fn(&Tok) -> bool,
+    ) -> bool {
+        let mut l = line.saturating_sub(1);
+        while l >= 1 {
+            let has_comment = self.comments_by_line.contains_key(&l);
+            if has_comment && !self.code_lines.contains(&l) {
+                if self.line_comment_matches(l, pred) {
+                    return true;
+                }
+            } else if !self.attr_lines.contains(&l) {
+                break;
+            }
+            l -= 1;
+        }
+        false
+    }
+
+    /// Is there a justifying comment adjacent to the token at
+    /// `site_idx`? See the module docs for the adjacency definition.
+    fn has_adjacent_comment(
+        &self,
+        site_idx: usize,
+        pred: &dyn Fn(&Tok) -> bool,
+    ) -> bool {
+        let site_line = self.toks[site_idx].line;
+        if self.line_comment_matches(site_line, pred)
+            || self.block_above_matches(site_line, pred)
+        {
+            return true;
+        }
+        // Statement scope: scan back to the nearest `;`/`{`/`}`. A
+        // matching comment passed on the way counts (mid-statement
+        // justification); otherwise re-run the line checks at the
+        // statement's first token.
+        let mut anchor = None;
+        let mut k = site_idx;
+        while k > 0 {
+            k -= 1;
+            let t = &self.toks[k];
+            if t.is_comment() {
+                if pred(t) {
+                    return true;
+                }
+                continue;
+            }
+            if t.is_punct(';') || t.is_punct('{') || t.is_punct('}') {
+                break;
+            }
+            anchor = Some(k);
+        }
+        if let Some(a) = anchor {
+            let a_line = self.toks[a].line;
+            if a_line != site_line
+                && (self.line_comment_matches(a_line, pred)
+                    || self.block_above_matches(a_line, pred))
+            {
+                return true;
+            }
+        }
+        false
+    }
+
+    fn diag(
+        &self,
+        rule: &'static str,
+        tok: &Tok,
+        msg: impl Into<String>,
+    ) -> Diag {
+        Diag {
+            rule,
+            path: self.path.clone(),
+            line: tok.line,
+            col: tok.col,
+            msg: msg.into(),
+        }
+    }
+}
+
+/// Find every `#[…]` / `#![…]` attribute in the stream.
+fn collect_attrs(toks: &[Tok]) -> Vec<Attr> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if !toks[i].is_punct('#') {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        if j < toks.len() && toks[j].is_punct('!') {
+            j += 1;
+        }
+        if j >= toks.len() || !toks[j].is_punct('[') {
+            i += 1;
+            continue;
+        }
+        // Balanced-bracket scan for the closing `]`.
+        let mut depth = 0usize;
+        let mut name = String::new();
+        let mut inner = Vec::new();
+        let mut k = j;
+        while k < toks.len() {
+            let t = &toks[k];
+            if t.is_punct('[') {
+                depth += 1;
+            } else if t.is_punct(']') {
+                depth -= 1;
+                if depth == 0 {
+                    k += 1;
+                    break;
+                }
+            } else if t.kind == TokKind::Ident {
+                if name.is_empty() {
+                    name = t.text.clone();
+                }
+                inner.push(t.text.clone());
+            }
+            k += 1;
+        }
+        out.push(Attr { hash_idx: i, end_idx: k, name, inner });
+        i = k;
+    }
+    out
+}
+
+/// Mark tokens inside the body of an item annotated `#[test]` or
+/// `#[cfg(test)]` (the `mod tests { … }` convention and individual
+/// test fns alike).
+fn mark_test_regions(toks: &[Tok], attrs: &[Attr]) -> Vec<bool> {
+    let mut test = vec![false; toks.len()];
+    for a in attrs {
+        let is_test_attr = a.inner == ["test"] || a.inner == ["cfg", "test"];
+        if !is_test_attr {
+            continue;
+        }
+        // Find the item body: the first `{` before any depth-0 `;`.
+        let mut depth = 0i32;
+        let mut k = a.end_idx;
+        let mut body_start = None;
+        while k < toks.len() {
+            let t = &toks[k];
+            if t.is_punct('(') || t.is_punct('[') {
+                depth += 1;
+            } else if t.is_punct(')') || t.is_punct(']') {
+                depth -= 1;
+            } else if t.is_punct('{') && depth == 0 {
+                body_start = Some(k);
+                break;
+            } else if t.is_punct(';') && depth == 0 {
+                break; // bodyless item (`mod x;`, `use …;`)
+            }
+            k += 1;
+        }
+        let Some(start) = body_start else { continue };
+        let mut braces = 0i32;
+        let mut k = start;
+        while k < toks.len() {
+            let t = &toks[k];
+            if t.is_punct('{') {
+                braces += 1;
+            } else if t.is_punct('}') {
+                braces -= 1;
+            }
+            test[k] = true;
+            if braces == 0 {
+                break;
+            }
+            k += 1;
+        }
+    }
+    test
+}
+
+fn safety_pred(t: &Tok) -> bool {
+    t.contains("SAFETY:") || t.contains("# Safety")
+}
+
+fn ordering_pred(t: &Tok) -> bool {
+    t.contains("ORDERING:")
+}
+
+/// L001: `unsafe` without an adjacent `// SAFETY:` comment.
+fn rule_l001(f: &SourceFile, out: &mut Vec<Diag>) {
+    for (i, t) in f.toks.iter().enumerate() {
+        if !t.is_ident("unsafe") {
+            continue;
+        }
+        if f.has_adjacent_comment(i, &safety_pred) {
+            continue;
+        }
+        let what = match f.toks.get(i + 1) {
+            Some(n) if n.is_ident("fn") => "unsafe fn",
+            Some(n) if n.is_ident("impl") => "unsafe impl",
+            Some(n) if n.is_ident("trait") => "unsafe trait",
+            _ => "unsafe block",
+        };
+        out.push(f.diag(
+            "L001",
+            t,
+            format!("{what} without an adjacent `// SAFETY:` comment"),
+        ));
+    }
+}
+
+/// L002: `Ordering::Relaxed` (or a bare imported `Relaxed`) outside
+/// `util::metrics` / test code without an adjacent `// ORDERING:`
+/// comment.
+fn rule_l002(f: &SourceFile, out: &mut Vec<Diag>) {
+    if f.path_ends_with(&["util", "metrics.rs"]) || f.in_tests_dir() {
+        return;
+    }
+    for (i, t) in f.toks.iter().enumerate() {
+        if !t.is_ident("Relaxed") || f.test_tok[i] {
+            continue;
+        }
+        if f.has_adjacent_comment(i, &ordering_pred) {
+            continue;
+        }
+        out.push(f.diag(
+            "L002",
+            t,
+            "Ordering::Relaxed without an adjacent `// ORDERING:` \
+             justification comment",
+        ));
+    }
+}
+
+/// L003: `#[allow(…)]` without an adjacent justification comment.
+fn rule_l003(f: &SourceFile, out: &mut Vec<Diag>) {
+    let any_comment = |_: &Tok| true;
+    for a in &f.attrs {
+        if a.name != "allow" {
+            continue;
+        }
+        let hash = &f.toks[a.hash_idx];
+        let adjacent = f.line_comment_matches(hash.line, &any_comment)
+            || f.block_above_matches(hash.line, &any_comment);
+        if !adjacent {
+            let what = a.inner.get(1).cloned().unwrap_or_default();
+            out.push(f.diag(
+                "L003",
+                hash,
+                format!(
+                    "#[allow({what})] without an adjacent justification \
+                     comment"
+                ),
+            ));
+        }
+    }
+}
+
+fn unquote(s: &str) -> &str {
+    s.trim_start_matches(['b', 'r', '#'])
+        .trim_start_matches('"')
+        .trim_end_matches(['#'])
+        .trim_end_matches('"')
+}
+
+/// L004, declaration side: the metric names registered in
+/// `util::metrics`'s `REGISTRY` static, each of which must appear
+/// exactly once. Returns the declared set when the file is the
+/// registry file.
+fn l004_declarations(
+    f: &SourceFile,
+    out: &mut Vec<Diag>,
+) -> Option<HashSet<String>> {
+    if !f.path_ends_with(&["util", "metrics.rs"]) {
+        return None;
+    }
+    let start = f.toks.iter().position(|t| t.is_ident("REGISTRY"))?;
+    let mut declared = HashSet::new();
+    let mut depth = 0i32;
+    for t in &f.toks[start..] {
+        if t.is_punct('(') || t.is_punct('[') || t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct(')') || t.is_punct(']') || t.is_punct('}') {
+            depth -= 1;
+        } else if t.is_punct(';') && depth == 0 {
+            break;
+        } else if t.kind == TokKind::Str {
+            let name = unquote(&t.text).to_string();
+            if !declared.insert(name.clone()) {
+                out.push(f.diag(
+                    "L004",
+                    t,
+                    format!("metric name {name:?} declared more than once"),
+                ));
+            }
+        }
+    }
+    Some(declared)
+}
+
+/// L004, usage side: `.counter("…")` / `.hist("…")` string-literal
+/// lookups collected per file for validation against the declared set.
+fn l004_usages(f: &SourceFile) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let t = &f.toks;
+    for i in 0..t.len().saturating_sub(3) {
+        if t[i].is_punct('.')
+            && (t[i + 1].is_ident("counter") || t[i + 1].is_ident("hist"))
+            && t[i + 2].is_punct('(')
+            && t[i + 3].kind == TokKind::Str
+        {
+            out.push((unquote(&t[i + 3].text).to_string(), i + 3));
+        }
+    }
+    out
+}
+
+/// L005, declaration side: the variants of `enum Frame` in
+/// `service/frame.rs`, with their declaration token index.
+fn l005_variants(f: &SourceFile) -> Option<Vec<(String, usize)>> {
+    if !f.path_ends_with(&["service", "frame.rs"]) {
+        return None;
+    }
+    let t = &f.toks;
+    let mut start = None;
+    for i in 0..t.len().saturating_sub(1) {
+        if t[i].is_ident("enum") {
+            // Skip comments between `enum` and its name.
+            let name = (i + 1..t.len()).find(|&j| !t[j].is_comment())?;
+            if t[name].is_ident("Frame") {
+                start = (name + 1..t.len()).find(|&j| t[j].is_punct('{'));
+                break;
+            }
+        }
+    }
+    let start = start?;
+    let mut variants = Vec::new();
+    let (mut braces, mut parens) = (1i32, 0i32);
+    let mut expecting = true;
+    let mut k = start + 1;
+    while k < t.len() && braces > 0 {
+        let tok = &t[k];
+        if tok.is_comment() || f.attr_tok[k] {
+            k += 1;
+            continue;
+        }
+        if tok.is_punct('{') {
+            braces += 1;
+        } else if tok.is_punct('}') {
+            braces -= 1;
+        } else if tok.is_punct('(') || tok.is_punct('[') {
+            parens += 1;
+        } else if tok.is_punct(')') || tok.is_punct(']') {
+            parens -= 1;
+        } else if braces == 1 && parens == 0 {
+            if tok.is_punct(',') {
+                expecting = true;
+            } else if expecting && tok.kind == TokKind::Ident {
+                variants.push((tok.text.clone(), k));
+                expecting = false;
+            }
+        }
+        k += 1;
+    }
+    Some(variants)
+}
+
+/// L005, dispatch side: every `Frame::X` mention in a backend file.
+fn l005_dispatched(f: &SourceFile) -> HashSet<String> {
+    let t = &f.toks;
+    let mut out = HashSet::new();
+    for i in 0..t.len().saturating_sub(3) {
+        if t[i].is_ident("Frame")
+            && t[i + 1].is_punct(':')
+            && t[i + 2].is_punct(':')
+            && t[i + 3].kind == TokKind::Ident
+        {
+            out.insert(t[i + 3].text.clone());
+        }
+    }
+    out
+}
+
+/// The three files that each must dispatch every `Frame` variant.
+const BACKENDS: &[&[&str]] = &[
+    &["service", "server.rs"],
+    &["service", "reactor.rs"],
+    &["service", "uring.rs"],
+];
+
+/// Run every rule over a set of lexed files. The cross-file rules
+/// (L004, L005) activate when their anchor files (`util/metrics.rs`,
+/// `service/frame.rs`) are part of the set.
+pub fn lint_files(files: &[SourceFile]) -> Vec<Diag> {
+    let mut out = Vec::new();
+    for f in files {
+        rule_l001(f, &mut out);
+        rule_l002(f, &mut out);
+        rule_l003(f, &mut out);
+    }
+
+    // L004 — one declaration set, usages validated everywhere.
+    let mut declared: Option<HashSet<String>> = None;
+    for f in files {
+        if let Some(d) = l004_declarations(f, &mut out) {
+            declared = Some(d);
+        }
+    }
+    if let Some(declared) = &declared {
+        for f in files {
+            for (name, idx) in l004_usages(f) {
+                if !declared.contains(&name) {
+                    out.push(f.diag(
+                        "L004",
+                        &f.toks[idx],
+                        format!(
+                            "metric name {name:?} is not declared in the \
+                             util::metrics REGISTRY"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    // L005 — codec variants vs the three backend dispatch paths.
+    let mut variants: Option<(&SourceFile, Vec<(String, usize)>)> = None;
+    for f in files {
+        if let Some(v) = l005_variants(f) {
+            variants = Some((f, v));
+        }
+    }
+    if let Some((frame_file, variants)) = variants {
+        for backend in BACKENDS {
+            let Some(bf) = files.iter().find(|f| f.path_ends_with(backend))
+            else {
+                continue;
+            };
+            let dispatched = l005_dispatched(bf);
+            for (name, idx) in &variants {
+                if !dispatched.contains(name) {
+                    out.push(frame_file.diag(
+                        "L005",
+                        &frame_file.toks[*idx],
+                        format!(
+                            "wire frame variant `{name}` is not dispatched \
+                             in {}",
+                            backend.join("/")
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    out.sort_by(|a, b| {
+        (&a.path, a.line, a.col, a.rule).cmp(&(&b.path, b.line, b.col, b.rule))
+    });
+    out
+}
+
+/// Lint in-memory sources (used by the fixture tests).
+pub fn lint_sources(sources: &[(&Path, &str)]) -> Vec<Diag> {
+    let files: Vec<SourceFile> = sources
+        .iter()
+        .map(|(p, s)| SourceFile::new(p.to_path_buf(), s))
+        .collect();
+    lint_files(&files)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_one(src: &str) -> Vec<Diag> {
+        lint_sources(&[(Path::new("x/lib.rs"), src)])
+    }
+
+    fn rules_of(diags: &[Diag]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.rule).collect()
+    }
+
+    #[test]
+    fn l001_fires_on_bare_unsafe_block() {
+        let d = lint_one("fn f() {\n    let x = unsafe { g() };\n}\n");
+        assert_eq!(rules_of(&d), ["L001"]);
+        assert_eq!((d[0].line, d[0].col), (2, 13));
+    }
+
+    #[test]
+    fn l001_accepts_comment_above() {
+        let src = "fn f() {\n    // SAFETY: g has no preconditions\n    \
+                   let x = unsafe { g() };\n}\n";
+        assert!(lint_one(src).is_empty());
+    }
+
+    #[test]
+    fn l001_accepts_comment_above_statement_start() {
+        let src = "fn f() {\n    // SAFETY: fine\n    let x = g()\n        \
+                   .map(|v| unsafe { h(v) });\n}\n";
+        assert!(lint_one(src).is_empty());
+    }
+
+    #[test]
+    fn l001_accepts_trailing_same_line() {
+        let src = "fn f() {\n    unsafe { g() } // SAFETY: fine\n}\n";
+        assert!(lint_one(src).is_empty());
+    }
+
+    #[test]
+    fn l001_accepts_safety_doc_section_on_unsafe_fn() {
+        let src = "/// Frees `p`.\n///\n/// # Safety\n/// `p` must be \
+                   valid.\npub unsafe fn free(p: *mut u8) {}\n";
+        assert!(lint_one(src).is_empty());
+    }
+
+    #[test]
+    fn l001_blank_line_breaks_adjacency() {
+        let src = "// SAFETY: stale, far away\n\nfn f() {\n\n    unsafe { \
+                   g() };\n}\n";
+        assert_eq!(rules_of(&lint_one(src)), ["L001"]);
+    }
+
+    #[test]
+    fn l001_ignores_unsafe_in_comments_and_strings() {
+        let src = "// this mentions unsafe code\nfn f() {\n    let s = \
+                   \"unsafe { }\";\n    let r = r#\"unsafe\"#;\n}\n";
+        assert!(lint_one(src).is_empty());
+    }
+
+    #[test]
+    fn l002_fires_without_ordering_comment() {
+        let d = lint_one("fn f(a: &A) {\n    a.x.load(Ordering::Relaxed);\n}\n");
+        assert_eq!(rules_of(&d), ["L002"]);
+    }
+
+    #[test]
+    fn l002_accepts_ordering_comment() {
+        let src = "fn f(a: &A) {\n    // ORDERING: monotonic counter, no \
+                   data published under it\n    \
+                   a.x.load(Ordering::Relaxed);\n}\n";
+        assert!(lint_one(src).is_empty());
+    }
+
+    #[test]
+    fn l002_exempts_metrics_and_tests_paths() {
+        let src = "fn f(a: &A) { a.x.load(Ordering::Relaxed); }\n";
+        let exempt = lint_sources(&[(Path::new("util/metrics.rs"), src)]);
+        assert!(exempt.is_empty());
+        let exempt = lint_sources(&[(Path::new("tests/stress.rs"), src)]);
+        assert!(exempt.is_empty());
+    }
+
+    #[test]
+    fn l002_exempts_cfg_test_modules() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f(a: &A) { \
+                   a.x.load(Ordering::Relaxed); }\n}\n";
+        assert!(lint_one(src).is_empty());
+        // …but the same code outside the module still fires.
+        let src = "fn f(a: &A) { a.x.load(Ordering::Relaxed); }\n\
+                   #[cfg(test)]\nmod tests {}\n";
+        assert_eq!(rules_of(&lint_one(src)), ["L002"]);
+    }
+
+    #[test]
+    fn l002_catches_bare_imported_relaxed() {
+        let src = "use std::sync::atomic::Ordering::Relaxed;\nfn f(a: &A) \
+                   { a.x.load(Relaxed); }\n";
+        // Two sites: the use-import line is justification-free too —
+        // both must carry a comment (the import line names the token).
+        assert_eq!(rules_of(&lint_one(src)), ["L002", "L002"]);
+    }
+
+    #[test]
+    fn l003_fires_on_unjustified_allow() {
+        let d = lint_one("#[allow(dead_code)]\nfn f() {}\n");
+        assert_eq!(rules_of(&d), ["L003"]);
+        assert!(d[0].msg.contains("dead_code"));
+    }
+
+    #[test]
+    fn l003_accepts_adjacent_comment() {
+        let src = "// kept for the ffi layer\n#[allow(dead_code)]\nfn f() \
+                   {}\n";
+        assert!(lint_one(src).is_empty());
+        let src = "#[allow(dead_code)] // kept for the ffi layer\nfn f() \
+                   {}\n";
+        assert!(lint_one(src).is_empty());
+    }
+
+    #[test]
+    fn l004_duplicate_declaration_fires() {
+        let src = "pub static REGISTRY: &[(&str, M)] = &[\n    (\"a\", \
+                   M::C),\n    (\"a\", M::C),\n];\n";
+        let d = lint_sources(&[(Path::new("util/metrics.rs"), src)]);
+        assert_eq!(rules_of(&d), ["L004"]);
+        assert_eq!(d[0].line, 3);
+    }
+
+    #[test]
+    fn l004_undeclared_usage_fires() {
+        let reg = "pub static REGISTRY: &[(&str, M)] = &[(\"good\", \
+                   M::C)];\n";
+        let usage = "fn f(s: &S) { s.counter(\"goood\"); s.hist(\"good\"); \
+                     }\n";
+        let d = lint_sources(&[
+            (Path::new("util/metrics.rs"), reg),
+            (Path::new("bench/report.rs"), usage),
+        ]);
+        assert_eq!(rules_of(&d), ["L004"]);
+        assert!(d[0].msg.contains("goood"));
+    }
+
+    #[test]
+    fn l005_missing_backend_dispatch_fires() {
+        let frame = "pub enum Frame {\n    /// docs\n    Batch(Vec<Op>),\n    \
+                     Stats,\n    Quit,\n}\n";
+        let hits = "fn d(f: Frame) { match f { Frame::Batch(_) => {}, \
+                    Frame::Stats => {}, Frame::Quit => {} } }\n";
+        let misses = "fn d(f: Frame) { match f { Frame::Batch(_) => {}, _ \
+                      => {} } }\n";
+        let d = lint_sources(&[
+            (Path::new("service/frame.rs"), frame),
+            (Path::new("service/server.rs"), hits),
+            (Path::new("service/reactor.rs"), hits),
+            (Path::new("service/uring.rs"), misses),
+        ]);
+        assert_eq!(rules_of(&d), ["L005", "L005"]);
+        assert!(d[0].msg.contains("uring"));
+        assert!(d[0].msg.contains("`Stats`"));
+        assert!(d[1].msg.contains("`Quit`"));
+        // Span points at the variant declaration in frame.rs.
+        assert!(d[0].path.ends_with("service/frame.rs"));
+        assert_eq!(d[0].line, 4);
+    }
+
+    #[test]
+    fn l005_silent_when_all_dispatch() {
+        let frame = "pub enum Frame { Batch(Vec<Op>), Quit }\n";
+        let hits =
+            "fn d(f: Frame) { matches!(f, Frame::Batch(_) | Frame::Quit); }\n";
+        let d = lint_sources(&[
+            (Path::new("service/frame.rs"), frame),
+            (Path::new("service/server.rs"), hits),
+            (Path::new("service/reactor.rs"), hits),
+            (Path::new("service/uring.rs"), hits),
+        ]);
+        assert!(d.is_empty());
+    }
+}

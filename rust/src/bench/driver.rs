@@ -104,6 +104,9 @@ pub fn run_prefilled(
                 // final 64-op batch after `stop` flips).
                 let t0 = Instant::now();
                 let mut ops = 0u64;
+                // ORDERING: the stop flag carries no data — workers
+                // only need to observe it eventually, and the join
+                // below synchronises the measured counts.
                 while !stop.load(Ordering::Relaxed) {
                     // Check the stop flag every 64 ops to keep the flag
                     // read off the critical path.
@@ -127,6 +130,8 @@ pub fn run_prefilled(
         }
         barrier.wait();
         std::thread::sleep(Duration::from_millis(cfg.duration_ms));
+        // ORDERING: eventual-visibility stop signal; see the worker
+        // loop's load.
         stop.store(true, Ordering::Relaxed);
         for h in handles {
             h.join().unwrap();
@@ -256,6 +261,8 @@ pub fn run_latency(
                 barrier.wait();
                 let w0 = Instant::now();
                 let mut ops = 0u64;
+                // ORDERING: eventual-visibility stop flag, as in
+                // run_timed; the join synchronises the results.
                 while !stop.load(Ordering::Relaxed) {
                     let key = 1 + rng.below(cfg.key_space);
                     let roll = rng.below(100) as u32;
@@ -275,6 +282,8 @@ pub fn run_latency(
         }
         barrier.wait();
         std::thread::sleep(Duration::from_millis(cfg.duration_ms));
+        // ORDERING: eventual-visibility stop signal; see the worker
+        // loop's load.
         stop.store(true, Ordering::Relaxed);
         for h in handles {
             h.join().unwrap();

@@ -77,6 +77,9 @@ pub fn kcas(entries: &[(usize, u64, u64)]) -> bool {
 
     // New incarnation: bump seq FIRST (invalidates stale references),
     // then publish fields, then run.
+    // ORDERING: Relaxed read of our own descriptor's status — only the
+    // owner thread bumps it, so this just re-reads the thread's last
+    // store; the SeqCst store below is what publishes the new seq.
     let seq = status_seq(desc.status.load(Relaxed)).wrapping_add(1) & SEQ_MASK;
     desc.status.store(pack_status(seq, UNDECIDED), SeqCst);
     desc.n.store(entries.len(), Release);
@@ -129,6 +132,11 @@ fn execute(tid: usize, seq: u64) -> bool {
             if status_seq(desc.status.load(SeqCst)) != seq {
                 return false;
             }
+            // SAFETY: entry addresses are bucket words of tables the
+            // crate never frees while operations can reference them
+            // (retired generations are held until the wrapper drops);
+            // the seq re-validation above confirmed the entries belong
+            // to a live incarnation when they were read.
             let word = unsafe { &*(addr as *const AtomicU64) };
             loop {
                 let r = rdcss(&desc.status, undecided, word, old, myref);
@@ -178,6 +186,8 @@ fn execute(tid: usize, seq: u64) -> bool {
         if status_seq(desc.status.load(SeqCst)) != seq {
             return success;
         }
+        // SAFETY: as in the install phase — seq-validated entry
+        // addresses point at bucket words that outlive the operation.
         let word = unsafe { &*(addr as *const AtomicU64) };
         let target = if success { new } else { old };
         let _ = word.compare_exchange(myref, target, SeqCst, SeqCst);
@@ -206,6 +216,8 @@ fn rdcss(
     let d = &registry()[tid].rdcss;
 
     // New incarnation of this thread's RDCSS descriptor.
+    // ORDERING: Relaxed read of our own descriptor's seq — the owner
+    // thread is its only writer; the SeqCst store below publishes.
     let seq = d.seq.load(Relaxed).wrapping_add(1) & SEQ_MASK;
     d.seq.store(seq, SeqCst);
     d.status_addr
@@ -246,7 +258,12 @@ fn rdcss_complete(tid: usize, seq: u64) {
         return; // stale: the RDCSS already completed
     }
     let rref = make_ref(tid, seq, TAG_RDCSS);
+    // SAFETY: `status_addr` names a K-CAS descriptor status word in the
+    // 'static registry, so the pointer is always valid.
     let status = unsafe { &*(status_addr as *const AtomicU64) };
+    // SAFETY: `word_addr` names a table bucket word; tables (including
+    // retired generations) are never freed while ops can reference
+    // them, and the seq check above validated the field snapshot.
     let word = unsafe { &*(word_addr as *const AtomicU64) };
     let cond = status.load(SeqCst) == expected_status;
     let target = if cond { new2 } else { old2 };

@@ -149,6 +149,8 @@ impl OpBuilder {
         if self.entries.len() == 1 {
             // Degenerate K=1: plain CAS through the protocol.
             let (addr, old, new) = self.entries[0];
+            // SAFETY: `addr` was captured from a live `&Word` in push;
+            // table words outlive the operations that target them.
             let w = unsafe { &*(addr as *const AtomicU64) };
             loop {
                 match core::try_cas_value_enc(w, old, new) {

@@ -113,6 +113,8 @@ fn alloc_tid() -> usize {
     if let Some(t) = FREE_TIDS.lock().unwrap().pop() {
         return t;
     }
+    // ORDERING: a fresh-id ticket — uniqueness comes from the atomic
+    // RMW itself; no other memory is published through the counter.
     let t = NEXT_TID.fetch_add(1, Ordering::Relaxed);
     assert!(
         t < MAX_THREADS,

@@ -63,6 +63,11 @@
 //!   skew), and `fig17_frontend` (thread-per-connection vs epoll vs
 //!   io_uring front-ends across connection counts, with a
 //!   connection-churn cell and syscalls-per-op columns).
+//! * [`analysis`] — the in-tree concurrency lint (`crh lint`): a
+//!   lightweight Rust lexer plus rules L001–L005 enforcing the
+//!   crate's `SAFETY:` / `ORDERING:` comment conventions, `#[allow]`
+//!   justifications, metric-name registry hygiene, and three-backend
+//!   wire-verb dispatch parity; a blocking CI lane.
 //! * [`util`] — hashing (bit-identical to the L1 Pallas kernel), RNG,
 //!   thread pinning, a mini property-testing driver, the Linux
 //!   readiness + io_uring syscalls behind the event front-ends
@@ -74,6 +79,7 @@
 //!   cache padding, [`util::error`] error plumbing) that keep the
 //!   crate free of external dependencies.
 
+pub mod analysis;
 pub mod bench;
 pub mod cachesim;
 pub mod coordinator;

@@ -37,6 +37,12 @@
 //!            (classify every cell of two BENCH_*.json snapshots as
 //!            regressed / improved / ok; exit 1 if any cell regressed
 //!            by more than 15%)
+//! crh lint [path ...]
+//!            (in-tree concurrency lint: rules L001-L005 — SAFETY: and
+//!            ORDERING: comment coverage, #[allow] justifications,
+//!            metric-name registry hygiene, three-backend wire-verb
+//!            dispatch parity. Defaults to src/tests/benches/examples;
+//!            exits 1 on any diagnostic. See `crh::analysis`.)
 //! crh analyze [--size-log2 N] [--lf 0.8]       (probe statistics)
 //! crh validate                                  (artifact golden check)
 //! crh smoke
@@ -84,7 +90,7 @@ fn usage() -> ! {
     eprintln!(
         "usage: crh <fig10|fig11|fig12|fig13_sharding|fig14_batching|\
          fig15_resize|fig16_rmw|fig17_frontend|serve|stats|table1|bench|\
-         bench-compare|ablate-ts|analyze|validate|smoke> [options]\n\
+         bench-compare|lint|ablate-ts|analyze|validate|smoke> [options]\n\
          (figures accept --json / CRH_BENCH_JSON=1 to write a \
          BENCH_<fig>.json snapshot; see `main.rs` docs or README)"
     );
@@ -274,6 +280,46 @@ fn main() -> Result<()> {
             let cmp = report::compare(&load(old_p), &load(new_p));
             print!("{}", cmp.render());
             if cmp.has_regressions() {
+                std::process::exit(1);
+            }
+        }
+        "lint" => {
+            let paths: Vec<std::path::PathBuf> = args[1..]
+                .iter()
+                .filter(|a| !a.starts_with("--"))
+                .map(std::path::PathBuf::from)
+                .collect();
+            let paths = if paths.is_empty() {
+                let d = crh::analysis::default_paths();
+                if d.is_empty() {
+                    eprintln!(
+                        "lint: no default paths found (run from rust/ or \
+                         pass paths explicitly)"
+                    );
+                    std::process::exit(2);
+                }
+                d
+            } else {
+                paths
+            };
+            let files = crh::analysis::collect_rs_files(&paths)
+                .unwrap_or_else(|e| {
+                    eprintln!("lint: {e}");
+                    std::process::exit(2);
+                });
+            let diags = crh::analysis::lint_paths(&paths).unwrap_or_else(|e| {
+                eprintln!("lint: {e}");
+                std::process::exit(2);
+            });
+            for d in &diags {
+                println!("{d}");
+            }
+            println!(
+                "crh lint: {} file(s), {} diagnostic(s)",
+                files.len(),
+                diags.len()
+            );
+            if !diags.is_empty() {
                 std::process::exit(1);
             }
         }

@@ -190,6 +190,8 @@ impl KCasRobinHood {
     #[inline(always)]
     fn bucket(&self, i: usize) -> &Word {
         debug_assert!(i < self.table.len());
+        // SAFETY: every caller masks `i` by the power-of-two table
+        // mask, so it is always in bounds (debug-asserted above).
         unsafe { self.table.get_unchecked(i) }
     }
 
@@ -197,6 +199,8 @@ impl KCasRobinHood {
     #[inline(always)]
     fn ts_word(&self, shard: usize) -> &Word {
         debug_assert!(shard < self.ts.len());
+        // SAFETY: shard_of masks by the power-of-two shard-array
+        // length, so `shard` is always in bounds.
         unsafe { self.ts.get_unchecked(shard) }
     }
 

@@ -1229,6 +1229,8 @@ impl ConcurrentMap for KCasRobinHoodMap {
 
 // SAFETY: all shared state is atomics under the K-CAS protocol.
 unsafe impl Send for KCasRobinHoodMap {}
+// SAFETY: as for Send — &self methods only touch the bucket/timestamp
+// atomics through the K-CAS protocol.
 unsafe impl Sync for KCasRobinHoodMap {}
 
 #[cfg(test)]

@@ -48,6 +48,9 @@ fn is_ptr(w: u64) -> bool {
 #[inline]
 fn node_key(w: u64) -> u64 {
     debug_assert!(is_ptr(w));
+    // SAFETY: a bucket word > 15 is always a published node pointer
+    // (16-byte alignment keeps real addresses above the sentinel
+    // range), and nodes are never freed while the set lives.
     unsafe { (*((w & !INS_BIT) as *const Node)).key }
 }
 
@@ -66,8 +69,12 @@ pub struct LockFreeLp {
     mask: u64,
 }
 
-// Raw node pointers are confined to the bucket protocol.
+// SAFETY: raw node pointers are confined to the bucket protocol —
+// published by CAS into the atomic bucket words and never freed while
+// the set lives (reclaimer-free, as in the paper's setup).
 unsafe impl Send for LockFreeLp {}
+// SAFETY: as for Send — all shared mutation goes through the bucket
+// atomics.
 unsafe impl Sync for LockFreeLp {}
 
 impl LockFreeLp {
@@ -138,6 +145,8 @@ impl ConcurrentSet for LockFreeLp {
                 let cur = self.load(i);
                 if is_key_state(cur, key) {
                     if !node.is_null() {
+                        // SAFETY: `node` is our own allocation and was
+                        // never published (its insert CAS didn't run).
                         unsafe { drop(Box::from_raw(node)) };
                     }
                     return false;

@@ -44,8 +44,12 @@ pub struct MichaelSet {
     mask: u64,
 }
 
-// Raw pointers are confined to the internal lock-free protocol.
+// SAFETY: the raw node pointers are confined to the internal lock-free
+// protocol — every node is heap-allocated, published by CAS, and never
+// freed while the set lives (deliberately leaked, see module docs).
 unsafe impl Send for MichaelSet {}
+// SAFETY: as for Send — all shared mutation goes through the per-node
+// atomics.
 unsafe impl Sync for MichaelSet {}
 
 struct FindResult<'a> {
@@ -78,6 +82,8 @@ impl MichaelSet {
                 if curp.is_null() {
                     return FindResult { prev, cur: curp, found: false };
                 }
+                // SAFETY: a non-null unmarked pointer read from the
+                // list targets a published, never-freed node.
                 let cur_node = unsafe { &*curp };
                 let next = cur_node.next.load(Ordering::Acquire);
                 if marked(next) {
@@ -118,6 +124,8 @@ impl ConcurrentSet for MichaelSet {
         // Wait-free-ish traversal (no unlinking on the read path).
         let mut cur = unmarked(head.load(Ordering::Acquire));
         while !cur.is_null() {
+            // SAFETY: non-null list pointers target published,
+            // never-freed nodes (reclaimer-free by design).
             let node = unsafe { &*cur };
             let next = node.next.load(Ordering::Acquire);
             if node.key >= key {
@@ -139,9 +147,15 @@ impl ConcurrentSet for MichaelSet {
             let f = self.find(head, key);
             if f.found {
                 // Already present; release our unpublished node.
+                // SAFETY: `node` came from Box::into_raw above and was
+                // never published (the insert CAS did not run).
                 unsafe { drop(Box::from_raw(node)) };
                 return false;
             }
+            // SAFETY: `node` is our own not-yet-published allocation.
+            // ORDERING: Relaxed is enough for the next-pointer staging
+            // store — the publishing CAS below is AcqRel, which is what
+            // makes the node (and this field) visible to other threads.
             unsafe { &*node }.next.store(f.cur, Ordering::Relaxed);
             if f.prev
                 .compare_exchange(f.cur, node, Ordering::AcqRel, Ordering::Acquire)
@@ -160,6 +174,8 @@ impl ConcurrentSet for MichaelSet {
             if !f.found {
                 return false;
             }
+            // SAFETY: find() returned a non-null match; nodes are
+            // never freed while the set lives.
             let cur_node = unsafe { &*f.cur };
             let next = cur_node.next.load(Ordering::Acquire);
             if marked(next) {
@@ -202,6 +218,8 @@ impl ConcurrentSet for MichaelSet {
         for head in self.heads.iter() {
             let mut cur = unmarked(head.load(Ordering::Acquire));
             while !cur.is_null() {
+                // SAFETY: non-null list pointers target published,
+                // never-freed nodes.
                 let node = unsafe { &*cur };
                 let next = node.next.load(Ordering::Acquire);
                 if !marked(next) {
@@ -248,6 +266,7 @@ mod tests {
             let mut cur = unmarked(head.load(Ordering::Acquire));
             let mut last = 0u64;
             while !cur.is_null() {
+                // SAFETY: quiesced test walk over never-freed nodes.
                 let node = unsafe { &*cur };
                 assert!(node.key > last, "chain out of order");
                 last = node.key;

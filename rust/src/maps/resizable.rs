@@ -120,6 +120,8 @@ struct Gen<T> {
 // points into a Box owned by the wrapper's generation list, which
 // outlives every reference handed out.
 unsafe impl<T: Send + Sync> Send for Gen<T> {}
+// SAFETY: as for Send — all fields are themselves Sync (atomics plus a
+// Sync table) and `src` is immutable after construction.
 unsafe impl<T: Send + Sync> Sync for Gen<T> {}
 
 /// The shared two-generation core: `current`/`migration` pointer pair,
@@ -140,6 +142,8 @@ pub(crate) struct TwoGen<T> {
 // SAFETY: the raw generation pointers always point into the Boxes held
 // by `gens`, which live until the wrapper drops.
 unsafe impl<T: Send + Sync> Send for TwoGen<T> {}
+// SAFETY: as for Send — shared access goes through atomics, the `gens`
+// mutex, and &T methods of a Sync table.
 unsafe impl<T: Send + Sync> Sync for TwoGen<T> {}
 
 impl<T: Generation> TwoGen<T> {
@@ -165,6 +169,8 @@ impl<T: Generation> TwoGen<T> {
     /// The current generation's table. The reference is valid for the
     /// wrapper's lifetime (generations are never freed before drop).
     fn current(&self) -> &T {
+        // SAFETY: `current` always points into a Box held by `gens`,
+        // which is freed only when the wrapper drops.
         unsafe { &(*self.current.load(Ordering::Acquire)).table }
     }
 
@@ -203,8 +209,12 @@ impl<T: Generation> TwoGen<T> {
                     }
                 }
             }
+            // SAFETY: a non-null migration pointer targets a Box held
+            // by `gens`, alive for the wrapper's lifetime.
             let mig = unsafe { &*mig };
             self.help(mig);
+            // SAFETY: a migration target's `src` is the non-null
+            // generation it drains, owned by `gens` as well.
             let src = unsafe { &(*mig.src).table };
             match slow(src, &mig.table) {
                 Ok(r) => return r,
@@ -221,8 +231,13 @@ impl<T: Generation> TwoGen<T> {
     /// target generation to current and clears the migration pointer —
     /// in that order, so every interleaving sees a serviceable state.
     fn help(&self, mig: &Gen<T>) {
+        // SAFETY: `help` is only called with an installed migration
+        // target, whose `src` points at the Box-owned source generation.
         let src = unsafe { &(*mig.src).table };
         let nstripes = src.capacity().div_ceil(STRIPE);
+        // ORDERING: the cursor is a pure work-claim ticket; the stripe
+        // data it hands out is synchronised by the K-CAS protocol
+        // inside migrate_range, not by this counter.
         let s = mig.cursor.fetch_add(1, Ordering::Relaxed);
         if s >= nstripes {
             return; // all stripes claimed; stragglers finish them
@@ -233,6 +248,9 @@ impl<T: Generation> TwoGen<T> {
         if mig.done.fetch_add(1, Ordering::AcqRel) + 1 == nstripes {
             let mig_ptr = mig as *const Gen<T> as *mut Gen<T>;
             self.current.store(mig_ptr, Ordering::Release);
+            // ORDERING: Relaxed failure ordering — a lost race means a
+            // chained grow already replaced the pointer; the observed
+            // value is discarded either way.
             let _ = self.migration.compare_exchange(
                 mig_ptr,
                 ptr::null_mut(),
@@ -255,6 +273,7 @@ impl<T: Generation> TwoGen<T> {
             if mig.is_null() {
                 return;
             }
+            // SAFETY: non-null migration pointer → Box held by `gens`.
             self.help(unsafe { &*mig });
             std::hint::spin_loop();
         }
@@ -262,6 +281,9 @@ impl<T: Generation> TwoGen<T> {
 
     /// Successful-insert accounting + grow trigger.
     fn note_add(&self) {
+        // ORDERING: approximate accounting that only steers the grow
+        // trigger; no other memory is published through the counter
+        // and an off-by-a-few count merely shifts when a grow starts.
         let len = self.approx_len.fetch_add(1, Ordering::Relaxed).saturating_add(1);
         if self.migration.load(Ordering::Acquire).is_null()
             && len as f64 >= self.grow_at * self.capacity() as f64
@@ -275,6 +297,8 @@ impl<T: Generation> TwoGen<T> {
     /// add's not-yet-counted insert must not wrap below zero — a
     /// wrapped counter would read as "huge" and trigger spurious grows.
     fn note_remove(&self) {
+        // ORDERING: same approximate trigger accounting as note_add —
+        // Relaxed for both the update and the failure re-read.
         let _ = self.approx_len.fetch_update(
             Ordering::Relaxed,
             Ordering::Relaxed,
@@ -292,7 +316,11 @@ impl<T: Generation> TwoGen<T> {
             return;
         }
         let cur_ptr = self.current.load(Ordering::Acquire);
+        // SAFETY: `current` points into a Box held by `gens` (locked
+        // right now), freed only when the wrapper drops.
         let cap = unsafe { &(*cur_ptr).table }.capacity();
+        // ORDERING: trigger recheck off the approximate count; the
+        // mutex already serialises installers.
         if (self.approx_len.load(Ordering::Relaxed) as f64)
             < self.grow_at * cap as f64
         {
@@ -699,7 +727,11 @@ impl QuiescingResize {
                 moved += 1;
             }
         }
+        // ORDERING: approximate trigger input, rebuilt under the write
+        // lock whose release publishes it.
         self.approx_len.store(moved, Ordering::Relaxed);
+        // ORDERING: as above — the capacity cache is re-read under the
+        // write lock before any grow decision is acted on.
         self.cap_cache.store(next.capacity(), Ordering::Relaxed);
         *guard = next;
         metrics().resize_keys_migrated.add(moved as u64);
@@ -711,6 +743,8 @@ impl QuiescingResize {
         let mut guard = self.inner.write().unwrap();
         // Recheck under the write lock: N threads crossing the
         // threshold together must grow once, not double N times.
+        // ORDERING: approximate count; the write lock serialises the
+        // actual decision.
         if (self.approx_len.load(Ordering::Relaxed) as f64)
             < self.grow_at * guard.capacity() as f64
         {
@@ -747,8 +781,13 @@ impl ConcurrentSet for QuiescingResize {
         if added {
             // Trigger off the cached capacity: no second read-lock
             // acquisition on the hot path.
+            // ORDERING: approximate trigger accounting; nothing is
+            // published through the counter.
             let len =
                 self.approx_len.fetch_add(1, Ordering::Relaxed).saturating_add(1);
+            // ORDERING: the cache may lag a concurrent grow by one
+            // evaluation — worst case one spurious maybe_grow, which
+            // re-reads authoritatively under the write lock.
             let cap = self.cap_cache.load(Ordering::Relaxed);
             if len as f64 >= self.grow_at * cap as f64 {
                 self.maybe_grow();
@@ -763,6 +802,8 @@ impl ConcurrentSet for QuiescingResize {
             // Saturating: a remove can race an add whose accounting
             // hasn't landed yet; wrapping below zero would read as
             // "huge" and force a spurious grow.
+            // ORDERING: approximate trigger accounting — Relaxed for
+            // both the update and the failure re-read.
             let _ = self.approx_len.fetch_update(
                 Ordering::Relaxed,
                 Ordering::Relaxed,

@@ -85,6 +85,8 @@ impl TxRobinHood {
     #[inline(always)]
     fn bucket(&self, i: usize) -> u64 {
         debug_assert!(i < self.table.len());
+        // SAFETY: every caller masks `i` by the power-of-two table
+        // mask, so it is always in bounds (debug-asserted above).
         unsafe { self.table.get_unchecked(i) }.load(Ordering::Acquire)
     }
 

@@ -105,6 +105,8 @@ pub fn run_batched(
                 // `bench::driver::run_prefilled`.
                 let t0 = Instant::now();
                 let mut ops = 0u64;
+                // ORDERING: eventual-visibility stop flag, as in
+                // bench::driver; the join synchronises the counts.
                 while !stop.load(Ordering::Relaxed) {
                     if batch == 0 {
                         // Unbatched baseline; stop-flag cadence matches
@@ -138,6 +140,8 @@ pub fn run_batched(
         }
         barrier.wait();
         std::thread::sleep(Duration::from_millis(cfg.duration_ms));
+        // ORDERING: eventual-visibility stop signal; see the worker
+        // loop's load.
         stop.store(true, Ordering::Relaxed);
         for h in handles {
             h.join().unwrap();
@@ -202,6 +206,8 @@ pub fn run_rmw(
                 let t0 = Instant::now();
                 let (mut ops, mut incs) = (0u64, 0u64);
                 let (mut attempts, mut fails) = (0u64, 0u64);
+                // ORDERING: eventual-visibility stop flag, as in
+                // bench::driver; the join synchronises the counts.
                 while !stop.load(Ordering::Relaxed) {
                     for _ in 0..64 {
                         let k = 1 + rng.below(keys);
@@ -240,6 +246,8 @@ pub fn run_rmw(
         }
         barrier.wait();
         std::thread::sleep(Duration::from_millis(duration_ms));
+        // ORDERING: eventual-visibility stop signal; see the worker
+        // loop's load.
         stop.store(true, Ordering::Relaxed);
         for h in handles {
             h.join().unwrap();

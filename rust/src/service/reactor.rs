@@ -763,6 +763,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "real epoll and TCP; no kernel under Miri")]
     fn round_trip_and_shutdown_joins() {
         let h = spawn_server_epoll(map(), 2).unwrap();
         let mut c = Client::connect(h.addr()).unwrap();
@@ -781,6 +782,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "real epoll and TCP; no kernel under Miri")]
     fn quit_closes_after_replies_flush() {
         let h = spawn_server_epoll(map(), 1).unwrap();
         let mut c = Client::connect(h.addr()).unwrap();
@@ -794,6 +796,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "real epoll and TCP; no kernel under Miri")]
     fn many_connections_share_workers() {
         let m = map();
         let h = spawn_server_epoll(m.clone(), 2).unwrap();

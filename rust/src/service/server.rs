@@ -216,6 +216,9 @@ fn accept_loop(
             break;
         }
         let Ok(stream) = stream else { break };
+        // ORDERING: a fresh-id ticket — uniqueness comes from the RMW
+        // itself; the id is handed to the handler thread through the
+        // spawn, which synchronises.
         let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
         if let Ok(clone) = stream.try_clone() {
             shared.conns.lock().unwrap().insert(id, clone);

@@ -146,6 +146,9 @@ mod imp {
     /// data race, so the kernel-too-old path is exercised through this
     /// hook instead, like `metrics::set_enabled`).
     pub fn force_fallback(on: bool) {
+        // ORDERING: a standalone boolean gate consulted at spawn time;
+        // no other memory is published through it, and a marginally
+        // stale read just means one more spawn on the previous path.
         FORCE_FALLBACK.store(on, Ordering::Relaxed);
     }
 
@@ -166,6 +169,8 @@ mod imp {
     /// notice off this.
     pub fn uring_frontend_available() -> bool {
         env_enabled()
+            // ORDERING: same standalone gate as force_fallback — no
+            // happens-before edge needed for an advisory flag.
             && !FORCE_FALLBACK.load(Ordering::Relaxed)
             && uring_supported()
     }
@@ -390,8 +395,9 @@ mod imp {
         fn arm_write(&mut self, slot: u32) -> io::Result<()> {
             let gen = self.gens[slot as usize];
             let conn = self.conns[slot as usize].as_mut().expect("armed conn");
-            // Safety: wbuf is frozen until this SQE's completion, so
-            // the pointer outlives the kernel's use of it.
+            // SAFETY: wbuf is frozen until this SQE's completion, so
+            // the pointer outlives the kernel's use of it, and `wsent`
+            // is always <= wbuf.len().
             let ptr = unsafe { conn.wbuf.as_ptr().add(conn.wsent) };
             let len = (conn.wbuf.len() - conn.wsent) as u32;
             let sqe = Sqe::write(
@@ -467,11 +473,16 @@ mod imp {
             if self.stopping {
                 if res >= 0 {
                     // Adopted just to close it.
+                    // SAFETY: a non-negative accept CQE res is a fresh
+                    // connected fd owned by no one else.
                     drop(unsafe { TcpStream::from_raw_fd(res) });
                 }
                 return Ok(());
             }
             if res >= 0 {
+                // SAFETY: a non-negative accept CQE res is a fresh
+                // connected fd owned by no one else; the TcpStream
+                // takes sole ownership.
                 let stream = unsafe { TcpStream::from_raw_fd(res) };
                 stream.set_nodelay(true).ok();
                 let slot = self.alloc_slot(stream);
@@ -923,6 +934,7 @@ mod tests {
     // explicitly.
 
     #[test]
+    #[cfg_attr(miri, ignore = "real io_uring/TCP; no kernel under Miri")]
     fn round_trip_and_shutdown_joins() {
         let h = spawn_server_uring(map(), 2).unwrap();
         let mut c = Client::connect(h.addr()).unwrap();
@@ -939,6 +951,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "real io_uring/TCP; no kernel under Miri")]
     fn quit_closes_after_replies_flush() {
         let h = spawn_server_uring(map(), 1).unwrap();
         let mut c = Client::connect(h.addr()).unwrap();
@@ -950,6 +963,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "real io_uring/TCP; no kernel under Miri")]
     fn many_connections_share_workers() {
         let m = map();
         let h = spawn_server_uring(m.clone(), 2).unwrap();

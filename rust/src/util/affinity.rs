@@ -91,6 +91,8 @@ mod sys {
 pub fn pin_to(cpu: usize) -> bool {
     let mut set = sys::CpuSet::zeroed();
     set.set(cpu);
+    // SAFETY: `set` is a live, correctly-sized cpu_set_t; pid 0 means
+    // the calling thread, and the kernel copies the mask out.
     unsafe {
         sys::sched_setaffinity(0, std::mem::size_of::<sys::CpuSet>(), &set)
             == 0
@@ -127,6 +129,7 @@ mod tests {
 
     #[cfg(target_os = "linux")]
     #[test]
+    #[cfg_attr(miri, ignore = "foreign sched_setaffinity call; not shimmed")]
     fn pin_to_current_cpu_succeeds() {
         // CPU 0 always exists in the mask universe.
         assert!(pin_to(0));
@@ -135,6 +138,8 @@ mod tests {
         for c in 0..available_cpus() {
             set.set(c);
         }
+        // SAFETY: `set` is a live, correctly-sized cpu_set_t; pid 0 is
+        // the calling thread.
         unsafe {
             super::sys::sched_setaffinity(
                 0,

@@ -90,6 +90,8 @@ const SO_SNDBUF: i32 = 7;
 
 fn set_buf_opt(fd: RawFd, opt: i32, bytes: i32) -> io::Result<()> {
     let val = bytes.to_ne_bytes();
+    // SAFETY: `val` is live for the whole call and `optlen` matches its
+    // size; the kernel copies the option value and keeps no pointer.
     cvt(unsafe {
         setsockopt(fd, SOL_SOCKET, opt, val.as_ptr(), val.len() as u32)
     })
@@ -121,12 +123,16 @@ pub struct EpollFd(RawFd);
 
 impl EpollFd {
     pub fn new() -> io::Result<EpollFd> {
+        // SAFETY: no pointers cross the boundary; `cvt` validates the
+        // returned fd.
         cvt(unsafe { epoll_create1(CLOEXEC) }).map(EpollFd)
     }
 
     fn ctl(&self, op: i32, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
         let mut ev = EpollEvent { events, data: token };
         metrics().syscalls_epoll.incr();
+        // SAFETY: `ev` is a live, correctly-laid-out epoll_event for
+        // the duration of the call; the kernel copies it out.
         cvt(unsafe { epoll_ctl(self.0, op, fd, &mut ev) }).map(|_| ())
     }
 
@@ -156,6 +162,9 @@ impl EpollFd {
     ) -> io::Result<usize> {
         loop {
             metrics().syscalls_epoll.incr();
+            // SAFETY: `events` is writable for `events.len()` entries
+            // and `maxevents` is clamped to that length, so the kernel
+            // stays in bounds.
             let n = unsafe {
                 epoll_wait(
                     self.0,
@@ -175,6 +184,8 @@ impl EpollFd {
 
 impl Drop for EpollFd {
     fn drop(&mut self) {
+        // SAFETY: self.0 is an fd this wrapper owns exclusively; it is
+        // closed exactly once, here.
         unsafe { close(self.0) };
     }
 }
@@ -185,6 +196,8 @@ pub struct EventFd(RawFd);
 
 impl EventFd {
     pub fn new() -> io::Result<EventFd> {
+        // SAFETY: no pointers cross the boundary; `cvt` validates the
+        // returned fd.
         cvt(unsafe { eventfd(0, CLOEXEC | EFD_NONBLOCK) }).map(EventFd)
     }
 
@@ -196,27 +209,39 @@ impl EventFd {
     /// (`EAGAIN`) already means "signalled", so that error is ignored.
     pub fn signal(&self) {
         let one = 1u64.to_ne_bytes();
+        // SAFETY: `one` is live and valid for the 8 bytes written.
         unsafe { write(self.0, one.as_ptr(), one.len()) };
     }
 
     /// Consume all pending signals so level-triggered polling quiesces.
     pub fn drain(&self) {
         let mut buf = [0u8; 8];
+        // SAFETY: `buf` is writable for its full length and the read is
+        // bounded by `buf.len()`.
         while unsafe { read(self.0, buf.as_mut_ptr(), buf.len()) } > 0 {}
     }
 }
 
 impl Drop for EventFd {
     fn drop(&mut self) {
+        // SAFETY: self.0 is an fd this wrapper owns exclusively; it is
+        // closed exactly once, here.
         unsafe { close(self.0) };
     }
 }
 
-// `RawFd` operations are thread-safe at the kernel boundary; the
-// wrappers add no interior state.
+// SAFETY: EpollFd is just an owned RawFd; epoll operations are
+// serialised by the kernel and the wrapper adds no interior state.
 unsafe impl Send for EpollFd {}
+// SAFETY: every method takes &self and maps to a single thread-safe
+// syscall on the kernel side.
 unsafe impl Sync for EpollFd {}
+// SAFETY: EventFd is just an owned RawFd; eventfd reads and writes
+// are atomic kernel operations.
 unsafe impl Send for EventFd {}
+// SAFETY: `signal`/`drain` are &self and kernel-atomic; concurrent
+// callers at worst coalesce wake-ups, which is the intended
+// semantics of an eventfd counter.
 unsafe impl Sync for EventFd {}
 
 // ------------------------------------------------- SO_REUSEPORT bind
@@ -250,6 +275,8 @@ extern "C" {
 
 fn set_int_opt(fd: RawFd, opt: i32, val: i32) -> io::Result<()> {
     let bytes = val.to_ne_bytes();
+    // SAFETY: `bytes` is live for the whole call and `optlen` matches
+    // its size; the kernel copies the option value out.
     cvt(unsafe {
         setsockopt(fd, SOL_SOCKET, opt, bytes.as_ptr(), bytes.len() as u32)
     })
@@ -273,8 +300,11 @@ pub fn bind_reuseport(addr: std::net::SocketAddr) -> io::Result<std::net::TcpLis
             "SO_REUSEPORT listener groups are IPv4-only here",
         ));
     };
+    // SAFETY: no pointers cross the boundary; `cvt` validates the fd.
     let fd = cvt(unsafe { socket(AF_INET, SOCK_STREAM | SOCK_CLOEXEC, 0) })?;
-    // From here the raw fd must not leak on error paths.
+    // SAFETY: `fd` is a freshly-created socket nothing else owns;
+    // wrapping it before any fallible call below also guarantees it
+    // cannot leak on the error paths.
     let listener = unsafe { std::net::TcpListener::from_raw_fd(fd) };
     set_int_opt(fd, SO_REUSEADDR, 1)?;
     set_int_opt(fd, SO_REUSEPORT, 1)?;
@@ -284,7 +314,10 @@ pub fn bind_reuseport(addr: std::net::SocketAddr) -> io::Result<std::net::TcpLis
         addr: u32::from_be_bytes(v4.ip().octets()).to_be(),
         zero: [0; 8],
     };
+    // SAFETY: `sa` is a live, correctly-sized sockaddr_in the kernel
+    // copies during the call.
     cvt(unsafe { bind(fd, &sa, std::mem::size_of::<SockAddrIn>() as u32) })?;
+    // SAFETY: no pointers cross the boundary.
     cvt(unsafe { listen(fd, LISTEN_BACKLOG) })?;
     Ok(listener)
 }
@@ -523,6 +556,9 @@ struct RingMmap {
 
 impl RingMmap {
     fn map(fd: RawFd, len: usize, offset: i64) -> io::Result<RingMmap> {
+        // SAFETY: requesting a fresh kernel-chosen mapping (addr is
+        // null) over the ring fd, so no existing memory is touched;
+        // the result is validated against MAP_FAILED below.
         let ptr = unsafe {
             mmap(
                 std::ptr::null_mut(),
@@ -541,12 +577,16 @@ impl RingMmap {
 
     /// Typed pointer at byte offset `off`.
     fn at<T>(&self, off: u32) -> *mut T {
+        // SAFETY: callers pass kernel-reported ring offsets, which lie
+        // within the `len` bytes this mapping covers.
         unsafe { self.ptr.add(off as usize) as *mut T }
     }
 }
 
 impl Drop for RingMmap {
     fn drop(&mut self) {
+        // SAFETY: (ptr, len) is exactly the region mmap returned; it is
+        // unmapped exactly once, here.
         unsafe { munmap(self.ptr, self.len) };
     }
 }
@@ -580,9 +620,11 @@ pub struct Uring {
     cqes: *const Cqe,
 }
 
-// The ring is owned and driven by exactly one worker thread; sending
-// that ownership across the spawn boundary is safe (the raw pointers
-// target the mmap regions the struct itself keeps alive).
+// SAFETY: the ring is owned and driven by exactly one worker thread;
+// sending that ownership across the spawn boundary is sound because
+// the raw pointers target the mmap regions the struct itself keeps
+// alive. Uring is deliberately !Sync — nothing hands out &Uring across
+// threads.
 unsafe impl Send for Uring {}
 
 impl Uring {
@@ -599,6 +641,8 @@ impl Uring {
             ..IoUringParams::default()
         };
         metrics().syscalls_uring.incr();
+        // SAFETY: `p` is a live IoUringParams the kernel reads and
+        // fills in during the call; nothing is retained after return.
         let fd = unsafe {
             syscall(
                 SYS_IO_URING_SETUP,
@@ -614,6 +658,7 @@ impl Uring {
         struct FdGuard(RawFd);
         impl Drop for FdGuard {
             fn drop(&mut self) {
+                // SAFETY: the guard owns the ring fd until forgotten.
                 unsafe { close(self.0) };
             }
         }
@@ -645,6 +690,8 @@ impl Uring {
             fd,
             sq_head: sq_ring.at::<AtomicU32>(p.sq_off.head),
             sq_tail: sq_ring.at::<AtomicU32>(p.sq_off.tail),
+            // SAFETY: kernel-reported offset within the SQ mapping,
+            // written by io_uring_setup before it returned.
             sq_mask: unsafe { *sq_ring.at::<u32>(p.sq_off.ring_mask) },
             sq_entries: p.sq_entries,
             sq_array: sq_ring.at::<u32>(p.sq_off.array),
@@ -653,6 +700,8 @@ impl Uring {
             to_submit: 0,
             cq_head: cq_base.at::<AtomicU32>(p.cq_off.head),
             cq_tail: cq_base.at::<AtomicU32>(p.cq_off.tail),
+            // SAFETY: kernel-reported offset within the CQ mapping,
+            // written by io_uring_setup before it returned.
             cq_mask: unsafe { *cq_base.at::<u32>(p.cq_off.ring_mask) },
             cqes: cq_base.at::<Cqe>(p.cq_off.cqes),
             sq_ring,
@@ -666,6 +715,8 @@ impl Uring {
     /// Free submission slots right now.
     pub fn sq_space(&self) -> u32 {
         use std::sync::atomic::Ordering;
+        // SAFETY: sq_head points at an aligned u32 inside the live
+        // sq_ring mapping this struct keeps alive.
         let head = unsafe { &*self.sq_head }.load(Ordering::Acquire);
         self.sq_entries - self.tail.wrapping_sub(head)
     }
@@ -679,11 +730,17 @@ impl Uring {
             self.enter(0)?;
         }
         let idx = self.tail & self.sq_mask;
+        // SAFETY: `idx` is masked into the ring, so both writes land
+        // inside the sqe_mem / sq_ring mappings; the slot is free (the
+        // sq_space loop above waited for the kernel to consume it) and
+        // the kernel won't read it until the Release tail store below.
         unsafe {
             *self.sqes.add(idx as usize) = sqe;
             *self.sq_array.add(idx as usize) = idx;
         }
         self.tail = self.tail.wrapping_add(1);
+        // SAFETY: sq_tail points at an aligned u32 inside the live
+        // sq_ring mapping.
         unsafe { &*self.sq_tail }.store(self.tail, Ordering::Release);
         self.to_submit += 1;
         Ok(())
@@ -703,6 +760,8 @@ impl Uring {
                 m.uring_sqe_batch.record(n as u64);
             }
             let flags = if wait > 0 { IORING_ENTER_GETEVENTS } else { 0 };
+            // SAFETY: integer-only syscall (the sigset argument is
+            // null); the kernel touches only its own ring mappings.
             let r = unsafe {
                 syscall(
                     SYS_IO_URING_ENTER,
@@ -730,15 +789,27 @@ impl Uring {
     /// arrived. Never blocks — pair with [`Uring::enter`]`(wait)`.
     pub fn reap(&mut self, out: &mut Vec<Cqe>) -> usize {
         use std::sync::atomic::Ordering;
+        // SAFETY: cq_tail points at an aligned u32 inside the live CQ
+        // ring mapping this struct keeps alive.
         let tail = unsafe { &*self.cq_tail }.load(Ordering::Acquire);
+        // ORDERING: Relaxed is enough for cq_head — this thread is the
+        // ring's only consumer, so the load just re-reads its own last
+        // store; the Acquire on cq_tail above is what synchronises with
+        // the kernel's CQE publication.
+        // SAFETY: same CQ ring mapping as above.
         let mut head = unsafe { &*self.cq_head }.load(Ordering::Relaxed);
         let n = tail.wrapping_sub(head) as usize;
         out.reserve(n);
         while head != tail {
             let idx = head & self.cq_mask;
+            // SAFETY: `idx` is masked into the CQ ring and entries up
+            // to `tail` were published by the kernel before the
+            // Acquire load observed them.
             out.push(unsafe { *self.cqes.add(idx as usize) });
             head = head.wrapping_add(1);
         }
+        // SAFETY: cq_head points at an aligned u32 inside the live CQ
+        // ring mapping.
         unsafe { &*self.cq_head }.store(head, Ordering::Release);
         if n > 0 {
             metrics().uring_cqe_batch.record(n as u64);
@@ -775,6 +846,7 @@ impl Uring {
 
 impl Drop for Uring {
     fn drop(&mut self) {
+        // SAFETY: self.fd is the ring fd this struct owns, closed once.
         // The mmap regions unmap via their own drops; closing the ring
         // fd releases the kernel context (which cancels or waits out
         // anything still in flight — the service layer drains to zero
@@ -791,12 +863,17 @@ impl Drop for Uring {
 pub fn uring_supported() -> bool {
     use std::sync::atomic::{AtomicU8, Ordering};
     static CACHE: AtomicU8 = AtomicU8::new(0);
+    // ORDERING: the flag is a standalone memo (0 unknown / 1 no /
+    // 2 yes) guarding no other memory; a racing thread at worst
+    // re-runs the probe and stores the same answer.
     match CACHE.load(Ordering::Relaxed) {
         2 => return true,
         1 => return false,
         _ => {}
     }
     let ok = Uring::new(8, 16).and_then(|mut r| r.probe_rw()).is_ok();
+    // ORDERING: see the load above — an idempotent memo with no
+    // ordering dependency on other memory.
     CACHE.store(if ok { 2 } else { 1 }, Ordering::Relaxed);
     ok
 }
@@ -807,6 +884,7 @@ mod tests {
     use std::os::fd::AsRawFd;
 
     #[test]
+    #[cfg_attr(miri, ignore = "real epoll/eventfd fds; no kernel under Miri")]
     fn eventfd_wakes_epoll_and_drains() {
         let ep = EpollFd::new().unwrap();
         let ev = EventFd::new().unwrap();
@@ -829,6 +907,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "real epoll fds and TCP; no kernel under Miri")]
     fn epoll_reports_listener_readiness() {
         let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
         listener.set_nonblocking(true).unwrap();

@@ -1,0 +1,13 @@
+//! L001 fixture: the first `unsafe` block is documented and must not
+//! fire; the second has no adjacent `// SAFETY:` comment and must.
+//!
+//! Never compiled — linted explicitly by `tests/lint.rs`.
+
+pub fn documented(p: *const u32) -> u32 {
+    // SAFETY: fixture — the caller guarantees `p` is valid and aligned.
+    unsafe { *p }
+}
+
+pub fn undocumented(p: *const u32) -> u32 {
+    unsafe { *p }
+}

@@ -1,0 +1,26 @@
+//! L002 fixture: the first `Ordering::Relaxed` is documented and must
+//! not fire; the second has no adjacent `// ORDERING:` comment and
+//! must; the one inside `#[cfg(test)]` is exempt and must not.
+//!
+//! Never compiled — linted explicitly by `tests/lint.rs`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub static N: AtomicUsize = AtomicUsize::new(0);
+
+pub fn documented() -> usize {
+    // ORDERING: fixture — standalone counter guarding no other memory.
+    N.load(Ordering::Relaxed)
+}
+
+pub fn undocumented() -> usize {
+    N.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_is_exempt() {
+        super::N.store(1, super::Ordering::Relaxed);
+    }
+}

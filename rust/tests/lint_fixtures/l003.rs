@@ -1,0 +1,11 @@
+//! L003 fixture: the first `#[allow(…)]` carries a justification
+//! comment and must not fire; the second has none and must.
+//!
+//! Never compiled — linted explicitly by `tests/lint.rs`.
+
+// Fixture type kept deliberately unused to exercise the lint.
+#[allow(dead_code)]
+pub struct Documented;
+
+#[allow(dead_code)]
+pub struct Undocumented;

@@ -1,0 +1,8 @@
+//! L004 fixture user: the first lookup names a declared metric and
+//! must not fire; the `"ops_totle"` typo must.
+//!
+//! Never compiled — linted explicitly by `tests/lint.rs`.
+
+pub fn read(m: &Metrics) -> u64 {
+    m.counter("ops_total").get() + m.counter("ops_totle").get()
+}

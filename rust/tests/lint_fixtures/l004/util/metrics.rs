@@ -1,0 +1,10 @@
+//! L004 fixture registry (path-anchored at `util/metrics.rs`): the
+//! duplicate `"ops_total"` entry must fire once.
+//!
+//! Never compiled — linted explicitly by `tests/lint.rs`.
+
+pub static REGISTRY: &[&str] = &[
+    "ops_total",
+    "queue_depth",
+    "ops_total",
+];

@@ -1,0 +1,11 @@
+//! L005 fixture codec (path-anchored at `service/frame.rs`): the
+//! `Stop` variant is dispatched by two of the three backends but not
+//! `service/uring.rs`, so L005 must fire once, anchored here.
+//!
+//! Never compiled — linted explicitly by `tests/lint.rs`.
+
+pub enum Frame {
+    Get(u64),
+    Put(u64, u64),
+    Stop,
+}

@@ -1,0 +1,9 @@
+//! L005 fixture backend: dispatches every `Frame` variant.
+
+pub fn dispatch(f: Frame) {
+    match f {
+        Frame::Get(k) => drop(k),
+        Frame::Put(k, v) => drop((k, v)),
+        Frame::Stop => {}
+    }
+}

@@ -1,0 +1,11 @@
+//! L005 fixture backend: misses `Frame::Stop` — the catch-all arm
+//! hides the gap from the compiler, which is exactly what L005 exists
+//! to catch.
+
+pub fn dispatch(f: Frame) {
+    match f {
+        Frame::Get(k) => drop(k),
+        Frame::Put(k, v) => drop((k, v)),
+        _ => {}
+    }
+}

@@ -1,0 +1,518 @@
+#!/usr/bin/env python3
+"""Non-authoritative Python mirror of `crh lint` (rust/src/analysis/).
+
+The authoritative implementation is the Rust one, run by CI as a
+blocking lane. This mirror exists because the audit workflow (writing
+SAFETY:/ORDERING: comments across the crate) sometimes happens in
+environments without a Rust toolchain; it reimplements the same lexer
+and rules L001-L005 so the tree can be checked for self-cleanliness
+anywhere python3 runs. If the two ever disagree, fix the mirror.
+
+Usage: scripts/lint_mirror.py [path ...]   (default: rust/src rust/tests
+       rust/benches examples, relative to the repo root, skipping
+       lint_fixtures/)
+"""
+
+import os
+import re
+import sys
+
+# --------------------------------------------------------------- lexer
+
+IDENT_START = re.compile(r"[A-Za-z_]")
+IDENT_CONT = re.compile(r"[A-Za-z0-9_]")
+
+
+class Tok:
+    __slots__ = ("kind", "text", "line", "col", "end_line")
+
+    def __init__(self, kind, text, line, col, end_line=None):
+        self.kind = kind
+        self.text = text
+        self.line = line
+        self.col = col
+        self.end_line = end_line if end_line is not None else line
+
+    def is_punct(self, c):
+        return self.kind == "punct" and self.text == c
+
+    def is_ident(self, s):
+        return self.kind == "ident" and self.text == s
+
+    def is_comment(self):
+        return self.kind in ("line_comment", "block_comment")
+
+
+def lex(src):
+    toks = []
+    i, line, col = 0, 1, 1
+    n = len(src)
+
+    def bump(k=1):
+        nonlocal i, line, col
+        for _ in range(k):
+            if i < n and src[i] == "\n":
+                line += 1
+                col = 1
+            else:
+                col += 1
+            i += 1
+
+    while i < n:
+        c = src[i]
+        sl, sc = line, col
+        if c.isspace():
+            bump()
+        elif src.startswith("//", i):
+            j = src.find("\n", i)
+            j = n if j == -1 else j
+            toks.append(Tok("line_comment", src[i:j], sl, sc))
+            bump(j - i)
+        elif src.startswith("/*", i):
+            depth, j = 0, i
+            while j < n:
+                if src.startswith("/*", j):
+                    depth += 1
+                    j += 2
+                elif src.startswith("*/", j):
+                    depth -= 1
+                    j += 2
+                    if depth == 0:
+                        break
+                else:
+                    j += 1
+            start = i
+            bump(j - i)
+            toks.append(Tok("block_comment", src[start:j], sl, sc, line))
+        elif c in "rb" and _starts_string_like(src, i):
+            j, end_ln = _scan_string_like(src, i)
+            text = src[i:j]
+            bump(j - i)
+            toks.append(Tok("str" if not text.endswith("'") or '"' in text else "char", text, sl, sc, line))
+        elif c == "'":
+            kind, j = _scan_quote(src, i)
+            text = src[i:j]
+            bump(j - i)
+            toks.append(Tok(kind, text, sl, sc, line))
+        elif c == '"':
+            j = _scan_plain_string(src, i)
+            text = src[i:j]
+            bump(j - i)
+            toks.append(Tok("str", text, sl, sc, line))
+        elif IDENT_START.match(c):
+            j = i
+            if src.startswith("r#", i) and i + 2 < n and IDENT_START.match(src[i + 2]):
+                j = i + 2
+            while j < n and IDENT_CONT.match(src[j]):
+                j += 1
+            toks.append(Tok("ident", src[i:j], sl, sc))
+            bump(j - i)
+        elif c.isdigit():
+            j = i
+            while j < n:
+                if IDENT_CONT.match(src[j]):
+                    j += 1
+                elif (src[j] == "." and j + 1 < n and src[j + 1].isdigit()
+                      and "." not in src[i:j]):
+                    j += 1
+                else:
+                    break
+            toks.append(Tok("num", src[i:j], sl, sc))
+            bump(j - i)
+        else:
+            toks.append(Tok("punct", c, sl, sc))
+            bump()
+    return toks
+
+
+def _starts_string_like(src, i):
+    n = len(src)
+    if src.startswith('r"', i):
+        return True
+    if src.startswith("r#", i):
+        j = i + 1
+        while j < n and src[j] == "#":
+            j += 1
+        return j < n and src[j] == '"'
+    if src.startswith('b"', i) or src.startswith("b'", i):
+        return True
+    if src.startswith("br", i):
+        return i + 2 < n and src[i + 2] in '"#'
+    return False
+
+
+def _scan_string_like(src, i):
+    n = len(src)
+    j = i
+    raw = False
+    while j < n and src[j] in "rb":
+        raw = raw or src[j] == "r"
+        j += 1
+    if j < n and src[j] == "'":
+        _, j = _scan_quote(src, j)
+        return j, None
+    if raw:
+        hashes = 0
+        while j < n and src[j] == "#":
+            hashes += 1
+            j += 1
+        j += 1  # opening quote
+        close = '"' + "#" * hashes
+        k = src.find(close, j)
+        j = n if k == -1 else k + len(close)
+        return j, None
+    return _scan_plain_string(src, j), None
+
+
+def _scan_plain_string(src, i):
+    n = len(src)
+    j = i + 1
+    while j < n:
+        if src[j] == "\\":
+            j += 2
+        elif src[j] == '"':
+            return j + 1
+        else:
+            j += 1
+    return n
+
+
+def _scan_quote(src, i):
+    n = len(src)
+    nxt = src[i + 1] if i + 1 < n else ""
+    if nxt == "\\":
+        is_char = True
+    elif nxt and IDENT_START.match(nxt):
+        j = i + 2
+        while j < n and IDENT_CONT.match(src[j]):
+            j += 1
+        is_char = j < n and src[j] == "'"
+    elif nxt:
+        is_char = i + 2 < n and src[i + 2] == "'"
+    else:
+        is_char = False
+    if is_char:
+        j = i + 1
+        while j < n:
+            if src[j] == "\\":
+                j += 2
+            elif src[j] == "'":
+                return "char", j + 1
+            else:
+                j += 1
+        return "char", n
+    j = i + 1
+    while j < n and IDENT_CONT.match(src[j]):
+        j += 1
+    return "lifetime", j
+
+
+# ------------------------------------------------------------ file ctx
+
+
+class SourceFile:
+    def __init__(self, path, src):
+        self.path = path.replace(os.sep, "/")
+        self.toks = lex(src)
+        self.attrs = self._collect_attrs()
+        self.attr_tok = [False] * len(self.toks)
+        for a in self.attrs:
+            for k in range(a["hash"], a["end"]):
+                self.attr_tok[k] = True
+        self.test_tok = self._mark_test_regions()
+        self.code_lines = set()
+        attr_cand = set()
+        self.comments_by_line = {}
+        for idx, t in enumerate(self.toks):
+            if t.is_comment():
+                for l in range(t.line, t.end_line + 1):
+                    self.comments_by_line.setdefault(l, []).append(idx)
+            elif self.attr_tok[idx]:
+                for l in range(t.line, t.end_line + 1):
+                    attr_cand.add(l)
+            else:
+                for l in range(t.line, t.end_line + 1):
+                    self.code_lines.add(l)
+        self.attr_lines = attr_cand - self.code_lines
+
+    def _collect_attrs(self):
+        toks, out, i = self.toks, [], 0
+        while i < len(toks):
+            if not toks[i].is_punct("#"):
+                i += 1
+                continue
+            j = i + 1
+            if j < len(toks) and toks[j].is_punct("!"):
+                j += 1
+            if j >= len(toks) or not toks[j].is_punct("["):
+                i += 1
+                continue
+            depth, name, inner, k = 0, "", [], j
+            while k < len(toks):
+                t = toks[k]
+                if t.is_punct("["):
+                    depth += 1
+                elif t.is_punct("]"):
+                    depth -= 1
+                    if depth == 0:
+                        k += 1
+                        break
+                elif t.kind == "ident":
+                    if not name:
+                        name = t.text
+                    inner.append(t.text)
+                k += 1
+            out.append({"hash": i, "end": k, "name": name, "inner": inner})
+            i = k
+        return out
+
+    def _mark_test_regions(self):
+        toks = self.toks
+        test = [False] * len(toks)
+        for a in self.attrs:
+            if a["inner"] not in (["test"], ["cfg", "test"]):
+                continue
+            depth, k, body = 0, a["end"], None
+            while k < len(toks):
+                t = toks[k]
+                if t.is_punct("(") or t.is_punct("["):
+                    depth += 1
+                elif t.is_punct(")") or t.is_punct("]"):
+                    depth -= 1
+                elif t.is_punct("{") and depth == 0:
+                    body = k
+                    break
+                elif t.is_punct(";") and depth == 0:
+                    break
+                k += 1
+            if body is None:
+                continue
+            braces, k = 0, body
+            while k < len(toks):
+                t = toks[k]
+                if t.is_punct("{"):
+                    braces += 1
+                elif t.is_punct("}"):
+                    braces -= 1
+                test[k] = True
+                if braces == 0:
+                    break
+                k += 1
+        return test
+
+    def path_ends_with(self, suffix):
+        return self.path.endswith("/" + suffix) or self.path == suffix
+
+    def in_tests_dir(self):
+        return "tests" in self.path.split("/")
+
+    def line_comment_matches(self, line, pred):
+        return any(
+            pred(self.toks[i]) for i in self.comments_by_line.get(line, [])
+        )
+
+    def block_above_matches(self, line, pred):
+        l = line - 1
+        while l >= 1:
+            if l in self.comments_by_line and l not in self.code_lines:
+                if self.line_comment_matches(l, pred):
+                    return True
+            elif l not in self.attr_lines:
+                break
+            l -= 1
+        return False
+
+    def has_adjacent_comment(self, site_idx, pred):
+        site_line = self.toks[site_idx].line
+        if (self.line_comment_matches(site_line, pred)
+                or self.block_above_matches(site_line, pred)):
+            return True
+        anchor, k = None, site_idx
+        while k > 0:
+            k -= 1
+            t = self.toks[k]
+            if t.is_comment():
+                if pred(t):
+                    return True
+                continue
+            if t.is_punct(";") or t.is_punct("{") or t.is_punct("}"):
+                break
+            anchor = k
+        if anchor is not None:
+            a_line = self.toks[anchor].line
+            if a_line != site_line and (
+                    self.line_comment_matches(a_line, pred)
+                    or self.block_above_matches(a_line, pred)):
+                return True
+        return False
+
+    def diag(self, rule, tok, msg):
+        return (self.path, tok.line, tok.col, rule, msg)
+
+
+# --------------------------------------------------------------- rules
+
+SAFETY = lambda t: "SAFETY:" in t.text or "# Safety" in t.text
+ORDERING = lambda t: "ORDERING:" in t.text
+ANY = lambda t: True
+
+
+def unquote(s):
+    return s.lstrip("br#").strip('"').rstrip("#").strip('"')
+
+
+def lint_files(files):
+    out = []
+    for f in files:
+        for i, t in enumerate(f.toks):
+            if t.is_ident("unsafe") and not f.has_adjacent_comment(i, SAFETY):
+                out.append(f.diag("L001", t,
+                                  "unsafe without adjacent // SAFETY:"))
+        if not (f.path_ends_with("util/metrics.rs") or f.in_tests_dir()):
+            for i, t in enumerate(f.toks):
+                if (t.is_ident("Relaxed") and not f.test_tok[i]
+                        and not f.has_adjacent_comment(i, ORDERING)):
+                    out.append(f.diag(
+                        "L002", t,
+                        "Ordering::Relaxed without adjacent // ORDERING:"))
+        for a in f.attrs:
+            if a["name"] != "allow":
+                continue
+            hash_tok = f.toks[a["hash"]]
+            if not (f.line_comment_matches(hash_tok.line, ANY)
+                    or f.block_above_matches(hash_tok.line, ANY)):
+                out.append(f.diag("L003", hash_tok,
+                                  "#[allow] without justification comment"))
+
+    declared = None
+    for f in files:
+        if not f.path_ends_with("util/metrics.rs"):
+            continue
+        idx = next((i for i, t in enumerate(f.toks)
+                    if t.is_ident("REGISTRY")), None)
+        if idx is None:
+            continue
+        declared, depth = set(), 0
+        for t in f.toks[idx:]:
+            if t.text in "([{" and t.kind == "punct":
+                depth += 1
+            elif t.text in ")]}" and t.kind == "punct":
+                depth -= 1
+            elif t.is_punct(";") and depth == 0:
+                break
+            elif t.kind == "str":
+                name = unquote(t.text)
+                if name in declared:
+                    out.append(f.diag("L004", t,
+                                      f"metric {name!r} declared twice"))
+                declared.add(name)
+    if declared is not None:
+        for f in files:
+            toks = f.toks
+            for i in range(len(toks) - 3):
+                if (toks[i].is_punct(".")
+                        and (toks[i + 1].is_ident("counter")
+                             or toks[i + 1].is_ident("hist"))
+                        and toks[i + 2].is_punct("(")
+                        and toks[i + 3].kind == "str"):
+                    name = unquote(toks[i + 3].text)
+                    if name not in declared:
+                        out.append(f.diag(
+                            "L004", toks[i + 3],
+                            f"metric {name!r} not declared in REGISTRY"))
+
+    frame, variants = None, []
+    for f in files:
+        if not f.path_ends_with("service/frame.rs"):
+            continue
+        toks = f.toks
+        start = None
+        for i in range(len(toks) - 1):
+            if toks[i].is_ident("enum"):
+                nm = next((j for j in range(i + 1, len(toks))
+                           if not toks[j].is_comment()), None)
+                if nm is not None and toks[nm].is_ident("Frame"):
+                    start = next((j for j in range(nm + 1, len(toks))
+                                  if toks[j].is_punct("{")), None)
+                    break
+        if start is None:
+            continue
+        frame, variants = f, []
+        braces, parens, expecting, k = 1, 0, True, start + 1
+        while k < len(toks) and braces > 0:
+            t = toks[k]
+            if t.is_comment() or f.attr_tok[k]:
+                k += 1
+                continue
+            if t.is_punct("{"):
+                braces += 1
+            elif t.is_punct("}"):
+                braces -= 1
+            elif t.is_punct("(") or t.is_punct("["):
+                parens += 1
+            elif t.is_punct(")") or t.is_punct("]"):
+                parens -= 1
+            elif braces == 1 and parens == 0:
+                if t.is_punct(","):
+                    expecting = True
+                elif expecting and t.kind == "ident":
+                    variants.append((t.text, k))
+                    expecting = False
+            k += 1
+    if frame is not None:
+        for backend in ("service/server.rs", "service/reactor.rs",
+                        "service/uring.rs"):
+            bf = next((f for f in files if f.path_ends_with(backend)), None)
+            if bf is None:
+                continue
+            dispatched = set()
+            toks = bf.toks
+            for i in range(len(toks) - 3):
+                if (toks[i].is_ident("Frame") and toks[i + 1].is_punct(":")
+                        and toks[i + 2].is_punct(":")
+                        and toks[i + 3].kind == "ident"):
+                    dispatched.add(toks[i + 3].text)
+            for name, idx in variants:
+                if name not in dispatched:
+                    out.append(frame.diag(
+                        "L005", frame.toks[idx],
+                        f"frame variant `{name}` not dispatched in {backend}"))
+
+    return sorted(out)
+
+
+SKIP_DIRS = {"target", ".git", "lint_fixtures"}
+
+
+def collect(paths):
+    files = []
+    for p in paths:
+        if os.path.isfile(p):
+            files.append(p)
+            continue
+        for root, dirs, names in os.walk(p):
+            dirs[:] = sorted(d for d in dirs if d not in SKIP_DIRS)
+            for nm in sorted(names):
+                if nm.endswith(".rs"):
+                    files.append(os.path.join(root, nm))
+    return sorted(set(files))
+
+
+def main(argv):
+    paths = argv[1:] or [
+        p for p in ("rust/src", "rust/tests", "rust/benches", "examples")
+        if os.path.isdir(p)
+    ]
+    srcs = []
+    for path in collect(paths):
+        with open(path, encoding="utf-8") as fh:
+            srcs.append(SourceFile(path, fh.read()))
+    diags = lint_files(srcs)
+    for path, line, col, rule, msg in diags:
+        print(f"{path}:{line}:{col}: {rule} {msg}")
+    print(f"lint_mirror: {len(srcs)} file(s), {len(diags)} diagnostic(s)")
+    return 1 if diags else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
