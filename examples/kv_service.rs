@@ -7,10 +7,17 @@
 //! single ops plus the conditional verbs `C k e n`
 //! (compare-exchange, `-` = absent, replying `OK` or `!<witness>`),
 //! `U k v` (get-or-insert) and `A k d` (fetch-add); `B n` multi-op
-//! batch frames, `Q` quit; value-shaped replies are the value or `-`,
-//! and malformed/out-of-range requests get `ERR <msg>` without killing
+//! batch frames, `T n` all-or-nothing transaction frames, `Q` quit;
+//! value-shaped replies are the value or `-`, and
+//! malformed/out-of-range requests get `ERR <msg>` without killing
 //! the connection (the old one-op-per-line server panicked its
 //! connection thread on `k > MAX_KEY`).
+//!
+//! The guard-rail probes speak raw lines on purpose (they test the
+//! codec's error paths); everything else goes through the typed
+//! client — `MapOp` in, `MapReply` out ([`Client::batch_typed`],
+//! [`Client::txn`]) — so the example doubles as typed-API
+//! documentation.
 //!
 //! The example starts the server on an ephemeral port, checks the
 //! protocol guard rails, then runs the same total op count per batch
@@ -33,7 +40,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use crh::maps::{ConcurrentMap, MapKind, MapOp, MAX_KEY};
+use crh::maps::{ConcurrentMap, MapKind, MapOp, MapReply, MAX_KEY};
 use crh::service::server::Client;
 use crh::service::Backend;
 use crh::util::rng::Rng;
@@ -118,22 +125,85 @@ fn main() {
 
     // The conditional verbs: check-then-act without read-check-write
     // round trips or server-side locks — one wire op, one K-CAS.
-    // Lease: acquire / contended acquire (witnesses the owner) /
-    // wrong-owner release / owner release.
-    assert_eq!(probe.request_line("C 20 - 1").unwrap(), "OK");
-    assert_eq!(probe.request_line("C 20 - 2").unwrap(), "!1");
-    assert_eq!(probe.request_line("C 20 2 -").unwrap(), "!1");
-    assert_eq!(probe.request_line("C 20 1 -").unwrap(), "OK");
-    // Counter: fetch-add treats a missing key as 0.
-    assert_eq!(probe.request_line("A 21 5").unwrap(), "-");
-    assert_eq!(probe.request_line("A 21 5").unwrap(), "5");
-    assert_eq!(probe.request_line("G 21").unwrap(), "10");
-    // Memoisation: get-or-insert never overwrites the winner.
-    assert_eq!(probe.request_line("U 22 7").unwrap(), "-");
-    assert_eq!(probe.request_line("U 22 8").unwrap(), "7");
-    assert_eq!(probe.request_line("D 21").unwrap(), "10");
-    assert_eq!(probe.request_line("D 22").unwrap(), "7");
+    // Typed end to end: `MapOp` in, `MapReply` out, no reply-string
+    // parsing. Lease: acquire / contended acquire (witnesses the
+    // owner) / wrong-owner release / owner release.
+    let lease = probe
+        .batch_typed(&[
+            MapOp::CmpEx(20, None, Some(1)),
+            MapOp::CmpEx(20, None, Some(2)),
+            MapOp::CmpEx(20, Some(2), None),
+            MapOp::CmpEx(20, Some(1), None),
+        ])
+        .expect("lease batch");
+    assert_eq!(
+        lease,
+        [
+            MapReply::CmpEx(Ok(())),
+            MapReply::CmpEx(Err(Some(1))),
+            MapReply::CmpEx(Err(Some(1))),
+            MapReply::CmpEx(Ok(())),
+        ]
+    );
+    // Counter (fetch-add treats a missing key as 0) and memoisation
+    // (get-or-insert never overwrites the winner).
+    let cond = probe
+        .batch_typed(&[
+            MapOp::FetchAdd(21, 5),
+            MapOp::FetchAdd(21, 5),
+            MapOp::Get(21),
+            MapOp::GetOrInsert(22, 7),
+            MapOp::GetOrInsert(22, 8),
+            MapOp::Remove(21),
+            MapOp::Remove(22),
+        ])
+        .expect("conditional batch");
+    assert_eq!(
+        cond,
+        [
+            MapReply::Added(None),
+            MapReply::Added(Some(5)),
+            MapReply::Value(Some(10)),
+            MapReply::Existing(None),
+            MapReply::Existing(Some(7)),
+            MapReply::Removed(Some(10)),
+            MapReply::Removed(Some(7)),
+        ]
+    );
     println!("conditional verbs OK (C/U/A: lease, counter, memoise)");
+
+    // Transactions: a `T <n>` frame commits its whole op set
+    // atomically — one K-CAS spanning every touched key, even when
+    // the keys land on different shards of the 4-way facade. A
+    // debit+credit transfer either fully happens or not at all; no
+    // interleaving ever observes money in flight.
+    const M: u64 = 1 << 62; // fetch-add is mod 2^62: += M-x is -= x
+    let seeded = probe
+        .batch_typed(&[MapOp::Insert(30, 100), MapOp::Insert(31, 100)])
+        .expect("seed accounts");
+    assert_eq!(seeded, [MapReply::Prev(None), MapReply::Prev(None)]);
+    let transfer = probe
+        .txn(&[MapOp::FetchAdd(30, M - 25), MapOp::FetchAdd(31, 25)])
+        .expect("transfer commits");
+    assert_eq!(
+        transfer,
+        [MapReply::Added(Some(100)), MapReply::Added(Some(100))]
+    );
+    let audit = probe
+        .txn(&[MapOp::Get(30), MapOp::Get(31)])
+        .expect("atomic read pair");
+    assert_eq!(
+        audit,
+        [MapReply::Value(Some(75)), MapReply::Value(Some(125))]
+    );
+    let cleanup = probe
+        .batch_typed(&[MapOp::Remove(30), MapOp::Remove(31)])
+        .expect("cleanup");
+    assert_eq!(
+        cleanup,
+        [MapReply::Removed(Some(75)), MapReply::Removed(Some(125))]
+    );
+    println!("transactions OK (T: atomic cross-shard transfer + audit)");
 
     let mut results: Vec<(usize, f64)> = Vec::new();
     for batch in [1usize, 8, 64] {

@@ -1,0 +1,57 @@
+//! Bench: **Figure 18** (extension) — multi-key transaction
+//! throughput: SmallBank-style transfers (one debit + N-1 credits,
+//! committed all-or-nothing) across commit engine (native one-K-CAS
+//! commit vs OCC baseline vs 2PL baseline) x transaction size x
+//! contention skew x thread count. Every native cell asserts
+//! conservation of the account total — the atomicity witness.
+//!
+//! ```sh
+//! cargo bench --bench fig18_txn            # paper-scale-ish
+//! cargo bench --bench fig18_txn -- --quick # CI smoke
+//! ```
+//! Tunables: CRH_BENCH_SIZE_LOG2, CRH_BENCH_MS, CRH_BENCH_THREADS
+//! (comma list), CRH_BENCH_SHARDS (comma list), CRH_BENCH_TXN_SIZES
+//! (comma list of legs/transfer), CRH_BENCH_HOT_KEYS (comma list of
+//! hot-account-set sizes).
+
+mod common;
+
+use crh::coordinator::{fig18_txn, ExpOpts};
+
+fn main() {
+    let quick = common::quick();
+    let mut opts = ExpOpts {
+        size_log2: common::env_u32("SIZE_LOG2", if quick { 14 } else { 18 }),
+        duration_ms: common::env_u64("MS", if quick { 100 } else { 500 }),
+        pin: true,
+        // Flagged single-sample cells; 3 reps even in quick mode.
+        reps: common::env_u32("REPS", 3),
+        ..ExpOpts::default()
+    };
+    if let Ok(ts) = std::env::var("CRH_BENCH_THREADS") {
+        opts.threads = ts.split(',').filter_map(|x| x.parse().ok()).collect();
+    } else if quick {
+        opts.threads = vec![1, 2];
+    }
+    let parse_list = |name: &str| -> Option<Vec<u64>> {
+        std::env::var(format!("CRH_BENCH_{name}"))
+            .ok()
+            .map(|s| s.split(',').filter_map(|x| x.parse().ok()).collect())
+    };
+    // The acceptance gate runs the quick shape: shards >= 4 so native
+    // commits genuinely span shard boundaries.
+    let shards: Vec<u32> = parse_list("SHARDS")
+        .map(|v| v.into_iter().map(|x| x as u32).collect())
+        .unwrap_or_else(|| if quick { vec![4] } else { vec![1, 4, 16] });
+    let txn_sizes: Vec<usize> = parse_list("TXN_SIZES")
+        .map(|v| v.into_iter().map(|x| x as usize).collect())
+        .unwrap_or_else(|| if quick { vec![2, 4] } else { vec![2, 4, 8] });
+    let hot: Vec<u64> = parse_list("HOT_KEYS").unwrap_or_else(|| {
+        if quick {
+            vec![16, 1024]
+        } else {
+            vec![8, 64, 1024]
+        }
+    });
+    common::write_snapshot(&fig18_txn(&opts, &shards, &txn_sizes, &hot));
+}

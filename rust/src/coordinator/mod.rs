@@ -1066,6 +1066,164 @@ pub fn fig17_frontend(
     report
 }
 
+/// Accounts a fig18 cell pre-seeds (keys `1..=FIG18_ACCOUNTS`).
+const FIG18_ACCOUNTS: u64 = 1024;
+/// Per-account seed balance; the conserved quantity is
+/// `FIG18_ACCOUNTS * FIG18_BALANCE` (mod 2^62).
+const FIG18_BALANCE: u64 = 1_000_000;
+
+/// **Figure 18** (extension): multi-key transactions — SmallBank-style
+/// transfer throughput of the `apply_txn` API across commit engines:
+/// the native path (**one K-CAS per commit** on the Robin Hood map;
+/// 2PL on the locked baseline) vs the OCC read-validate-write
+/// baseline, swept across transaction size (legs per transfer) x
+/// contention skew (accounts drawn from a hot subset) x thread count,
+/// at each sharded layout. Every cell seeds the same account set and
+/// every *native* cell asserts conservation afterwards — the grand
+/// total mod 2^62 must equal the seeded total, or the cell panics: the
+/// experiment measures the new API and proves its atomicity in the
+/// same run. (OCC is exempt: its documented weaker isolation is
+/// exactly what the comparison demonstrates.)
+pub fn fig18_txn(
+    opts: &ExpOpts,
+    shard_counts: &[u32],
+    txn_sizes: &[usize],
+    hot_accounts: &[u64],
+) -> BenchReport {
+    use crate::service::batch::{
+        run_txn_transfers, txn_balance_sum, TxnEngine,
+    };
+    assert!(
+        opts.size_log2 >= 12,
+        "fig18 needs 2^12+ buckets for its {FIG18_ACCOUNTS} accounts"
+    );
+    let mut report = BenchReport::new("fig18", opts_spec(opts));
+    println!(
+        "# Figure 18 — multi-key transactions: SmallBank-style transfers; \
+         {FIG18_ACCOUNTS} accounts, maps 2^{} buckets, {} ms/cell, {} rep(s)",
+        opts.size_log2, opts.duration_ms, opts.reps
+    );
+    println!(
+        "# engines: kcas = native one-K-CAS commit, occ = read-validate-\
+         write baseline, 2pl = locked two-phase baseline"
+    );
+    for &txn_size in txn_sizes {
+        if !(2..=16).contains(&txn_size) {
+            println!("# skipping txn size {txn_size}: outside [2, 16]");
+            continue;
+        }
+        for &shards in shard_counts {
+            println!("\n## panel: {txn_size} legs/transfer, {shards} shard(s)");
+            println!(
+                "{:<6} {:>6} {:>4} {:>10} {:>8} {:>9}",
+                "engine", "hot", "thr", "txns/us", "abort%", "conserved"
+            );
+            let rows: [(&str, MapKind, TxnEngine); 3] = [
+                (
+                    "kcas",
+                    MapKind::ShardedKCasRhMap { shards },
+                    TxnEngine::Native,
+                ),
+                (
+                    "occ",
+                    MapKind::ShardedKCasRhMap { shards },
+                    TxnEngine::Occ,
+                ),
+                (
+                    "2pl",
+                    MapKind::ShardedLockedLpMap { shards },
+                    TxnEngine::Native,
+                ),
+            ];
+            for (label, kind, engine) in rows {
+                for &hot in hot_accounts {
+                    let hot = hot.clamp(txn_size as u64, FIG18_ACCOUNTS);
+                    for &threads in &opts.threads {
+                        let mut commits = 0u64;
+                        let mut aborts = 0u64;
+                        let (samples, mets) =
+                            crate::util::metrics::measured(|| {
+                                (0..opts.reps.max(1))
+                                    .map(|rep| {
+                                        let m = kind.build(opts.size_log2);
+                                        for k in 1..=FIG18_ACCOUNTS {
+                                            m.insert(k, FIG18_BALANCE);
+                                        }
+                                        let r = run_txn_transfers(
+                                            m.as_ref(),
+                                            engine,
+                                            hot,
+                                            txn_size,
+                                            opts.duration_ms,
+                                            threads,
+                                            opts.pin,
+                                            0xF18 + rep as u64,
+                                        );
+                                        commits += r.commits;
+                                        aborts += r.aborts;
+                                        if engine == TxnEngine::Native {
+                                            // The acceptance check: an
+                                            // atomic commit cannot
+                                            // create or destroy money.
+                                            let total = txn_balance_sum(
+                                                m.as_ref(),
+                                                FIG18_ACCOUNTS,
+                                            );
+                                            assert_eq!(
+                                                total % (1u128 << 62),
+                                                (FIG18_ACCOUNTS
+                                                    * FIG18_BALANCE)
+                                                    as u128,
+                                                "{label} shards={shards} \
+                                                 size={txn_size} hot={hot} \
+                                                 thr={threads}: conservation \
+                                                 violated"
+                                            );
+                                        }
+                                        r.run.ops_per_us()
+                                    })
+                                    .collect::<Vec<f64>>()
+                            });
+                        let abort_pct = if commits + aborts == 0 {
+                            0.0
+                        } else {
+                            100.0 * aborts as f64
+                                / (commits + aborts) as f64
+                        };
+                        let stat = Stat::from_samples(&samples);
+                        println!(
+                            "{:<6} {:>6} {:>4} {:>10.3} {:>7.2}% {:>9}",
+                            label,
+                            hot,
+                            threads,
+                            stat.median,
+                            abort_pct,
+                            if engine == TxnEngine::Native {
+                                "OK"
+                            } else {
+                                "-"
+                            }
+                        );
+                        report.push(
+                            CellResult::new([
+                                ("size", txn_size.to_string()),
+                                ("shards", shards.to_string()),
+                                ("engine", label.to_string()),
+                                ("hot", hot.to_string()),
+                                ("threads", threads.to_string()),
+                            ])
+                            .with_ops(stat)
+                            .with_extra("abort_pct", abort_pct)
+                            .with_metrics(mets),
+                        );
+                    }
+                }
+            }
+        }
+    }
+    report
+}
+
 /// **Table 1**: simulated cache misses relative to K-CAS Robin Hood
 /// (single core), via the trace models + cache hierarchy. Snapshot
 /// cells carry the relative miss percentage as an `extra` metric (the

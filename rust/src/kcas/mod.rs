@@ -139,6 +139,16 @@ impl OpBuilder {
         self.entries.push((word.addr(), old << 2, new << 2));
     }
 
+    /// Add `old -> new` at a raw word address previously captured with
+    /// [`Word::addr`]. The transaction planner stages per-key plans in
+    /// its own buffer (so same-word entries can be merged before the
+    /// duplicate-address check) and replays the merged set through here.
+    #[inline]
+    pub(crate) fn push_addr(&mut self, addr: usize, old: u64, new: u64) {
+        debug_assert!(old <= tagged::MAX_VALUE && new <= tagged::MAX_VALUE);
+        self.entries.push((addr, old << 2, new << 2));
+    }
+
     /// Attempt the multi-word CAS; true iff *all* entries were swapped
     /// atomically. The entry list is preserved (so a failed attempt can
     /// be inspected), but callers normally `clear` and rebuild.

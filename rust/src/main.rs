@@ -21,6 +21,12 @@
 //!            io_uring completion rings — after asserting all answer
 //!            a fixed trace identically; includes a connection-churn
 //!            cell and a syscalls-per-op series)
+//! crh fig18_txn [--shards 1,4,16] [--txn-sizes 2,4,8]
+//!            [--hot-keys 8,64,1024] (SmallBank-style multi-key
+//!            transfers committed all-or-nothing: native one-K-CAS
+//!            commit vs OCC vs 2PL across transaction size and
+//!            contention skew; native cells assert conservation of
+//!            the account total)
 //! crh serve  [--map sharded-kcas-rh-map:4] [--size-log2 N]
 //!            [--addr 127.0.0.1:7878] [--backend threads|reactor|uring]
 //!            [--workers N] (run the KV server until killed;
@@ -89,7 +95,8 @@ fn parse_list<T: std::str::FromStr>(args: &[String], name: &str) -> Option<Vec<T
 fn usage() -> ! {
     eprintln!(
         "usage: crh <fig10|fig11|fig12|fig13_sharding|fig14_batching|\
-         fig15_resize|fig16_rmw|fig17_frontend|serve|stats|table1|bench|\
+         fig15_resize|fig16_rmw|fig17_frontend|fig18_txn|serve|stats|\
+         table1|bench|\
          bench-compare|lint|ablate-ts|analyze|validate|smoke> [options]\n\
          (figures accept --json / CRH_BENCH_JSON=1 to write a \
          BENCH_<fig>.json snapshot; see `main.rs` docs or README)"
@@ -202,6 +209,20 @@ fn main() -> Result<()> {
                 opts.reps,
                 &backends,
             ));
+        }
+        "fig18_txn" | "fig18" => {
+            // 1024 hot accounts dominate the workload, not table
+            // capacity; default to a service-sized map.
+            if parse_flag::<u32>(&args, "--size-log2").is_none() {
+                opts.size_log2 = 16;
+            }
+            let shards = parse_list(&args, "--shards")
+                .unwrap_or_else(|| TableKind::SHARD_SWEEP.to_vec());
+            let txn_sizes = parse_list(&args, "--txn-sizes")
+                .unwrap_or_else(|| vec![2, 4, 8]);
+            let hot_keys = parse_list(&args, "--hot-keys")
+                .unwrap_or_else(|| vec![8, 64, 1024]);
+            finish(coordinator::fig18_txn(&opts, &shards, &txn_sizes, &hot_keys));
         }
         "serve" => {
             let spec: String = parse_flag(&args, "--map")

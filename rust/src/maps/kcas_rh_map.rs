@@ -57,9 +57,10 @@ use std::cell::RefCell;
 
 use crate::util::pad::CachePadded;
 
-use super::kcas_rh::{is_frozen, Frozen, FROZEN_EMPTY, FROZEN_TOMB};
+use super::kcas_rh::{is_frozen, FROZEN_EMPTY, FROZEN_TOMB};
 use crate::util::metrics::metrics;
-use super::{check_key, ConcurrentMap, MapOp, MapReply};
+use super::txn::{self, TxnScratch};
+use super::{check_key, ConcurrentMap, MapError, MapOp, MapReply, TxnError};
 use crate::kcas::{OpBuilder, Word};
 use crate::util::hash::{dfb, home_bucket, splitmix64};
 
@@ -107,11 +108,11 @@ enum OnExisting {
 }
 
 /// Unwrap a conditional-op result in a standalone (never-frozen)
-/// table; only the migration wrappers ever see `Err(Frozen)`.
-fn live<R>(r: Result<R, Frozen>) -> R {
+/// table; only the migration wrappers ever see `Err(MapError::Frozen)`.
+fn live<R>(r: Result<R, MapError>) -> R {
     match r {
         Ok(r) => r,
-        Err(Frozen) => unreachable!("frozen bucket in standalone table"),
+        Err(e) => unreachable!("standalone table error: {e}"),
     }
 }
 
@@ -261,8 +262,8 @@ impl KCasRobinHoodMap {
                 Ok(Attempt::Present) | Ok(Attempt::Fetched(_)) => {
                     unreachable!("overwrite insert always commits on a hit")
                 }
-                Err(Frozen) => {
-                    unreachable!("frozen bucket in standalone table")
+                Err(e) => {
+                    unreachable!("standalone table error: {e}")
                 }
             }
         }
@@ -284,7 +285,7 @@ impl KCasRobinHoodMap {
         value: u64,
         seed: Option<(&Word, u64, &Word, u64)>,
         on_existing: OnExisting,
-    ) -> Result<Attempt, Frozen> {
+    ) -> Result<Attempt, MapError> {
         assert!(value <= crate::kcas::MAX_VALUE);
         scratch.op.clear();
         scratch.guard.clear();
@@ -301,7 +302,7 @@ impl KCasRobinHoodMap {
             let ts_val = self.ts[shard].read();
             let cur = self.keys[i].read();
             if is_frozen(cur) {
-                return Err(Frozen);
+                return Err(MapError::Frozen);
             }
             if cur == NIL {
                 scratch.op.push(&self.keys[i], NIL, active_key);
@@ -416,8 +417,8 @@ impl KCasRobinHoodMap {
                 Ok(Attempt::Present) | Ok(Attempt::Fetched(_)) => {
                     unreachable!("unconditional remove never reports")
                 }
-                Err(Frozen) => {
-                    unreachable!("frozen bucket in standalone table")
+                Err(e) => {
+                    unreachable!("standalone table error: {e}")
                 }
             }
         }
@@ -436,7 +437,7 @@ impl KCasRobinHoodMap {
         home: usize,
         key: u64,
         expect: Option<u64>,
-    ) -> Result<Attempt, Frozen> {
+    ) -> Result<Attempt, MapError> {
         scratch.seen.clear();
         scratch.op.clear();
         scratch.bump.clear();
@@ -450,7 +451,7 @@ impl KCasRobinHoodMap {
             }
             let cur = self.keys[i].read();
             if is_frozen(cur) {
-                return Err(Frozen);
+                return Err(MapError::Frozen);
             }
             if cur == NIL {
                 break;
@@ -517,7 +518,7 @@ impl KCasRobinHoodMap {
             let ts_val = self.ts[shard].read();
             let nk = self.keys[j].read();
             if is_frozen(nk) {
-                return Err(Frozen);
+                return Err(MapError::Frozen);
             }
             if nk == NIL || self.dist(nk, j) == 0 {
                 // Guard the terminator's key word: an insert landing in
@@ -561,7 +562,7 @@ impl KCasRobinHoodMap {
         h: u64,
         key: u64,
         value: u64,
-    ) -> Result<Option<u64>, Frozen> {
+    ) -> Result<Option<u64>, MapError> {
         check_key(key);
         let home = (h & self.mask) as usize;
         SCRATCH.with(|s| {
@@ -590,7 +591,7 @@ impl KCasRobinHoodMap {
         &self,
         h: u64,
         key: u64,
-    ) -> Result<Option<u64>, Frozen> {
+    ) -> Result<Option<u64>, MapError> {
         check_key(key);
         let home = (h & self.mask) as usize;
         SCRATCH.with(|s| {
@@ -615,7 +616,7 @@ impl KCasRobinHoodMap {
         key: u64,
         expected: Option<u64>,
         new: Option<u64>,
-    ) -> Result<Result<(), Option<u64>>, Frozen> {
+    ) -> Result<Result<(), Option<u64>>, MapError> {
         check_key(key);
         let home = (h & self.mask) as usize;
         SCRATCH.with(|s| {
@@ -629,7 +630,7 @@ impl KCasRobinHoodMap {
         h: u64,
         key: u64,
         value: u64,
-    ) -> Result<Option<u64>, Frozen> {
+    ) -> Result<Option<u64>, MapError> {
         check_key(key);
         let home = (h & self.mask) as usize;
         SCRATCH.with(|s| {
@@ -643,7 +644,7 @@ impl KCasRobinHoodMap {
         h: u64,
         key: u64,
         delta: u64,
-    ) -> Result<Option<u64>, Frozen> {
+    ) -> Result<Option<u64>, MapError> {
         check_key(key);
         let home = (h & self.mask) as usize;
         SCRATCH.with(|s| {
@@ -663,7 +664,7 @@ impl KCasRobinHoodMap {
         scratch: &mut Scratch,
         home: usize,
         key: u64,
-    ) -> Result<Option<(usize, u64)>, Frozen> {
+    ) -> Result<Option<(usize, u64)>, MapError> {
         let seen = &mut scratch.seen;
         'retry: loop {
             seen.clear();
@@ -676,7 +677,7 @@ impl KCasRobinHoodMap {
                 }
                 let cur = self.keys[i].read();
                 if is_frozen(cur) {
-                    return Err(Frozen);
+                    return Err(MapError::Frozen);
                 }
                 if cur == key {
                     let v = self.vals[i].read();
@@ -716,7 +717,7 @@ impl KCasRobinHoodMap {
         key: u64,
         expected: Option<u64>,
         new: Option<u64>,
-    ) -> Result<Result<(), Option<u64>>, Frozen> {
+    ) -> Result<Result<(), Option<u64>>, MapError> {
         match (expected, new) {
             // Insert-if-absent: the insert descriptor's timestamp
             // guards atomically assert absence along the probe path.
@@ -787,7 +788,7 @@ impl KCasRobinHoodMap {
         home: usize,
         key: u64,
         value: u64,
-    ) -> Result<Option<u64>, Frozen> {
+    ) -> Result<Option<u64>, MapError> {
         loop {
             match self.try_insert_one(
                 scratch,
@@ -815,7 +816,7 @@ impl KCasRobinHoodMap {
         home: usize,
         key: u64,
         delta: u64,
-    ) -> Result<Option<u64>, Frozen> {
+    ) -> Result<Option<u64>, MapError> {
         assert!(delta <= crate::kcas::MAX_VALUE);
         loop {
             match self.try_insert_one(
@@ -1030,9 +1031,239 @@ impl KCasRobinHoodMap {
                 // migration and a chained one began freezing `target`
                 // (see the set twin). Report no-move; the caller
                 // re-reads the source bucket, which helpers tombstoned.
-                Err(Frozen) => false,
+                Err(_) => false,
             }
         })
+    }
+
+    // ----- transaction planning ------------------------------------
+    //
+    // `apply_txn` commits an arbitrary op set with **one** K-CAS. The
+    // driver (`maps::txn::commit_kcas`) runs three phases per attempt:
+    //
+    //   A. `txn_read` every unique key (timestamp-validated probe);
+    //   B. evaluate the ops against those reads (pure overlay — no
+    //      table access), producing replies + one net transition per
+    //      key;
+    //   C. stage a physical plan per key into a [`TxnScratch`]:
+    //      guards/writes at raw word addresses plus a timestamp ledger,
+    //      merged and executed as a single descriptor.
+    //
+    // The plan methods below mirror `try_insert_one` / `try_remove_one`
+    // exactly, except that they *stage* into the shared cross-table
+    // scratch instead of executing, so entries from several shards (or
+    // both generations of a resize) land in the same descriptor. Each
+    // returns `Ok(false)` when the table state no longer matches the
+    // phase-A read (the driver restarts the attempt).
+
+    /// Phase A: one timestamp-validated locate of `key` —
+    /// `Some((bucket, value))` or a validated miss.
+    pub(crate) fn txn_read(
+        &self,
+        h: u64,
+        key: u64,
+    ) -> Result<Option<(usize, u64)>, MapError> {
+        let home = (h & self.mask) as usize;
+        SCRATCH.with(|s| self.try_probe_one(&mut s.borrow_mut(), home, key))
+    }
+
+    /// Stage a present key's transition `old -> new` at the phase-A
+    /// bucket `i`. `old == new` is a pure pairing guard (a read, or an
+    /// op set whose net effect leaves the value unchanged): if the key
+    /// word still holds `key` and the value word still holds `old` at
+    /// commit time, the map still contains `key ↦ old` — no timestamp
+    /// guard is needed.
+    pub(crate) fn txn_plan_pin(
+        &self,
+        tx: &mut TxnScratch,
+        i: usize,
+        key: u64,
+        old: u64,
+        new: u64,
+    ) {
+        tx.stage(&self.keys[i], key, key);
+        tx.stage(&self.vals[i], old, new);
+    }
+
+    /// Stage an absence assertion for `key` (read-miss / CmpEx(None,_)
+    /// mismatch arms): timestamp guards along the probe path plus a
+    /// guard on the terminator key word — the latter is what catches an
+    /// insert claiming the terminating Nil without bumping anything.
+    pub(crate) fn txn_plan_absent(
+        &self,
+        tx: &mut TxnScratch,
+        h: u64,
+        key: u64,
+    ) -> Result<bool, MapError> {
+        let mut i = (h & self.mask) as usize;
+        let mut cur_dist = 0u64;
+        let mut last_shard = usize::MAX;
+        loop {
+            let shard = self.shard_of(i);
+            if shard != last_shard {
+                let addr = self.ts[shard].addr();
+                if !tx.note_ts(addr, self.ts[shard].read(), 0) {
+                    return Ok(false);
+                }
+                last_shard = shard;
+            }
+            let cur = self.keys[i].read();
+            if is_frozen(cur) {
+                return Err(MapError::Frozen);
+            }
+            if cur == key {
+                return Ok(false); // appeared since phase A
+            }
+            if cur == NIL || self.dist(cur, i) < cur_dist {
+                tx.stage(&self.keys[i], cur, cur);
+                return Ok(true);
+            }
+            i = (i + 1) & self.mask as usize;
+            cur_dist += 1;
+            if cur_dist as usize > self.size() {
+                return Ok(false);
+            }
+        }
+    }
+
+    /// Stage an insert of an absent `key` — the `try_insert_one` miss
+    /// path (Nil claim + displacement pairs + probed-shard timestamp
+    /// guards), staged instead of executed.
+    pub(crate) fn txn_plan_insert(
+        &self,
+        tx: &mut TxnScratch,
+        h: u64,
+        key: u64,
+        value: u64,
+    ) -> Result<bool, MapError> {
+        assert!(value <= crate::kcas::MAX_VALUE);
+        let mut active_key = key;
+        let mut active_val = value;
+        let mut active_dist = 0u64;
+        let mut i = (h & self.mask) as usize;
+        let mut probes = 0usize;
+        let mut last_shard = usize::MAX;
+        loop {
+            if probes >= self.size() {
+                return Err(MapError::TableFull);
+            }
+            probes += 1;
+            let shard = self.shard_of(i);
+            let ts_val = self.ts[shard].read();
+            let cur = self.keys[i].read();
+            if is_frozen(cur) {
+                return Err(MapError::Frozen);
+            }
+            if cur == NIL {
+                tx.stage(&self.keys[i], NIL, active_key);
+                tx.stage(&self.vals[i], self.vals[i].read(), active_val);
+                return Ok(true);
+            }
+            if cur == key {
+                return Ok(false); // appeared since phase A
+            }
+            if shard != last_shard {
+                if !tx.note_ts(self.ts[shard].addr(), ts_val, 0) {
+                    return Ok(false);
+                }
+                last_shard = shard;
+            }
+            let cur_d = self.dist(cur, i);
+            if cur_d < active_dist {
+                // Displace the richer pair; upgrade the shard's
+                // timestamp guard to a bump.
+                let cur_val = self.vals[i].read();
+                tx.stage(&self.keys[i], cur, active_key);
+                tx.stage(&self.vals[i], cur_val, active_val);
+                if !tx.note_ts(self.ts[shard].addr(), ts_val, 1) {
+                    return Ok(false);
+                }
+                active_key = cur;
+                active_val = cur_val;
+                active_dist = cur_d;
+            }
+            i = (i + 1) & self.mask as usize;
+            active_dist += 1;
+        }
+    }
+
+    /// Stage a remove of `key` whose phase-A value was `expect` — the
+    /// `try_remove_one` shift chain (pair windows + terminator guard +
+    /// shard timestamp bumps), staged instead of executed. The chain's
+    /// first link swaps the value word `expect -> next`, so "still
+    /// equals the phase-A value at commit" rides the descriptor for
+    /// free (replies linearize at the commit point).
+    pub(crate) fn txn_plan_remove(
+        &self,
+        tx: &mut TxnScratch,
+        h: u64,
+        key: u64,
+        expect: u64,
+    ) -> Result<bool, MapError> {
+        let mut i = (h & self.mask) as usize;
+        let mut cur_dist = 0u64;
+        loop {
+            let cur = self.keys[i].read();
+            if is_frozen(cur) {
+                return Err(MapError::Frozen);
+            }
+            if cur == key {
+                break;
+            }
+            if cur == NIL || self.dist(cur, i) < cur_dist {
+                return Ok(false); // vanished since phase A
+            }
+            i = (i + 1) & self.mask as usize;
+            cur_dist += 1;
+            if cur_dist as usize > self.size() {
+                return Ok(false);
+            }
+        }
+        if self.vals[i].read() != expect {
+            return Ok(false); // value moved since phase A
+        }
+        tx.chain.clear();
+        tx.chain.push((key, expect));
+        let mut last_shard = self.shard_of(i);
+        if !tx.note_ts(self.ts[last_shard].addr(), self.ts[last_shard].read(), 1)
+        {
+            return Ok(false);
+        }
+        let mut j = (i + 1) & self.mask as usize;
+        let terminator;
+        loop {
+            let shard = self.shard_of(j);
+            let ts_val = self.ts[shard].read();
+            let nk = self.keys[j].read();
+            if is_frozen(nk) {
+                return Err(MapError::Frozen);
+            }
+            if nk == NIL || self.dist(nk, j) == 0 {
+                terminator = (j, nk);
+                break;
+            }
+            if shard != last_shard {
+                if !tx.note_ts(self.ts[shard].addr(), ts_val, 1) {
+                    return Ok(false);
+                }
+                last_shard = shard;
+            }
+            tx.chain.push((nk, self.vals[j].read()));
+            j = (j + 1) & self.mask as usize;
+            if tx.chain.len() > self.size() {
+                return Ok(false);
+            }
+        }
+        let mut pos = i;
+        for w in 0..tx.chain.len() {
+            let (ck, cv) = tx.chain[w];
+            let (nk, nv) = tx.chain.get(w + 1).copied().unwrap_or((NIL, 0));
+            tx.stage(&self.keys[pos], ck, nk);
+            tx.stage(&self.vals[pos], cv, nv);
+            pos = (pos + 1) & self.mask as usize;
+        }
+        tx.stage(&self.keys[terminator.0], terminator.1, terminator.1);
+        Ok(true)
     }
 
     /// One op against an already-borrowed scratch and precomputed home
@@ -1202,6 +1433,10 @@ impl ConcurrentMap for KCasRobinHoodMap {
         self.apply_batch_local(ops, out)
     }
 
+    fn apply_txn(&self, ops: &[MapOp]) -> Result<Vec<MapReply>, TxnError> {
+        txn::commit_kcas(ops, &mut |_h| self)
+    }
+
     fn apply_batch_hashed(
         &self,
         ops: &[super::HashedMapOp],
@@ -1224,6 +1459,16 @@ impl ConcurrentMap for KCasRobinHoodMap {
 
     fn check_invariant_quiesced(&self) -> Result<(), String> {
         self.check_invariant()
+    }
+}
+
+impl txn::TxnBackend for KCasRobinHoodMap {
+    fn apply_txn_routed(
+        shards: &[Self],
+        route: &dyn Fn(u64) -> usize,
+        ops: &[MapOp],
+    ) -> Result<Vec<MapReply>, TxnError> {
+        txn::commit_kcas(ops, &mut |h| &shards[route(h)])
     }
 }
 

@@ -14,8 +14,12 @@ use std::sync::Mutex;
 
 use crate::util::pad::CachePadded;
 
-use super::{check_key, ConcurrentMap, ConcurrentSet};
+use super::txn;
+use super::{
+    check_key, ConcurrentMap, ConcurrentSet, MapOp, MapReply, TxnError,
+};
 use crate::util::hash::{home_bucket, splitmix64};
+use crate::util::metrics::metrics;
 
 const EMPTY: u64 = 0;
 const TOMBSTONE: u64 = 1;
@@ -506,6 +510,14 @@ impl ConcurrentMap for LockedLpMap {
         self.fetch_add_at(key, (h & self.mask) as usize, delta)
     }
 
+    fn apply_txn(&self, ops: &[MapOp]) -> Result<Vec<MapReply>, TxnError> {
+        txn::TxnBackend::apply_txn_routed(
+            std::slice::from_ref(self),
+            &|_| 0,
+            ops,
+        )
+    }
+
     fn name(&self) -> &'static str {
         "locked-lp-map"
     }
@@ -522,6 +534,82 @@ impl ConcurrentMap for LockedLpMap {
                 v != EMPTY && v != TOMBSTONE
             })
             .count()
+    }
+}
+
+/// **Two-phase locking** reference transaction: every key's
+/// home-segment lock is acquired up front in global `(shard, segment)`
+/// order (deadlock-free — single-key ops hold at most one lock and
+/// never wait while holding it), then reads, overlay evaluation, and
+/// writes all happen inside the critical section. Blocking but
+/// trivially serialisable: the semantic oracle the K-CAS commit (and
+/// the OCC baseline's anomalies) are measured against in `fig18_txn`.
+impl txn::TxnBackend for LockedLpMap {
+    fn apply_txn_routed(
+        shards: &[Self],
+        route: &dyn Fn(u64) -> usize,
+        ops: &[MapOp],
+    ) -> Result<Vec<MapReply>, TxnError> {
+        if ops.is_empty() {
+            return Ok(Vec::new());
+        }
+        let m = metrics();
+        m.txn_attempts.incr();
+        m.txn_ops.record(ops.len() as u64);
+        let (keys, key_of) = txn::collect_keys(ops);
+        // Growing phase: sorted, deduplicated lock set.
+        let mut lock_ids: Vec<(usize, usize)> = keys
+            .iter()
+            .map(|&k| {
+                let h = splitmix64(k);
+                let s = route(h);
+                let shard = &shards[s];
+                let home = (h & shard.mask) as usize;
+                (s, (home >> shard.seg_log2) & (shard.locks.len() - 1))
+            })
+            .collect();
+        lock_ids.sort_unstable();
+        lock_ids.dedup();
+        let _guards: Vec<_> = lock_ids
+            .iter()
+            .map(|&(s, l)| shards[s].locks[l].lock().unwrap())
+            .collect();
+        // Read, evaluate, write back — all inside the lock envelope.
+        let reads: Vec<Option<u64>> = keys
+            .iter()
+            .map(|&k| {
+                let h = splitmix64(k);
+                let shard = &shards[route(h)];
+                let home = (h & shard.mask) as usize;
+                shard
+                    .find(k + BIAS, home)
+                    .map(|i| shard.vals[i].load(Ordering::Acquire))
+            })
+            .collect();
+        let mut finals = reads.clone();
+        let mut replies = Vec::with_capacity(ops.len());
+        txn::eval_ops(ops, &key_of, &mut finals, &mut replies);
+        for (idx, &k) in keys.iter().enumerate() {
+            if reads[idx] == finals[idx] {
+                continue;
+            }
+            let h = splitmix64(k);
+            let shard = &shards[route(h)];
+            let home = (h & shard.mask) as usize;
+            match finals[idx] {
+                Some(v) => {
+                    shard.upsert_locked(k + BIAS, home, v);
+                }
+                None => {
+                    if let Some(i) = shard.find(k + BIAS, home) {
+                        shard.keys[i].store(TOMBSTONE, Ordering::Release);
+                    }
+                }
+            }
+        }
+        m.txn_commits.incr();
+        m.txn_span.record(keys.len() as u64);
+        Ok(replies)
     }
 }
 

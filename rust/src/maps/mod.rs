@@ -41,9 +41,52 @@ pub mod resizable;
 pub mod serial_rh;
 pub mod sharded;
 pub mod tx_rh;
+pub mod txn;
 
 /// Largest legal key (62-bit, minus the reserved Nil/Tombstone values).
 pub const MAX_KEY: u64 = (1 << 62) - 3;
+
+/// Typed map-layer error — the single error vocabulary shared by the
+/// internal op plumbing and the transaction API, so `apply_txn` does
+/// not invent a second convention next to the `Frozen` sentinel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MapError {
+    /// The targeted home run is frozen for migration; re-resolve the
+    /// generation pointers and retry (internal — public ops never
+    /// surface this, they help the migration and re-run).
+    Frozen,
+    /// No free bucket on the probe path (the table is full).
+    TableFull,
+    /// The transaction's per-key physical plans overlap irreconcilably
+    /// (e.g. two inserts claiming one bucket); the commit was aborted
+    /// with no effect. Deterministic for a given table state, so the
+    /// caller should not blindly retry.
+    TxnConflict,
+    /// The receiver does not implement multi-key transactions.
+    Unsupported,
+}
+
+impl std::fmt::Display for MapError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            MapError::Frozen => "bucket run frozen for migration",
+            MapError::TableFull => "table full",
+            MapError::TxnConflict => "transaction conflict",
+            MapError::Unsupported => "transactions unsupported",
+        })
+    }
+}
+
+impl std::error::Error for MapError {}
+
+impl From<kcas_rh::Frozen> for MapError {
+    fn from(_: kcas_rh::Frozen) -> Self {
+        MapError::Frozen
+    }
+}
+
+/// Error type of [`ConcurrentMap::apply_txn`].
+pub type TxnError = MapError;
 
 /// A concurrent set of integer keys — the paper's benchmark interface.
 pub trait ConcurrentSet: Send + Sync {
@@ -330,6 +373,28 @@ pub trait ConcurrentMap: Send + Sync {
         out.extend(ops.iter().map(|&(h, op)| self.apply_one_hashed(h, op)));
     }
 
+    /// Apply `ops` as one **all-or-nothing transaction**: either every
+    /// op takes effect at a single linearization point (replies are the
+    /// sequential evaluation of `ops` in slice order at that point) or
+    /// none does and an error is returned. Unlike [`ConcurrentMap::apply_batch`],
+    /// no concurrent operation can observe a state where only some of
+    /// the ops have been applied.
+    ///
+    /// On the K-CAS tables the commit is **one K-CAS** spanning every
+    /// touched key/value word (plus the timestamp guards for probed-over
+    /// shards), cross-shard on [`sharded::Sharded`] via a single shared
+    /// descriptor; `LockedLpMap` commits under two-phase locking of the
+    /// home segments. Non-transactional tables keep the default body and
+    /// report [`MapError::Unsupported`].
+    ///
+    /// Errors: [`MapError::TxnConflict`] when the per-key physical plans
+    /// overlap irreconcilably (nothing was applied),
+    /// [`MapError::TableFull`] when an insert finds no bucket.
+    fn apply_txn(&self, ops: &[MapOp]) -> Result<Vec<MapReply>, TxnError> {
+        let _ = ops;
+        Err(MapError::Unsupported)
+    }
+
     /// Short stable name used in benchmark tables.
     fn name(&self) -> &'static str;
 
@@ -346,6 +411,57 @@ pub trait ConcurrentMap: Send + Sync {
     /// shard — the end-of-run hook the examples and stress tests call.
     fn check_invariant_quiesced(&self) -> Result<(), String> {
         Ok(())
+    }
+}
+
+/// Shared spec scaffolding for [`MapKind`] and [`TableKind`]: one name
+/// table and one `:N` shard-suffix parser instead of two hand-rolled
+/// `parse` copies duplicating the suffix grammar and shard validation.
+pub mod spec {
+    /// Bare sharded names (`sharded-kcas-rh`) parse as this many shards.
+    pub const DEFAULT_SHARDS: u32 = 4;
+
+    /// Shard-count validity shared by every sharded spec: a power of
+    /// two no larger than the facade's 2^16 limit.
+    pub fn valid_shards(n: u32) -> bool {
+        n.is_power_of_two() && n <= 1 << 16
+    }
+
+    /// A spec family: flat (suffix-less) names plus sharded families
+    /// accepting `base:N` and a bare base (defaulting to
+    /// [`DEFAULT_SHARDS`]).
+    pub struct SpecTable<K: 'static> {
+        /// One entry per suffix-less kind.
+        pub flat: &'static [(&'static str, K)],
+        /// Sharded families: every accepted base alias plus the
+        /// constructor applied to the parsed shard count.
+        pub sharded: &'static [(&'static [&'static str], fn(u32) -> K)],
+    }
+
+    impl<K: Copy> SpecTable<K> {
+        /// Parse `name` or `base:N`. Flat names win over bare sharded
+        /// aliases, so `inc-resize-rh-map` is the flat growable table
+        /// while `inc-resize-rh-map:8` is its sharded composition.
+        pub fn parse(&self, s: &str) -> Option<K> {
+            if let Some((base, n)) = s.split_once(':') {
+                let shards: u32 = n.parse().ok()?;
+                if !valid_shards(shards) {
+                    return None;
+                }
+                return self.family(base).map(|make| make(shards));
+            }
+            if let Some(&(_, k)) = self.flat.iter().find(|(n, _)| *n == s) {
+                return Some(k);
+            }
+            self.family(s).map(|make| make(DEFAULT_SHARDS))
+        }
+
+        fn family(&self, base: &str) -> Option<fn(u32) -> K> {
+            self.sharded
+                .iter()
+                .find(|(aliases, _)| aliases.contains(&base))
+                .map(|&(_, make)| make)
+        }
     }
 }
 
@@ -428,41 +544,29 @@ impl MapKind {
         }
     }
 
+    /// The shared name table behind [`MapKind::parse`].
+    pub const SPECS: spec::SpecTable<MapKind> = spec::SpecTable {
+        flat: &[
+            ("kcas-rh-map", MapKind::KCasRhMap),
+            ("locked-lp-map", MapKind::LockedLpMap),
+            ("inc-resize-rh-map", MapKind::IncResizableRhMap),
+        ],
+        sharded: &[
+            (&["sharded-kcas-rh-map"], |shards| {
+                MapKind::ShardedKCasRhMap { shards }
+            }),
+            (&["sharded-locked-lp-map"], |shards| {
+                MapKind::ShardedLockedLpMap { shards }
+            }),
+            (&["inc-resize-rh-map", "sharded-inc-resize-rh-map"], |shards| {
+                MapKind::ShardedIncResizableRhMap { shards }
+            }),
+        ],
+    };
+
     /// Parse a CLI map spec (see type docs for the syntax).
     pub fn parse(s: &str) -> Option<MapKind> {
-        if let Some((base, n)) = s.split_once(':') {
-            let shards: u32 = n.parse().ok()?;
-            if !shards.is_power_of_two() || shards > 1 << 16 {
-                return None;
-            }
-            return match base {
-                "sharded-kcas-rh-map" => {
-                    Some(MapKind::ShardedKCasRhMap { shards })
-                }
-                "sharded-locked-lp-map" => {
-                    Some(MapKind::ShardedLockedLpMap { shards })
-                }
-                "inc-resize-rh-map" | "sharded-inc-resize-rh-map" => {
-                    Some(MapKind::ShardedIncResizableRhMap { shards })
-                }
-                _ => None,
-            };
-        }
-        match s {
-            "kcas-rh-map" => Some(MapKind::KCasRhMap),
-            "locked-lp-map" => Some(MapKind::LockedLpMap),
-            "inc-resize-rh-map" => Some(MapKind::IncResizableRhMap),
-            "sharded-kcas-rh-map" => {
-                Some(MapKind::ShardedKCasRhMap { shards: 4 })
-            }
-            "sharded-locked-lp-map" => {
-                Some(MapKind::ShardedLockedLpMap { shards: 4 })
-            }
-            "sharded-inc-resize-rh-map" => {
-                Some(MapKind::ShardedIncResizableRhMap { shards: 4 })
-            }
-            _ => None,
-        }
+        Self::SPECS.parse(s)
     }
 
     /// Construct a map with `1 << size_log2` buckets in total; sharded
@@ -621,47 +725,37 @@ impl TableKind {
         }
     }
 
+    /// The shared name table behind [`TableKind::parse`].
+    pub const SPECS: spec::SpecTable<TableKind> = spec::SpecTable {
+        flat: &[
+            ("kcas-rh", TableKind::KCasRobinHood),
+            ("tx-rh", TableKind::TxRobinHood),
+            ("hopscotch", TableKind::Hopscotch),
+            ("lockfree-lp", TableKind::LockFreeLp),
+            ("locked-lp", TableKind::LockedLp),
+            ("michael", TableKind::Michael),
+            ("serial-rh", TableKind::SerialRobinHood),
+            ("resizable-rh", TableKind::ResizableRobinHood),
+            ("inc-resize-rh", TableKind::IncResizableRh),
+        ],
+        sharded: &[
+            (&["sharded-kcas-rh"], |shards| {
+                TableKind::ShardedKCasRh { shards }
+            }),
+            (&["sharded-resizable-rh"], |shards| {
+                TableKind::ShardedResizableRh { shards }
+            }),
+            (&["inc-resize-rh", "sharded-inc-resize-rh"], |shards| {
+                TableKind::ShardedIncResizableRh { shards }
+            }),
+        ],
+    };
+
     /// Parse a CLI table spec. Sharded kinds take a `:N` shard-count
     /// suffix (a power of two, at most 2^16 — the facade's limit), e.g.
     /// `sharded-kcas-rh:16`; the bare name defaults to 4 shards.
     pub fn parse(s: &str) -> Option<TableKind> {
-        if let Some((base, n)) = s.split_once(':') {
-            let shards: u32 = n.parse().ok()?;
-            if !shards.is_power_of_two() || shards > 1 << 16 {
-                return None;
-            }
-            return match base {
-                "sharded-kcas-rh" => {
-                    Some(TableKind::ShardedKCasRh { shards })
-                }
-                "sharded-resizable-rh" => {
-                    Some(TableKind::ShardedResizableRh { shards })
-                }
-                "inc-resize-rh" | "sharded-inc-resize-rh" => {
-                    Some(TableKind::ShardedIncResizableRh { shards })
-                }
-                _ => None,
-            };
-        }
-        match s {
-            "kcas-rh" => Some(TableKind::KCasRobinHood),
-            "tx-rh" => Some(TableKind::TxRobinHood),
-            "hopscotch" => Some(TableKind::Hopscotch),
-            "lockfree-lp" => Some(TableKind::LockFreeLp),
-            "locked-lp" => Some(TableKind::LockedLp),
-            "michael" => Some(TableKind::Michael),
-            "serial-rh" => Some(TableKind::SerialRobinHood),
-            "resizable-rh" => Some(TableKind::ResizableRobinHood),
-            "inc-resize-rh" => Some(TableKind::IncResizableRh),
-            "sharded-kcas-rh" => Some(TableKind::ShardedKCasRh { shards: 4 }),
-            "sharded-resizable-rh" => {
-                Some(TableKind::ShardedResizableRh { shards: 4 })
-            }
-            "sharded-inc-resize-rh" => {
-                Some(TableKind::ShardedIncResizableRh { shards: 4 })
-            }
-            _ => None,
-        }
+        Self::SPECS.parse(s)
     }
 
     /// Construct a table with `1 << size_log2` buckets in total; sharded
@@ -842,6 +936,115 @@ mod tests {
         assert_eq!(MapOp::CmpEx(9, None, Some(1)).key(), 9);
         assert_eq!(MapOp::GetOrInsert(9, 1).key(), 9);
         assert_eq!(MapOp::FetchAdd(9, 1).key(), 9);
+    }
+
+    #[test]
+    fn spec_parse_name_roundtrip_property() {
+        // Property: for every kind in all(), parse(name()) == kind and
+        // the reparse renders the same canonical name — both enums go
+        // through the shared spec helper now, so one table drives both.
+        for k in TableKind::all() {
+            let n = k.name();
+            let p = TableKind::parse(&n).unwrap_or_else(|| panic!("{n}"));
+            assert_eq!(p, k, "{n}");
+            assert_eq!(p.name(), n);
+        }
+        for k in MapKind::all() {
+            let n = k.name();
+            let p = MapKind::parse(&n).unwrap_or_else(|| panic!("{n}"));
+            assert_eq!(p, k, "{n}");
+            assert_eq!(p.name(), n);
+        }
+        // Shard-suffix grammar, driven by the shared validator: every
+        // power of two up to 2^16 parses; zero, non-powers, and
+        // overflow are rejected by both enums identically.
+        for log2 in 0..=16u32 {
+            let shards = 1u32 << log2;
+            assert!(spec::valid_shards(shards));
+            assert_eq!(
+                TableKind::parse(&format!("sharded-kcas-rh:{shards}")),
+                Some(TableKind::ShardedKCasRh { shards })
+            );
+            assert_eq!(
+                MapKind::parse(&format!("sharded-kcas-rh-map:{shards}")),
+                Some(MapKind::ShardedKCasRhMap { shards })
+            );
+        }
+        for bad in [0u32, 3, 6, 12, (1 << 16) + 1, 1 << 17] {
+            assert!(!spec::valid_shards(bad), "{bad}");
+            assert_eq!(
+                TableKind::parse(&format!("sharded-kcas-rh:{bad}")),
+                None
+            );
+            assert_eq!(
+                MapKind::parse(&format!("sharded-kcas-rh-map:{bad}")),
+                None
+            );
+        }
+        // Flat names win over their sharded alias; bare sharded names
+        // default to DEFAULT_SHARDS.
+        assert_eq!(
+            MapKind::parse("inc-resize-rh-map"),
+            Some(MapKind::IncResizableRhMap)
+        );
+        assert_eq!(
+            MapKind::parse("sharded-inc-resize-rh-map"),
+            Some(MapKind::ShardedIncResizableRhMap {
+                shards: spec::DEFAULT_SHARDS
+            })
+        );
+        assert_eq!(
+            TableKind::parse("sharded-inc-resize-rh"),
+            Some(TableKind::ShardedIncResizableRh {
+                shards: spec::DEFAULT_SHARDS
+            })
+        );
+    }
+
+    #[test]
+    fn apply_txn_defaults_to_unsupported() {
+        // A minimal non-transactional impl keeps the trait default and
+        // stays conformant by reporting Unsupported.
+        struct NoTxn;
+        impl ConcurrentMap for NoTxn {
+            fn get(&self, _: u64) -> Option<u64> {
+                None
+            }
+            fn insert(&self, _: u64, _: u64) -> Option<u64> {
+                None
+            }
+            fn remove(&self, _: u64) -> Option<u64> {
+                None
+            }
+            fn compare_exchange(
+                &self,
+                _: u64,
+                _: Option<u64>,
+                _: Option<u64>,
+            ) -> Result<(), Option<u64>> {
+                Ok(())
+            }
+            fn get_or_insert(&self, _: u64, _: u64) -> Option<u64> {
+                None
+            }
+            fn fetch_add(&self, _: u64, _: u64) -> Option<u64> {
+                None
+            }
+            fn name(&self) -> &'static str {
+                "no-txn"
+            }
+            fn capacity(&self) -> usize {
+                0
+            }
+            fn len_quiesced(&self) -> usize {
+                0
+            }
+        }
+        assert_eq!(
+            NoTxn.apply_txn(&[MapOp::Get(1)]),
+            Err(MapError::Unsupported)
+        );
+        assert_eq!(MapError::TxnConflict.to_string(), "transaction conflict");
     }
 
     #[test]

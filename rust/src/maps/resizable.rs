@@ -55,9 +55,12 @@ use std::ptr;
 use std::sync::atomic::{AtomicPtr, AtomicUsize, Ordering};
 use std::sync::{Mutex, RwLock};
 
-use super::kcas_rh::{Frozen, KCasRobinHood, Probe};
+use super::kcas_rh::{KCasRobinHood, Probe};
 use super::kcas_rh_map::{KCasRobinHoodMap, ProbeVal};
-use super::{ConcurrentMap, ConcurrentSet};
+use super::txn;
+use super::{
+    ConcurrentMap, ConcurrentSet, MapError, MapOp, MapReply, TxnError,
+};
 use crate::util::hash::splitmix64;
 use crate::util::metrics::metrics;
 
@@ -191,22 +194,24 @@ impl<T: Generation> TwoGen<T> {
     /// the current generation when no migration is active; `slow`
     /// executes against `(source, target)` during one — after this core
     /// has helped drain one stripe. Either closure returns
-    /// `Err(Frozen)` to signal "re-read the generation pointers and
-    /// retry" (a migration started, completed, or a chained one began).
+    /// `Err(MapError::Frozen)` to signal "re-read the generation
+    /// pointers and retry" (a migration started, completed, or a
+    /// chained one began); no other error variant reaches this loop.
     fn run_op<R>(
         &self,
-        mut fast: impl FnMut(&T) -> Result<R, Frozen>,
-        mut slow: impl FnMut(&T, &T) -> Result<R, Frozen>,
+        mut fast: impl FnMut(&T) -> Result<R, MapError>,
+        mut slow: impl FnMut(&T, &T) -> Result<R, MapError>,
     ) -> R {
         loop {
             let mig = self.migration.load(Ordering::Acquire);
             if mig.is_null() {
                 match fast(self.current()) {
                     Ok(r) => return r,
-                    Err(Frozen) => {
+                    Err(MapError::Frozen) => {
                         metrics().freeze_encounters.incr();
                         continue;
                     }
+                    Err(e) => unreachable!("resize engine error: {e}"),
                 }
             }
             // SAFETY: a non-null migration pointer targets a Box held
@@ -218,10 +223,11 @@ impl<T: Generation> TwoGen<T> {
             let src = unsafe { &(*mig.src).table };
             match slow(src, &mig.table) {
                 Ok(r) => return r,
-                Err(Frozen) => {
+                Err(MapError::Frozen) => {
                     metrics().freeze_encounters.incr();
                     continue;
                 }
+                Err(e) => unreachable!("resize engine error: {e}"),
             }
         }
     }
@@ -339,6 +345,50 @@ impl<T: Generation> TwoGen<T> {
     }
 }
 
+impl TwoGen<KCasRobinHoodMap> {
+    /// Resolve the generation a transaction should plan `h`'s key
+    /// against. With no migration active that is the current table.
+    /// During one, help drain a stripe and then freeze the key's whole
+    /// home run out of the source — exactly the single-op slow path
+    /// (`cmpex_mig` etc.) — after which the target generation alone is
+    /// authoritative for the key, so the commit descriptor's entries
+    /// target it. Re-invoked by the transaction driver on every
+    /// attempt, so generation turnover between attempts re-resolves.
+    fn txn_table(&self, h: u64) -> &KCasRobinHoodMap {
+        let mig = self.migration.load(Ordering::Acquire);
+        if mig.is_null() {
+            return self.current();
+        }
+        // SAFETY: a non-null migration pointer targets a Box held by
+        // `gens`, alive for the wrapper's lifetime.
+        let mig = unsafe { &*mig };
+        self.help(mig);
+        // SAFETY: a migration target's `src` is the non-null
+        // generation it drains, owned by `gens` as well.
+        let src = unsafe { &(*mig.src).table };
+        src.migrate_home_run(&mig.table, h);
+        &mig.table
+    }
+}
+
+/// Post-commit grow-trigger accounting for one transactional (op,
+/// reply) pair — the same membership deltas the single-op paths record.
+fn txn_note(core: &TwoGen<KCasRobinHoodMap>, op: &MapOp, reply: &MapReply) {
+    match (op, reply) {
+        (MapOp::Insert(..), MapReply::Prev(None))
+        | (MapOp::GetOrInsert(..), MapReply::Existing(None))
+        | (MapOp::FetchAdd(..), MapReply::Added(None))
+        | (MapOp::CmpEx(_, None, Some(_)), MapReply::CmpEx(Ok(()))) => {
+            core.note_add()
+        }
+        (MapOp::Remove(..), MapReply::Removed(Some(_)))
+        | (MapOp::CmpEx(_, Some(_), None), MapReply::CmpEx(Ok(()))) => {
+            core.note_remove()
+        }
+        _ => {}
+    }
+}
+
 /// Non-blocking growable K-CAS Robin Hood **set**: the two-generation
 /// cooperative-migration engine (see module docs). CLI spec:
 /// `inc-resize-rh` (`inc-resize-rh:N` for the sharded composition).
@@ -404,7 +454,7 @@ impl ConcurrentSet for IncResizableRobinHood {
             |cur| match cur.probe_mig(h, key) {
                 Probe::Found => Ok(true),
                 Probe::Absent => Ok(false),
-                Probe::FrozenMiss => Err(Frozen),
+                Probe::FrozenMiss => Err(MapError::Frozen),
             },
             |src, tgt| match src.probe_mig(h, key) {
                 Probe::Found => Ok(true),
@@ -417,7 +467,7 @@ impl ConcurrentSet for IncResizableRobinHood {
                     Probe::Absent => Ok(false),
                     // A chained migration began freezing the
                     // target: re-read the generation pointers.
-                    Probe::FrozenMiss => Err(Frozen),
+                    Probe::FrozenMiss => Err(MapError::Frozen),
                 },
             },
         )
@@ -429,10 +479,10 @@ impl ConcurrentSet for IncResizableRobinHood {
     /// target alone is authoritative afterwards.
     fn add_hashed(&self, h: u64, key: u64) -> bool {
         let added = self.core.run_op(
-            |cur| cur.add_mig(h, key),
+            |cur| cur.add_mig(h, key).map_err(MapError::from),
             |src, tgt| {
                 src.migrate_home_run(tgt, h);
-                tgt.add_mig(h, key)
+                tgt.add_mig(h, key).map_err(MapError::from)
             },
         );
         if added {
@@ -443,10 +493,10 @@ impl ConcurrentSet for IncResizableRobinHood {
 
     fn remove_hashed(&self, h: u64, key: u64) -> bool {
         let removed = self.core.run_op(
-            |cur| cur.remove_mig(h, key),
+            |cur| cur.remove_mig(h, key).map_err(MapError::from),
             |src, tgt| {
                 src.migrate_home_run(tgt, h);
-                tgt.remove_mig(h, key)
+                tgt.remove_mig(h, key).map_err(MapError::from)
             },
         );
         if removed {
@@ -546,7 +596,7 @@ impl ConcurrentMap for ResizableRobinHoodMap {
             |cur| match cur.get_mig(h, key) {
                 ProbeVal::Found(v) => Ok(Some(v)),
                 ProbeVal::Absent => Ok(None),
-                ProbeVal::FrozenMiss => Err(Frozen),
+                ProbeVal::FrozenMiss => Err(MapError::Frozen),
             },
             |src, tgt| match src.get_mig(h, key) {
                 ProbeVal::Found(v) => Ok(Some(v)),
@@ -556,7 +606,7 @@ impl ConcurrentMap for ResizableRobinHoodMap {
                 ProbeVal::FrozenMiss => match tgt.get_mig(h, key) {
                     ProbeVal::Found(v) => Ok(Some(v)),
                     ProbeVal::Absent => Ok(None),
-                    ProbeVal::FrozenMiss => Err(Frozen),
+                    ProbeVal::FrozenMiss => Err(MapError::Frozen),
                 },
             },
         )
@@ -649,6 +699,21 @@ impl ConcurrentMap for ResizableRobinHoodMap {
         prev
     }
 
+    /// Transactions re-resolve the live generation for every key on
+    /// every attempt (see [`TwoGen::txn_table`]): mid-migration, each
+    /// txn key's home run is frozen out of the source first, so all of
+    /// the commit descriptor's entries land in live tables — possibly
+    /// spanning both generations for *different* keys, which the
+    /// address-keyed descriptor handles like any other cross-table
+    /// span.
+    fn apply_txn(&self, ops: &[MapOp]) -> Result<Vec<MapReply>, TxnError> {
+        let replies = txn::commit_kcas(ops, &mut |h| self.core.txn_table(h))?;
+        for (op, reply) in ops.iter().zip(&replies) {
+            txn_note(&self.core, op, reply);
+        }
+        Ok(replies)
+    }
+
     fn name(&self) -> &'static str {
         "inc-resize-rh-map"
     }
@@ -665,6 +730,23 @@ impl ConcurrentMap for ResizableRobinHoodMap {
     fn check_invariant_quiesced(&self) -> Result<(), String> {
         self.core.finish_migration();
         self.core.current().check_invariant()
+    }
+}
+
+impl txn::TxnBackend for ResizableRobinHoodMap {
+    fn apply_txn_routed(
+        shards: &[Self],
+        route: &dyn Fn(u64) -> usize,
+        ops: &[MapOp],
+    ) -> Result<Vec<MapReply>, TxnError> {
+        let replies = txn::commit_kcas(ops, &mut |h| {
+            shards[route(h)].core.txn_table(h)
+        })?;
+        for (op, reply) in ops.iter().zip(&replies) {
+            let shard = &shards[route(splitmix64(op.key()))];
+            txn_note(&shard.core, op, reply);
+        }
+        Ok(replies)
     }
 }
 

@@ -42,8 +42,13 @@
 
 use std::cell::RefCell;
 
-use super::{ConcurrentMap, ConcurrentSet, HashedMapOp, MapOp, MapReply};
+use super::txn;
+use super::{
+    ConcurrentMap, ConcurrentSet, HashedMapOp, MapError, MapOp, MapReply,
+    TxnError,
+};
 use crate::util::hash::splitmix64;
+use crate::util::metrics::metrics;
 
 /// Per-thread scratch for [`ConcurrentMap::apply_batch`] grouping, so
 /// batch routing never allocates on the steady-state hot path. The
@@ -251,7 +256,7 @@ impl Sharded<super::locked_lp::LockedLpMap> {
     }
 }
 
-impl<T: ConcurrentMap> ConcurrentMap for Sharded<T> {
+impl<T: ConcurrentMap + txn::TxnBackend> ConcurrentMap for Sharded<T> {
     #[inline]
     fn get(&self, key: u64) -> Option<u64> {
         let h = splitmix64(key);
@@ -398,6 +403,33 @@ impl<T: ConcurrentMap> ConcurrentMap for Sharded<T> {
         BATCH_SCRATCH.with(|s| *s.borrow_mut() = bs);
     }
 
+    /// Cross-shard multi-key transaction: one commit spanning every
+    /// shard the op set routes to. The facade contributes only the
+    /// routing closure — the inner table family's
+    /// [`txn::TxnBackend::apply_txn_routed`] picks the commit protocol
+    /// (one K-CAS for the lock-free tables, ordered 2PL for the locked
+    /// baseline), so a single shared descriptor (or lock envelope)
+    /// spans every touched shard's bucket array.
+    fn apply_txn(&self, ops: &[MapOp]) -> Result<Vec<MapReply>, TxnError> {
+        let replies =
+            T::apply_txn_routed(&self.shards, &|h| self.route(h), ops)?;
+        if self.shard_bits > 0 {
+            let mut first = None;
+            for op in ops {
+                let s = self.route(splitmix64(op.key()));
+                match first {
+                    None => first = Some(s),
+                    Some(f) if f != s => {
+                        metrics().txn_cross_shard.incr();
+                        break;
+                    }
+                    Some(_) => {}
+                }
+            }
+        }
+        Ok(replies)
+    }
+
     fn name(&self) -> &'static str {
         self.name
     }
@@ -416,6 +448,39 @@ impl<T: ConcurrentMap> ConcurrentMap for Sharded<T> {
                 .map_err(|e| format!("shard {i}: {e}"))?;
         }
         Ok(())
+    }
+}
+
+/// Nested-facade transaction routing (`Sharded<Sharded<T>>` and the
+/// facade's own use as a [`txn::TxnBackend`] element). A transaction
+/// whose keys all route to one facade in the slice delegates to that
+/// facade's inner backend with the composed router; keys spanning
+/// *different facades in the slice* have no single inner shard array
+/// to span with one descriptor through this trait's shape, so that
+/// (test-only nested-of-nested) case reports
+/// [`MapError::Unsupported`] rather than silently splitting the
+/// commit. The common production shape — one `Sharded<T>` over plain
+/// backend shards — never hits that arm: `Sharded::apply_txn` hands
+/// the whole shard slice straight to `T::apply_txn_routed`.
+impl<T: ConcurrentMap + txn::TxnBackend> txn::TxnBackend for Sharded<T> {
+    fn apply_txn_routed(
+        shards: &[Self],
+        route: &dyn Fn(u64) -> usize,
+        ops: &[MapOp],
+    ) -> Result<Vec<MapReply>, TxnError> {
+        let mut facade = None;
+        for op in ops {
+            let f = route(splitmix64(op.key()));
+            match facade {
+                None => facade = Some(f),
+                Some(prev) if prev != f => {
+                    return Err(MapError::Unsupported);
+                }
+                Some(_) => {}
+            }
+        }
+        let f = &shards[facade.unwrap_or(0)];
+        T::apply_txn_routed(&f.shards, &|h| f.route(h), ops)
     }
 }
 

@@ -1,0 +1,486 @@
+//! **Multi-key transactions** — the paper's K-CAS substrate, finally
+//! used for what it is: `k` words committed atomically per §2.3, where
+//! `k` now spans *several keys* (and, through [`super::sharded`],
+//! several shards' bucket arrays) instead of one bucket chain.
+//!
+//! ## Commit protocol (`commit_kcas`)
+//!
+//! One attempt is three phases against [`super::kcas_rh_map::KCasRobinHoodMap`]
+//! tables:
+//!
+//! 1. **Read** — every unique key gets one timestamp-validated probe
+//!    (`txn_read`), yielding its bucket + value or a validated miss.
+//! 2. **Evaluate** — the op list is folded over those reads as a pure
+//!    overlay ([`eval_ops`]): replies are computed, and each key ends
+//!    with one *net* transition (e.g. `Insert` then `Remove` of the
+//!    same key nets to "must stay absent").
+//! 3. **Plan + commit** — each key's net transition is lowered to
+//!    physical word entries in a shared [`TxnScratch`]:
+//!
+//!    * present → present: key-word + value-word pin at the phase-1
+//!      bucket (a pure pairing guard when the value is unchanged);
+//!    * absent → present: the insert probe's Nil claim, displacement
+//!      pairs, and probed-shard timestamp guards;
+//!    * present → absent: the remove shift chain, terminator guard,
+//!      and shard timestamp bumps;
+//!    * absent → absent: timestamp guards along the probe path plus a
+//!      terminator key-word guard.
+//!
+//!    Timestamp words are tracked in a ledger keyed by **word address**
+//!    (valid across shards and generations); each word contributes a
+//!    single `first_read -> first_read + bumps` entry. The merged
+//!    entry set executes as **one** K-CAS — `OpBuilder` sorts it by
+//!    address, so concurrent transactions acquire words in a global
+//!    order and cannot livelock-cycle.
+//!
+//! Lost races (a guard moved between phases) retry indefinitely — the
+//! commit itself is lock-free, exactly like the single-key ops.
+//! *Structural* conflicts — two per-key plans claiming the same word
+//! with different contents (two inserts racing for one Nil, a shift
+//! chain crossing a pinned bucket) — are deterministic under quiescence,
+//! so they retry a bounded number of times and then surface as
+//! [`MapError::TxnConflict`].
+//!
+//! ## Baselines
+//!
+//! [`apply_txn_occ`] is the comparison point from the lock-free
+//! open-addressing literature (see PAPERS.md): optimistic read →
+//! validate → per-key CAS commit with best-effort rollback. Its commit
+//! is **not** atomic — concurrent readers can observe a half-applied
+//! transaction, which is precisely the gap `fig18_txn` measures against
+//! the native descriptor commit. `LockedLpMap` contributes the 2PL
+//! reference implementation (see `locked_lp.rs`).
+
+use std::cell::RefCell;
+
+use super::kcas_rh_map::KCasRobinHoodMap;
+use super::{check_key, ConcurrentMap, MapError, MapOp, MapReply, TxnError};
+use crate::kcas::{OpBuilder, Word};
+use crate::util::hash::splitmix64;
+use crate::util::metrics::metrics;
+
+/// Structural conflicts are deterministic when nothing else is running,
+/// so a handful of retries distinguishes "transient overlap while the
+/// table churned" from "this op set intrinsically collides".
+const MAX_CONFLICT_RETRIES: u32 = 8;
+
+/// Cross-table commit accumulator: physical word entries plus the
+/// timestamp ledger, merged into one descriptor at commit time.
+///
+/// Unlike `OpBuilder` it tolerates the same word being staged by
+/// several per-key plans *if* the entries agree (pure guards); the
+/// merge happens before the descriptor's duplicate-address check.
+pub(crate) struct TxnScratch {
+    op: OpBuilder,
+    /// Staged entries `(word address, expected, new)` — unshifted.
+    entries: Vec<(usize, u64, u64)>,
+    /// Timestamp ledger `(word address, first read, pending bumps)`.
+    ts: Vec<(usize, u64, u64)>,
+    /// Remove-plan shift chain scratch (`(key, value)` windows).
+    pub(crate) chain: Vec<(u64, u64)>,
+}
+
+thread_local! {
+    static TXN: RefCell<TxnScratch> = RefCell::new(TxnScratch {
+        op: OpBuilder::new(),
+        entries: Vec::with_capacity(64),
+        ts: Vec::with_capacity(16),
+        chain: Vec::with_capacity(64),
+    });
+}
+
+/// Outcome of one commit attempt.
+enum Commit {
+    /// Descriptor executed; payload = entry count (the txn span).
+    Committed(u64),
+    /// A guard moved underneath us; replan from fresh reads.
+    Raced,
+    /// Two per-key plans disagreed about the same word.
+    Conflict,
+}
+
+impl TxnScratch {
+    fn clear(&mut self) {
+        self.entries.clear();
+        self.ts.clear();
+    }
+
+    /// Stage `*word: old -> new` into the commit descriptor.
+    #[inline]
+    pub(crate) fn stage(&mut self, word: &Word, old: u64, new: u64) {
+        self.entries.push((word.addr(), old, new));
+    }
+
+    /// Record a read of the shard-timestamp word at `addr` plus `bump`
+    /// pending increments. Returns false when the same word was read
+    /// twice with different values within this attempt — the attempt
+    /// is already stale and must restart.
+    pub(crate) fn note_ts(&mut self, addr: usize, val: u64, bump: u64) -> bool {
+        for e in self.ts.iter_mut() {
+            if e.0 == addr {
+                if e.1 != val {
+                    return false;
+                }
+                e.2 += bump;
+                return true;
+            }
+        }
+        self.ts.push((addr, val, bump));
+        true
+    }
+
+    /// Merge the staged entries into one descriptor and execute it.
+    fn execute(&mut self) -> Commit {
+        let TxnScratch { op, entries, ts, .. } = self;
+        for &(addr, first, bumps) in ts.iter() {
+            entries.push((addr, first, first + bumps));
+        }
+        entries.sort_unstable();
+        op.clear();
+        let mut idx = 0;
+        while idx < entries.len() {
+            let (addr, old, new) = entries[idx];
+            let mut end = idx + 1;
+            while end < entries.len() && entries[end].0 == addr {
+                end += 1;
+            }
+            // Same word staged by more than one per-key plan: identical
+            // pure guards (`old == new`) merge into one entry; anything
+            // else — a displacement write under another key's pin, two
+            // inserts claiming one Nil — is a structural conflict.
+            if end - idx > 1
+                && entries[idx..end]
+                    .iter()
+                    .any(|&(_, o, n)| o != old || n != new || o != n)
+            {
+                return Commit::Conflict;
+            }
+            op.push_addr(addr, old, new);
+            idx = end;
+        }
+        // The registry's descriptor slots hold at most MAX_ENTRIES
+        // words; an op set whose plans exceed that is deterministically
+        // uncommittable, which is what Conflict reports.
+        if op.len() > crate::kcas::MAX_ENTRIES {
+            return Commit::Conflict;
+        }
+        let span = op.len() as u64;
+        if op.execute() {
+            Commit::Committed(span)
+        } else {
+            Commit::Raced
+        }
+    }
+}
+
+/// Cross-shard transaction dispatch, implemented by every map that can
+/// commit (or lock) a multi-key op set spanning several same-typed
+/// tables. `Sharded<T>` forwards `apply_txn` here with its router, so
+/// a single commit can span multiple shards' bucket arrays.
+pub(crate) trait TxnBackend: ConcurrentMap + Sized {
+    fn apply_txn_routed(
+        shards: &[Self],
+        route: &dyn Fn(u64) -> usize,
+        ops: &[MapOp],
+    ) -> Result<Vec<MapReply>, TxnError>;
+}
+
+/// Collect the unique keys of `ops` (first-seen order) and the per-op
+/// index into that list. Transactions are small; linear scan beats a
+/// hash set.
+pub(crate) fn collect_keys(ops: &[MapOp]) -> (Vec<u64>, Vec<usize>) {
+    let mut keys: Vec<u64> = Vec::with_capacity(ops.len());
+    let mut key_of: Vec<usize> = Vec::with_capacity(ops.len());
+    for op in ops {
+        let k = op.key();
+        check_key(k);
+        let idx = keys.iter().position(|&k2| k2 == k).unwrap_or_else(|| {
+            keys.push(k);
+            keys.len() - 1
+        });
+        key_of.push(idx);
+    }
+    (keys, key_of)
+}
+
+/// Fold `ops` (in list order) over the per-key `state` overlay,
+/// pushing one reply per op. On return `state` holds each key's net
+/// transition target. Pure — no table access; replies linearize at
+/// whatever point the caller commits the net transitions.
+pub(crate) fn eval_ops(
+    ops: &[MapOp],
+    key_of: &[usize],
+    state: &mut [Option<u64>],
+    replies: &mut Vec<MapReply>,
+) {
+    for (op, &idx) in ops.iter().zip(key_of) {
+        let cur = state[idx];
+        let reply = match *op {
+            MapOp::Get(_) => MapReply::Value(cur),
+            MapOp::Insert(_, v) => {
+                assert!(v <= crate::kcas::MAX_VALUE);
+                state[idx] = Some(v);
+                MapReply::Prev(cur)
+            }
+            MapOp::Remove(_) => {
+                state[idx] = None;
+                MapReply::Removed(cur)
+            }
+            MapOp::CmpEx(_, e, n) => {
+                if cur == e {
+                    if let Some(v) = n {
+                        assert!(v <= crate::kcas::MAX_VALUE);
+                    }
+                    state[idx] = n;
+                    MapReply::CmpEx(Ok(()))
+                } else {
+                    MapReply::CmpEx(Err(cur))
+                }
+            }
+            MapOp::GetOrInsert(_, v) => {
+                if cur.is_none() {
+                    assert!(v <= crate::kcas::MAX_VALUE);
+                    state[idx] = Some(v);
+                }
+                MapReply::Existing(cur)
+            }
+            MapOp::FetchAdd(_, d) => {
+                assert!(d <= crate::kcas::MAX_VALUE);
+                let new =
+                    cur.unwrap_or(0).wrapping_add(d) & crate::kcas::MAX_VALUE;
+                state[idx] = Some(new);
+                MapReply::Added(cur)
+            }
+        };
+        replies.push(reply);
+    }
+}
+
+/// The native K-CAS transaction driver (see the module docs for the
+/// protocol). `resolve` maps a key's hash to the table that currently
+/// owns it, *re-invoked on every attempt* — the sharded facade routes
+/// here, and the resizable wrapper migrates the key's home run and
+/// re-targets the live generation, exactly like `cmpex_mig`.
+pub(crate) fn commit_kcas<'a>(
+    ops: &[MapOp],
+    resolve: &mut dyn FnMut(u64) -> &'a KCasRobinHoodMap,
+) -> Result<Vec<MapReply>, TxnError> {
+    if ops.is_empty() {
+        return Ok(Vec::new());
+    }
+    let m = metrics();
+    m.txn_ops.record(ops.len() as u64);
+    let (keys, key_of) = collect_keys(ops);
+    let hashes: Vec<u64> = keys.iter().map(|&k| splitmix64(k)).collect();
+    let mut reads: Vec<Option<(usize, u64)>> = vec![None; keys.len()];
+    let mut finals: Vec<Option<u64>> = vec![None; keys.len()];
+    let mut replies: Vec<MapReply> = Vec::with_capacity(ops.len());
+    let mut conflicts = 0u32;
+    loop {
+        m.txn_attempts.incr();
+        let outcome = TXN.with(|t| -> Result<Commit, MapError> {
+            let tx = &mut *t.borrow_mut();
+            tx.clear();
+            let mut tables: Vec<&KCasRobinHoodMap> =
+                Vec::with_capacity(keys.len());
+            // Phase 1: validated read of every unique key.
+            for (idx, (&key, &h)) in keys.iter().zip(&hashes).enumerate() {
+                let table = resolve(h);
+                tables.push(table);
+                match table.txn_read(h, key) {
+                    Ok(r) => reads[idx] = r,
+                    Err(MapError::Frozen) => return Ok(Commit::Raced),
+                    Err(e) => return Err(e),
+                }
+            }
+            // Phase 2: pure overlay evaluation.
+            for (f, r) in finals.iter_mut().zip(&reads) {
+                *f = r.map(|(_, v)| v);
+            }
+            replies.clear();
+            eval_ops(ops, &key_of, &mut finals, &mut replies);
+            // Phase 3: lower each key's net transition to word entries.
+            for (idx, (&key, &h)) in keys.iter().zip(&hashes).enumerate() {
+                let table = tables[idx];
+                let planned = match (reads[idx], finals[idx]) {
+                    (Some((i, v0)), Some(v1)) => {
+                        table.txn_plan_pin(tx, i, key, v0, v1);
+                        Ok(true)
+                    }
+                    (Some((_, v0)), None) => {
+                        table.txn_plan_remove(tx, h, key, v0)
+                    }
+                    (None, Some(v1)) => table.txn_plan_insert(tx, h, key, v1),
+                    (None, None) => table.txn_plan_absent(tx, h, key),
+                };
+                match planned {
+                    Ok(true) => {}
+                    Ok(false) | Err(MapError::Frozen) => {
+                        return Ok(Commit::Raced);
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            Ok(tx.execute())
+        })?;
+        match outcome {
+            Commit::Committed(span) => {
+                m.txn_commits.incr();
+                m.txn_span.record(span);
+                return Ok(std::mem::take(&mut replies));
+            }
+            Commit::Raced => m.txn_retries.incr(),
+            Commit::Conflict => {
+                conflicts += 1;
+                if conflicts >= MAX_CONFLICT_RETRIES {
+                    m.txn_conflicts.incr();
+                    return Err(MapError::TxnConflict);
+                }
+                m.txn_retries.incr();
+            }
+        }
+    }
+}
+
+/// OCC baseline: read every key, evaluate, then validate-and-commit
+/// with one `compare_exchange` per changed key (in sorted key order),
+/// rolling back best-effort on a mid-commit failure.
+///
+/// **Weaker isolation than `apply_txn`**: the per-key commits are not
+/// atomic as a group, so concurrent readers can observe a partially
+/// applied transaction (and a failed rollback can leave one behind).
+/// It exists as the comparison arm for `fig18_txn` — conservation is
+/// asserted only for the native K-CAS and 2PL cells.
+pub fn apply_txn_occ(
+    map: &dyn ConcurrentMap,
+    ops: &[MapOp],
+) -> Result<Vec<MapReply>, TxnError> {
+    if ops.is_empty() {
+        return Ok(Vec::new());
+    }
+    let m = metrics();
+    m.txn_ops.record(ops.len() as u64);
+    let (keys, key_of) = collect_keys(ops);
+    let mut order: Vec<usize> = (0..keys.len()).collect();
+    order.sort_unstable_by_key(|&i| keys[i]);
+    let mut replies: Vec<MapReply> = Vec::with_capacity(ops.len());
+    loop {
+        m.txn_attempts.incr();
+        let reads: Vec<Option<u64>> =
+            keys.iter().map(|&k| map.get(k)).collect();
+        let mut finals = reads.clone();
+        replies.clear();
+        eval_ops(ops, &key_of, &mut finals, &mut replies);
+        let mut done: Vec<usize> = Vec::with_capacity(order.len());
+        let mut ok = true;
+        for &i in &order {
+            if reads[i] == finals[i] {
+                // Read-only key: revalidate it in place.
+                if map.get(keys[i]) != reads[i] {
+                    ok = false;
+                    break;
+                }
+                continue;
+            }
+            if map.compare_exchange(keys[i], reads[i], finals[i]).is_err() {
+                ok = false;
+                break;
+            }
+            done.push(i);
+        }
+        if ok {
+            m.txn_commits.incr();
+            m.txn_span.record(done.len() as u64);
+            return Ok(std::mem::take(&mut replies));
+        }
+        for &i in done.iter().rev() {
+            let _ = map.compare_exchange(keys[i], finals[i], reads[i]);
+        }
+        m.txn_retries.incr();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_ops_overlay_semantics() {
+        // Two ops on the same key see each other; replies match a
+        // sequential HashMap run.
+        let ops = [
+            MapOp::Get(5),
+            MapOp::Insert(5, 10),
+            MapOp::FetchAdd(5, 3),
+            MapOp::CmpEx(5, Some(13), Some(99)),
+            MapOp::Remove(5),
+            MapOp::CmpEx(5, None, None),
+        ];
+        let (keys, key_of) = collect_keys(&ops);
+        assert_eq!(keys, vec![5]);
+        let mut state = vec![None];
+        let mut replies = Vec::new();
+        eval_ops(&ops, &key_of, &mut state, &mut replies);
+        assert_eq!(
+            replies,
+            vec![
+                MapReply::Value(None),
+                MapReply::Prev(None),
+                MapReply::Added(Some(10)),
+                MapReply::CmpEx(Ok(())),
+                MapReply::Removed(Some(99)),
+                MapReply::CmpEx(Ok(())),
+            ]
+        );
+        assert_eq!(state, vec![None]);
+    }
+
+    #[test]
+    fn collect_keys_dedups_preserving_first_seen_order() {
+        let ops = [
+            MapOp::Insert(7, 1),
+            MapOp::Insert(3, 1),
+            MapOp::Remove(7),
+            MapOp::Get(9),
+        ];
+        let (keys, key_of) = collect_keys(&ops);
+        assert_eq!(keys, vec![7, 3, 9]);
+        assert_eq!(key_of, vec![0, 1, 0, 2]);
+    }
+
+    #[test]
+    fn txn_scratch_merges_identical_guards_and_rejects_overlap() {
+        let w = Word::new(4);
+        let x = Word::new(6);
+        TXN.with(|t| {
+            let tx = &mut *t.borrow_mut();
+            tx.clear();
+            tx.stage(&w, 4, 4);
+            tx.stage(&w, 4, 4); // identical pure guard: merges
+            tx.stage(&x, 6, 7);
+            assert!(matches!(tx.execute(), Commit::Committed(2)));
+        });
+        assert_eq!((w.read(), x.read()), (4, 7));
+        TXN.with(|t| {
+            let tx = &mut *t.borrow_mut();
+            tx.clear();
+            tx.stage(&w, 4, 4);
+            tx.stage(&w, 4, 5); // guard vs write: structural conflict
+            assert!(matches!(tx.execute(), Commit::Conflict));
+        });
+        assert_eq!(w.read(), 4);
+    }
+
+    #[test]
+    fn ts_ledger_detects_torn_reads_and_accumulates_bumps() {
+        TXN.with(|t| {
+            let tx = &mut *t.borrow_mut();
+            tx.clear();
+            assert!(tx.note_ts(0x1000, 5, 0));
+            assert!(tx.note_ts(0x1000, 5, 1));
+            assert!(tx.note_ts(0x1000, 5, 1));
+            assert!(!tx.note_ts(0x1000, 6, 0)); // same word, drifted
+            assert_eq!(tx.ts, vec![(0x1000, 5, 2)]);
+        });
+    }
+}

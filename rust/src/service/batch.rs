@@ -263,6 +263,158 @@ pub fn run_rmw(
     }
 }
 
+/// Which commit engine a `fig18_txn` transfer cell drives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TxnEngine {
+    /// The map's native [`ConcurrentMap::apply_txn`]: one K-CAS per
+    /// commit on the Robin Hood map, 2PL on the locked baseline.
+    Native,
+    /// The OCC read-validate-write baseline
+    /// ([`crate::maps::txn::apply_txn_occ`]), retried on conflict up
+    /// to [`OCC_RETRIES`] times per transfer.
+    Occ,
+}
+
+/// Per-transfer retry budget for the OCC engine before the transfer
+/// counts as aborted.
+pub const OCC_RETRIES: u32 = 16;
+
+/// Result of one [`run_txn_transfers`] cell.
+pub struct TxnTransferResult {
+    /// Committed *transactions* (not legs) per worker — so
+    /// `run.ops_per_us()` reads as transfers/µs.
+    pub run: RunResult,
+    pub commits: u64,
+    /// Transfers abandoned (OCC retry budget exhausted, or a native
+    /// commit reporting an intrinsic conflict). Aborted transfers are
+    /// all-or-nothing no-ops, so conservation is unaffected.
+    pub aborts: u64,
+    /// Conflict retries the OCC engine burned before committing.
+    pub retries: u64,
+}
+
+/// Timed SmallBank-style transfer cell behind `fig18_txn`: `threads`
+/// workers move money between pre-seeded accounts, each transfer one
+/// multi-key transaction of `txn_size` legs — one debit of
+/// `amt * (txn_size - 1)` plus `txn_size - 1` credits of `amt`, over
+/// distinct accounts drawn from `1..=hot` (small `hot` = skewed
+/// contention). Every leg is a `FetchAdd` on a pre-seeded key (a pin),
+/// so the native engine's commits are intrinsically conflict-free and
+/// the cell's grand total is conserved mod 2^62 — the invariant the
+/// experiment asserts per cell on the native paths.
+pub fn run_txn_transfers(
+    map: &dyn ConcurrentMap,
+    engine: TxnEngine,
+    hot: u64,
+    txn_size: usize,
+    duration_ms: u64,
+    threads: usize,
+    pin: bool,
+    seed: u64,
+) -> TxnTransferResult {
+    assert!(txn_size >= 2 && (txn_size as u64) <= hot);
+    const M: u64 = 1 << 62; // fetch_add arithmetic is mod 2^62
+    let stop = AtomicBool::new(false);
+    let barrier = Barrier::new(threads + 1);
+    let mut slots = vec![(0u64, 0u64); threads];
+    let mut stats = vec![(0u64, 0u64, 0u64); threads]; // (commits, aborts, retries)
+
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (idx, (slot, stat)) in
+            slots.iter_mut().zip(stats.iter_mut()).enumerate()
+        {
+            let stop = &stop;
+            let barrier = &barrier;
+            handles.push(s.spawn(move || {
+                if pin {
+                    affinity::pin_thread(idx);
+                }
+                let mut rng = Rng::for_thread(seed, idx as u64);
+                let mut ops: Vec<MapOp> = Vec::with_capacity(txn_size);
+                let mut accounts: Vec<u64> = Vec::with_capacity(txn_size);
+                barrier.wait();
+                let t0 = Instant::now();
+                let (mut commits, mut aborts, mut retries) = (0u64, 0u64, 0u64);
+                // ORDERING: eventual-visibility stop flag, as in
+                // bench::driver; the join synchronises the counts.
+                while !stop.load(Ordering::Relaxed) {
+                    for _ in 0..16 {
+                        accounts.clear();
+                        while accounts.len() < txn_size {
+                            let a = 1 + rng.below(hot);
+                            if !accounts.contains(&a) {
+                                accounts.push(a);
+                            }
+                        }
+                        let amt = 1 + rng.below(100);
+                        ops.clear();
+                        ops.push(MapOp::FetchAdd(
+                            accounts[0],
+                            M - amt * (txn_size as u64 - 1),
+                        ));
+                        for &a in &accounts[1..] {
+                            ops.push(MapOp::FetchAdd(a, amt));
+                        }
+                        match engine {
+                            TxnEngine::Native => match map.apply_txn(&ops) {
+                                Ok(_) => commits += 1,
+                                Err(_) => aborts += 1,
+                            },
+                            TxnEngine::Occ => {
+                                let mut tries = 0u32;
+                                loop {
+                                    match crate::maps::txn::apply_txn_occ(
+                                        map, &ops,
+                                    ) {
+                                        Ok(_) => {
+                                            commits += 1;
+                                            break;
+                                        }
+                                        Err(_) if tries < OCC_RETRIES => {
+                                            tries += 1;
+                                            retries += 1;
+                                        }
+                                        Err(_) => {
+                                            aborts += 1;
+                                            break;
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                *slot = (commits, t0.elapsed().as_nanos() as u64);
+                *stat = (commits, aborts, retries);
+            }));
+        }
+        barrier.wait();
+        std::thread::sleep(Duration::from_millis(duration_ms));
+        // ORDERING: eventual-visibility stop signal; see the worker
+        // loop's load.
+        stop.store(true, Ordering::Relaxed);
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+
+    let (per_thread, per_thread_ns) = slots.into_iter().unzip();
+    TxnTransferResult {
+        run: RunResult::from_workers(per_thread, per_thread_ns),
+        commits: stats.iter().map(|s| s.0).sum(),
+        aborts: stats.iter().map(|s| s.1).sum(),
+        retries: stats.iter().map(|s| s.2).sum(),
+    }
+}
+
+/// Grand total of the transfer accounts after a [`run_txn_transfers`]
+/// cell, as a u128 (the per-account balances are 62-bit; summing in
+/// u64 could overflow).
+pub fn txn_balance_sum(map: &dyn ConcurrentMap, accounts: u64) -> u128 {
+    (1..=accounts).map(|k| map.get(k).unwrap_or(0) as u128).sum()
+}
+
 /// Sum every hot counter of a finished [`run_rmw`] cell — must equal
 /// [`RmwResult::incs`] if (and only if) the map's RMW ops are atomic.
 pub fn rmw_counter_sum(map: &dyn ConcurrentMap, keys: u64) -> u64 {
@@ -352,6 +504,42 @@ mod tests {
                 r.cas_failures,
                 r.cas_attempts
             );
+        }
+    }
+
+    #[test]
+    fn txn_transfer_driver_conserves() {
+        // The fig18 cell's own witness: pin-only transfers never abort
+        // on the native engines, and the grand total is conserved.
+        for (kind, engine) in [
+            (MapKind::ShardedKCasRhMap { shards: 4 }, TxnEngine::Native),
+            (MapKind::LockedLpMap, TxnEngine::Native),
+            (MapKind::ShardedKCasRhMap { shards: 4 }, TxnEngine::Occ),
+        ] {
+            let m = kind.build(12);
+            for k in 1..=64u64 {
+                m.insert(k, 1_000);
+            }
+            let r = run_txn_transfers(
+                m.as_ref(),
+                engine,
+                64,
+                3,
+                50,
+                3,
+                false,
+                0x18,
+            );
+            assert!(r.commits > 0, "{} {engine:?}", kind.name());
+            if engine == TxnEngine::Native {
+                assert_eq!(r.aborts, 0, "{}: native abort", kind.name());
+                assert_eq!(
+                    txn_balance_sum(m.as_ref(), 64) % (1u128 << 62),
+                    64 * 1_000,
+                    "{}: money created or destroyed",
+                    kind.name()
+                );
+            }
         }
     }
 

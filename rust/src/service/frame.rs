@@ -18,6 +18,12 @@
 //!              "!<v>" / "!-" with the witnessed value on failure
 //! B <n>        batch frame: the next n lines are ops (any of the
 //!              above); one reply line with n space-separated tokens
+//! T <n>        transaction frame: same body grammar as `B <n>`, but
+//!              the n ops commit atomically (all-or-nothing) via
+//!              ConcurrentMap::apply_txn — one reply line with n
+//!              space-separated tokens on commit, or a single
+//!              "ERR txn conflict" / "ERR txn unsupported" line when
+//!              the commit aborts (nothing is applied)
 //! STATS        telemetry snapshot → one line of compact JSON (see
 //!              [`crate::util::metrics::stats_line`])
 //! Q            quit (close the connection)
@@ -57,6 +63,14 @@ pub const ERR_VALUE_RANGE: &str = "ERR value out of range";
 pub const ERR_BAD_REQUEST: &str = "ERR bad request";
 pub const ERR_BAD_BATCH: &str = "ERR bad batch size";
 pub const ERR_SERVER: &str = "ERR server error";
+/// A `T <n>` frame aborted after the bounded structural-conflict
+/// retry budget ([`crate::maps::MapError::TxnConflict`]); nothing was
+/// applied and the client may retry.
+pub const ERR_TXN_CONFLICT: &str = "ERR txn conflict";
+/// The serving table has no transaction protocol
+/// ([`crate::maps::MapError::Unsupported`] — e.g. the `tx-rh`
+/// baseline); nothing was applied.
+pub const ERR_TXN_UNSUPPORTED: &str = "ERR txn unsupported";
 
 fn parse_key(s: &str) -> Result<u64, &'static str> {
     let k: u64 = s.parse().map_err(|_| ERR_BAD_REQUEST)?;
@@ -156,14 +170,33 @@ pub fn push_op(op: MapOp, out: &mut String) {
 pub enum Frame {
     /// Ops to apply with a single `apply_batch` call.
     Batch(Vec<MapOp>),
+    /// Ops to commit atomically with a single `apply_txn` call
+    /// (`T <n>` frame). All-or-nothing: on conflict or an unsupported
+    /// table the reply is one `ERR` line (see [`txn_err_line`]) and
+    /// nothing is applied.
+    Txn(Vec<MapOp>),
     /// Client asked for a telemetry snapshot (`STATS`); the reply is
     /// one line of compact JSON. Only valid as a bare line — inside a
-    /// `B <n>` body it is an ordinary unparseable member.
+    /// `B <n>` / `T <n>` body it is an ordinary unparseable member.
     Stats,
     /// Protocol error to report; nothing is applied.
     Err(&'static str),
     /// Client said `Q`.
     Quit,
+}
+
+/// The single `ERR` reply line for a failed `T <n>` commit — shared by
+/// all front-ends so transaction failures are byte-identical across
+/// backends. Conflict and unsupported get their dedicated lines;
+/// anything else (a table-full plan, say) reports as a generic server
+/// error rather than inventing per-cause wire vocabulary.
+pub fn txn_err_line(e: &crate::maps::MapError) -> &'static str {
+    use crate::maps::MapError;
+    match e {
+        MapError::TxnConflict => ERR_TXN_CONFLICT,
+        MapError::Unsupported => ERR_TXN_UNSUPPORTED,
+        _ => ERR_SERVER,
+    }
 }
 
 /// One step of line extraction (see [`FrameDecoder::take_line`]).
@@ -176,13 +209,17 @@ enum LineStep {
     Skip,
 }
 
-/// A partially-received `B <n>` frame: member lines seen so far.
+/// A partially-received `B <n>` / `T <n>` frame: member lines seen so
+/// far.
 struct PendingBatch {
     remaining: usize,
     ops: Vec<MapOp>,
     /// First member parse error — the whole frame is rejected, but the
     /// stream keeps consuming all `n` member lines to stay in sync.
     err: Option<&'static str>,
+    /// True for a `T <n>` header: the completed body decodes as
+    /// [`Frame::Txn`] instead of [`Frame::Batch`].
+    txn: bool,
 }
 
 /// Incremental frame decoder: [`FrameDecoder::feed`] it raw bytes in
@@ -329,9 +366,10 @@ impl FrameDecoder {
                     continue;
                 }
                 let p = self.pending.take().expect("pending");
-                return Some(match p.err {
-                    None => Frame::Batch(p.ops),
-                    Some(e) => Frame::Err(e),
+                return Some(match (p.err, p.txn) {
+                    (Some(e), _) => Frame::Err(e),
+                    (None, false) => Frame::Batch(p.ops),
+                    (None, true) => Frame::Txn(p.ops),
                 });
             }
 
@@ -344,13 +382,18 @@ impl FrameDecoder {
             if head == "STATS" {
                 return Some(Frame::Stats);
             }
-            if let Some(rest) = head.strip_prefix("B ") {
+            let header = head
+                .strip_prefix("B ")
+                .map(|rest| (rest, false))
+                .or_else(|| head.strip_prefix("T ").map(|rest| (rest, true)));
+            if let Some((rest, txn)) = header {
                 match rest.trim().parse::<usize>() {
                     Ok(n) if (1..=MAX_BATCH).contains(&n) => {
                         self.pending = Some(PendingBatch {
                             remaining: n,
                             ops: Vec::with_capacity(n),
                             err: None,
+                            txn,
                         });
                         continue;
                     }
@@ -664,6 +707,78 @@ mod tests {
         let mut dec = FrameDecoder::new();
         dec.feed(b"STATS");
         assert_eq!(dec.finish(), Some(Frame::Stats));
+    }
+
+    #[test]
+    fn decoder_yields_txn_frames() {
+        // T <n> shares the batch body grammar but decodes as Txn.
+        let frames = decode_whole("T 3\nG 1\nC 1 - 5\nA 2 1\nB 1\nG 2\nQ\n");
+        assert_eq!(
+            frames,
+            vec![
+                Frame::Txn(vec![
+                    MapOp::Get(1),
+                    MapOp::CmpEx(1, None, Some(5)),
+                    MapOp::FetchAdd(2, 1),
+                ]),
+                Frame::Batch(vec![MapOp::Get(2)]),
+                Frame::Quit,
+            ]
+        );
+        // Header bounds match B <n> exactly.
+        assert_eq!(decode_whole("T 0\n"), vec![Frame::Err(ERR_BAD_BATCH)]);
+        assert_eq!(
+            decode_whole(&format!("T {}\n", MAX_BATCH + 1)),
+            vec![Frame::Err(ERR_BAD_BATCH)]
+        );
+        assert_eq!(decode_whole("T x\n"), vec![Frame::Err(ERR_BAD_BATCH)]);
+        // A bad member rejects the whole frame and nothing is applied,
+        // but the body is consumed so the stream stays in sync.
+        let frames = decode_whole("T 2\nG 0\nG 1\nG 2\n");
+        assert_eq!(
+            frames,
+            vec![
+                Frame::Err(ERR_KEY_RANGE),
+                Frame::Batch(vec![MapOp::Get(2)]),
+            ]
+        );
+    }
+
+    #[test]
+    fn txn_frames_decode_identically_across_split_boundaries() {
+        let input = "T 2\nP 1 10\nD 2\nT 1\nG 1\nQ\n";
+        let whole = decode_whole(input);
+        assert_eq!(
+            whole,
+            vec![
+                Frame::Txn(vec![MapOp::Insert(1, 10), MapOp::Remove(2)]),
+                Frame::Txn(vec![MapOp::Get(1)]),
+                Frame::Quit,
+            ]
+        );
+        for chunk in 1..=5usize {
+            let mut dec = FrameDecoder::new();
+            let mut got = Vec::new();
+            for piece in input.as_bytes().chunks(chunk) {
+                dec.feed(piece);
+                got.extend(std::iter::from_fn(|| dec.next_frame()));
+            }
+            assert_eq!(got, whole, "chunk size {chunk}");
+        }
+        // Unterminated final member completes via finish(), like B.
+        let mut dec = FrameDecoder::new();
+        dec.feed(b"T 1\nG 7");
+        assert_eq!(dec.next_frame(), None);
+        assert_eq!(dec.finish(), Some(Frame::Txn(vec![MapOp::Get(7)])));
+    }
+
+    #[test]
+    fn txn_err_lines_are_stable() {
+        use crate::maps::MapError;
+        assert_eq!(txn_err_line(&MapError::TxnConflict), ERR_TXN_CONFLICT);
+        assert_eq!(txn_err_line(&MapError::Unsupported), ERR_TXN_UNSUPPORTED);
+        assert_eq!(txn_err_line(&MapError::TableFull), ERR_SERVER);
+        assert_eq!(txn_err_line(&MapError::Frozen), ERR_SERVER);
     }
 
     #[test]

@@ -78,8 +78,10 @@ mod imp {
     use std::thread::JoinHandle;
 
     use super::{default_workers, HIGH_WATER, LOW_WATER};
-    use crate::maps::{ConcurrentMap, HashedMapOp, MapReply};
-    use crate::service::frame::{push_reply, Frame, FrameDecoder, ERR_SERVER};
+    use crate::maps::{ConcurrentMap, HashedMapOp, MapOp, MapReply};
+    use crate::service::frame::{
+        push_reply, txn_err_line, Frame, FrameDecoder, ERR_SERVER,
+    };
     use crate::service::panic_message;
     use crate::util::hash::splitmix64;
     use crate::util::metrics::{metrics, stats_line};
@@ -107,11 +109,27 @@ mod imp {
     enum Pending {
         /// Reply line for `batch_ops[start..start + len]` of this wake.
         Ops { start: usize, len: usize },
+        /// Reply line for the wake's `idx`-th queued transaction
+        /// (`T <n>` frame; committed in phase 2 after the wake batch).
+        Txn { idx: usize },
         /// Literal protocol-error line.
         Line(&'static str),
         /// Telemetry snapshot (`STATS`): rendered at reply-format time
         /// so the counters reflect the batch this wake applied.
         Stats,
+    }
+
+    /// Phase-2 result of one queued transaction.
+    enum TxnOutcome {
+        /// Committed: typed replies, one token per op.
+        Replies(Vec<MapReply>),
+        /// Typed abort (`ERR txn conflict` / `ERR txn unsupported` /
+        /// `ERR server error`): one line, nothing applied, connection
+        /// stays up.
+        Abort(&'static str),
+        /// The commit panicked: fatal for the owning connection (same
+        /// treatment as a panicked wake batch).
+        Panicked,
     }
 
     struct Conn {
@@ -423,8 +441,17 @@ mod imp {
 
     /// Phase 1b: decode complete frames, accumulating batch ops (with
     /// their routing hash) into the wake-wide batch and recording the
-    /// per-connection reply actions in frame order.
-    fn parse_frames(conn: &mut Conn, batch_ops: &mut Vec<HashedMapOp>) {
+    /// per-connection reply actions in frame order. A `T <n>` frame
+    /// ends the connection's parsing for this wake: the wake batch is
+    /// applied *before* queued transactions, so frames decoded after a
+    /// transaction must wait for the next wake (the replay set) to
+    /// observe its commit — per-connection program order is what the
+    /// cross-backend equivalence trace asserts.
+    fn parse_frames(
+        conn: &mut Conn,
+        batch_ops: &mut Vec<HashedMapOp>,
+        txns: &mut Vec<Vec<MapOp>>,
+    ) {
         while !conn.closing && conn.backlog() <= HIGH_WATER {
             let frame = match conn.dec.next_frame() {
                 Some(f) => f,
@@ -443,6 +470,11 @@ mod imp {
                         ops.iter().map(|&op| (splitmix64(op.key()), op)),
                     );
                     conn.pending.push(Pending::Ops { start, len: ops.len() });
+                }
+                Frame::Txn(ops) => {
+                    conn.pending.push(Pending::Txn { idx: txns.len() });
+                    txns.push(ops);
+                    break;
                 }
                 Frame::Err(e) => conn.pending.push(Pending::Line(e)),
                 Frame::Stats => conn.pending.push(Pending::Stats),
@@ -466,6 +498,7 @@ mod imp {
     fn format_replies(
         conn: &mut Conn,
         replies: &[MapReply],
+        txn_results: &[TxnOutcome],
         panicked: bool,
         line: &mut String,
     ) {
@@ -494,6 +527,23 @@ mod imp {
                         push_reply(r, line);
                     }
                 }
+                Pending::Txn { idx } => match &txn_results[idx] {
+                    TxnOutcome::Replies(rs) => {
+                        for (j, &r) in rs.iter().enumerate() {
+                            if j > 0 {
+                                line.push(' ');
+                            }
+                            push_reply(r, line);
+                        }
+                    }
+                    TxnOutcome::Abort(e) => line.push_str(e),
+                    TxnOutcome::Panicked => {
+                        conn.out.extend_from_slice(ERR_SERVER.as_bytes());
+                        conn.out.push(b'\n');
+                        conn.closing = true;
+                        break;
+                    }
+                },
             }
             line.push('\n');
             conn.out.extend_from_slice(line.as_bytes());
@@ -554,6 +604,8 @@ mod imp {
         let mut events = vec![EpollEvent::zeroed(); MAX_EVENTS];
         let mut chunk = vec![0u8; READ_CHUNK];
         let mut batch_ops: Vec<HashedMapOp> = Vec::new();
+        let mut txns: Vec<Vec<MapOp>> = Vec::new();
+        let mut txn_results: Vec<TxnOutcome> = Vec::new();
         let mut replies: Vec<MapReply> = Vec::new();
         let mut line = String::new();
         let mut touched: Vec<u64> = Vec::new();
@@ -570,6 +622,8 @@ mod imp {
             };
             touched.clear();
             batch_ops.clear();
+            txns.clear();
+            txn_results.clear();
 
             // Re-admit replayed connections first (frame order within
             // a connection is preserved: its decoder is the queue).
@@ -620,7 +674,7 @@ mod imp {
                     if !conn.eof {
                         read_some(conn, &mut chunk);
                     }
-                    parse_frames(conn, &mut batch_ops);
+                    parse_frames(conn, &mut batch_ops, &mut txns);
                 }
             }
 
@@ -643,6 +697,27 @@ mod imp {
                     );
                 }
             }
+            // Queued transactions commit after the wake batch (each
+            // connection stopped parsing at its first txn frame, so
+            // per-connection frame order holds either way).
+            for ops in &txns {
+                let applied =
+                    catch_unwind(AssertUnwindSafe(|| map.apply_txn(ops)));
+                txn_results.push(match applied {
+                    Ok(Ok(rs)) => TxnOutcome::Replies(rs),
+                    Ok(Err(e)) => TxnOutcome::Abort(txn_err_line(&e)),
+                    Err(payload) => {
+                        metrics().server_panics.incr();
+                        eprintln!(
+                            "crh-reactor: contained panic in txn \
+                             ({} ops): {}",
+                            ops.len(),
+                            panic_message(payload.as_ref()),
+                        );
+                        TxnOutcome::Panicked
+                    }
+                });
+            }
 
             // Phase 3: format replies, flush, manage interest sets.
             for &token in &touched {
@@ -653,7 +728,13 @@ mod imp {
                     to_close.push(token);
                     continue;
                 }
-                format_replies(conn, &replies, panicked, &mut line);
+                format_replies(
+                    conn,
+                    &replies,
+                    &txn_results,
+                    panicked,
+                    &mut line,
+                );
                 try_flush(conn);
                 if conn.dead {
                     to_close.push(token);
@@ -666,11 +747,16 @@ mod imp {
                 } else if conn.paused && conn.backlog() <= LOW_WATER {
                     conn.paused = false;
                     metrics().backpressure_resumes.incr();
-                    if conn.dec.has_complete_line()
-                        || (conn.eof && conn.dec.buffered() > 0)
-                    {
-                        replay.push(token); // withheld frames to serve
-                    }
+                }
+                // Withheld frames — backpressure unpause, or parsing
+                // stopped at a transaction boundary to preserve
+                // per-connection frame order: serve them next wake.
+                if !conn.paused
+                    && !conn.closing
+                    && (conn.dec.has_complete_line()
+                        || (conn.eof && conn.dec.buffered() > 0))
+                {
+                    replay.push(token);
                 }
                 // EOF: once the decoder is fully drained (parse_frames
                 // ran finish() for any unterminated final line), the

@@ -39,9 +39,10 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
-use crate::maps::{ConcurrentMap, MapOp, MapReply};
+use crate::maps::{ConcurrentMap, MapError, MapOp, MapReply};
 use crate::service::frame::{
-    push_op, push_reply, Frame, FrameDecoder, ERR_SERVER, MAX_BATCH,
+    push_op, push_reply, txn_err_line, Frame, FrameDecoder, ERR_SERVER,
+    ERR_TXN_CONFLICT, ERR_TXN_UNSUPPORTED, MAX_BATCH,
 };
 use crate::service::panic_message;
 use crate::util::metrics::{metrics, stats_line};
@@ -134,6 +135,36 @@ fn serve_conn(stream: TcpStream, map: Arc<dyn ConcurrentMap>, conn_id: u64) {
                         eprintln!(
                             "crh-server: contained panic on conn {conn_id} \
                              ({} ops): {}",
+                            ops.len(),
+                            panic_message(payload.as_ref()),
+                        );
+                        line.push_str(ERR_SERVER);
+                        fatal = true;
+                    }
+                }
+            }
+            Frame::Txn(ops) => {
+                // Same containment as Batch; the commit itself is
+                // all-or-nothing, so a typed abort is an ordinary
+                // reply line, not a connection event.
+                let applied = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| map.apply_txn(&ops)),
+                );
+                match applied {
+                    Ok(Ok(replies)) => {
+                        for (i, &r) in replies.iter().enumerate() {
+                            if i > 0 {
+                                line.push(' ');
+                            }
+                            push_reply(r, &mut line);
+                        }
+                    }
+                    Ok(Err(e)) => line.push_str(txn_err_line(&e)),
+                    Err(payload) => {
+                        metrics().server_panics.incr();
+                        eprintln!(
+                            "crh-server: contained panic on conn {conn_id} \
+                             (txn, {} ops): {}",
                             ops.len(),
                             panic_message(payload.as_ref()),
                         );
@@ -264,6 +295,83 @@ pub fn spawn_server(map: Arc<dyn ConcurrentMap>) -> io::Result<ServerHandle> {
     spawn_server_on(TcpListener::bind("127.0.0.1:0")?, map)
 }
 
+/// What a typed transaction round trip can fail with: the server's
+/// typed abort (mapped back onto [`MapError`], so callers match on the
+/// same vocabulary as the in-process [`ConcurrentMap::apply_txn`]), or
+/// a transport/framing failure.
+#[derive(Debug)]
+pub enum WireError {
+    /// The server answered with a typed transaction abort line
+    /// (`ERR txn conflict` / `ERR txn unsupported`). Nothing was
+    /// applied; a conflict is retryable.
+    Txn(MapError),
+    /// Transport or reply-parse failure.
+    Io(io::Error),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Txn(e) => write!(f, "transaction aborted: {e}"),
+            WireError::Io(e) => write!(f, "wire error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<io::Error> for WireError {
+    fn from(e: io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+/// Parse one reply line's space-separated tokens into typed
+/// [`MapReply`] values, the token shape inferred from each op's
+/// variant — the single reply-segment parser behind both
+/// [`Client::batch_typed`] and [`Client::txn`].
+fn parse_typed_replies(ops: &[MapOp], line: &str) -> io::Result<Vec<MapReply>> {
+    let bad = |tok: &str| {
+        io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("bad reply token {tok:?}"),
+        )
+    };
+    let parse_val = |tok: &str| -> io::Result<Option<u64>> {
+        match tok {
+            "-" => Ok(None),
+            v => v.parse::<u64>().map(Some).map_err(|_| bad(v)),
+        }
+    };
+    let mut toks = line.split_whitespace();
+    let mut replies = Vec::with_capacity(ops.len());
+    for &op in ops {
+        let tok = toks.next().ok_or_else(|| bad(""))?;
+        replies.push(match op {
+            MapOp::CmpEx(..) => MapReply::CmpEx(match tok {
+                "OK" => Ok(()),
+                "!-" => Err(None),
+                t if t.starts_with('!') => {
+                    Err(Some(t[1..].parse::<u64>().map_err(|_| bad(t))?))
+                }
+                t => return Err(bad(t)),
+            }),
+            MapOp::Get(_) => MapReply::Value(parse_val(tok)?),
+            MapOp::Insert(..) => MapReply::Prev(parse_val(tok)?),
+            MapOp::Remove(_) => MapReply::Removed(parse_val(tok)?),
+            MapOp::GetOrInsert(..) => MapReply::Existing(parse_val(tok)?),
+            MapOp::FetchAdd(..) => MapReply::Added(parse_val(tok)?),
+        });
+    }
+    if toks.next().is_some() {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "trailing reply tokens",
+        ));
+    }
+    Ok(replies)
+}
+
 /// Minimal blocking client for the wire protocol (examples, tests,
 /// and the benchmark load generators).
 pub struct Client {
@@ -327,45 +435,37 @@ impl Client {
         if line.starts_with("ERR") {
             return Err(io::Error::new(io::ErrorKind::InvalidData, line));
         }
-        let bad = |tok: &str| {
-            io::Error::new(
-                io::ErrorKind::InvalidData,
-                format!("bad reply token {tok:?}"),
-            )
-        };
-        let parse_val = |tok: &str| -> io::Result<Option<u64>> {
-            match tok {
-                "-" => Ok(None),
-                v => v.parse::<u64>().map(Some).map_err(|_| bad(v)),
-            }
-        };
-        let mut toks = line.split_whitespace();
-        let mut replies = Vec::with_capacity(ops.len());
+        parse_typed_replies(ops, &line)
+    }
+
+    /// Commit `ops` atomically on the server (`T <n>` frame) and parse
+    /// the typed replies. A typed abort line comes back as
+    /// [`WireError::Txn`] carrying the same [`MapError`] the in-process
+    /// [`ConcurrentMap::apply_txn`] would return — conflict is
+    /// retryable, unsupported is not; nothing was applied either way.
+    pub fn txn(&mut self, ops: &[MapOp]) -> Result<Vec<MapReply>, WireError> {
+        use std::fmt::Write as _;
+        assert!(!ops.is_empty() && ops.len() <= MAX_BATCH);
+        self.frame.clear();
+        writeln!(self.frame, "T {}", ops.len()).expect("write to String");
         for &op in ops {
-            let tok = toks.next().ok_or_else(|| bad(""))?;
-            replies.push(match op {
-                MapOp::CmpEx(..) => MapReply::CmpEx(match tok {
-                    "OK" => Ok(()),
-                    "!-" => Err(None),
-                    t if t.starts_with('!') => Err(Some(
-                        t[1..].parse::<u64>().map_err(|_| bad(t))?,
-                    )),
-                    t => return Err(bad(t)),
-                }),
-                MapOp::Get(_) => MapReply::Value(parse_val(tok)?),
-                MapOp::Insert(..) => MapReply::Prev(parse_val(tok)?),
-                MapOp::Remove(_) => MapReply::Removed(parse_val(tok)?),
-                MapOp::GetOrInsert(..) => MapReply::Existing(parse_val(tok)?),
-                MapOp::FetchAdd(..) => MapReply::Added(parse_val(tok)?),
-            });
+            push_op(op, &mut self.frame);
         }
-        if toks.next().is_some() {
-            return Err(io::Error::new(
+        self.out.write_all(self.frame.as_bytes())?;
+        let line = self.read_reply_line()?;
+        if line == ERR_TXN_CONFLICT {
+            return Err(WireError::Txn(MapError::TxnConflict));
+        }
+        if line == ERR_TXN_UNSUPPORTED {
+            return Err(WireError::Txn(MapError::Unsupported));
+        }
+        if line.starts_with("ERR") {
+            return Err(WireError::Io(io::Error::new(
                 io::ErrorKind::InvalidData,
-                "trailing reply tokens",
-            ));
+                line,
+            )));
         }
-        Ok(replies)
+        Ok(parse_typed_replies(ops, &line)?)
     }
 
     /// Write one frame without waiting for the reply (pipelining).

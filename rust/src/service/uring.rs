@@ -95,8 +95,10 @@ mod imp {
     use std::sync::{Arc, OnceLock};
     use std::thread::JoinHandle;
 
-    use crate::maps::{ConcurrentMap, HashedMapOp, MapReply};
-    use crate::service::frame::{push_reply, Frame, FrameDecoder, ERR_SERVER};
+    use crate::maps::{ConcurrentMap, HashedMapOp, MapOp, MapReply};
+    use crate::service::frame::{
+        push_reply, txn_err_line, Frame, FrameDecoder, ERR_SERVER,
+    };
     use crate::service::panic_message;
     use crate::service::reactor::{
         self, ReactorHandle, HIGH_WATER, LOW_WATER,
@@ -183,10 +185,21 @@ mod imp {
     enum Pending {
         /// Reply line for `batch_ops[start..start + len]` of this wake.
         Ops { start: usize, len: usize },
+        /// Reply line for the wake's `idx`-th queued transaction
+        /// (`T <n>` frame; committed in phase 2 after the wake batch).
+        Txn { idx: usize },
         /// Literal protocol-error line.
         Line(&'static str),
         /// Telemetry snapshot (`STATS`), rendered at reply-format time.
         Stats,
+    }
+
+    /// Phase-2 result of one queued transaction — identical semantics
+    /// to the reactor's.
+    enum TxnOutcome {
+        Replies(Vec<MapReply>),
+        Abort(&'static str),
+        Panicked,
     }
 
     struct Conn {
@@ -252,8 +265,14 @@ mod imp {
     /// Decode complete frames, accumulating batch ops (with their
     /// routing hash) into the wake-wide batch and recording the
     /// per-connection reply actions in frame order — the reactor's
-    /// phase 1b verbatim.
-    fn parse_frames(conn: &mut Conn, batch_ops: &mut Vec<HashedMapOp>) {
+    /// phase 1b verbatim, including the transaction-boundary stop: a
+    /// `T <n>` frame ends this connection's parsing for the wake so
+    /// frames decoded after it observe its commit next wake (replay).
+    fn parse_frames(
+        conn: &mut Conn,
+        batch_ops: &mut Vec<HashedMapOp>,
+        txns: &mut Vec<Vec<MapOp>>,
+    ) {
         while !conn.closing && conn.backlog() <= HIGH_WATER {
             let frame = match conn.dec.next_frame() {
                 Some(f) => f,
@@ -271,6 +290,11 @@ mod imp {
                     );
                     conn.pending.push(Pending::Ops { start, len: ops.len() });
                 }
+                Frame::Txn(ops) => {
+                    conn.pending.push(Pending::Txn { idx: txns.len() });
+                    txns.push(ops);
+                    break;
+                }
                 Frame::Err(e) => conn.pending.push(Pending::Line(e)),
                 Frame::Stats => conn.pending.push(Pending::Stats),
                 Frame::Quit => conn.closing = true,
@@ -287,6 +311,7 @@ mod imp {
     fn format_replies(
         conn: &mut Conn,
         replies: &[MapReply],
+        txn_results: &[TxnOutcome],
         panicked: bool,
         line: &mut String,
     ) {
@@ -311,6 +336,23 @@ mod imp {
                         push_reply(r, line);
                     }
                 }
+                Pending::Txn { idx } => match &txn_results[idx] {
+                    TxnOutcome::Replies(rs) => {
+                        for (j, &r) in rs.iter().enumerate() {
+                            if j > 0 {
+                                line.push(' ');
+                            }
+                            push_reply(r, line);
+                        }
+                    }
+                    TxnOutcome::Abort(e) => line.push_str(e),
+                    TxnOutcome::Panicked => {
+                        conn.out.extend_from_slice(ERR_SERVER.as_bytes());
+                        conn.out.push(b'\n');
+                        conn.closing = true;
+                        break;
+                    }
+                },
             }
             line.push('\n');
             conn.out.extend_from_slice(line.as_bytes());
@@ -500,6 +542,7 @@ mod imp {
             gen: u16,
             res: i32,
             batch_ops: &mut Vec<HashedMapOp>,
+            txns: &mut Vec<Vec<MapOp>>,
             touched: &mut Vec<u32>,
         ) {
             if self.gens.get(slot as usize) != Some(&gen) {
@@ -526,7 +569,7 @@ mod imp {
                 conn.dead = true;
             }
             if !conn.dead && !conn.closing && !conn.paused {
-                parse_frames(conn, batch_ops);
+                parse_frames(conn, batch_ops, txns);
             }
         }
 
@@ -572,6 +615,7 @@ mod imp {
             &mut self,
             slot: u32,
             replies: &[MapReply],
+            txn_results: &[TxnOutcome],
             panicked: bool,
             line: &mut String,
             replay: &mut Vec<u32>,
@@ -582,7 +626,7 @@ mod imp {
             };
             conn.touched = false;
             if !conn.dead {
-                format_replies(conn, replies, panicked, line);
+                format_replies(conn, replies, txn_results, panicked, line);
             }
             let want_write = !conn.dead
                 && !conn.write_inflight
@@ -602,11 +646,17 @@ mod imp {
             } else if conn.paused && conn.backlog() <= LOW_WATER {
                 conn.paused = false;
                 metrics().backpressure_resumes.incr();
-                if conn.dec.has_complete_line()
-                    || (conn.eof && conn.dec.buffered() > 0)
-                {
-                    replay.push(slot); // withheld frames to serve
-                }
+            }
+            // Withheld frames — backpressure unpause, or parsing
+            // stopped at a transaction boundary to preserve
+            // per-connection frame order: serve them next wake.
+            if !conn.paused
+                && !conn.closing
+                && !conn.dead
+                && (conn.dec.has_complete_line()
+                    || (conn.eof && conn.dec.buffered() > 0))
+            {
+                replay.push(slot);
             }
             if conn.eof && !conn.paused && conn.dec.buffered() == 0 {
                 conn.closing = true;
@@ -633,6 +683,8 @@ mod imp {
             }
             let mut cqes: Vec<Cqe> = Vec::new();
             let mut batch_ops: Vec<HashedMapOp> = Vec::new();
+            let mut txns: Vec<Vec<MapOp>> = Vec::new();
+            let mut txn_results: Vec<TxnOutcome> = Vec::new();
             let mut replies: Vec<MapReply> = Vec::new();
             let mut line = String::new();
             let mut touched: Vec<u32> = Vec::new();
@@ -648,6 +700,8 @@ mod imp {
                 cqes.clear();
                 self.ring.reap(&mut cqes);
                 batch_ops.clear();
+                txns.clear();
+                txn_results.clear();
                 touched.clear();
 
                 // Re-admit replayed connections first (frame order
@@ -663,7 +717,7 @@ mod imp {
                         touched.push(slot);
                     }
                     if !conn.dead && !conn.closing && !conn.paused {
-                        parse_frames(conn, &mut batch_ops);
+                        parse_frames(conn, &mut batch_ops, &mut txns);
                     }
                 }
 
@@ -678,7 +732,7 @@ mod imp {
                         TAG_READ => {
                             self.on_read(
                                 slot, gen, c.res, &mut batch_ops,
-                                &mut touched,
+                                &mut txns, &mut touched,
                             );
                             Ok(())
                         }
@@ -714,13 +768,36 @@ mod imp {
                     }
                 }
 
+                // Phase 2b: apply queued transactions, each all-or-
+                // nothing, in arrival order after the wake batch.
+                for ops in &txns {
+                    let applied = catch_unwind(AssertUnwindSafe(|| {
+                        self.map.apply_txn(ops)
+                    }));
+                    txn_results.push(match applied {
+                        Ok(Ok(rs)) => TxnOutcome::Replies(rs),
+                        Ok(Err(e)) => TxnOutcome::Abort(txn_err_line(&e)),
+                        Err(payload) => {
+                            metrics().server_panics.incr();
+                            eprintln!(
+                                "crh-uring: contained panic in txn \
+                                 ({} ops): {}",
+                                ops.len(),
+                                panic_message(payload.as_ref()),
+                            );
+                            TxnOutcome::Panicked
+                        }
+                    });
+                }
+
                 // Phase 3: format replies, queue write/read SQEs (the
                 // next enter submits them all at once), lifecycle.
                 for i in 0..touched.len() {
                     let slot = touched[i];
                     if self
                         .finish_wake(
-                            slot, &replies, panicked, &mut line, &mut replay,
+                            slot, &replies, &txn_results, panicked,
+                            &mut line, &mut replay,
                         )
                         .is_err()
                     {

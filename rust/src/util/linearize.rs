@@ -411,6 +411,292 @@ pub fn record_map_history(
     h
 }
 
+// ---- transactional histories (the multi-key `apply_txn` surface) ----
+
+impl From<crate::maps::MapOp> for MapOpKind {
+    fn from(op: crate::maps::MapOp) -> Self {
+        use crate::maps::MapOp as O;
+        match op {
+            O::Get(k) => MapOpKind::Get(k),
+            O::Insert(k, v) => MapOpKind::Insert(k, v),
+            O::Remove(k) => MapOpKind::Remove(k),
+            O::CmpEx(k, e, n) => MapOpKind::CmpEx(k, e, n),
+            O::GetOrInsert(k, v) => MapOpKind::GetOrInsert(k, v),
+            O::FetchAdd(k, d) => MapOpKind::FetchAdd(k, d),
+        }
+    }
+}
+
+impl From<crate::maps::MapReply> for MapRes {
+    fn from(r: crate::maps::MapReply) -> Self {
+        use crate::maps::MapReply as R;
+        match r {
+            R::Value(v)
+            | R::Prev(v)
+            | R::Removed(v)
+            | R::Existing(v)
+            | R::Added(v) => MapRes::Val(v),
+            R::CmpEx(c) => MapRes::Cas(c),
+        }
+    }
+}
+
+/// One event in a transactional map history: a lone map op, or a whole
+/// multi-key transaction occupying a *single* atomic window.
+#[derive(Clone, Debug)]
+pub enum TxnEventKind {
+    /// A plain single-key operation with its observed result.
+    Op(MapOpKind, MapRes),
+    /// A committed transaction: every op took effect at one
+    /// linearization point, in program order, and each reply reflects
+    /// the ops before it within the same transaction (overlay
+    /// semantics, matching [`crate::maps::ConcurrentMap::apply_txn`]).
+    Committed(Vec<(MapOpKind, MapRes)>),
+    /// An aborted transaction. All-or-nothing means it changed
+    /// nothing, so it may linearize anywhere as a no-op.
+    Aborted,
+}
+
+/// One completed event (op or transaction) in a history.
+#[derive(Clone, Debug)]
+pub struct TxnEvent {
+    pub kind: TxnEventKind,
+    pub invoke: u64,
+    pub response: u64,
+}
+
+/// Apply a whole committed transaction at one sequential point; on any
+/// reply mismatch the applied prefix is rolled back and `false`
+/// returned (state unchanged).
+fn txn_apply(
+    state: &mut std::collections::HashMap<u64, u64>,
+    ops: &[(MapOpKind, MapRes)],
+) -> bool {
+    for i in 0..ops.len() {
+        let got = map_apply(state, ops[i].0);
+        if got != ops[i].1 {
+            map_undo(state, ops[i].0, got);
+            for j in (0..i).rev() {
+                map_undo(state, ops[j].0, ops[j].1);
+            }
+            return false;
+        }
+    }
+    true
+}
+
+fn txn_undo(
+    state: &mut std::collections::HashMap<u64, u64>,
+    ops: &[(MapOpKind, MapRes)],
+) {
+    for j in (0..ops.len()).rev() {
+        map_undo(state, ops[j].0, ops[j].1);
+    }
+}
+
+/// Is a mixed single-op / transaction history linearizable against
+/// sequential map semantics? A committed transaction is one indivisible
+/// step: either a linearization order explains every reply of every
+/// event, or the history is rejected — a reader (or another
+/// transaction) observing *half* of a transaction's writes is exactly
+/// the torn state this rules out.
+pub fn is_txn_linearizable(
+    initial: &[(u64, u64)],
+    history: &[TxnEvent],
+) -> bool {
+    let n = history.len();
+    assert!(n <= 64, "checker limited to 64-event windows");
+    let mut state: std::collections::HashMap<u64, u64> =
+        initial.iter().copied().collect();
+    let mut done: u64 = 0;
+    let mut seen: HashSet<(u64, u64)> = HashSet::new();
+    let mut must_precede = vec![0u64; n];
+    for j in 0..n {
+        for i in 0..n {
+            if i != j && history[i].response < history[j].invoke {
+                must_precede[j] |= 1 << i;
+            }
+        }
+    }
+
+    fn state_hash(state: &std::collections::HashMap<u64, u64>) -> u64 {
+        state.iter().fold(0u64, |acc, (&k, &v)| {
+            acc ^ crate::util::hash::splitmix64(
+                k ^ crate::util::hash::splitmix64(v),
+            )
+        })
+    }
+
+    fn dfs(
+        history: &[TxnEvent],
+        must_precede: &[u64],
+        state: &mut std::collections::HashMap<u64, u64>,
+        done: &mut u64,
+        seen: &mut HashSet<(u64, u64)>,
+    ) -> bool {
+        let n = history.len();
+        if done.count_ones() as usize == n {
+            return true;
+        }
+        if !seen.insert((*done, state_hash(state))) {
+            return false;
+        }
+        for j in 0..n {
+            let bit = 1u64 << j;
+            if *done & bit != 0 || (must_precede[j] & !*done) != 0 {
+                continue;
+            }
+            let ok = match &history[j].kind {
+                TxnEventKind::Op(kind, want) => {
+                    let got = map_apply(state, *kind);
+                    if got == *want {
+                        true
+                    } else {
+                        map_undo(state, *kind, got);
+                        false
+                    }
+                }
+                TxnEventKind::Committed(ops) => txn_apply(state, ops),
+                TxnEventKind::Aborted => true,
+            };
+            if ok {
+                *done |= bit;
+                if dfs(history, must_precede, state, done, seen) {
+                    return true;
+                }
+                *done &= !bit;
+                match &history[j].kind {
+                    TxnEventKind::Op(kind, want) => {
+                        map_undo(state, *kind, *want)
+                    }
+                    TxnEventKind::Committed(ops) => txn_undo(state, ops),
+                    TxnEventKind::Aborted => {}
+                }
+            }
+        }
+        false
+    }
+
+    dfs(history, &must_precede, &mut state, &mut done, &mut seen)
+}
+
+/// Record a concurrent history mixing lone map ops with small
+/// multi-key transactions against any
+/// [`crate::maps::ConcurrentMap`], for [`is_txn_linearizable`].
+/// Aborted transactions (any `Err` from `apply_txn`) are recorded as
+/// no-op [`TxnEventKind::Aborted`] events.
+pub fn record_txn_history(
+    map: &dyn crate::maps::ConcurrentMap,
+    threads: usize,
+    events_per_thread: usize,
+    keys: u64,
+    seed: u64,
+) -> Vec<TxnEvent> {
+    use crate::maps::MapOp;
+    use std::sync::Mutex;
+    use std::time::Instant;
+    let clock = Instant::now();
+    let events: Mutex<Vec<TxnEvent>> = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for tid in 0..threads {
+            let events = &events;
+            let clock = &clock;
+            s.spawn(move || {
+                let mut rng =
+                    crate::util::rng::Rng::for_thread(seed, tid as u64);
+                let mut local = Vec::with_capacity(events_per_thread);
+                let opt = |rng: &mut crate::util::rng::Rng| {
+                    if rng.below(3) == 0 {
+                        None
+                    } else {
+                        Some(rng.below(4))
+                    }
+                };
+                for _ in 0..events_per_thread {
+                    if rng.below(2) == 0 {
+                        // A lone op through the single-key surface, so
+                        // the history interleaves both API layers.
+                        let k = 1 + rng.below(keys);
+                        let kind = match rng.below(6) {
+                            0 => MapOpKind::Get(k),
+                            1 => MapOpKind::Insert(k, rng.below(4)),
+                            2 => MapOpKind::Remove(k),
+                            3 => MapOpKind::FetchAdd(k, 1),
+                            _ => MapOpKind::CmpEx(
+                                k,
+                                opt(&mut rng),
+                                opt(&mut rng),
+                            ),
+                        };
+                        let invoke = clock.elapsed().as_nanos() as u64;
+                        let result = match kind {
+                            MapOpKind::Get(k) => MapRes::Val(map.get(k)),
+                            MapOpKind::Insert(k, v) => {
+                                MapRes::Val(map.insert(k, v))
+                            }
+                            MapOpKind::Remove(k) => {
+                                MapRes::Val(map.remove(k))
+                            }
+                            MapOpKind::CmpEx(k, e, n) => {
+                                MapRes::Cas(map.compare_exchange(k, e, n))
+                            }
+                            MapOpKind::GetOrInsert(k, v) => {
+                                MapRes::Val(map.get_or_insert(k, v))
+                            }
+                            MapOpKind::FetchAdd(k, d) => {
+                                MapRes::Val(map.fetch_add(k, d))
+                            }
+                        };
+                        let response = clock.elapsed().as_nanos() as u64;
+                        local.push(TxnEvent {
+                            kind: TxnEventKind::Op(kind, result),
+                            invoke,
+                            response,
+                        });
+                    } else {
+                        // A 2–3-op transaction; structural ops
+                        // (Insert/Remove) are in the mix so migration
+                        // plans and abort paths are both exercised.
+                        let len = 2 + rng.below(2) as usize;
+                        let mut ops = Vec::with_capacity(len);
+                        for _ in 0..len {
+                            let k = 1 + rng.below(keys);
+                            ops.push(match rng.below(6) {
+                                0 => MapOp::Get(k),
+                                1 => MapOp::Insert(k, rng.below(4)),
+                                2 => MapOp::Remove(k),
+                                3 => MapOp::FetchAdd(k, 1),
+                                _ => MapOp::CmpEx(
+                                    k,
+                                    opt(&mut rng),
+                                    opt(&mut rng),
+                                ),
+                            });
+                        }
+                        let invoke = clock.elapsed().as_nanos() as u64;
+                        let res = map.apply_txn(&ops);
+                        let response = clock.elapsed().as_nanos() as u64;
+                        let kind = match res {
+                            Ok(replies) => TxnEventKind::Committed(
+                                ops.iter()
+                                    .zip(replies)
+                                    .map(|(&o, r)| (o.into(), r.into()))
+                                    .collect(),
+                            ),
+                            Err(_) => TxnEventKind::Aborted,
+                        };
+                        local.push(TxnEvent { kind, invoke, response });
+                    }
+                }
+                events.lock().unwrap().extend(local);
+            });
+        }
+    });
+    let mut h = events.into_inner().unwrap();
+    h.sort_by_key(|e| e.invoke);
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -585,5 +871,138 @@ mod tests {
             ),
         ];
         assert!(!is_map_linearizable(&[(1, 5)], &h2));
+    }
+
+    fn tev(kind: TxnEventKind, invoke: u64, response: u64) -> TxnEvent {
+        TxnEvent { kind, invoke, response }
+    }
+
+    #[test]
+    fn txn_sequential_history_accepts() {
+        // A transfer txn then reads that see both legs.
+        let h = vec![
+            tev(
+                TxnEventKind::Committed(vec![
+                    (MapOpKind::FetchAdd(1, 3), MapRes::Val(Some(10))),
+                    (
+                        MapOpKind::CmpEx(2, Some(10), Some(7)),
+                        MapRes::Cas(Ok(())),
+                    ),
+                ]),
+                0,
+                1,
+            ),
+            tev(
+                TxnEventKind::Op(MapOpKind::Get(1), MapRes::Val(Some(13))),
+                2,
+                3,
+            ),
+            tev(
+                TxnEventKind::Op(MapOpKind::Get(2), MapRes::Val(Some(7))),
+                4,
+                5,
+            ),
+        ];
+        assert!(is_txn_linearizable(&[(1, 10), (2, 10)], &h));
+    }
+
+    #[test]
+    fn txn_overlay_reply_semantics() {
+        // Within one txn, later ops observe earlier ops' effects.
+        let h = vec![tev(
+            TxnEventKind::Committed(vec![
+                (MapOpKind::Insert(1, 5), MapRes::Val(None)),
+                (MapOpKind::Get(1), MapRes::Val(Some(5))),
+                (MapOpKind::FetchAdd(1, 1), MapRes::Val(Some(5))),
+            ]),
+            0,
+            1,
+        )];
+        assert!(is_txn_linearizable(&[], &h));
+        // A reply reflecting pre-txn state where an earlier op in the
+        // same txn already wrote is rejected.
+        let h2 = vec![tev(
+            TxnEventKind::Committed(vec![
+                (MapOpKind::Insert(1, 5), MapRes::Val(None)),
+                (MapOpKind::Get(1), MapRes::Val(None)),
+            ]),
+            0,
+            1,
+        )];
+        assert!(!is_txn_linearizable(&[], &h2));
+    }
+
+    #[test]
+    fn txn_torn_read_rejected() {
+        // A reader that sees leg one of a committed two-key write but
+        // not leg two — with its reads ordered after each other in
+        // real time — has no valid linearization.
+        let write = TxnEventKind::Committed(vec![
+            (MapOpKind::Insert(1, 1), MapRes::Val(None)),
+            (MapOpKind::Insert(2, 1), MapRes::Val(None)),
+        ]);
+        let h = vec![
+            tev(write.clone(), 0, 10),
+            tev(
+                TxnEventKind::Op(MapOpKind::Get(1), MapRes::Val(Some(1))),
+                2,
+                3,
+            ),
+            tev(TxnEventKind::Op(MapOpKind::Get(2), MapRes::Val(None)), 4, 5),
+        ];
+        assert!(!is_txn_linearizable(&[], &h));
+        // Seeing both legs (or neither) is fine.
+        let h2 = vec![
+            tev(write, 0, 10),
+            tev(
+                TxnEventKind::Op(MapOpKind::Get(1), MapRes::Val(Some(1))),
+                2,
+                3,
+            ),
+            tev(
+                TxnEventKind::Op(MapOpKind::Get(2), MapRes::Val(Some(1))),
+                4,
+                5,
+            ),
+        ];
+        assert!(is_txn_linearizable(&[], &h2));
+    }
+
+    #[test]
+    fn txn_aborted_is_a_noop() {
+        // An abort between two reads changes nothing.
+        let h = vec![
+            tev(
+                TxnEventKind::Op(MapOpKind::Get(1), MapRes::Val(Some(4))),
+                0,
+                1,
+            ),
+            tev(TxnEventKind::Aborted, 2, 3),
+            tev(
+                TxnEventKind::Op(MapOpKind::Get(1), MapRes::Val(Some(4))),
+                4,
+                5,
+            ),
+        ];
+        assert!(is_txn_linearizable(&[(1, 4)], &h));
+    }
+
+    #[test]
+    fn txn_double_spend_rejected() {
+        // Two non-overlapping transfers both debiting from the same
+        // prev balance lose an update, exactly like the single-key
+        // lost-increment case but across a two-key window.
+        let t = |inv: u64, rsp: u64| {
+            tev(
+                TxnEventKind::Committed(vec![
+                    (MapOpKind::FetchAdd(1, 1), MapRes::Val(Some(5))),
+                    (MapOpKind::FetchAdd(2, 1), MapRes::Val(Some(9))),
+                ]),
+                inv,
+                rsp,
+            )
+        };
+        assert!(!is_txn_linearizable(&[(1, 5), (2, 9)], &[t(0, 1), t(2, 3)]));
+        assert!(!is_txn_linearizable(&[(1, 5), (2, 9)], &[t(0, 10), t(1, 9)]));
     }
 }

@@ -339,6 +339,26 @@ pub struct Metrics {
     /// direction) and CQEs drained per reap (completion direction).
     pub uring_sqe_batch: Hist,
     pub uring_cqe_batch: Hist,
+
+    // transactions
+    /// Commit attempts (every pass through a txn commit loop, all
+    /// protocols: K-CAS-native, OCC baseline, 2PL baseline).
+    pub txn_attempts: Counter,
+    /// Attempts that observed interference and restarted.
+    pub txn_retries: Counter,
+    /// Transactions abandoned with `TxnError::TxnConflict` after the
+    /// bounded structural-conflict retry budget.
+    pub txn_conflicts: Counter,
+    /// Transactions committed.
+    pub txn_commits: Counter,
+    /// Committed transactions whose key set spanned more than one
+    /// shard of a `Sharded<T>` facade.
+    pub txn_cross_shard: Counter,
+    /// K-CAS entries (or locked words) per committed transaction — the
+    /// "one K-CAS per commit" span the tentpole is named for.
+    pub txn_span: Hist,
+    /// Ops per transaction as submitted by the caller.
+    pub txn_ops: Hist,
 }
 
 impl Metrics {
@@ -373,6 +393,13 @@ impl Metrics {
             syscalls_uring: Counter::new(),
             uring_sqe_batch: Hist::new(),
             uring_cqe_batch: Hist::new(),
+            txn_attempts: Counter::new(),
+            txn_retries: Counter::new(),
+            txn_conflicts: Counter::new(),
+            txn_commits: Counter::new(),
+            txn_cross_shard: Counter::new(),
+            txn_span: Hist::new(),
+            txn_ops: Hist::new(),
         }
     }
 }
@@ -436,6 +463,13 @@ pub static REGISTRY: &[(&str, Metric)] = &[
     ("syscalls_uring", Metric::Counter(&METRICS.syscalls_uring)),
     ("uring_sqe_batch", Metric::Hist(&METRICS.uring_sqe_batch)),
     ("uring_cqe_batch", Metric::Hist(&METRICS.uring_cqe_batch)),
+    ("txn_attempts", Metric::Counter(&METRICS.txn_attempts)),
+    ("txn_retries", Metric::Counter(&METRICS.txn_retries)),
+    ("txn_conflicts", Metric::Counter(&METRICS.txn_conflicts)),
+    ("txn_commits", Metric::Counter(&METRICS.txn_commits)),
+    ("txn_cross_shard", Metric::Counter(&METRICS.txn_cross_shard)),
+    ("txn_span", Metric::Hist(&METRICS.txn_span)),
+    ("txn_ops", Metric::Hist(&METRICS.txn_ops)),
 ];
 
 // ------------------------------------------------------------ snapshot
@@ -601,6 +635,26 @@ pub fn cell_metrics(d: &Snapshot) -> Vec<(String, f64)> {
         if let Some(h) = d.hist(name) {
             if h.count() > 0 {
                 out.push((format!("{name}_p50"), h.quantile(0.5) as f64));
+            }
+        }
+    }
+    let commits = d.counter("txn_commits");
+    if commits > 0 {
+        out.push(("txn_commits".into(), commits as f64));
+        let attempts = d.counter("txn_attempts");
+        if attempts > 0 {
+            out.push((
+                "txn_retry_rate".into(),
+                d.counter("txn_retries") as f64 / attempts as f64,
+            ));
+        }
+        out.push((
+            "txn_cross_shard_frac".into(),
+            d.counter("txn_cross_shard") as f64 / commits as f64,
+        ));
+        if let Some(h) = d.hist("txn_span") {
+            if h.count() > 0 {
+                out.push(("txn_span_p50".into(), h.quantile(0.5) as f64));
             }
         }
     }

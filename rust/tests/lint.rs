@@ -77,6 +77,18 @@ fn l005_missing_backend_dispatch_fires() {
 }
 
 #[test]
+fn l005_missing_txn_dispatch_fires() {
+    // A backend that never learned the `T <n>` transaction frame
+    // hides behind its catch-all arm; L005 names the gap.
+    let diags = lint_fixture("l005_txn");
+    assert_eq!(diags.len(), 1, "{diags:?}");
+    assert_eq!((diags[0].rule, diags[0].line), ("L005", 11));
+    assert!(diags[0].path.ends_with("service/frame.rs"), "{diags:?}");
+    assert!(diags[0].msg.contains("`Txn`"), "{}", diags[0].msg);
+    assert!(diags[0].msg.contains("service/reactor.rs"), "{}", diags[0].msg);
+}
+
+#[test]
 fn default_walk_skips_the_fixture_tree() {
     let tests_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests");
     let files = collect_rs_files(&[tests_dir]).unwrap();

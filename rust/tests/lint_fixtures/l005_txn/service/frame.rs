@@ -1,0 +1,13 @@
+//! L005 fixture codec for the `T <n>` transaction frame: `Txn` is
+//! dispatched by two of the three backends but not
+//! `service/reactor.rs`, so L005 must fire once, anchored here. A new
+//! wire verb that only some backends learn is exactly the regression
+//! this rule exists to catch.
+//!
+//! Never compiled — linted explicitly by `tests/lint.rs`.
+
+pub enum Frame {
+    Batch(Vec<Op>),
+    Txn(Vec<Op>),
+    Stop,
+}

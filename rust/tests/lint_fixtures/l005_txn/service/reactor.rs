@@ -1,0 +1,11 @@
+//! L005 fixture backend: misses `Frame::Txn` — the catch-all arm
+//! would silently drop every `T <n>` transaction on this backend,
+//! which the compiler cannot see but L005 can.
+
+pub fn dispatch(f: Frame) {
+    match f {
+        Frame::Batch(ops) => drop(ops),
+        Frame::Stop => {}
+        _ => {}
+    }
+}

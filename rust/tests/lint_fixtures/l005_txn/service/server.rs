@@ -1,0 +1,10 @@
+//! L005 fixture backend: dispatches every `Frame` variant, including
+//! the transaction frame.
+
+pub fn dispatch(f: Frame) {
+    match f {
+        Frame::Batch(ops) => drop(ops),
+        Frame::Txn(ops) => drop(ops),
+        Frame::Stop => {}
+    }
+}

@@ -1,0 +1,478 @@
+//! Multi-key transaction tier: `apply_txn` against a sequential
+//! oracle on every map kind, concurrent transfer conservation across
+//! shard counts, mixed txn/single-op linearizability (one atomic
+//! window per committed transaction), transactions racing a live
+//! two-generation migration, and the `T <n>` wire frame round-tripped
+//! byte-identically through all three front-end backends.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crh::maps::txn::apply_txn_occ;
+use crh::maps::{ConcurrentMap, MapError, MapKind, MapOp, MapReply};
+use crh::service::server::{self, Client};
+use crh::service::Backend;
+use crh::util::linearize::{is_txn_linearizable, record_txn_history};
+use crh::util::prop::scaled;
+use crh::util::rng::Rng;
+
+/// 2^62: `fetch_add` arithmetic is mod this, so adding `M - x`
+/// subtracts `x`.
+const M: u64 = 1 << 62;
+
+/// Sequential reply semantics — the oracle `apply_txn` is checked
+/// against, op by op over a `HashMap`.
+fn oracle_reply(state: &mut HashMap<u64, u64>, op: MapOp) -> MapReply {
+    match op {
+        MapOp::Get(k) => MapReply::Value(state.get(&k).copied()),
+        MapOp::Insert(k, v) => MapReply::Prev(state.insert(k, v)),
+        MapOp::Remove(k) => MapReply::Removed(state.remove(&k)),
+        MapOp::CmpEx(k, e, n) => {
+            let cur = state.get(&k).copied();
+            if cur == e {
+                match n {
+                    Some(v) => {
+                        state.insert(k, v);
+                    }
+                    None => {
+                        state.remove(&k);
+                    }
+                }
+                MapReply::CmpEx(Ok(()))
+            } else {
+                MapReply::CmpEx(Err(cur))
+            }
+        }
+        MapOp::GetOrInsert(k, v) => {
+            let cur = state.get(&k).copied();
+            if cur.is_none() {
+                state.insert(k, v);
+            }
+            MapReply::Existing(cur)
+        }
+        MapOp::FetchAdd(k, d) => {
+            let cur = state.get(&k).copied();
+            state.insert(k, cur.unwrap_or(0).wrapping_add(d) & (M - 1));
+            MapReply::Added(cur)
+        }
+    }
+}
+
+fn random_op(rng: &mut Rng, keys: u64) -> MapOp {
+    let k = 1 + rng.below(keys);
+    let opt = |rng: &mut Rng| {
+        if rng.below(3) == 0 {
+            None
+        } else {
+            Some(rng.below(4))
+        }
+    };
+    match rng.below(6) {
+        0 => MapOp::Get(k),
+        1 => MapOp::Insert(k, rng.below(4)),
+        2 => MapOp::Remove(k),
+        3 => MapOp::FetchAdd(k, 1 + rng.below(3)),
+        _ => MapOp::CmpEx(k, opt(rng), opt(rng)),
+    }
+}
+
+/// Single-threaded `apply_txn` vs the oracle: committed replies must
+/// match a sequential overlay replay exactly, an abort must leave the
+/// table untouched (checked implicitly — the oracle is not advanced
+/// and every later op revalidates the full state), and the final
+/// contents must agree key by key. Structural op mixes are allowed to
+/// report `TxnConflict` (intrinsically colliding plans); pin-only
+/// transactions never may.
+fn check_oracle(kind: MapKind) {
+    let m = kind.build(10);
+    let mut oracle: HashMap<u64, u64> = HashMap::new();
+    let mut rng = Rng::for_thread(0xF18, 0);
+    let keys = 16u64;
+    let (mut commits, mut conflicts) = (0u64, 0u64);
+    for i in 0..scaled(400) {
+        if rng.below(3) == 0 {
+            // A lone op through the single-key surface.
+            let op = random_op(&mut rng, keys);
+            let got = match op {
+                MapOp::Get(k) => MapReply::Value(m.get(k)),
+                MapOp::Insert(k, v) => MapReply::Prev(m.insert(k, v)),
+                MapOp::Remove(k) => MapReply::Removed(m.remove(k)),
+                MapOp::CmpEx(k, e, n) => {
+                    MapReply::CmpEx(m.compare_exchange(k, e, n))
+                }
+                MapOp::GetOrInsert(k, v) => {
+                    MapReply::Existing(m.get_or_insert(k, v))
+                }
+                MapOp::FetchAdd(k, d) => MapReply::Added(m.fetch_add(k, d)),
+            };
+            let want = oracle_reply(&mut oracle, op);
+            assert_eq!(got, want, "{}: lone op {i} ({op:?})", kind.name());
+            continue;
+        }
+        let len = 1 + rng.below(4) as usize;
+        let ops: Vec<MapOp> =
+            (0..len).map(|_| random_op(&mut rng, keys)).collect();
+        match m.apply_txn(&ops) {
+            Ok(replies) => {
+                commits += 1;
+                assert_eq!(replies.len(), ops.len());
+                for (j, (&op, &got)) in
+                    ops.iter().zip(replies.iter()).enumerate()
+                {
+                    let want = oracle_reply(&mut oracle, op);
+                    assert_eq!(
+                        got,
+                        want,
+                        "{}: txn {i} op {j} ({op:?})",
+                        kind.name()
+                    );
+                }
+            }
+            Err(MapError::TxnConflict) => {
+                // All-or-nothing: nothing changed, oracle stays.
+                conflicts += 1;
+                let structural = {
+                    let mut overlay = oracle.clone();
+                    ops.iter().any(|&op| {
+                        let before = overlay.contains_key(&op.key());
+                        oracle_reply(&mut overlay, op);
+                        before != overlay.contains_key(&op.key())
+                    })
+                };
+                assert!(
+                    structural && ops.len() > 1,
+                    "{}: pin-only txn {i} conflicted uncontended: {ops:?}",
+                    kind.name()
+                );
+            }
+            Err(e) => panic!("{}: txn {i} failed: {e}", kind.name()),
+        }
+    }
+    assert!(
+        commits > conflicts,
+        "{}: {} commits vs {} conflicts — engine aborts too much",
+        kind.name(),
+        commits,
+        conflicts
+    );
+    for k in 1..=keys {
+        assert_eq!(
+            m.get(k),
+            oracle.get(&k).copied(),
+            "{}: final state diverged at key {k}",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn txn_matches_serial_oracle_every_map_kind() {
+    for kind in MapKind::all() {
+        check_oracle(kind);
+    }
+}
+
+/// The OCC baseline commits and matches the same oracle when
+/// uncontended (its weaker isolation only shows under concurrency).
+#[test]
+fn occ_baseline_matches_serial_oracle() {
+    let m = MapKind::KCasRhMap.build(10);
+    let mut oracle: HashMap<u64, u64> = HashMap::new();
+    let mut rng = Rng::for_thread(0x0CC, 0);
+    for i in 0..scaled(300) {
+        let len = 1 + rng.below(4) as usize;
+        let ops: Vec<MapOp> =
+            (0..len).map(|_| random_op(&mut rng, 16)).collect();
+        let replies = apply_txn_occ(m.as_ref(), &ops)
+            .unwrap_or_else(|e| panic!("uncontended OCC txn {i} failed: {e}"));
+        for (&op, &got) in ops.iter().zip(replies.iter()) {
+            assert_eq!(got, oracle_reply(&mut oracle, op), "OCC txn {i}");
+        }
+    }
+    for k in 1..=16u64 {
+        assert_eq!(m.get(k), oracle.get(&k).copied());
+    }
+}
+
+/// Concurrent two-leg transfers between pre-seeded accounts: every
+/// `apply_txn` must commit (pin-only op sets retry races internally),
+/// and the grand total must be conserved mod 2^62 — the invariant a
+/// torn or half-applied commit would break. Swept across shard counts,
+/// so single-shard and cross-shard commits both run.
+fn check_transfer_conservation(build: impl Fn() -> Box<dyn ConcurrentMap>) {
+    const ACCOUNTS: u64 = 32;
+    const SEED_BALANCE: u64 = 1_000_000;
+    let m = build();
+    for k in 1..=ACCOUNTS {
+        assert_eq!(m.insert(k, SEED_BALANCE), None);
+    }
+    let transfers: u64 = scaled(4_000);
+    std::thread::scope(|s| {
+        for tid in 0..4u64 {
+            let m = m.as_ref();
+            s.spawn(move || {
+                let mut rng = Rng::for_thread(0xBA7A + tid, tid);
+                for i in 0..transfers {
+                    let src = 1 + rng.below(ACCOUNTS);
+                    let mut dst = 1 + rng.below(ACCOUNTS);
+                    while dst == src {
+                        dst = 1 + rng.below(ACCOUNTS);
+                    }
+                    let amt = 1 + rng.below(100);
+                    let ops = [
+                        MapOp::FetchAdd(src, M - amt), // debit
+                        MapOp::FetchAdd(dst, amt),     // credit
+                    ];
+                    let replies = m.apply_txn(&ops).unwrap_or_else(|e| {
+                        panic!("thread {tid} transfer {i} aborted: {e}")
+                    });
+                    assert_eq!(replies.len(), 2);
+                }
+            });
+        }
+    });
+    let total: u128 = (1..=ACCOUNTS)
+        .map(|k| m.get(k).expect("account vanished") as u128)
+        .sum();
+    assert_eq!(
+        total % (M as u128),
+        (ACCOUNTS * SEED_BALANCE) as u128,
+        "{}: money created or destroyed",
+        m.name()
+    );
+}
+
+#[test]
+fn transfers_conserve_total_kcas_across_shards() {
+    for shards in [1u32, 4, 16] {
+        check_transfer_conservation(|| {
+            MapKind::ShardedKCasRhMap { shards }.build(12)
+        });
+    }
+}
+
+#[test]
+fn transfers_conserve_total_2pl() {
+    check_transfer_conservation(|| {
+        MapKind::ShardedLockedLpMap { shards: 4 }.build(12)
+    });
+}
+
+#[test]
+fn transfers_conserve_total_resizable() {
+    check_transfer_conservation(|| MapKind::IncResizableRhMap.build(12));
+}
+
+/// Mixed histories — lone ops racing multi-key transactions — must
+/// linearize with each committed transaction as ONE atomic multi-key
+/// window (a reader observing half a transaction's writes fails the
+/// checker).
+fn check_txn_linearizable(
+    build: impl Fn() -> Box<dyn ConcurrentMap>,
+    windows: u64,
+    name: &str,
+) {
+    for w in 0..windows {
+        let m = build();
+        let mut initial = Vec::new();
+        for k in 1..=3u64 {
+            m.insert(k, k);
+            initial.push((k, k));
+        }
+        let h = record_txn_history(m.as_ref(), 3, 8, 6, 0x7A9 + w);
+        assert_eq!(h.len(), 24, "{name}: short history");
+        assert!(
+            is_txn_linearizable(&initial, &h),
+            "{name}: non-atomic transaction window {w}: {h:#?}"
+        );
+    }
+}
+
+#[test]
+fn txn_histories_linearize_kcas_rh_map() {
+    check_txn_linearizable(|| MapKind::KCasRhMap.build(7), 40, "kcas-rh-map");
+}
+
+#[test]
+fn txn_histories_linearize_locked_lp_map() {
+    check_txn_linearizable(
+        || MapKind::LockedLpMap.build(7),
+        40,
+        "locked-lp-map",
+    );
+}
+
+#[test]
+fn txn_histories_linearize_sharded_kcas_rh_map() {
+    for shards in [1u32, 4, 16] {
+        check_txn_linearizable(
+            || MapKind::ShardedKCasRhMap { shards }.build(8),
+            15,
+            &format!("sharded-kcas-rh-map:{shards}"),
+        );
+    }
+}
+
+/// Transactions recorded while a two-generation migration is in
+/// flight: the commit must stay atomic across frozen source cells and
+/// the freeze/transfer protocol, not just on a settled table.
+#[test]
+fn txn_histories_linearize_mid_migration() {
+    use crh::maps::resizable::ResizableRobinHoodMap;
+    for w in 0..15u64 {
+        // 4096 buckets = 64 migration stripes: a window's handful of
+        // helping ops cannot drain the migration mid-recording.
+        let m = ResizableRobinHoodMap::with_threshold(12, 0.4);
+        let mut filler = 1000u64;
+        while !m.migration_active() {
+            m.insert(filler, filler);
+            filler += 1;
+        }
+        let mut initial = Vec::new();
+        for k in 1..=3u64 {
+            m.insert(k, k);
+            initial.push((k, k));
+        }
+        assert!(
+            m.migration_active(),
+            "window {w}: migration drained before recording"
+        );
+        let h = record_txn_history(&m, 3, 8, 6, 0x9A13 + w);
+        assert!(
+            is_txn_linearizable(&initial, &h),
+            "mid-migration window {w}: {h:#?}"
+        );
+    }
+}
+
+/// Transfers driven straight into an in-flight migration: conservation
+/// holds even while every commit may span the old and new generation.
+#[test]
+fn transfers_conserve_total_mid_migration() {
+    use crh::maps::resizable::ResizableRobinHoodMap;
+    check_transfer_conservation(|| {
+        let m = ResizableRobinHoodMap::with_threshold(12, 0.4);
+        let mut filler = 1000u64;
+        while !m.migration_active() {
+            m.insert(filler, filler);
+            filler += 1;
+        }
+        Box::new(m)
+    });
+}
+
+// ---- `T <n>` wire frames across the three front-ends ----
+
+fn service_map() -> Arc<dyn ConcurrentMap> {
+    Arc::from(MapKind::ShardedKCasRhMap { shards: 4 }.build(12))
+}
+
+/// A fixed raw trace exercising the `T <n>` grammar: a multi-key
+/// commit with value- and CAS-shaped replies (keys pre-seeded so every
+/// leg is a pin — pin-only op sets can never intrinsically conflict,
+/// keeping the trace deterministic), a lone op queued *behind* a txn
+/// in the same write (program order must hold), the `T 0` and
+/// bad-member reject paths, a single-key structural commit, and a
+/// trailing batch frame proving the stream stays in sync. Delivered in
+/// 7-byte chunks so txn frames also reassemble across read boundaries.
+const TXN_TRACE: &str = "P 1 10\n\
+    P 2 1\n\
+    T 4\nA 1 5\nP 2 7\nG 2\nC 1 15 20\n\
+    G 1\n\
+    T 1\nP 9 9\nG 9\n\
+    T 0\n\
+    T 2\nG 0\nG 1\n\
+    T 1\nC 2 7 -\n\
+    G 2\n\
+    B 2\nG 9\nD 9\n";
+
+const TXN_TRACE_REPLIES: [&str; 11] = [
+    "-",
+    "-",
+    "10 1 7 OK",
+    "20",
+    "-",
+    "9",
+    "ERR bad batch size",
+    "ERR key out of range",
+    "OK",
+    "-",
+    "9 9",
+];
+
+fn run_txn_trace(backend: Backend) -> Vec<String> {
+    let h = backend.spawn(service_map(), 2).unwrap();
+    let mut c = Client::connect(h.addr()).unwrap();
+    for chunk in TXN_TRACE.as_bytes().chunks(7) {
+        c.send_raw(chunk).unwrap();
+    }
+    let replies: Vec<String> = (0..TXN_TRACE_REPLIES.len())
+        .map(|i| {
+            c.read_reply_line().unwrap_or_else(|e| {
+                panic!("{}: reply {i} missing: {e}", backend.name())
+            })
+        })
+        .collect();
+    h.shutdown();
+    replies
+}
+
+#[test]
+fn txn_trace_byte_identical_across_backends() {
+    let want: Vec<String> =
+        TXN_TRACE_REPLIES.iter().map(|s| s.to_string()).collect();
+    for backend in Backend::ALL {
+        assert_eq!(
+            run_txn_trace(backend),
+            want,
+            "backend {} diverged on the fixed txn trace",
+            backend.name()
+        );
+    }
+}
+
+/// The typed client surface: `Client::txn` round-trips every reply
+/// shape, and `batch_typed` (rebased on the same reply-segment parser)
+/// still works on the same connection.
+#[test]
+fn typed_client_txn_round_trip() {
+    let h = server::spawn_server(service_map()).unwrap();
+    let mut c = Client::connect(h.addr()).unwrap();
+    // Pre-seed both keys so the multi-key txns below are pin-only
+    // (deterministically conflict-free).
+    assert_eq!(c.request_line("P 3 1").unwrap(), "-");
+    assert_eq!(c.request_line("P 4 40").unwrap(), "-");
+    let r = c
+        .txn(&[
+            MapOp::Insert(3, 30),
+            MapOp::FetchAdd(3, 5),
+            MapOp::Get(3),
+            MapOp::GetOrInsert(4, 99),
+        ])
+        .unwrap();
+    assert_eq!(
+        r,
+        vec![
+            MapReply::Prev(Some(1)),
+            MapReply::Added(Some(30)),
+            MapReply::Value(Some(35)),
+            MapReply::Existing(Some(40)),
+        ]
+    );
+    let r = c
+        .txn(&[
+            MapOp::CmpEx(3, Some(35), Some(36)),
+            MapOp::CmpEx(3, Some(99), None),
+        ])
+        .unwrap();
+    assert_eq!(
+        r,
+        vec![MapReply::CmpEx(Ok(())), MapReply::CmpEx(Err(Some(36)))]
+    );
+    let r = c.batch_typed(&[MapOp::Get(3), MapOp::Remove(4)]).unwrap();
+    assert_eq!(
+        r,
+        vec![MapReply::Value(Some(36)), MapReply::Removed(Some(40))]
+    );
+    h.shutdown();
+}
